@@ -1,0 +1,44 @@
+//! Entropy coder throughput and rate efficiency on realistic ZSIC code
+//! distributions (the container hot path).
+
+use std::time::Duration;
+
+use watersic::entropy::external::ZstdCodec;
+use watersic::entropy::huffman::Huffman;
+use watersic::entropy::rans::Rans;
+use watersic::entropy::{entropy_bits, Codec};
+use watersic::util::bench::{report, Bench};
+use watersic::util::rng::Rng;
+
+fn main() {
+    println!("== bench_entropy: coder throughput / rate efficiency ==");
+    let mut rng = Rng::new(2);
+    for sigma in [1.0f64, 4.0] {
+        let z: Vec<i32> = (0..1_000_000)
+            .map(|_| (rng.gaussian() * sigma).round_ties_even() as i32)
+            .collect();
+        let ent = entropy_bits(&z);
+        println!("\n1M symbols, σ={sigma} (entropy {ent:.3} bits):");
+        for codec in [&Huffman as &dyn Codec, &Rans, &ZstdCodec] {
+            let enc = codec.encode(&z);
+            let rate = 8.0 * enc.len() as f64 / z.len() as f64;
+            let se = Bench::new(&format!("{} encode", codec.name()))
+                .with_budget(5, Duration::from_secs(2))
+                .run(|| {
+                    std::hint::black_box(codec.encode(&z));
+                });
+            report(&se, Some((z.len() as f64 * 4.0, "B")));
+            let sd = Bench::new(&format!("{} decode", codec.name()))
+                .with_budget(5, Duration::from_secs(2))
+                .run(|| {
+                    std::hint::black_box(codec.decode(&enc, z.len()).unwrap());
+                });
+            report(&sd, Some((z.len() as f64 * 4.0, "B")));
+            println!(
+                "{:>44}   rate {rate:.3} bits (+{:.3} over entropy)",
+                "",
+                rate - ent
+            );
+        }
+    }
+}

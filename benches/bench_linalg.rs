@@ -1,0 +1,58 @@
+//! Dense linear-algebra substrate throughput: gemm / Gram / Cholesky /
+//! triangular solve — the flop backbone of calibration and rescaler
+//! optimization.
+
+use std::time::Duration;
+
+use watersic::linalg::chol::{cholesky, solve_xlt_eq_b};
+use watersic::linalg::gemm::{gram, matmul, matmul_nt};
+use watersic::linalg::Mat;
+use watersic::util::bench::{report, Bench};
+use watersic::util::rng::Rng;
+
+fn main() {
+    println!("== bench_linalg: f64 dense kernels ==");
+    let mut rng = Rng::new(3);
+    for n in [64usize, 128, 256, 512] {
+        let a = Mat::from_fn(n, n, |_, _| rng.gaussian());
+        let b = Mat::from_fn(n, n, |_, _| rng.gaussian());
+        let flops = 2.0 * (n * n * n) as f64;
+        let s = Bench::new(&format!("matmul {n}³"))
+            .with_budget(6, Duration::from_secs(2))
+            .run(|| {
+                std::hint::black_box(matmul(&a, &b));
+            });
+        report(&s, Some((flops, "FLOP")));
+        let s = Bench::new(&format!("matmul_nt {n}³"))
+            .with_budget(6, Duration::from_secs(2))
+            .run(|| {
+                std::hint::black_box(matmul_nt(&a, &b));
+            });
+        report(&s, Some((flops, "FLOP")));
+    }
+    for n in [64usize, 128, 256] {
+        let panel = Mat::from_fn(2048, n, |_, _| rng.gaussian());
+        let s = Bench::new(&format!("gram 2048x{n}"))
+            .with_budget(6, Duration::from_secs(2))
+            .run(|| {
+                std::hint::black_box(gram(&panel));
+            });
+        report(&s, Some((2048.0 * (n * n) as f64, "FLOP")));
+        let mut spd = gram(&panel).scale(1.0 / 2048.0);
+        spd.add_diag(0.01);
+        let s = Bench::new(&format!("cholesky {n}"))
+            .with_budget(6, Duration::from_secs(2))
+            .run(|| {
+                std::hint::black_box(cholesky(&spd).unwrap());
+            });
+        report(&s, Some(((n * n * n) as f64 / 3.0, "FLOP")));
+        let l = cholesky(&spd).unwrap();
+        let rhs = Mat::from_fn(256, n, |_, _| rng.gaussian());
+        let s = Bench::new(&format!("trisolve 256x{n}"))
+            .with_budget(6, Duration::from_secs(2))
+            .run(|| {
+                std::hint::black_box(solve_xlt_eq_b(&l, &rhs));
+            });
+        report(&s, Some((256.0 * (n * n) as f64, "FLOP")));
+    }
+}

@@ -1,0 +1,56 @@
+//! End-to-end coordinator latency: full-model quantization wall time per
+//! algorithm (the paper's practical-cost axis), on the real trained
+//! picollama_s with artifacts when available.
+
+use std::time::Duration;
+
+use watersic::coordinator::{quantize_model, Algo};
+use watersic::experiments::{llm::pipeline_opts, Ctx};
+use watersic::util::bench::{report, Bench};
+
+fn main() -> anyhow::Result<()> {
+    println!("== bench_pipeline: full-model quantization latency ==");
+    let ctx = Ctx::new(true, true)?;
+    let Ok((cfg, teacher)) = ctx.load_model("picollama_s") else {
+        println!("skipped: run `make artifacts` first");
+        return Ok(());
+    };
+    let wiki = ctx.load_corpus("wiki")?;
+    for (label, algo) in [
+        ("huffman-rtn", Algo::HuffRtn),
+        ("huffman-gptq", Algo::HuffGptq),
+        ("watersic", Algo::WaterSic),
+    ] {
+        let opts = pipeline_opts(&ctx, algo, 2.0, false);
+        let s = Bench::new(&format!("pipeline {label} @2.0"))
+            .with_budget(3, Duration::from_secs(12))
+            .run(|| {
+                std::hint::black_box(
+                    quantize_model(&cfg, &teacher, &wiki, &opts, ctx.engine.as_ref())
+                        .unwrap(),
+                );
+            });
+        report(
+            &s,
+            Some((cfg.quantizable_params() as f64, "weights")),
+        );
+    }
+    // the PJRT-vs-native ZSIC split inside the pipeline
+    for use_engine in [false, true] {
+        let mut opts = pipeline_opts(&ctx, Algo::WaterSic, 2.0, false);
+        opts.use_engine = use_engine;
+        let s = Bench::new(&format!(
+            "watersic zsic-exec={}",
+            if use_engine { "pjrt" } else { "native" }
+        ))
+        .with_budget(3, Duration::from_secs(12))
+        .run(|| {
+            std::hint::black_box(
+                quantize_model(&cfg, &teacher, &wiki, &opts, ctx.engine.as_ref())
+                    .unwrap(),
+            );
+        });
+        report(&s, Some((cfg.quantizable_params() as f64, "weights")));
+    }
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! PJRT runtime latency: compiled-artifact execution (ZSIC + forward)
+//! vs the native oracle — the production request path.
+
+use std::time::Duration;
+
+use watersic::experiments::Ctx;
+use watersic::linalg::chol::cholesky;
+use watersic::linalg::gemm::matmul;
+use watersic::linalg::Mat;
+use watersic::model::transformer::{forward, ForwardOpts};
+use watersic::quant::waterfilling::ar1_sigma;
+use watersic::quant::zsic::{watersic_alphas, zsic};
+use watersic::runtime::ZsicArtifact;
+use watersic::util::bench::{report, Bench};
+use watersic::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    println!("== bench_runtime: PJRT artifacts vs native oracle ==");
+    let ctx = Ctx::new(true, true)?;
+    let Some(engine) = &ctx.engine else {
+        println!("skipped: PJRT engine unavailable");
+        return Ok(());
+    };
+    let mut rng = Rng::new(4);
+
+    for (a, n) in [(512usize, 128usize), (1024, 256)] {
+        let sigma = ar1_sigma(n, 0.9);
+        let l = cholesky(&sigma)?;
+        let w = Mat::from_fn(a, n, |_, _| rng.gaussian());
+        let y = matmul(&w, &l);
+        let alphas = watersic_alphas(&l, 0.3);
+        let art = ZsicArtifact { a, n, lmmse: true };
+        // warm the executable cache (compile once)
+        engine.run_zsic(art, &y, &l, &alphas)?;
+        let s = Bench::new(&format!("zsic {a}x{n} pjrt"))
+            .with_budget(5, Duration::from_secs(3))
+            .run(|| {
+                std::hint::black_box(engine.run_zsic(art, &y, &l, &alphas).unwrap());
+            });
+        report(&s, Some(((a * n) as f64, "weights")));
+        let s = Bench::new(&format!("zsic {a}x{n} native"))
+            .with_budget(5, Duration::from_secs(3))
+            .run(|| {
+                std::hint::black_box(zsic(&y, &l, &alphas, true, None));
+            });
+        report(&s, Some(((a * n) as f64, "weights")));
+    }
+
+    if let Ok((cfg, weights)) = ctx.load_model("picollama_s") {
+        let corpus = ctx.load_corpus("wiki")?;
+        let windows = corpus.eval_windows(8, cfg.ctx, 5);
+        let mut toks = Vec::new();
+        for (i, _) in &windows {
+            toks.extend_from_slice(i);
+        }
+        engine.run_forward(&cfg, &weights, &toks, 8)?; // warm compile
+        let tokens = (8 * cfg.ctx) as f64;
+        let s = Bench::new("forward s b8 pjrt")
+            .with_budget(5, Duration::from_secs(3))
+            .run(|| {
+                std::hint::black_box(
+                    engine.run_forward(&cfg, &weights, &toks, 8).unwrap(),
+                );
+            });
+        report(&s, Some((tokens, "tok")));
+        let s = Bench::new("forward s b8 native")
+            .with_budget(5, Duration::from_secs(3))
+            .run(|| {
+                std::hint::black_box(forward(
+                    &cfg,
+                    &weights,
+                    &toks,
+                    8,
+                    cfg.ctx,
+                    &ForwardOpts::default(),
+                ));
+            });
+        report(&s, Some((tokens, "tok")));
+    }
+    Ok(())
+}

@@ -1,0 +1,43 @@
+//! ZSIC kernel throughput (L3 hot path): weights/sec across layer
+//! shapes, LMMSE on/off, plus the effective GFLOP/s of the rank-1
+//! interference updates (the kernel's arithmetic core, ≈ a·n²/2 MACs).
+
+use std::time::Duration;
+
+use watersic::linalg::chol::cholesky;
+use watersic::linalg::gemm::matmul;
+use watersic::linalg::Mat;
+use watersic::quant::waterfilling::ar1_sigma;
+use watersic::quant::zsic::{watersic_alphas, zsic};
+use watersic::util::bench::{report, Bench};
+use watersic::util::rng::Rng;
+
+fn main() {
+    println!("== bench_zsic: ZSIC quantizer throughput ==");
+    let mut rng = Rng::new(1);
+    for (a, n) in [(64usize, 64usize), (256, 64), (512, 128), (1024, 256)] {
+        let sigma = ar1_sigma(n, 0.9);
+        let l = cholesky(&sigma).unwrap();
+        let w = Mat::from_fn(a, n, |_, _| rng.gaussian());
+        let y = matmul(&w, &l);
+        let alphas = watersic_alphas(&l, 0.3);
+        for lmmse in [false, true] {
+            let stats = Bench::new(&format!(
+                "zsic {a}x{n} lmmse={}",
+                if lmmse { "y" } else { "n" }
+            ))
+            .with_budget(8, Duration::from_secs(2))
+            .run(|| {
+                std::hint::black_box(zsic(&y, &l, &alphas, lmmse, None));
+            });
+            let weights = (a * n) as f64;
+            let macs = a as f64 * n as f64 * n as f64 / 2.0;
+            report(&stats, Some((weights, "weights")));
+            println!(
+                "{:>44}   ({:.2} GMAC/s effective)",
+                "",
+                macs / stats.per_iter_secs() / 1e9
+            );
+        }
+    }
+}

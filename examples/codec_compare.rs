@@ -1,0 +1,72 @@
+//! Compare the in-repo entropy coders (canonical Huffman, rANS) against
+//! real zstd / DEFLATE on actual WaterSIC integer codes — the Table 6
+//! story as a standalone example, plus coder throughput.
+//!
+//!     cargo run --release --offline --example codec_compare
+
+use std::time::Instant;
+
+use watersic::entropy::external::{deflate_bpp, zstd_bpp, ZstdCodec};
+use watersic::entropy::huffman::Huffman;
+use watersic::entropy::rans::Rans;
+use watersic::entropy::{column_coded_rate, entropy_bits, Codec};
+use watersic::linalg::Mat;
+use watersic::quant::waterfilling::ar1_sigma;
+use watersic::quant::watersic::plain_watersic;
+use watersic::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // realistic codes: quantize a large Gaussian layer at ~2.1 bits
+    let (a, n) = (2048, 128);
+    let sigma = ar1_sigma(n, 0.85);
+    let mut rng = Rng::new(11);
+    let w = Mat::from_fn(a, n, |_, _| rng.gaussian());
+    let l = watersic::linalg::chol::cholesky(&sigma)?;
+    let gm = watersic::quant::zsic::geomean_diag(&l);
+    let q = plain_watersic(&w, &sigma, gm, true)?;
+    let z = &q.z;
+    println!(
+        "codes: {a}×{n}, joint entropy {:.3} bits, per-column coded rate {:.3} bits\n",
+        entropy_bits(z),
+        column_coded_rate(z, a, n)
+    );
+
+    println!(
+        "{:<10} {:>9} {:>12} {:>12} {:>10}",
+        "codec", "bits/sym", "enc MB/s", "dec MB/s", "lossless"
+    );
+    println!("{}", "-".repeat(58));
+    for codec in [&Huffman as &dyn Codec, &Rans, &ZstdCodec] {
+        let t0 = Instant::now();
+        let enc = codec.encode(z);
+        let t_enc = t0.elapsed().as_secs_f64();
+        let t1 = Instant::now();
+        let dec = codec.decode(&enc, z.len())?;
+        let t_dec = t1.elapsed().as_secs_f64();
+        let mb = (z.len() * 4) as f64 / 1e6;
+        println!(
+            "{:<10} {:>9.3} {:>12.1} {:>12.1} {:>10}",
+            codec.name(),
+            8.0 * enc.len() as f64 / z.len() as f64,
+            mb / t_enc,
+            mb / t_dec,
+            if dec == *z { "yes" } else { "NO!" }
+        );
+    }
+    // byte-stream general-purpose codecs (paper's Table 6 measurement)
+    println!(
+        "{:<10} {:>9.3}   (column-major int8 packing, level 22)",
+        "zstd-22",
+        zstd_bpp(z, a, n)
+    );
+    println!(
+        "{:<10} {:>9.3}   (column-major int8 packing, best)",
+        "deflate",
+        deflate_bpp(z, a, n)
+    );
+    println!(
+        "\nAll coders land within a few tenths of a bit of the entropy \
+         estimate — the paper's premise that entropy ≈ achievable rate."
+    );
+    Ok(())
+}

@@ -1,0 +1,58 @@
+//! Quickstart: quantize a single linear layer with WaterSIC and compare
+//! against GPTQ and the information-theoretic limit.
+//!
+//!     cargo run --release --offline --example quickstart
+
+use watersic::linalg::chol::cholesky;
+use watersic::linalg::Mat;
+use watersic::quant::waterfilling::{ar1_sigma, r_wf, spectrum, SHAPING_GAP_BITS};
+use watersic::quant::watersic::plain_watersic;
+use watersic::quant::zsic::geomean_diag;
+use watersic::quant::{distortion, gptq};
+use watersic::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // A synthetic layer: 512 output channels, 96 input features whose
+    // activations are strongly correlated (AR(1), ρ = 0.95).
+    let (a, n, rho) = (512, 96, 0.95);
+    let sigma = ar1_sigma(n, rho);
+    let mut rng = Rng::new(1);
+    let w = Mat::from_fn(a, n, |_, _| rng.gaussian());
+    let lam = spectrum(&sigma);
+    let l = cholesky(&sigma)?;
+    let gm = geomean_diag(&l);
+
+    println!("layer: {a}×{n}, AR(1) ρ={rho} activations\n");
+    println!(
+        "{:>6} | {:>10} {:>8} | {:>10} {:>8}",
+        "rate", "D(WaterSIC)", "gap", "D(GPTQ)", "gap"
+    );
+    println!("{}", "-".repeat(52));
+
+    for target in [2.0, 3.0, 4.0] {
+        // WaterSIC spacing α_i = c/ℓ_ii; GPTQ spacing A = αI — matched
+        // lattice density, rates targeted by secant.
+        let q_ws = plain_watersic(&w, &sigma, gm * 2f64.powf(-target) * 4.1, false)?;
+        let q_gq = gptq::gptq_at_rate(
+            &w,
+            &watersic::quant::LayerStats::from_sigma(sigma.clone()),
+            q_ws.entropy_bits,
+            false,
+            0.0,
+        )?;
+        let d_ws = distortion(&w, &q_ws.dequant(), &sigma);
+        let d_gq = distortion(&w, &q_gq.dequant(), &sigma);
+        let gap_ws = q_ws.entropy_bits - r_wf(d_ws, &lam, 1.0);
+        let gap_gq = q_gq.entropy_bits - r_wf(d_gq, &lam, 1.0);
+        println!(
+            "{:>6.2} | {:>10.3e} {:>8.3} | {:>10.3e} {:>8.3}",
+            q_ws.entropy_bits, d_ws, gap_ws, d_gq, gap_gq
+        );
+    }
+    println!(
+        "\nWaterSIC's gap to the IT limit ≈ the lattice shaping constant \
+         ({SHAPING_GAP_BITS:.3} bit);\nGPTQ additionally pays the AM/GM \
+         spread of the Cholesky diagonal (Thm 3.3)."
+    );
+    Ok(())
+}

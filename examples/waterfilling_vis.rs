@@ -1,0 +1,74 @@
+//! Visualize the waterfilling rate allocation (§3.1) and the per-column
+//! rates WaterSIC actually realizes — ASCII rendition of Fig. 5's left
+//! panel plus the classical waterfilling picture.
+//!
+//!     cargo run --release --offline --example waterfilling_vis
+
+use watersic::linalg::chol::cholesky;
+use watersic::linalg::Mat;
+use watersic::quant::waterfilling::{ar1_sigma, d_wf, spectrum};
+use watersic::quant::watersic::plain_watersic;
+use watersic::util::rng::Rng;
+
+fn bar(x: f64, scale: f64) -> String {
+    "█".repeat(((x * scale) as usize).clamp(0, 60))
+}
+
+fn main() -> anyhow::Result<()> {
+    let n = 32;
+    let rho = 0.9;
+    let sigma = ar1_sigma(n, rho);
+    let lam = spectrum(&sigma);
+    let rate = 2.0;
+    let d = d_wf(rate, &lam, 1.0);
+
+    println!("Reverse waterfilling at R = {rate} bits (AR(1) ρ = {rho}, n = {n})");
+    println!("water level τ chosen so that Σ min(λ_i, τ) = nD, D = {d:.4}\n");
+    println!("{:>4} {:>9} {:>7}  per-eigendirection rate", "i", "λ_i", "R_i");
+    // recover τ from D: every direction with λ > τ gets ½log(λ/τ)
+    let tau = {
+        let (mut lo, mut hi) = (1e-12, lam[0]);
+        for _ in 0..100 {
+            let mid = (lo * hi).sqrt();
+            let dm: f64 =
+                lam.iter().map(|&l| l.min(mid)).sum::<f64>() / n as f64;
+            if dm < d {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        (lo * hi).sqrt()
+    };
+    for (i, &l) in lam.iter().enumerate().take(16) {
+        let ri = if l > tau { 0.5 * (l / tau).log2() } else { 0.0 };
+        println!("{:>4} {:>9.4} {:>7.3}  {}", i, l, ri, bar(ri, 12.0));
+    }
+    println!("   … ({} more)\n", n - 16);
+
+    // What PlainWaterSIC actually does: per-column rates from the
+    // Cholesky innovation variances (no PCA rotation needed!).
+    let mut rng = Rng::new(3);
+    let w = Mat::from_fn(1024, n, |_, _| rng.gaussian());
+    let l = cholesky(&sigma)?;
+    let gm = watersic::quant::zsic::geomean_diag(&l);
+    let q = plain_watersic(&w, &sigma, gm * 2f64.powf(-rate) * 4.13, false)?;
+    let ce = q.column_entropies();
+    println!("PlainWaterSIC per-column (in-feature) realized rates:");
+    for (j, &e) in ce.iter().enumerate().take(16) {
+        println!(
+            "{:>4} ℓ_jj={:>6.3} {:>6.2} bit  {}",
+            j,
+            l[(j, j)],
+            e,
+            bar(e, 10.0)
+        );
+    }
+    println!("   … ({} more)", n - 16);
+    println!(
+        "\nmean column rate {:.3} bits — unequal allocation tracking the \
+         innovation variances ℓ_jj (first columns carry more information).",
+        ce.iter().sum::<f64>() / n as f64
+    );
+    Ok(())
+}

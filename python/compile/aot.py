@@ -1,0 +1,181 @@
+"""AOT entry point: python runs ONCE here, never on the request path.
+
+`make artifacts` invokes this module to produce everything the Rust
+binary needs, into ``artifacts/``:
+
+  corpus_wiki.txt / corpus_web.txt      synthetic corpora (data.py)
+  models/<name>/<param>.npy + meta.json trained picollama weights
+  forward_<name>.hlo.txt                batched scoring forward pass
+                                        (Pallas matmul path) as HLO TEXT
+  zsic_{plain,lmmse}_<a>x<n>.hlo.txt    L2 quantize graph per layer shape
+  manifest.json                         shapes, parameter order, rates
+
+HLO *text* (never ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published `xla` crate binds) rejects; the text
+parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/README.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data
+from . import model as M
+from . import train as T
+
+CORPUS_BYTES = 400_000
+TRAIN = {
+    "picollama_s": dict(steps=350, batch=16),
+    "picollama_m": dict(steps=300, batch=8),
+}
+# Scoring batch used by the exported forward pass (Rust feeds windows of
+# exactly this shape; the eval harness tiles/pads to it).
+EVAL_BATCH = 8
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _write(path: str, text: str):
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"[aot] wrote {path} ({len(text)} bytes)", flush=True)
+
+
+def export_forward(cfg: M.ModelConfig, out_dir: str):
+    """Lower the Pallas-path forward pass with weights as parameters.
+
+    Weights-as-parameters means Rust can feed *quantized* weights without
+    recompiling — the whole point of the artifact.
+    """
+    shapes = cfg.param_shapes()
+    params_spec = {k: jax.ShapeDtypeStruct(v, jnp.float32)
+                   for k, v in shapes.items()}
+    tok_spec = jax.ShapeDtypeStruct((EVAL_BATCH, cfg.ctx), jnp.int32)
+    fn = lambda p, t: (M.forward(p, t, cfg, use_pallas=True),)
+    lowered = jax.jit(fn).lower(params_spec, tok_spec)
+    _write(os.path.join(out_dir, f"forward_{cfg.name}.hlo.txt"),
+           to_hlo_text(lowered))
+
+
+def export_zsic(a: int, n: int, lmmse: bool, out_dir: str):
+    y = jax.ShapeDtypeStruct((a, n), jnp.float32)
+    l = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    al = jax.ShapeDtypeStruct((n,), jnp.float32)
+    fn = lambda y_, l_, a_: tuple(M.quantize_graph(y_, l_, a_, lmmse=lmmse))
+    lowered = jax.jit(fn).lower(y, l, al)
+    tag = "lmmse" if lmmse else "plain"
+    _write(os.path.join(out_dir, f"zsic_{tag}_{a}x{n}.hlo.txt"),
+           to_hlo_text(lowered))
+
+
+def zsic_shapes(cfg: M.ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    return [(d, d), (f, d), (d, f)]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="artifacts")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+    os.makedirs(os.path.join(out, "models"), exist_ok=True)
+    t0 = time.time()
+
+    # 1. corpora ---------------------------------------------------------
+    corpora = {}
+    for domain, seed in (("wiki", 11), ("web", 29)):
+        path = os.path.join(out, f"corpus_{domain}.txt")
+        if args.force or not os.path.exists(path):
+            blob = data.generate_corpus(domain, CORPUS_BYTES, seed)
+            with open(path, "wb") as f:
+                f.write(blob)
+            print(f"[aot] wrote {path} ({len(blob)} bytes)", flush=True)
+        with open(path, "rb") as f:
+            corpora[domain] = f.read()
+
+    # 2. train models ----------------------------------------------------
+    manifest_models = {}
+    for name, cfg in M.CONFIGS.items():
+        mdir = os.path.join(out, "models", name)
+        meta_path = os.path.join(mdir, "meta.json")
+        if args.force or not os.path.exists(meta_path):
+            os.makedirs(mdir, exist_ok=True)
+            print(f"[aot] training {name} "
+                  f"({cfg.n_params()/1e3:.0f}k params)…", flush=True)
+            params = T.train(cfg, corpora["wiki"], **TRAIN[name])
+            for k, v in params.items():
+                np.save(os.path.join(mdir, k.replace("/", "_") + ".npy"),
+                        v.astype(np.float32))
+            ppl_wiki = T.eval_ppl(cfg, params, corpora["wiki"])
+            ppl_web = T.eval_ppl(cfg, params, corpora["web"])
+            meta = {
+                "name": name,
+                "config": {
+                    "vocab": cfg.vocab, "d_model": cfg.d_model,
+                    "n_heads": cfg.n_heads, "n_layers": cfg.n_layers,
+                    "d_ff": cfg.d_ff, "ctx": cfg.ctx,
+                    "norm_eps": cfg.norm_eps,
+                    "rope_theta": cfg.rope_theta,
+                },
+                "n_params": cfg.n_params(),
+                "param_order": M.param_order(cfg),
+                "param_shapes": {k: list(v)
+                                 for k, v in cfg.param_shapes().items()},
+                "quantizable": cfg.quantizable(),
+                "bf16_ppl_wiki": ppl_wiki,
+                "bf16_ppl_web": ppl_web,
+            }
+            with open(meta_path, "w") as f:
+                json.dump(meta, f, indent=1)
+            print(f"[aot] {name}: wiki PPL {ppl_wiki:.3f} "
+                  f"web PPL {ppl_web:.3f}", flush=True)
+        with open(meta_path) as f:
+            manifest_models[name] = json.load(f)
+
+    # 3. HLO artifacts ----------------------------------------------------
+    shapes = set()
+    for cfg in M.CONFIGS.values():
+        shapes.update(zsic_shapes(cfg))
+    shapes.add((1024, 256))  # bench shape
+    for name, cfg in M.CONFIGS.items():
+        path = os.path.join(out, f"forward_{name}.hlo.txt")
+        if args.force or not os.path.exists(path):
+            export_forward(cfg, out)
+    for (a, n) in sorted(shapes):
+        for lmmse in (False, True):
+            tag = "lmmse" if lmmse else "plain"
+            path = os.path.join(out, f"zsic_{tag}_{a}x{n}.hlo.txt")
+            if args.force or not os.path.exists(path):
+                export_zsic(a, n, lmmse, out)
+
+    # 4. manifest ----------------------------------------------------------
+    manifest = {
+        "eval_batch": EVAL_BATCH,
+        "models": manifest_models,
+        "zsic_shapes": sorted([list(s) for s in shapes]),
+        "corpora": {d: f"corpus_{d}.txt" for d in ("wiki", "web")},
+    }
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] done in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,150 @@
+"""Synthetic calibration / evaluation corpora.
+
+The paper calibrates on WikiText-2 and evaluates domain transfer against
+C4 / RedPajama.  Neither corpus is available offline, so we generate two
+*disjoint-domain* synthetic corpora from a small probabilistic grammar:
+
+  * ``wiki`` — encyclopedic register (used for calibration + in-domain eval)
+  * ``web``  — conversational register (off-domain eval, Tables 12/15/16)
+
+The generator is fully deterministic given a seed (own LCG, no numpy RNG
+state dependence) so `make artifacts` is reproducible.  Word frequencies
+are Zipfian, sentences come from templates with agreement and punctuation,
+and there are numeric spans — enough structure for a small byte-level LM
+to reach a low bits-per-byte, which is what the rate-vs-quality curves
+need.
+"""
+
+from __future__ import annotations
+
+
+class Lcg:
+    """64-bit linear congruential generator (same constants as MMIX)."""
+
+    MUL = 6364136223846793005
+    INC = 1442695040888963407
+    MASK = (1 << 64) - 1
+
+    def __init__(self, seed: int):
+        self.state = (seed ^ 0x9E3779B97F4A7C15) & self.MASK
+        for _ in range(4):
+            self._next()
+
+    def _next(self) -> int:
+        self.state = (self.state * self.MUL + self.INC) & self.MASK
+        return self.state >> 33
+
+    def below(self, n: int) -> int:
+        return self._next() % n
+
+    def uniform(self) -> float:
+        return self._next() / float(1 << 31)
+
+
+def _zipf_pick(rng: Lcg, words: list[str]) -> str:
+    """Pick from ``words`` with a Zipf(1.0)-ish distribution."""
+    n = len(words)
+    # inverse-CDF trick: index ~ n^u - 1 concentrates mass at low ranks
+    u = rng.uniform()
+    idx = int((n + 1) ** u) - 1
+    return words[min(max(idx, 0), n - 1)]
+
+
+_WIKI_NOUNS = [
+    "system", "theory", "river", "empire", "protein", "algorithm", "treaty",
+    "galaxy", "mineral", "province", "archive", "lattice", "equation",
+    "dynasty", "molecule", "survey", "census", "harbor", "plateau", "colony",
+    "compiler", "cathedral", "isotope", "manuscript", "parliament",
+]
+_WIKI_ADJS = [
+    "ancient", "linear", "northern", "optimal", "notable", "coastal",
+    "federal", "thermal", "discrete", "maritime", "industrial", "classical",
+    "adjacent", "abundant", "formal", "stable", "central", "regional",
+]
+_WIKI_VERBS = [
+    "describes", "contains", "produces", "governs", "denotes", "spans",
+    "precedes", "yields", "encodes", "borders", "supports", "implies",
+    "exhibits", "comprises", "resembles", "determines",
+]
+_WIKI_TEMPLATES = [
+    "The {a} {n} {v} the {a2} {n2}.",
+    "In {y}, the {n} of {N} {v} a {a} {n2}.",
+    "A {a} {n} is a {n2} that {v} {m} {n3}s.",
+    "The {n} was established in {y} and {v} the {n2}.",
+    "Each {a} {n} {v} approximately {m} {n2}s per {n3}.",
+    "Researchers noted that the {n} {v} a {a} {n2} in {y}.",
+    "The {a} {n}, first recorded in {y}, {v} the {a2} {n2}.",
+]
+
+_WEB_NOUNS = [
+    "recipe", "gadget", "playlist", "weekend", "coupon", "sneaker", "podcast",
+    "roadtrip", "browser", "smoothie", "backpack", "meetup", "thread",
+    "charger", "sticker", "snack", "puzzle", "garage", "ticket", "banner",
+]
+_WEB_ADJS = [
+    "awesome", "cheap", "quick", "tiny", "crazy", "fresh", "handy", "spicy",
+    "cozy", "viral", "glossy", "retro", "noisy", "shiny", "lazy", "zesty",
+]
+_WEB_VERBS = [
+    "loves", "shares", "grabs", "posts", "tries", "ships", "streams",
+    "fixes", "rates", "swaps", "bundles", "unboxes", "reviews", "tweaks",
+]
+_WEB_TEMPLATES = [
+    "Honestly, this {a} {n} {v} my {a2} {n2}!",
+    "Top {m} reasons your {n} {v} a {a} {n2}.",
+    "I just {v2} a {a} {n} and it {v} the {n2}.",
+    "Who else {v} {a} {n}s on a {n2}?",
+    "Deal alert: {a} {n} for only {m} credits.",
+    "My {n} {v} the {a} {n2} every single {n3}.",
+]
+
+_NAMES = ["Aldren", "Borvia", "Cethia", "Doral", "Evaria", "Fenwick",
+          "Garona", "Helmast", "Ivoria", "Jurath"]
+
+
+def _fill(rng: Lcg, template: str, nouns, adjs, verbs) -> str:
+    out = template
+    repl = {
+        "{a}": lambda: _zipf_pick(rng, adjs),
+        "{a2}": lambda: _zipf_pick(rng, adjs),
+        "{n}": lambda: _zipf_pick(rng, nouns),
+        "{n2}": lambda: _zipf_pick(rng, nouns),
+        "{n3}": lambda: _zipf_pick(rng, nouns),
+        "{v}": lambda: _zipf_pick(rng, verbs),
+        "{v2}": lambda: _zipf_pick(rng, verbs),
+        "{N}": lambda: _NAMES[rng.below(len(_NAMES))],
+        "{y}": lambda: str(1400 + rng.below(620)),
+        "{m}": lambda: str(2 + rng.below(97)),
+    }
+    for key, fn in repl.items():
+        while key in out:
+            out = out.replace(key, fn(), 1)
+    return out
+
+
+def generate_corpus(domain: str, n_bytes: int, seed: int) -> bytes:
+    """Generate roughly ``n_bytes`` of text for ``domain`` in {wiki, web}."""
+    if domain == "wiki":
+        nouns, adjs, verbs, templates = (
+            _WIKI_NOUNS, _WIKI_ADJS, _WIKI_VERBS, _WIKI_TEMPLATES)
+    elif domain == "web":
+        nouns, adjs, verbs, templates = (
+            _WEB_NOUNS, _WEB_ADJS, _WEB_VERBS, _WEB_TEMPLATES)
+    else:
+        raise ValueError(f"unknown domain {domain!r}")
+
+    rng = Lcg(seed)
+    chunks: list[str] = []
+    total = 0
+    para_len = 0
+    while total < n_bytes:
+        sent = _fill(rng, templates[rng.below(len(templates))],
+                     nouns, adjs, verbs)
+        sep = " "
+        para_len += 1
+        if para_len >= 4 + rng.below(5):
+            sep = "\n"
+            para_len = 0
+        chunks.append(sent + sep)
+        total += len(sent) + 1
+    return "".join(chunks).encode("utf-8")[:n_bytes]

@@ -1,0 +1,70 @@
+"""Layer-1 Pallas kernel: tiled matmul for the picollama forward pass.
+
+Every quantizable linear layer in the exported forward graph routes its
+activations through this kernel (x @ Wᵀ), so the AOT HLO exercises the
+Pallas lowering path end to end.  Blocking follows the standard MXU
+pattern: (BM × K) · (K × BN) tiles with the full contraction dimension
+resident (layer widths here are ≤ 512, so a K-resident schedule fits
+VMEM comfortably; see vmem_bytes).
+
+interpret=True is mandatory on CPU PJRT (see zsic.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    o_ref[...] = jnp.dot(x_ref[...], w_ref[...],
+                         preferred_element_type=jnp.float32)
+
+
+def matmul(x: jax.Array, w: jax.Array, *, bm: int = DEFAULT_BM,
+           bn: int = DEFAULT_BN, interpret: bool = True) -> jax.Array:
+    """Compute x @ w with a tiled Pallas kernel.
+
+    x: (m, k) float32;  w: (k, n) float32  →  (m, n) float32.
+    Tile sizes are clamped to the problem size; m and n must be divisible
+    by the (clamped) tiles.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    bm = min(bm, m)
+    bn = min(bn, n)
+    if m % bm or n % bn:
+        raise ValueError(f"({m},{n}) not divisible by tiles ({bm},{bn})")
+
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def linear(x: jax.Array, w: jax.Array, *, interpret: bool = True):
+    """Row-major linear layer: x (…, in) · Wᵀ with W stored (out, in)."""
+    lead = x.shape[:-1]
+    x2 = x.reshape((-1, x.shape[-1]))
+    y = matmul(x2, w.T, interpret=interpret)
+    return y.reshape((*lead, w.shape[0]))
+
+
+def vmem_bytes(m: int, n: int, k: int, bm: int = DEFAULT_BM,
+               bn: int = DEFAULT_BN) -> int:
+    """Static VMEM estimate: one x tile + one w tile + one out tile."""
+    bm = min(bm, m)
+    bn = min(bn, n)
+    return 4 * (bm * k + k * bn + bm * bn)

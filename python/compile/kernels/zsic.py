@@ -1,0 +1,130 @@
+"""Layer-1 Pallas kernel: ZSIC successive-interference-cancellation quantizer.
+
+This is the compute hot-spot of WaterSIC (Algorithm 1 + the LMMSE
+correction of Section 4).  The paper's reference implementation is a GPU
+(H100) batched rank-1 update; the TPU re-think here (DESIGN.md
+§Hardware-Adaptation) is:
+
+  * the (a, n) residual panel Y lives in VMEM for the whole kernel and is
+    carried across a *sequential* grid over column blocks (the canonical
+    TPU accumulator-revisit pattern) — no HBM round trips per column;
+  * columns are processed right-to-left; the per-column interference
+    update is expressed as a full-width outer product z · L[i, :], which
+    maps onto the MXU.  Columns j > i are untouched because L is lower
+    triangular (L[i, j>i] = 0), and column i itself becomes the residual
+    error e_SIC — it is never read again, so no masking is needed;
+  * rounding + LMMSE shrinkage are VPU element-wise ops.
+
+interpret=True is mandatory: the CPU PJRT client cannot execute Mosaic
+custom-calls, and all correctness claims are validated through the
+interpret path against kernels/ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Column-block width of the sequential grid.  Power-of-two layer widths
+# (64/128/256/512) are all divisible by it or smaller than it.
+DEFAULT_BLOCK = 64
+
+
+def _zsic_kernel(y_ref, l_ref, a_ref, z_ref, g_ref, r_ref, *,
+                 blk: int, nb: int, lmmse: bool):
+    k = pl.program_id(0)
+    j = nb - 1 - k  # process blocks right-to-left
+
+    # First grid step: initialize the resident residual panel from Y.
+    @pl.when(k == 0)
+    def _init():
+        r_ref[...] = y_ref[...]
+
+    base = j * blk
+
+    def body(t, _):
+        c = blk - 1 - t          # local column, right-to-left
+        i = base + c             # global column index
+        col = pl.load(r_ref, (slice(None), pl.dslice(i, 1)))    # (a, 1)
+        lrow = pl.load(l_ref, (pl.dslice(i, 1), slice(None)))   # (1, n)
+        lii = pl.load(l_ref, (pl.dslice(i, 1), pl.dslice(i, 1)))
+        alpha = pl.load(a_ref, (pl.dslice(i, 1),))               # (1,)
+        s = alpha[0] * lii[0, 0]
+        z = jnp.round(col / s)   # round-half-to-even, matches ref + Rust
+        if lmmse:
+            num = jnp.sum(col * z)
+            den = s * jnp.sum(z * z)
+            gamma = jnp.where(den > 0.0, num / den, 1.0)
+        else:
+            gamma = jnp.float32(1.0)
+        pl.store(z_ref, (slice(None), pl.dslice(c, 1)),
+                 z.astype(jnp.int32))
+        pl.store(g_ref, (pl.dslice(c, 1),), jnp.full((1,), gamma))
+        # Interference cancellation: rank-1 MXU update over the full
+        # panel width (see module docstring for why no mask is needed).
+        r_ref[...] = r_ref[...] - (gamma * alpha[0]) * (z @ lrow)
+        return 0
+
+    jax.lax.fori_loop(0, blk, body, 0)
+
+
+def zsic(y: jax.Array, l: jax.Array, alphas: jax.Array, *,
+         lmmse: bool = True, block: int = DEFAULT_BLOCK,
+         interpret: bool = True):
+    """Quantize Y = W·L onto the lattice Zⁿ·diag(alphas)·L.
+
+    Args:
+      y: (a, n) float32 — rows of W·L (or the drift-corrected ŷ).
+      l: (n, n) float32 lower-triangular Cholesky factor of Σ.
+      alphas: (n,) float32 per-column spacings (WaterSIC: c/ℓ_ii; GPTQ: α).
+      lmmse: apply per-column LMMSE shrinkage γ_i (eq. 15).
+      block: column-block width of the sequential grid.
+      interpret: must stay True on CPU PJRT (Mosaic is TPU-only).
+
+    Returns:
+      (z, gammas, resid): int32 codes (a, n), shrinkages (n,), and the
+      final residual panel (a, n) whose column i is the quantization
+      error e_SIC of column i.
+    """
+    a, n = y.shape
+    blk = min(block, n)
+    if n % blk != 0:
+        raise ValueError(f"n={n} must be divisible by block={blk}")
+    nb = n // blk
+
+    kernel = functools.partial(_zsic_kernel, blk=blk, nb=nb, lmmse=lmmse)
+    z, g, r = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((a, n), lambda k: (0, 0)),     # Y (read once)
+            pl.BlockSpec((n, n), lambda k: (0, 0)),     # L resident
+            pl.BlockSpec((n,), lambda k: (0,)),         # alphas resident
+        ],
+        out_specs=[
+            pl.BlockSpec((a, blk), lambda k: (0, nb - 1 - k)),  # Z block
+            pl.BlockSpec((blk,), lambda k: (nb - 1 - k,)),      # gammas
+            pl.BlockSpec((a, n), lambda k: (0, 0)),  # residual, revisited
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((a, n), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((a, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(y.astype(jnp.float32), l.astype(jnp.float32),
+      alphas.astype(jnp.float32))
+    return z, g, r
+
+
+def vmem_bytes(a: int, n: int, block: int = DEFAULT_BLOCK) -> int:
+    """Static VMEM footprint estimate for the TPU schedule (DESIGN §Perf).
+
+    Resident: residual panel (a·n), L (n·n), alphas (n), plus the Z/γ
+    output blocks (a·block + block). float32/int32 = 4 bytes each.
+    """
+    blk = min(block, n)
+    return 4 * (a * n + n * n + n + a * blk + blk + a * n)

@@ -1,0 +1,200 @@
+"""Layer-2 JAX model: `picollama`, a byte-level pre-LN transformer LM.
+
+Architecturally a scaled-down Llama (RMSNorm, RoPE, causal multi-head
+attention, SiLU-gated FFN, residual stream) so that every code path the
+paper exercises exists here: down-projections (w_o, w_2) feeding the
+residual stream, jointly-quantized QKV projections, RMSNorm-induced dead
+features, and softmax error amplification.
+
+The forward pass routes every quantizable linear layer through the
+Layer-1 Pallas matmul kernel when ``use_pallas=True`` (the configuration
+that gets AOT-lowered to HLO for the Rust runtime).  Training uses the
+plain-jnp path for speed; numerics of the two paths are asserted equal
+in the pytest suite.
+
+Weight naming convention (shared verbatim with the Rust side):
+  embed                     (V, D)
+  layers.{i}.norm1          (D,)
+  layers.{i}.attn.wq|wk|wv|wo   (D, D)    stored (out, in)
+  layers.{i}.norm2          (D,)
+  layers.{i}.ffn.w1|w3      (F, D)
+  layers.{i}.ffn.w2         (D, F)
+  final_norm                (D,)
+  head                      (V, D)
+The 7 per-block matrices are the quantization targets, matching the
+paper's layerwise pipeline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import matmul as mm
+from .kernels import zsic as zsic_kernel
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int = 256
+    d_model: int = 64
+    n_heads: int = 4
+    n_layers: int = 2
+    d_ff: int = 256
+    ctx: int = 128
+    norm_eps: float = 1e-5
+    rope_theta: float = 10000.0
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_shapes(self) -> Dict[str, tuple]:
+        shapes = {"embed": (self.vocab, self.d_model)}
+        for i in range(self.n_layers):
+            p = f"layers.{i}."
+            shapes[p + "norm1"] = (self.d_model,)
+            for w in ("wq", "wk", "wv", "wo"):
+                shapes[p + f"attn.{w}"] = (self.d_model, self.d_model)
+            shapes[p + "norm2"] = (self.d_model,)
+            shapes[p + "ffn.w1"] = (self.d_ff, self.d_model)
+            shapes[p + "ffn.w3"] = (self.d_ff, self.d_model)
+            shapes[p + "ffn.w2"] = (self.d_model, self.d_ff)
+        shapes["final_norm"] = (self.d_model,)
+        shapes["head"] = (self.vocab, self.d_model)
+        return shapes
+
+    def n_params(self) -> int:
+        return sum(int(np.prod(s)) for s in self.param_shapes().values())
+
+    def quantizable(self):
+        """Names of the per-block linear layers the paper quantizes."""
+        out = []
+        for i in range(self.n_layers):
+            p = f"layers.{i}."
+            out += [p + f"attn.{w}" for w in ("wq", "wk", "wv", "wo")]
+            out += [p + f"ffn.{w}" for w in ("w1", "w3", "w2")]
+        return out
+
+
+# Two model sizes stand in for the paper's Llama-3.2-1B / Qwen3-8B pair.
+PICOLLAMA_S = ModelConfig(name="picollama_s", d_model=64, n_heads=4,
+                          n_layers=2, d_ff=256)
+PICOLLAMA_M = ModelConfig(name="picollama_m", d_model=128, n_heads=4,
+                          n_layers=2, d_ff=512)
+CONFIGS = {c.name: c for c in (PICOLLAMA_S, PICOLLAMA_M)}
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, jax.Array]:
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for name, shape in cfg.param_shapes().items():
+        key, sub = jax.random.split(key)
+        if name.endswith(("norm1", "norm2", "final_norm")):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            fan_in = shape[-1]
+            params[name] = (jax.random.normal(sub, shape, jnp.float32)
+                            / jnp.sqrt(fan_in))
+    return params
+
+
+def rms_norm(x: jax.Array, gain: jax.Array, eps: float) -> jax.Array:
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * gain
+
+
+def _rope_tables(ctx: int, head_dim: int, theta: float):
+    pos = jnp.arange(ctx, dtype=jnp.float32)[:, None]
+    idx = jnp.arange(head_dim // 2, dtype=jnp.float32)[None, :]
+    freqs = pos / (theta ** (2.0 * idx / head_dim))
+    return jnp.cos(freqs), jnp.sin(freqs)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: (B, H, T, hd) with hd split into two half-planes."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[None, None, :, :]
+    s = sin[None, None, :, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1)
+
+
+def _linear(x, w, use_pallas: bool):
+    if use_pallas:
+        return mm.linear(x, w)
+    return x @ w.T
+
+
+def forward(params: Dict[str, jax.Array], tokens: jax.Array,
+            cfg: ModelConfig, *, use_pallas: bool = False,
+            collect_attn: bool = False):
+    """Run the LM; tokens (B, T) int32 → logits (B, T, V).
+
+    With collect_attn=True also returns the per-layer attention
+    probability tensors (B, H, T, T) — used to validate the Rust-side
+    attention-weighted calibration (eq. 19) against the same numbers.
+    """
+    B, T = tokens.shape
+    D, H, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    x = params["embed"][tokens]          # (B, T, D)
+    cos, sin = _rope_tables(T, hd, cfg.rope_theta)
+    mask = jnp.tril(jnp.ones((T, T), jnp.float32))
+    neg = jnp.float32(-1e9)
+    attns = []
+    for i in range(cfg.n_layers):
+        p = f"layers.{i}."
+        h = rms_norm(x, params[p + "norm1"], cfg.norm_eps)
+        q = _linear(h, params[p + "attn.wq"], use_pallas)
+        k = _linear(h, params[p + "attn.wk"], use_pallas)
+        v = _linear(h, params[p + "attn.wv"], use_pallas)
+        q = apply_rope(q.reshape(B, T, H, hd).transpose(0, 2, 1, 3), cos, sin)
+        k = apply_rope(k.reshape(B, T, H, hd).transpose(0, 2, 1, 3), cos, sin)
+        v = v.reshape(B, T, H, hd).transpose(0, 2, 1, 3)
+        scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+        scores = jnp.where(mask[None, None] > 0, scores, neg)
+        probs = jax.nn.softmax(scores, axis=-1)
+        if collect_attn:
+            attns.append(probs)
+        ctxv = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+        ctxv = ctxv.transpose(0, 2, 1, 3).reshape(B, T, D)
+        x = x + _linear(ctxv, params[p + "attn.wo"], use_pallas)
+        h = rms_norm(x, params[p + "norm2"], cfg.norm_eps)
+        gate = jax.nn.silu(_linear(h, params[p + "ffn.w1"], use_pallas))
+        up = _linear(h, params[p + "ffn.w3"], use_pallas)
+        x = x + _linear(gate * up, params[p + "ffn.w2"], use_pallas)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _linear(x, params["head"], use_pallas)
+    if collect_attn:
+        return logits, attns
+    return logits
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Mean next-token CE in nats; logits (B, T, V), targets (B, T)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    picked = jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return -jnp.mean(picked)
+
+
+def quantize_graph(y: jax.Array, l: jax.Array, alphas: jax.Array, *,
+                   lmmse: bool = True):
+    """L2 wrapper of the L1 ZSIC kernel — the graph AOT-exported per
+    layer shape.  Inputs are the fully L3-prepared quantities (damped /
+    drift-corrected ŷ and L̂, spacing vector); outputs the integer codes,
+    LMMSE shrinkages, and residual panel."""
+    return zsic_kernel.zsic(y, l, alphas, lmmse=lmmse)
+
+
+def param_order(cfg: ModelConfig):
+    """Flattened parameter order used by the exported forward HLO.
+
+    jax.jit flattens dict params in sorted-key order; the Rust runtime
+    relies on this exact list (also recorded in the artifact manifest).
+    """
+    return sorted(cfg.param_shapes().keys())

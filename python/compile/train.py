@@ -1,0 +1,105 @@
+"""Build-time training of the picollama models on the synthetic corpus.
+
+Runs ONCE inside `make artifacts` (never on the request path).  Plain
+Adam with cosine decay, next-byte cross-entropy, windows sampled from
+the corpus with a deterministic LCG.  Training uses the jnp matmul path
+(the Pallas interpret path is numerically identical but much slower);
+the exported inference HLO uses the Pallas path.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import model as M
+from .data import Lcg
+
+
+def sample_batch(corpus: np.ndarray, batch: int, ctx: int,
+                 rng: Lcg) -> np.ndarray:
+    """(batch, ctx+1) int32 windows; target is input shifted by one."""
+    n = len(corpus) - ctx - 1
+    idx = np.array([rng.below(n) for _ in range(batch)])
+    return np.stack([corpus[i:i + ctx + 1] for i in idx]).astype(np.int32)
+
+
+def adam_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree_util.tree_map(jnp.zeros_like, params),
+            "t": jnp.zeros((), jnp.float32)}
+
+
+def adam_update(params, grads, state, lr, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1.0
+    m = jax.tree_util.tree_map(
+        lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree_util.tree_map(
+        lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mh = jax.tree_util.tree_map(lambda m_: m_ / (1 - b1 ** t), m)
+    vh = jax.tree_util.tree_map(lambda v_: v_ / (1 - b2 ** t), v)
+    new = jax.tree_util.tree_map(
+        lambda p, m_, v_: p - lr * m_ / (jnp.sqrt(v_) + eps),
+        params, mh, vh)
+    return new, {"m": m, "v": v, "t": t}
+
+
+def train(cfg: M.ModelConfig, corpus_bytes: bytes, *, steps: int = 300,
+          batch: int = 16, peak_lr: float = 3e-3, seed: int = 7,
+          log_every: int = 50) -> Dict[str, np.ndarray]:
+    """Train and return params as a dict of numpy arrays."""
+    corpus = np.frombuffer(corpus_bytes, dtype=np.uint8)
+    params = M.init_params(cfg, seed=seed)
+    opt = adam_init(params)
+    rng = Lcg(seed * 7919 + 13)
+
+    @functools.partial(jax.jit, static_argnums=(3,))
+    def step(params, opt, windows, step_idx_static, lr):
+        tokens = windows[:, :-1]
+        targets = windows[:, 1:]
+
+        def loss_fn(p):
+            logits = M.forward(p, tokens, cfg, use_pallas=False)
+            return M.cross_entropy(logits, targets)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        params, opt = adam_update(params, grads, opt, lr)
+        return params, opt, loss
+
+    t0 = time.time()
+    losses = []
+    for it in range(steps):
+        # cosine decay with short warmup
+        warm = min(1.0, (it + 1) / 20.0)
+        lr = peak_lr * warm * 0.5 * (1 + np.cos(np.pi * it / steps))
+        windows = jnp.asarray(sample_batch(corpus, batch, cfg.ctx, rng))
+        params, opt, loss = step(params, opt, windows, 0, jnp.float32(lr))
+        losses.append(float(loss))
+        if log_every and (it % log_every == 0 or it == steps - 1):
+            bpb = losses[-1] / np.log(2.0)
+            print(f"[train {cfg.name}] step {it:4d} loss {losses[-1]:.4f} "
+                  f"({bpb:.3f} bpb) lr {lr:.2e} "
+                  f"elapsed {time.time()-t0:.1f}s", flush=True)
+    return {k: np.asarray(v) for k, v in params.items()}
+
+
+def eval_ppl(cfg: M.ModelConfig, params, corpus_bytes: bytes, *,
+             batches: int = 4, batch: int = 8, seed: int = 99) -> float:
+    """Teacher-forced perplexity (e^CE) on held-out windows."""
+    corpus = np.frombuffer(corpus_bytes, dtype=np.uint8)
+    rng = Lcg(seed)
+    jparams = {k: jnp.asarray(v) for k, v in params.items()}
+    tot, cnt = 0.0, 0
+    fwd = jax.jit(lambda p, t: M.forward(p, t, cfg, use_pallas=False))
+    for _ in range(batches):
+        win = sample_batch(corpus, batch, cfg.ctx, rng)
+        logits = fwd(jparams, jnp.asarray(win[:, :-1]))
+        ce = M.cross_entropy(logits, jnp.asarray(win[:, 1:]))
+        tot += float(ce)
+        cnt += 1
+    return float(np.exp(tot / cnt))

@@ -1,0 +1,71 @@
+"""AOT export smoke tests: HLO text emission, artifact presence after
+`make artifacts`, and manifest consistency."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_smoke():
+    fn = lambda x, y: (jnp.matmul(x, y) + 1.0,)
+    spec = jax.ShapeDtypeStruct((4, 4), jnp.float32)
+    text = aot.to_hlo_text(jax.jit(fn).lower(spec, spec))
+    assert "HloModule" in text
+    assert "f32[4,4]" in text
+
+
+def test_zsic_graph_lowers_to_hlo():
+    y = jax.ShapeDtypeStruct((8, 16), jnp.float32)
+    l = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+    a = jax.ShapeDtypeStruct((16,), jnp.float32)
+    fn = lambda y_, l_, a_: tuple(M.quantize_graph(y_, l_, a_))
+    text = aot.to_hlo_text(jax.jit(fn).lower(y, l, a))
+    assert "HloModule" in text
+    assert "s32[8,16]" in text  # integer codes output
+
+
+def test_zsic_shapes_cover_all_layer_matrices():
+    for cfg in M.CONFIGS.values():
+        shapes = set(aot.zsic_shapes(cfg))
+        pshapes = cfg.param_shapes()
+        for name in cfg.quantizable():
+            assert tuple(pshapes[name]) in shapes, name
+
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="run `make artifacts` first")
+
+
+@needs_artifacts
+def test_manifest_lists_existing_files():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    for name in man["models"]:
+        assert os.path.exists(os.path.join(ART, f"forward_{name}.hlo.txt"))
+        meta = man["models"][name]
+        for pname in meta["param_order"]:
+            npy = os.path.join(ART, "models", name,
+                               pname.replace("/", "_") + ".npy")
+            assert os.path.exists(npy), npy
+    for (a, n) in man["zsic_shapes"]:
+        for tag in ("plain", "lmmse"):
+            assert os.path.exists(
+                os.path.join(ART, f"zsic_{tag}_{a}x{n}.hlo.txt"))
+
+
+@needs_artifacts
+def test_trained_model_beats_uniform():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    for name, meta in man["models"].items():
+        assert meta["bf16_ppl_wiki"] < 32.0, (
+            f"{name} undertrained: ppl {meta['bf16_ppl_wiki']}")

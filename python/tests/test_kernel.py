@@ -1,0 +1,121 @@
+"""Pallas ZSIC kernel vs the pure-numpy oracle — the CORE correctness
+signal of the L1 layer, including a hypothesis sweep over shapes, block
+sizes, scales, and covariance conditioning."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul as MM
+from compile.kernels import ref as R
+from compile.kernels import zsic as K
+
+
+def make_problem(a, n, seed, cond=1.0, sigma_w=1.0):
+    rng = np.random.default_rng(seed)
+    w = (sigma_w * rng.normal(size=(a, n))).astype(np.float32)
+    q = rng.normal(size=(n, n)).astype(np.float64)
+    sigma = q @ q.T / n + 0.05 * np.eye(n)
+    # optionally skew the spectrum to stress conditioning
+    if cond != 1.0:
+        d = np.diag(np.geomspace(1.0, cond, n))
+        sigma = d @ sigma @ d
+    l = np.linalg.cholesky(sigma).astype(np.float32)
+    y = (w.astype(np.float64) @ l.astype(np.float64)).astype(np.float32)
+    return w, sigma.astype(np.float32), l, y
+
+
+@pytest.mark.parametrize("lmmse", [False, True])
+@pytest.mark.parametrize("a,n,block", [(16, 32, 16), (32, 64, 64),
+                                       (8, 48, 16), (64, 16, 16)])
+def test_zsic_matches_ref(a, n, block, lmmse):
+    _, _, l, y = make_problem(a, n, seed=a * 1000 + n)
+    alphas = R.ref_watersic_alphas(l, 0.25)
+    z, g, r = K.zsic(jnp.asarray(y), jnp.asarray(l), jnp.asarray(alphas),
+                     lmmse=lmmse, block=block)
+    z0, g0, r0 = R.ref_zsic(y, l, alphas, lmmse=lmmse)
+    assert np.array_equal(np.asarray(z), z0)
+    np.testing.assert_allclose(np.asarray(g), g0, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(r), r0, rtol=1e-3, atol=1e-4)
+
+
+def test_zsic_gptq_spacing():
+    """A = αI (GPTQ mode) must agree with the oracle too."""
+    _, _, l, y = make_problem(24, 32, seed=5)
+    alphas = R.ref_gptq_alphas(32, 0.2)
+    z, g, r = K.zsic(jnp.asarray(y), jnp.asarray(l), jnp.asarray(alphas),
+                     lmmse=False, block=32)
+    z0, _, _ = R.ref_zsic(y, l, alphas, lmmse=False)
+    assert np.array_equal(np.asarray(z), z0)
+    assert np.all(np.asarray(g) == 1.0)
+
+
+def test_lemma_3_2_error_cube():
+    """Lemma 3.2: without LMMSE, e_SIC ∈ CUBE · A diag(L)."""
+    _, _, l, y = make_problem(64, 48, seed=9)
+    alphas = R.ref_watersic_alphas(l, 0.4)
+    _, _, r = K.zsic(jnp.asarray(y), jnp.asarray(l), jnp.asarray(alphas),
+                     lmmse=False, block=16)
+    bound = 0.5 * alphas * np.abs(np.diag(l)) + 1e-4
+    assert np.all(np.abs(np.asarray(r)) <= bound[None, :])
+
+
+def test_zsic_consistency_z_residual():
+    """Y − Z·diag(γα)·L must equal the reported residual panel."""
+    _, _, l, y = make_problem(16, 32, seed=3)
+    alphas = R.ref_watersic_alphas(l, 0.3)
+    z, g, r = K.zsic(jnp.asarray(y), jnp.asarray(l), jnp.asarray(alphas),
+                     lmmse=True, block=16)
+    recon = (np.asarray(z) * (np.asarray(g) * alphas)[None, :]) @ l
+    np.testing.assert_allclose(y - recon, np.asarray(r),
+                               rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    a=st.integers(4, 40),
+    nb=st.integers(1, 4),
+    blk=st.sampled_from([8, 16]),
+    c=st.floats(0.05, 1.5),
+    cond=st.floats(1.0, 50.0),
+    lmmse=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_zsic_hypothesis(a, nb, blk, c, cond, lmmse, seed):
+    n = nb * blk
+    _, _, l, y = make_problem(a, n, seed=seed, cond=cond)
+    alphas = R.ref_watersic_alphas(l, c)
+    z, g, r = K.zsic(jnp.asarray(y), jnp.asarray(l), jnp.asarray(alphas),
+                     lmmse=lmmse, block=blk)
+    z0, g0, r0 = R.ref_zsic(y, l, alphas, lmmse=lmmse)
+    # Integer codes must match exactly except at knife-edge rounding
+    # boundaries introduced by f32-vs-f64 accumulation differences.
+    mismatch = (np.asarray(z) != z0).mean()
+    assert mismatch < 0.005
+    if mismatch == 0:
+        np.testing.assert_allclose(np.asarray(g), g0, rtol=5e-4, atol=5e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.sampled_from([8, 16, 32]),
+    k=st.sampled_from([8, 24, 64]),
+    n=st.sampled_from([16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_hypothesis(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    out = MM.matmul(jnp.asarray(x), jnp.asarray(w), bm=8, bn=16)
+    np.testing.assert_allclose(np.asarray(out), R.ref_matmul(x, w),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_vmem_budget():
+    """Structural perf check: the largest exported shape fits a 16 MiB
+    VMEM budget under the documented schedule (DESIGN §Perf)."""
+    assert K.vmem_bytes(1024, 256) < 16 * 2**20
+    assert K.vmem_bytes(512, 128) < 16 * 2**20
+    assert MM.vmem_bytes(1024, 256, 512) < 16 * 2**20

@@ -1,0 +1,101 @@
+//! Attention-weighted calibration (eq. 19): per-token importance
+//!
+//!   p_j = 1/(N_H (T−j)) Σ_h Σ_{i≥j} α_{h,i,j}
+//!
+//! computed from the *teacher's* attention probabilities, used to weight
+//! the QKV covariance estimates so tokens that are attended to (e.g.
+//! attention sinks) are quantized with higher fidelity.
+
+/// Compute p_j for one sequence given flattened (H, T, T) attention
+/// probabilities of that sequence.
+pub fn token_importance(probs_ht_t: &[f64], n_heads: usize, t: usize) -> Vec<f64> {
+    assert_eq!(probs_ht_t.len(), n_heads * t * t);
+    let mut p = vec![0.0f64; t];
+    for j in 0..t {
+        let mut acc = 0.0;
+        for h in 0..n_heads {
+            let base = h * t * t;
+            for i in j..t {
+                acc += probs_ht_t[base + i * t + j];
+            }
+        }
+        // paper normalizes by (T − j); at j = T−1 that is 1
+        p[j] = acc / (n_heads as f64 * (t - j) as f64);
+    }
+    p
+}
+
+/// Expand per-sequence importances to per-row weights for a (B·T)-row
+/// panel, normalized to mean 1 so weighted and unweighted covariances
+/// share a scale (required for the ε_aw interpolation of eq. 59).
+pub fn row_weights(probs_bhtt: &[f64], b: usize, n_heads: usize, t: usize) -> Vec<f64> {
+    assert_eq!(probs_bhtt.len(), b * n_heads * t * t);
+    let mut w = Vec::with_capacity(b * t);
+    for bi in 0..b {
+        let seq = &probs_bhtt[bi * n_heads * t * t..(bi + 1) * n_heads * t * t];
+        w.extend(token_importance(seq, n_heads, t));
+    }
+    let mean = w.iter().sum::<f64>() / w.len() as f64;
+    if mean > 0.0 {
+        w.iter_mut().for_each(|x| *x /= mean);
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_attention_gives_uniformish_importance() {
+        // causal uniform: α_{i,j} = 1/(i+1) for j ≤ i
+        let t = 6;
+        let mut probs = vec![0.0; t * t];
+        for i in 0..t {
+            for j in 0..=i {
+                probs[i * t + j] = 1.0 / (i + 1) as f64;
+            }
+        }
+        let p = token_importance(&probs, 1, t);
+        // p_j = (1/(T−j)) Σ_{i≥j} 1/(i+1) — decreasing in j except the
+        // sink effect at j=0
+        assert!(p[0] > p[t - 2]);
+        // last token attends only to itself at weight 1/(t)… p_{T-1} =
+        // α_{T-1,T-1} = 1/T
+        assert!((p[t - 1] - 1.0 / t as f64).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sink_token_gets_high_weight() {
+        // all queries attend fully to token 0 (attention sink)
+        let t = 5;
+        let mut probs = vec![0.0; t * t];
+        for i in 0..t {
+            probs[i * t] = 1.0;
+        }
+        let p = token_importance(&probs, 1, t);
+        assert!((p[0] - 1.0).abs() < 1e-12);
+        for j in 1..t {
+            assert_eq!(p[j], 0.0);
+        }
+    }
+
+    #[test]
+    fn row_weights_mean_one() {
+        let (b, h, t) = (2, 3, 4);
+        let mut probs = vec![0.0; b * h * t * t];
+        // causal softmax-like rows
+        for blk in 0..b * h {
+            for i in 0..t {
+                for j in 0..=i {
+                    probs[blk * t * t + i * t + j] = 1.0 / (i + 1) as f64;
+                }
+            }
+        }
+        let w = row_weights(&probs, b, h, t);
+        assert_eq!(w.len(), b * t);
+        let mean = w.iter().sum::<f64>() / w.len() as f64;
+        assert!((mean - 1.0).abs() < 1e-12);
+        assert!(w.iter().all(|&x| x >= 0.0));
+    }
+}

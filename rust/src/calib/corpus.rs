@@ -1,0 +1,170 @@
+//! Corpus handling: load the build-time synthetic corpora, sample
+//! deterministic token windows for calibration, and carve a held-out
+//! tail for evaluation (the trainer sampled windows uniformly, so the
+//! tail is the least-trained-on region we have; the `web` corpus is
+//! fully off-domain).
+
+use std::path::Path;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Corpus {
+    pub name: String,
+    pub bytes: Vec<u8>,
+}
+
+/// Fraction of the corpus reserved (from the tail) for evaluation.
+pub const EVAL_TAIL_FRAC: f64 = 0.1;
+
+impl Corpus {
+    pub fn load(artifacts: &Path, domain: &str) -> Result<Corpus> {
+        let path = artifacts.join(format!("corpus_{domain}.txt"));
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        ensure!(!bytes.is_empty(), "empty corpus {domain}");
+        Ok(Corpus {
+            name: domain.to_string(),
+            bytes,
+        })
+    }
+
+    pub fn from_bytes(name: &str, bytes: Vec<u8>) -> Corpus {
+        Corpus {
+            name: name.to_string(),
+            bytes,
+        }
+    }
+
+    fn eval_start(&self) -> usize {
+        ((self.bytes.len() as f64) * (1.0 - EVAL_TAIL_FRAC)) as usize
+    }
+
+    /// Sample `count` calibration windows of `ctx`+1 bytes from the head
+    /// region; returns (inputs, targets) flattened per window.
+    pub fn calib_windows(
+        &self,
+        count: usize,
+        ctx: usize,
+        seed: u64,
+    ) -> Vec<(Vec<i32>, Vec<i32>)> {
+        self.sample_region(0, self.eval_start(), count, ctx, seed)
+    }
+
+    /// Deterministic evaluation windows from the held-out tail.
+    pub fn eval_windows(
+        &self,
+        count: usize,
+        ctx: usize,
+        seed: u64,
+    ) -> Vec<(Vec<i32>, Vec<i32>)> {
+        self.sample_region(self.eval_start(), self.bytes.len(), count, ctx, seed)
+    }
+
+    fn sample_region(
+        &self,
+        lo: usize,
+        hi: usize,
+        count: usize,
+        ctx: usize,
+        seed: u64,
+    ) -> Vec<(Vec<i32>, Vec<i32>)> {
+        let span = hi.saturating_sub(lo);
+        assert!(span > ctx + 1, "corpus region too small");
+        let mut rng = Rng::new(seed ^ 0x5EED);
+        (0..count)
+            .map(|_| {
+                let start = lo + rng.below(span - ctx - 1);
+                let inp: Vec<i32> = self.bytes[start..start + ctx]
+                    .iter()
+                    .map(|&b| b as i32)
+                    .collect();
+                let tgt: Vec<i32> = self.bytes[start + 1..start + ctx + 1]
+                    .iter()
+                    .map(|&b| b as i32)
+                    .collect();
+                (inp, tgt)
+            })
+            .collect()
+    }
+}
+
+/// Stack windows into flattened (tokens, targets) batches of `b` windows.
+pub fn batch_windows(
+    windows: &[(Vec<i32>, Vec<i32>)],
+    b: usize,
+) -> Vec<(Vec<i32>, Vec<i32>)> {
+    windows
+        .chunks(b)
+        .filter(|c| c.len() == b)
+        .map(|chunk| {
+            let mut toks = Vec::new();
+            let mut tgts = Vec::new();
+            for (i, t) in chunk {
+                toks.extend_from_slice(i);
+                tgts.extend_from_slice(t);
+            }
+            (toks, tgts)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn corpus() -> Corpus {
+        let text: String = (0..200)
+            .map(|i| format!("sentence number {i} is here. "))
+            .collect();
+        Corpus::from_bytes("test", text.into_bytes())
+    }
+
+    #[test]
+    fn windows_are_shifted_pairs() {
+        let c = corpus();
+        for (inp, tgt) in c.calib_windows(5, 32, 1) {
+            assert_eq!(inp.len(), 32);
+            assert_eq!(tgt.len(), 32);
+            assert_eq!(&inp[1..], &tgt[..31]);
+        }
+    }
+
+    #[test]
+    fn calib_and_eval_regions_disjoint() {
+        let c = corpus();
+        let split = ((c.bytes.len() as f64) * 0.9) as usize;
+        // all calib windows start below the split; eval at/after it
+        let calib = c.calib_windows(50, 16, 2);
+        let eval = c.eval_windows(50, 16, 3);
+        assert_eq!(calib.len(), 50);
+        assert_eq!(eval.len(), 50);
+        // verify eval windows come from tail bytes
+        for (inp, _) in &eval {
+            let needle: Vec<u8> = inp.iter().map(|&x| x as u8).collect();
+            let hay = &c.bytes[split.saturating_sub(17)..];
+            assert!(
+                hay.windows(16).any(|w| w == needle.as_slice()),
+                "eval window not from tail"
+            );
+        }
+    }
+
+    #[test]
+    fn sampling_is_deterministic() {
+        let c = corpus();
+        assert_eq!(c.calib_windows(3, 8, 7), c.calib_windows(3, 8, 7));
+        assert_ne!(c.calib_windows(3, 8, 7), c.calib_windows(3, 8, 8));
+    }
+
+    #[test]
+    fn batching_flattens() {
+        let c = corpus();
+        let w = c.calib_windows(5, 8, 1);
+        let batches = batch_windows(&w, 2);
+        assert_eq!(batches.len(), 2); // 5th window dropped
+        assert_eq!(batches[0].0.len(), 16);
+    }
+}

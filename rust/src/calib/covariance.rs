@@ -1,0 +1,132 @@
+//! Streaming (cross-)covariance accumulators over activation panels.
+//! Covariances here are *uncentered* second moments E[x xᵀ], matching
+//! the GPTQ/WaterSIC Hessian convention Σ_X = E[XXᵀ].
+
+use crate::linalg::Mat;
+
+/// Accumulates Σ = E[x yᵀ] from row panels, optionally with per-row
+/// weights (attention-importance weighting plugs in here).
+#[derive(Clone, Debug)]
+pub struct CovAccum {
+    pub nx: usize,
+    pub ny: usize,
+    sum: Mat,
+    weight: f64,
+}
+
+impl CovAccum {
+    pub fn new(nx: usize, ny: usize) -> CovAccum {
+        CovAccum {
+            nx,
+            ny,
+            sum: Mat::zeros(nx, ny),
+            weight: 0.0,
+        }
+    }
+
+    /// Add panels X (rows × nx) and Y (rows × ny) with unit weights.
+    pub fn add(&mut self, x: &Mat, y: &Mat) {
+        self.add_weighted(x, y, None);
+    }
+
+    /// Add with optional per-row weights.
+    pub fn add_weighted(&mut self, x: &Mat, y: &Mat, w: Option<&[f64]>) {
+        assert_eq!(x.rows, y.rows);
+        assert_eq!(x.cols, self.nx);
+        assert_eq!(y.cols, self.ny);
+        for r in 0..x.rows {
+            let wr = w.map(|w| w[r]).unwrap_or(1.0);
+            if wr == 0.0 {
+                continue;
+            }
+            let xr = x.row(r);
+            let yr = y.row(r);
+            for i in 0..self.nx {
+                let xi = wr * xr[i];
+                if xi == 0.0 {
+                    continue;
+                }
+                let srow = self.sum.row_mut(i);
+                for j in 0..self.ny {
+                    srow[j] += xi * yr[j];
+                }
+            }
+            self.weight += wr;
+        }
+    }
+
+    /// Normalized covariance estimate.
+    pub fn finalize(&self) -> Mat {
+        self.sum.scale(1.0 / self.weight.max(1e-300))
+    }
+
+    pub fn total_weight(&self) -> f64 {
+        self.weight
+    }
+}
+
+/// Symmetric auto-covariance helper: Σ_X = E[x xᵀ].
+pub fn covariance(x: &Mat) -> Mat {
+    let mut acc = CovAccum::new(x.cols, x.cols);
+    acc.add(x, x);
+    acc.finalize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identity_for_white_data() {
+        let mut rng = Rng::new(1);
+        let x = Mat::from_fn(20_000, 4, |_, _| rng.gaussian());
+        let c = covariance(&x);
+        for i in 0..4 {
+            for j in 0..4 {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!(
+                    (c[(i, j)] - expect).abs() < 0.05,
+                    "({i},{j}) = {}",
+                    c[(i, j)]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn weights_change_estimate() {
+        // two clusters; weighting one to zero leaves the other's moment
+        let x = Mat::from_vec(4, 1, vec![1.0, 1.0, 3.0, 3.0]);
+        let mut acc = CovAccum::new(1, 1);
+        acc.add_weighted(&x, &x, Some(&[1.0, 1.0, 0.0, 0.0]));
+        assert!((acc.finalize()[(0, 0)] - 1.0).abs() < 1e-12);
+        let mut acc2 = CovAccum::new(1, 1);
+        acc2.add_weighted(&x, &x, Some(&[0.0, 0.0, 1.0, 1.0]));
+        assert!((acc2.finalize()[(0, 0)] - 9.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cross_covariance_is_not_symmetric() {
+        let x = Mat::from_vec(2, 2, vec![1.0, 0.0, 0.0, 1.0]);
+        let y = Mat::from_vec(2, 2, vec![0.0, 2.0, 1.0, 0.0]);
+        let mut acc = CovAccum::new(2, 2);
+        acc.add(&x, &y);
+        let c = acc.finalize();
+        assert!((c[(0, 1)] - 1.0).abs() < 1e-12);
+        assert!((c[(1, 0)] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn incremental_equals_batch() {
+        let mut rng = Rng::new(5);
+        let x = Mat::from_fn(64, 3, |_, _| rng.gaussian());
+        let full = covariance(&x);
+        let mut acc = CovAccum::new(3, 3);
+        let half1 = x.submatrix(&(0..32).collect::<Vec<_>>(), &[0, 1, 2]);
+        let half2 = x.submatrix(&(32..64).collect::<Vec<_>>(), &[0, 1, 2]);
+        acc.add(&half1, &half1);
+        acc.add(&half2, &half2);
+        assert!(acc.finalize().sub(&full).max_abs() < 1e-12);
+    }
+}

@@ -1,0 +1,308 @@
+//! Teacher/student statistics collector: runs the native forward with
+//! capture on the calibration batches and assembles the per-matrix
+//! `LayerStats` (Σ_X, Σ_X̂, Σ_{X,X̂}, Σ_{Δ,X̂}) with optional
+//! attention-importance weighting — the data plumbing behind §4's
+//! activation-drift correction (Qronos), residual-stream correction,
+//! and attention-weighted calibration.
+
+use std::collections::BTreeMap;
+
+use crate::linalg::Mat;
+use crate::model::transformer::{forward, input_group, Capture, ForwardOpts};
+use crate::model::weights::Weights;
+use crate::model::ModelConfig;
+use crate::quant::LayerStats;
+
+use super::attention::row_weights;
+use super::covariance::CovAccum;
+
+/// Which corrections to apply when assembling stats for one matrix.
+#[derive(Clone, Copy, Debug)]
+pub struct StatsOpts {
+    /// use student statistics (Σ_X̂, Σ_{X,X̂}) — "Qronos"/QA-LDLQ
+    pub drift: bool,
+    /// add Σ_{Δ,X̂} for down-projections (attn.wo / ffn.w2)
+    pub residual: bool,
+    /// weight QKV covariances by teacher attention importance (eq. 19)
+    pub attn_weighted: bool,
+}
+
+impl Default for StatsOpts {
+    fn default() -> Self {
+        StatsOpts {
+            drift: true,
+            residual: true,
+            attn_weighted: false,
+        }
+    }
+}
+
+/// The calibration set: token batches plus cached *teacher* captures
+/// (the teacher never changes during the pipeline).
+pub struct CalibSet {
+    pub batches: Vec<Vec<i32>>, // flattened (b × ctx) token batches
+    pub b: usize,
+    pub teacher_caps: Vec<Capture>,
+    pub teacher_logits: Vec<Mat>,
+}
+
+impl CalibSet {
+    pub fn build(
+        cfg: &ModelConfig,
+        teacher: &Weights,
+        batches: Vec<Vec<i32>>,
+        b: usize,
+    ) -> CalibSet {
+        let caps: Vec<Capture> = batches
+            .iter()
+            .map(|toks| {
+                forward(
+                    cfg,
+                    teacher,
+                    toks,
+                    b,
+                    cfg.ctx,
+                    &ForwardOpts {
+                        capture: true,
+                        tape: false,
+                    },
+                )
+            })
+            .map(|o| o.capture.unwrap())
+            .collect();
+        let logits: Vec<Mat> = batches
+            .iter()
+            .map(|toks| {
+                forward(cfg, teacher, toks, b, cfg.ctx, &ForwardOpts::default()).logits
+            })
+            .collect();
+        CalibSet {
+            batches,
+            b,
+            teacher_caps: caps,
+            teacher_logits: logits,
+        }
+    }
+
+    /// Run the (partially quantized) student over the calibration set.
+    pub fn student_pass(&self, cfg: &ModelConfig, student: &Weights) -> Vec<Capture> {
+        self.batches
+            .iter()
+            .map(|toks| {
+                forward(
+                    cfg,
+                    student,
+                    toks,
+                    self.b,
+                    cfg.ctx,
+                    &ForwardOpts {
+                        capture: true,
+                        tape: false,
+                    },
+                )
+                .capture
+                .unwrap()
+            })
+            .collect()
+    }
+
+    /// Assemble `LayerStats` for one quantizable matrix.
+    pub fn stats_for(
+        &self,
+        cfg: &ModelConfig,
+        matrix: &str,
+        student_caps: &[Capture],
+        opts: StatsOpts,
+    ) -> LayerStats {
+        let group = input_group(matrix);
+        let layer_idx = matrix
+            .strip_prefix("layers.")
+            .and_then(|s| s.split('.').next())
+            .and_then(|s| s.parse::<usize>().ok())
+            .expect("matrix name must be layers.<i>.…");
+        let is_qkv = group.ends_with("attn.qkv");
+        let is_down = matrix.ends_with("attn.wo") || matrix.ends_with("ffn.w2");
+
+        let n = self.teacher_caps[0].inputs[&group].cols;
+        let a = if is_down {
+            cfg.d_model
+        } else {
+            0 // Σ_Δ unused
+        };
+        let mut acc_x = CovAccum::new(n, n);
+        let mut acc_xh = CovAccum::new(n, n);
+        let mut acc_x_xh = CovAccum::new(n, n);
+        let mut acc_d = if is_down && opts.residual {
+            Some(CovAccum::new(a, n))
+        } else {
+            None
+        };
+
+        for (tc, sc) in self.teacher_caps.iter().zip(student_caps) {
+            let x = &tc.inputs[&group];
+            let xh = if opts.drift { &sc.inputs[&group] } else { x };
+            let w: Option<Vec<f64>> = if is_qkv && opts.attn_weighted {
+                Some(row_weights(
+                    &tc.attn_probs[layer_idx],
+                    self.b,
+                    cfg.n_heads,
+                    cfg.ctx,
+                ))
+            } else {
+                None
+            };
+            acc_x.add_weighted(x, x, w.as_deref());
+            acc_xh.add_weighted(xh, xh, w.as_deref());
+            acc_x_xh.add_weighted(x, xh, w.as_deref());
+            if let Some(acc) = acc_d.as_mut() {
+                let r = &tc.residuals[matrix];
+                let rh = &sc.residuals[matrix];
+                let dr = r.sub(rh);
+                acc.add_weighted(&dr, xh, w.as_deref());
+            }
+        }
+        LayerStats {
+            sigma_x: acc_x.finalize(),
+            sigma_xhat: acc_xh.finalize(),
+            sigma_x_xhat: acc_x_xh.finalize(),
+            sigma_d_xhat: acc_d.map(|a| a.finalize()),
+        }
+    }
+
+    /// Teacher input panels for one group, concatenated (used by the
+    /// mixing objective, eq. 60).
+    pub fn teacher_panels(&self, group: &str) -> Vec<&Mat> {
+        self.teacher_caps.iter().map(|c| &c.inputs[group]).collect()
+    }
+}
+
+/// Mean relative Frobenius error between teacher and student panels of
+/// a group — the ablation figures' per-layer "relative MSE at the input
+/// of matrix X".
+pub fn panel_rel_mse(teacher: &[&Mat], student: &[&Mat]) -> f64 {
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (t, s) in teacher.iter().zip(student) {
+        let d = t.sub(s);
+        num += d.data.iter().map(|x| x * x).sum::<f64>();
+        den += t.data.iter().map(|x| x * x).sum::<f64>();
+    }
+    num / den.max(1e-300)
+}
+
+/// Collect a map matrix-name → input-group panels from student captures.
+pub fn student_panels<'a>(caps: &'a [Capture], group: &str) -> Vec<&'a Mat> {
+    caps.iter().map(|c| &c.inputs[group]).collect()
+}
+
+pub fn _unused() -> BTreeMap<String, ()> {
+    BTreeMap::new()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (ModelConfig, Weights, CalibSet) {
+        let cfg = ModelConfig::tiny_test();
+        let teacher = Weights::random(&cfg, 11);
+        let mut rng = crate::util::rng::Rng::new(5);
+        let batches: Vec<Vec<i32>> = (0..2)
+            .map(|_| {
+                (0..2 * cfg.ctx)
+                    .map(|_| rng.below(cfg.vocab) as i32)
+                    .collect()
+            })
+            .collect();
+        let cs = CalibSet::build(&cfg, &teacher, batches, 2);
+        (cfg, teacher, cs)
+    }
+
+    #[test]
+    fn identical_student_gives_matched_stats_and_zero_drift() {
+        let (cfg, teacher, cs) = setup();
+        let scaps = cs.student_pass(&cfg, &teacher);
+        let stats = cs.stats_for(&cfg, "layers.0.ffn.w2", &scaps, StatsOpts::default());
+        assert!(stats.sigma_x.sub(&stats.sigma_xhat).max_abs() < 1e-9);
+        assert!(stats.sigma_x.sub(&stats.sigma_x_xhat).max_abs() < 1e-9);
+        let d = stats.sigma_d_xhat.unwrap();
+        assert!(d.max_abs() < 1e-9, "Σ_Δ must vanish for exact student");
+    }
+
+    #[test]
+    fn perturbed_student_produces_drift() {
+        let (cfg, teacher, cs) = setup();
+        let mut student = teacher.clone();
+        // corrupt an early matrix so downstream inputs drift
+        let mut wq = student.get("layers.0.attn.wq").clone();
+        wq.data.iter_mut().for_each(|x| *x *= 0.5);
+        student.set("layers.0.attn.wq", wq);
+        let scaps = cs.student_pass(&cfg, &student);
+        let stats = cs.stats_for(&cfg, "layers.0.ffn.w2", &scaps, StatsOpts::default());
+        assert!(stats.sigma_x.sub(&stats.sigma_xhat).max_abs() > 1e-6);
+        assert!(stats.sigma_d_xhat.unwrap().max_abs() > 1e-9);
+        // rel MSE at the w2 input is positive
+        let t_panels = cs.teacher_panels("layers.0.ffn.w2");
+        let s_panels = student_panels(&scaps, "layers.0.ffn.w2");
+        assert!(panel_rel_mse(&t_panels, &s_panels) > 1e-9);
+    }
+
+    #[test]
+    fn attention_weighting_changes_qkv_stats_only() {
+        let (cfg, teacher, cs) = setup();
+        let scaps = cs.student_pass(&cfg, &teacher);
+        let base = cs.stats_for(
+            &cfg,
+            "layers.0.attn.wq",
+            &scaps,
+            StatsOpts {
+                attn_weighted: false,
+                ..StatsOpts::default()
+            },
+        );
+        let weighted = cs.stats_for(
+            &cfg,
+            "layers.0.attn.wq",
+            &scaps,
+            StatsOpts {
+                attn_weighted: true,
+                ..StatsOpts::default()
+            },
+        );
+        assert!(base.sigma_x.sub(&weighted.sigma_x).max_abs() > 1e-12);
+        // w2 is unaffected by the flag
+        let w2a = cs.stats_for(&cfg, "layers.0.ffn.w2", &scaps, StatsOpts::default());
+        let w2b = cs.stats_for(
+            &cfg,
+            "layers.0.ffn.w2",
+            &scaps,
+            StatsOpts {
+                attn_weighted: true,
+                ..StatsOpts::default()
+            },
+        );
+        assert!(w2a.sigma_x.sub(&w2b.sigma_x).max_abs() < 1e-15);
+    }
+
+    #[test]
+    fn no_drift_option_collapses_to_teacher_stats() {
+        let (cfg, teacher, cs) = setup();
+        let mut student = teacher.clone();
+        let mut w1 = student.get("layers.0.ffn.w1").clone();
+        w1.data.iter_mut().for_each(|x| *x += 0.1);
+        student.set("layers.0.ffn.w1", w1);
+        let scaps = cs.student_pass(&cfg, &student);
+        let stats = cs.stats_for(
+            &cfg,
+            "layers.0.ffn.w2",
+            &scaps,
+            StatsOpts {
+                drift: false,
+                residual: false,
+                attn_weighted: false,
+            },
+        );
+        assert!(stats.sigma_x.sub(&stats.sigma_xhat).max_abs() < 1e-15);
+        assert!(stats.sigma_d_xhat.is_none());
+    }
+}

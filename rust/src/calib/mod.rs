@@ -1,0 +1,9 @@
+//! Calibration substrate: corpus loading and window sampling, streaming
+//! covariance accumulation, attention-importance weighting (eq. 19),
+//! and the teacher/student drift statistics collector that feeds §4's
+//! corrected objectives.
+
+pub mod attention;
+pub mod corpus;
+pub mod covariance;
+pub mod drift;

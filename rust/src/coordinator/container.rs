@@ -1,0 +1,228 @@
+//! Compressed-model container (`.wsic`): the deployable artifact of the
+//! pipeline.  Per quantized matrix it stores the rANS-coded integer
+//! stream plus the continuous side information (α, γ fused per column;
+//! t per row), and reconstructs bit-identical Ŵ on load.
+//!
+//! Layout (all integers little-endian, varint where noted):
+//!   magic "WSIC" + version u8
+//!   model-name (varint len + utf8)
+//!   matrix count (varint)
+//!   per matrix:
+//!     name, a, n (varints)
+//!     col_scale[n] f32 (α_j·γ_j fused — the paper's A·Γ fusion)
+//!     t[a] f32
+//!     dead-col count + indices (varints)
+//!     rANS stream (varint len + bytes)
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::entropy::bitio::{get_varint, put_varint};
+use crate::entropy::rans::Rans;
+use crate::entropy::Codec;
+use crate::quant::LayerQuant;
+
+const MAGIC: &[u8] = b"WSIC";
+const VERSION: u8 = 1;
+
+pub struct Container {
+    pub model_name: String,
+    pub quants: BTreeMap<String, LayerQuant>,
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_varint(out, s.len() as u64);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn get_str(bytes: &[u8], pos: &mut usize) -> Result<String> {
+    let len = get_varint(bytes, pos)? as usize;
+    let s = bytes
+        .get(*pos..*pos + len)
+        .context("truncated string")?;
+    *pos += len;
+    Ok(String::from_utf8(s.to_vec())?)
+}
+
+impl Container {
+    pub fn new(model_name: &str, quants: BTreeMap<String, LayerQuant>) -> Self {
+        Container {
+            model_name: model_name.to_string(),
+            quants,
+        }
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.push(VERSION);
+        put_str(&mut out, &self.model_name);
+        put_varint(&mut out, self.quants.len() as u64);
+        for (name, q) in &self.quants {
+            put_str(&mut out, name);
+            put_varint(&mut out, q.a as u64);
+            put_varint(&mut out, q.n as u64);
+            for j in 0..q.n {
+                out.extend_from_slice(
+                    &((q.alphas[j] * q.gammas[j]) as f32).to_le_bytes(),
+                );
+            }
+            for i in 0..q.a {
+                out.extend_from_slice(&(q.t[i] as f32).to_le_bytes());
+            }
+            put_varint(&mut out, q.dead_cols.len() as u64);
+            for &d in &q.dead_cols {
+                put_varint(&mut out, d as u64);
+            }
+            let stream = Rans.encode(&q.z);
+            put_varint(&mut out, stream.len() as u64);
+            out.extend_from_slice(&stream);
+        }
+        out
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<Container> {
+        if bytes.len() < 5 || &bytes[..4] != MAGIC {
+            bail!("bad container magic");
+        }
+        if bytes[4] != VERSION {
+            bail!("unsupported container version {}", bytes[4]);
+        }
+        let mut pos = 5;
+        let model_name = get_str(bytes, &mut pos)?;
+        let count = get_varint(bytes, &mut pos)? as usize;
+        let mut quants = BTreeMap::new();
+        for _ in 0..count {
+            let name = get_str(bytes, &mut pos)?;
+            let a = get_varint(bytes, &mut pos)? as usize;
+            let n = get_varint(bytes, &mut pos)? as usize;
+            let mut col_scale = Vec::with_capacity(n);
+            for _ in 0..n {
+                let b = bytes.get(pos..pos + 4).context("truncated scales")?;
+                col_scale.push(f32::from_le_bytes(b.try_into().unwrap()) as f64);
+                pos += 4;
+            }
+            let mut t = Vec::with_capacity(a);
+            for _ in 0..a {
+                let b = bytes.get(pos..pos + 4).context("truncated t")?;
+                t.push(f32::from_le_bytes(b.try_into().unwrap()) as f64);
+                pos += 4;
+            }
+            let ndead = get_varint(bytes, &mut pos)? as usize;
+            let mut dead_cols = Vec::with_capacity(ndead);
+            for _ in 0..ndead {
+                dead_cols.push(get_varint(bytes, &mut pos)? as usize);
+            }
+            let slen = get_varint(bytes, &mut pos)? as usize;
+            let stream = bytes.get(pos..pos + slen).context("truncated stream")?;
+            pos += slen;
+            let z = Rans.decode(stream, a * n)?;
+            quants.insert(
+                name,
+                LayerQuant {
+                    a,
+                    n,
+                    z,
+                    // α·γ are fused on save; reconstruct with γ = 1
+                    alphas: col_scale,
+                    gammas: vec![1.0; n],
+                    t,
+                    entropy_bits: 0.0,
+                    rate_bits: 0.0,
+                    dead_cols,
+                },
+            );
+        }
+        Ok(Container { model_name, quants })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_bytes())
+            .with_context(|| format!("writing {}", path.display()))
+    }
+
+    pub fn load(path: &Path) -> Result<Container> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::from_bytes(&bytes)
+    }
+
+    /// Total size in bytes (the Fig. 1 x-axis, measured not estimated).
+    pub fn size_bytes(&self) -> usize {
+        self.to_bytes().len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn fake_quant(a: usize, n: usize, seed: u64) -> LayerQuant {
+        let mut rng = Rng::new(seed);
+        LayerQuant {
+            a,
+            n,
+            z: (0..a * n)
+                .map(|_| (rng.gaussian() * 2.0).round() as i32)
+                .collect(),
+            alphas: (0..n).map(|_| 0.1 + rng.uniform()).collect(),
+            gammas: (0..n).map(|_| 0.8 + 0.2 * rng.uniform()).collect(),
+            t: (0..a).map(|_| 0.9 + 0.2 * rng.uniform()).collect(),
+            entropy_bits: 2.0,
+            rate_bits: 2.1,
+            dead_cols: vec![3],
+            }
+    }
+
+    #[test]
+    fn roundtrip_reconstructs_w_hat() {
+        let mut quants = BTreeMap::new();
+        quants.insert("layers.0.attn.wq".to_string(), fake_quant(16, 24, 1));
+        quants.insert("layers.0.ffn.w2".to_string(), fake_quant(8, 32, 2));
+        let c = Container::new("picollama_s", quants);
+        let bytes = c.to_bytes();
+        let c2 = Container::from_bytes(&bytes).unwrap();
+        assert_eq!(c2.model_name, "picollama_s");
+        assert_eq!(c2.quants.len(), 2);
+        for (name, q) in &c.quants {
+            let q2 = &c2.quants[name];
+            assert_eq!(q.z, q2.z);
+            assert_eq!(q2.dead_cols, q.dead_cols);
+            // Ŵ identical to f32 precision (scales stored as f32)
+            let w1 = q.dequant();
+            let w2 = q2.dequant();
+            assert!(w1.sub(&w2).max_abs() < 1e-5, "{name}");
+        }
+    }
+
+    #[test]
+    fn container_size_tracks_entropy() {
+        // low-entropy codes must compress much smaller than high-entropy
+        let mut low = BTreeMap::new();
+        let mut q = fake_quant(64, 64, 3);
+        q.z.iter_mut().for_each(|z| *z = 0);
+        low.insert("m".to_string(), q);
+        let mut high = BTreeMap::new();
+        let mut rng = Rng::new(4);
+        let mut q2 = fake_quant(64, 64, 5);
+        q2.z.iter_mut()
+            .for_each(|z| *z = (rng.gaussian() * 40.0) as i32);
+        high.insert("m".to_string(), q2);
+        let s_low = Container::new("x", low).size_bytes();
+        let s_high = Container::new("x", high).size_bytes();
+        assert!(s_low < s_high / 2, "{s_low} vs {s_high}");
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Container::from_bytes(b"nope").is_err());
+        let mut quants = BTreeMap::new();
+        quants.insert("m".to_string(), fake_quant(4, 4, 9));
+        let mut bytes = Container::new("x", quants).to_bytes();
+        bytes[4] = 99; // bad version
+        assert!(Container::from_bytes(&bytes).is_err());
+    }
+}

@@ -1,0 +1,9 @@
+//! The Layer-3 coordinator: the sequential per-layer quantization
+//! pipeline with global rate budgeting, drift-aware calibration refresh,
+//! joint QKV quantization with adaptive mixing, optional post-quant
+//! finetuning, and the compressed-model container format.
+
+pub mod container;
+pub mod pipeline;
+
+pub use pipeline::{quantize_model, Algo, PipelineOpts, PipelineReport, QuantizedModel};

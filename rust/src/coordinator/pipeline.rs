@@ -1,0 +1,524 @@
+//! The end-to-end quantization pipeline (Algorithm 3 at model scope):
+//! layers are processed sequentially front-to-back; for each layer the
+//! student (partially quantized model) is re-run over the calibration
+//! set to refresh the drift statistics, each matrix is quantized at the
+//! rate assigned by the running global budget, and the student weights
+//! are updated in place so later layers see the accumulated error.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::calib::corpus::Corpus;
+use crate::calib::drift::{panel_rel_mse, student_panels, CalibSet, StatsOpts};
+use crate::linalg::Mat;
+use crate::model::transformer::{attention_block_output, input_group};
+use crate::model::weights::Weights;
+use crate::model::ModelConfig;
+use crate::quant::gptq::gptq_at_rate;
+use crate::quant::mixing::{mix_attention, mix_drift, optimize_mixing};
+use crate::quant::rate_control::RateBudget;
+use crate::quant::rtn::{rtn_absmax, rtn_grid_at_rate};
+use crate::quant::watersic::watersic_at_rate;
+use crate::quant::{LayerQuant, LayerStats, QuantOpts};
+use crate::runtime::Engine;
+
+/// Which algorithm the pipeline runs — the rows of Tables 1/2.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Algo {
+    /// per-row absmax RTN at an integer bit-width (log-cardinality rate)
+    Rtn { bits: u32 },
+    /// ε-grid RTN + entropy coding at the target rate
+    HuffRtn,
+    /// GPTQ with maxq clamp (log-cardinality rate)
+    Gptq { maxq: i32 },
+    /// Huffman-GPTQ (HPTQ): entropy-coded GPTQ at the target rate
+    HuffGptq,
+    /// full WaterSIC
+    WaterSic,
+}
+
+impl Algo {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Algo::Rtn { .. } => "RTN",
+            Algo::HuffRtn => "Huffman-RTN",
+            Algo::Gptq { .. } => "GPTQ",
+            Algo::HuffGptq => "Huffman-GPTQ",
+            Algo::WaterSic => "WaterSIC",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct PipelineOpts {
+    pub algo: Algo,
+    /// target average rate (bits/weight) over the quantizable params
+    pub target_rate: f64,
+    pub calib_windows: usize,
+    pub calib_batch: usize,
+    pub seed: u64,
+    /// §4 corrections (WaterSIC only)
+    pub drift: bool,
+    pub residual: bool,
+    pub attn_weighted: bool,
+    pub mixing: bool,
+    pub mixing_iters: usize,
+    pub quant: QuantOpts,
+    /// rows used during secant rate search
+    pub subsample_rows: usize,
+    /// route fixed shapes through the PJRT ZSIC artifact
+    pub use_engine: bool,
+    /// run WaterSIC-FT afterwards
+    pub finetune: Option<crate::ft::FtOpts>,
+}
+
+impl PipelineOpts {
+    pub fn watersic(rate: f64) -> Self {
+        PipelineOpts {
+            algo: Algo::WaterSic,
+            target_rate: rate,
+            calib_windows: 12,
+            calib_batch: 4,
+            seed: 17,
+            drift: true,
+            residual: true,
+            attn_weighted: true,
+            mixing: false, // costly; enabled explicitly by experiments
+            mixing_iters: 5,
+            quant: QuantOpts::default(),
+            subsample_rows: 64,
+            use_engine: true,
+            finetune: None,
+        }
+    }
+
+    pub fn baseline(algo: Algo, rate: f64) -> Self {
+        PipelineOpts {
+            algo,
+            drift: matches!(algo, Algo::HuffGptq), // HPTQ uses X̂ stats
+            residual: false,
+            attn_weighted: false,
+            mixing: false,
+            quant: QuantOpts::gptq(),
+            ..PipelineOpts::watersic(rate)
+        }
+    }
+}
+
+/// Per-matrix outcome.
+#[derive(Clone, Debug)]
+pub struct MatrixReport {
+    pub name: String,
+    pub assigned_rate: f64,
+    pub entropy_bits: f64,
+    pub rate_bits: f64,
+    pub rel_mse_weights: f64,
+    pub dead_cols: usize,
+    pub via_artifact: bool,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct PipelineReport {
+    pub matrices: Vec<MatrixReport>,
+    /// relative MSE of the student input panel at each group, after the
+    /// full pipeline (ablation figures)
+    pub input_rel_mse: Vec<(String, f64)>,
+    /// optimal mixing coefficients per layer (ε_qr, ε_aw)
+    pub mixing: Vec<(usize, f64, f64)>,
+    pub avg_rate: f64,
+    pub ft_loss_trace: Vec<f64>,
+    pub wall_secs: f64,
+}
+
+pub struct QuantizedModel {
+    pub student: Weights,
+    pub quants: BTreeMap<String, LayerQuant>,
+    pub report: PipelineReport,
+}
+
+fn quantize_matrix(
+    w: &Mat,
+    stats: &LayerStats,
+    rate: f64,
+    opts: &PipelineOpts,
+    engine: Option<&Engine>,
+) -> Result<(LayerQuant, bool)> {
+    let via_artifact;
+    match opts.algo {
+        Algo::Rtn { bits } => Ok((rtn_absmax(w, bits), false)),
+        Algo::HuffRtn => Ok((rtn_grid_at_rate(w, rate), false)),
+        Algo::Gptq { maxq } => {
+            // classical grid: spacing from the weight absmax
+            let absmax = w.data.iter().fold(0.0f64, |m, x| m.max(x.abs()));
+            let alpha = absmax / maxq as f64;
+            Ok((
+                crate::quant::gptq::gptq_layer_stats(
+                    w, stats, alpha, false, Some(maxq), 0.1,
+                )?,
+                false,
+            ))
+        }
+        Algo::HuffGptq => Ok((gptq_at_rate(w, stats, rate, false, 0.1)?, false)),
+        Algo::WaterSic => {
+            let exec = engine.filter(|_| opts.use_engine).map(|e| {
+                move |y: &Mat, l: &Mat, alphas: &[f64], lmmse: bool| {
+                    let (out, hit) = e.zsic_exec(y, l, alphas, lmmse);
+                    if hit {
+                        // soft signal: record artifact usage via thread-local
+                        ARTIFACT_HIT.with(|f| f.set(true));
+                    }
+                    out
+                }
+            });
+            ARTIFACT_HIT.with(|f| f.set(false));
+            let q = match &exec {
+                Some(f) => watersic_at_rate(
+                    w,
+                    stats,
+                    rate,
+                    &opts.quant,
+                    Some(f),
+                    opts.subsample_rows,
+                )?,
+                None => watersic_at_rate(
+                    w,
+                    stats,
+                    rate,
+                    &opts.quant,
+                    None,
+                    opts.subsample_rows,
+                )?,
+            };
+            via_artifact = ARTIFACT_HIT.with(|f| f.get());
+            Ok((q, via_artifact))
+        }
+    }
+}
+
+thread_local! {
+    static ARTIFACT_HIT: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Run the full pipeline.
+pub fn quantize_model(
+    cfg: &ModelConfig,
+    teacher: &Weights,
+    corpus: &Corpus,
+    opts: &PipelineOpts,
+    engine: Option<&Engine>,
+) -> Result<QuantizedModel> {
+    let t0 = std::time::Instant::now();
+    let windows = corpus.calib_windows(opts.calib_windows, cfg.ctx, opts.seed);
+    let batches: Vec<Vec<i32>> =
+        crate::calib::corpus::batch_windows(&windows, opts.calib_batch)
+            .into_iter()
+            .map(|(t, _)| t)
+            .collect();
+    let cs = CalibSet::build(cfg, teacher, batches, opts.calib_batch);
+
+    let mut student = teacher.clone();
+    let mut quants: BTreeMap<String, LayerQuant> = BTreeMap::new();
+    let mut report = PipelineReport::default();
+    let mut budget = RateBudget::new(opts.target_rate, cfg.quantizable_params());
+
+    let stats_opts = StatsOpts {
+        drift: opts.drift,
+        residual: opts.residual,
+        attn_weighted: opts.attn_weighted,
+    };
+
+    for li in 0..cfg.n_layers {
+        let p = format!("layers.{li}.");
+        // refresh student statistics once per layer
+        let scaps = cs.student_pass(cfg, &student);
+
+        // ---- joint QKV (with optional adaptive mixing)
+        let qkv: Vec<String> = ["wq", "wk", "wv"]
+            .iter()
+            .map(|w| format!("{p}attn.{w}"))
+            .collect();
+        let (mut eps_qr, mut eps_aw) = (0.0, 0.0);
+        if opts.mixing && opts.algo == Algo::WaterSic {
+            let group = format!("{p}attn.qkv");
+            let t_panel = &cs.teacher_caps[0].inputs[&group];
+            let s_panel = &scaps[0].inputs[&group];
+            // teacher attention output (reference for eq. 60)
+            let t_out = attention_block_output(
+                cfg,
+                teacher.get(&qkv[0]),
+                teacher.get(&qkv[1]),
+                teacher.get(&qkv[2]),
+                t_panel,
+                opts.calib_batch,
+                cfg.ctx,
+            );
+            let t_norm: f64 = t_out.data.iter().map(|x| x * x).sum();
+            let rate_now = budget.assign(0);
+            let objective = |eqr: f64, eaw: f64| -> f64 {
+                let mut ws = Vec::new();
+                for name in &qkv {
+                    let base = cs.stats_for(cfg, name, &scaps, stats_opts);
+                    let uniform = cs.stats_for(
+                        cfg,
+                        name,
+                        &scaps,
+                        StatsOpts {
+                            attn_weighted: false,
+                            ..stats_opts
+                        },
+                    );
+                    let mixed = mix_attention(
+                        &mix_drift(&base, eqr),
+                        &mix_drift(&uniform, eqr),
+                        eaw,
+                    );
+                    match watersic_at_rate(
+                        teacher.get(name),
+                        &mixed,
+                        rate_now,
+                        &opts.quant,
+                        None,
+                        opts.subsample_rows.min(32),
+                    ) {
+                        Ok(q) => ws.push(q.dequant()),
+                        Err(_) => return f64::INFINITY,
+                    }
+                }
+                let s_out = attention_block_output(
+                    cfg, &ws[0], &ws[1], &ws[2], s_panel, opts.calib_batch, cfg.ctx,
+                );
+                let d = s_out.sub(&t_out);
+                d.data.iter().map(|x| x * x).sum::<f64>() / t_norm.max(1e-300)
+            };
+            let (q, a) = optimize_mixing(objective, opts.mixing_iters);
+            eps_qr = q;
+            eps_aw = a;
+            report.mixing.push((li, eps_qr, eps_aw));
+        }
+
+        // ---- quantize all 7 matrices of the layer in order
+        let order: Vec<String> = qkv
+            .iter()
+            .cloned()
+            .chain([
+                format!("{p}attn.wo"),
+                format!("{p}ffn.w1"),
+                format!("{p}ffn.w3"),
+                format!("{p}ffn.w2"),
+            ])
+            .collect();
+        for name in order {
+            let w = teacher.get(&name).clone();
+            let is_qkv = name.contains("attn.w") && !name.ends_with("wo");
+            let mut stats = cs.stats_for(cfg, &name, &scaps, stats_opts);
+            if opts.mixing && opts.algo == Algo::WaterSic && is_qkv {
+                let uniform = cs.stats_for(
+                    cfg,
+                    &name,
+                    &scaps,
+                    StatsOpts {
+                        attn_weighted: false,
+                        ..stats_opts
+                    },
+                );
+                stats = mix_attention(
+                    &mix_drift(&stats, eps_qr),
+                    &mix_drift(&uniform, eps_qr),
+                    eps_aw,
+                );
+            }
+            let params = w.rows * w.cols;
+            let rate = budget.assign(params);
+            let (q, via_artifact) = quantize_matrix(&w, &stats, rate, opts, engine)?;
+            // entropy-coded methods report/charge entropy (paper's
+            // convention); log-cardinality methods charge their width
+            let charged = match opts.algo {
+                Algo::Rtn { .. } | Algo::Gptq { .. } => q.rate_bits,
+                _ => q.entropy_bits,
+            };
+            budget.charge(params, charged);
+            let w_hat = q.dequant();
+            report.matrices.push(MatrixReport {
+                name: name.clone(),
+                assigned_rate: rate,
+                entropy_bits: q.entropy_bits,
+                rate_bits: q.rate_bits,
+                rel_mse_weights: crate::quant::relative_distortion(
+                    &w,
+                    &w_hat,
+                    &stats.sigma_x,
+                ),
+                dead_cols: q.dead_cols.len(),
+                via_artifact,
+            });
+            student.set(&name, w_hat);
+            quants.insert(name, q);
+        }
+    }
+    report.avg_rate = budget.spent_average(cfg.quantizable_params());
+
+    // ---- optional WaterSIC-FT
+    if let Some(ft) = &opts.finetune {
+        report.ft_loss_trace = crate::ft::finetune_rescalers(
+            cfg,
+            &cs.teacher_logits,
+            &cs.batches,
+            opts.calib_batch,
+            &mut student,
+            &mut quants,
+            ft,
+        )?;
+    }
+
+    // ---- final input-drift diagnostics (ablation figures)
+    let final_caps = cs.student_pass(cfg, &student);
+    for li in 0..cfg.n_layers {
+        for group in [
+            format!("layers.{li}.attn.qkv"),
+            format!("layers.{li}.attn.wo"),
+            format!("layers.{li}.ffn.in"),
+            format!("layers.{li}.ffn.w2"),
+        ] {
+            let t = cs.teacher_panels(&group);
+            let s = student_panels(&final_caps, &group);
+            report.input_rel_mse.push((group, panel_rel_mse(&t, &s)));
+        }
+    }
+    report.wall_secs = t0.elapsed().as_secs_f64();
+
+    Ok(QuantizedModel {
+        student,
+        quants,
+        report,
+    })
+}
+
+/// Total coded bits of a quantized model (rANS streams + scalar side
+/// info) — feeds the Fig. 1 size axis.
+pub fn coded_bits(qm: &QuantizedModel) -> f64 {
+    qm.quants
+        .values()
+        .map(|q| q.rate_bits * (q.a * q.n) as f64)
+        .sum()
+}
+
+pub fn quantizable_group(matrix: &str) -> String {
+    input_group(matrix)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::transformer::{forward, ForwardOpts};
+
+    fn setup() -> (ModelConfig, Weights, Corpus) {
+        let cfg = ModelConfig::tiny_test();
+        let teacher = Weights::random(&cfg, 21);
+        let text: String = (0..400)
+            .map(|i| format!("alpha beta {} gamma. ", i % 37))
+            .collect();
+        let corpus = Corpus::from_bytes("test", text.into_bytes());
+        (cfg, teacher, corpus)
+    }
+
+    fn small_opts(algo: Algo, rate: f64) -> PipelineOpts {
+        let mut o = match algo {
+            Algo::WaterSic => PipelineOpts::watersic(rate),
+            a => PipelineOpts::baseline(a, rate),
+        };
+        o.calib_windows = 4;
+        o.calib_batch = 2;
+        o.use_engine = false;
+        o.subsample_rows = 16;
+        o
+    }
+
+    #[test]
+    fn watersic_pipeline_end_to_end() {
+        let (cfg, teacher, corpus) = setup();
+        let qm = quantize_model(
+            &cfg,
+            &teacher,
+            &corpus,
+            &small_opts(Algo::WaterSic, 3.0),
+            None,
+        )
+        .unwrap();
+        assert_eq!(qm.quants.len(), 7);
+        assert!(
+            (qm.report.avg_rate - 3.0).abs() < 0.4,
+            "avg rate {}",
+            qm.report.avg_rate
+        );
+        // student differs from teacher but is finite and usable
+        let toks: Vec<i32> = (0..cfg.ctx).map(|i| (i % 60) as i32).collect();
+        let out = forward(&cfg, &qm.student, &toks, 1, cfg.ctx, &ForwardOpts::default());
+        assert!(out.logits.is_finite());
+    }
+
+    #[test]
+    fn watersic_beats_huffgptq_at_low_rate() {
+        let (cfg, teacher, corpus) = setup();
+        let rate = 2.5;
+        let ws = quantize_model(&cfg, &teacher, &corpus,
+                                &small_opts(Algo::WaterSic, rate), None).unwrap();
+        let hg = quantize_model(&cfg, &teacher, &corpus,
+                                &small_opts(Algo::HuffGptq, rate), None).unwrap();
+        let avg = |qm: &QuantizedModel| {
+            qm.report.matrices.iter().map(|m| m.rel_mse_weights).sum::<f64>()
+                / qm.report.matrices.len() as f64
+        };
+        assert!(
+            avg(&ws) < avg(&hg),
+            "WaterSIC {:.4} must beat Huffman-GPTQ {:.4}",
+            avg(&ws),
+            avg(&hg)
+        );
+    }
+
+    #[test]
+    fn budget_keeps_average_near_target() {
+        let (cfg, teacher, corpus) = setup();
+        for rate in [2.0, 4.0] {
+            let qm = quantize_model(&cfg, &teacher, &corpus,
+                                    &small_opts(Algo::HuffGptq, rate), None).unwrap();
+            assert!(
+                (qm.report.avg_rate - rate).abs() < 0.35,
+                "rate {rate}: got {}",
+                qm.report.avg_rate
+            );
+        }
+    }
+
+    #[test]
+    fn rtn_pipeline_runs() {
+        let (cfg, teacher, corpus) = setup();
+        let qm = quantize_model(&cfg, &teacher, &corpus,
+                                &small_opts(Algo::Rtn { bits: 4 }, 4.0), None).unwrap();
+        assert_eq!(qm.report.matrices.len(), 7);
+        for m in &qm.report.matrices {
+            assert!(m.rel_mse_weights.is_finite());
+        }
+    }
+
+    #[test]
+    fn ft_hook_improves_or_matches() {
+        let (cfg, teacher, corpus) = setup();
+        let mut o = small_opts(Algo::WaterSic, 3.0);
+        let qm0 = quantize_model(&cfg, &teacher, &corpus, &o, None).unwrap();
+        o.finetune = Some(crate::ft::FtOpts {
+            steps: 10,
+            peak_lr: 5e-3,
+            min_lr: 1e-4,
+        });
+        let qm1 = quantize_model(&cfg, &teacher, &corpus, &o, None).unwrap();
+        assert!(!qm1.report.ft_loss_trace.is_empty());
+        // evaluate KL on the calibration batches (in-sample but fair
+        // between the two variants)
+        let windows = corpus.calib_windows(4, cfg.ctx, 99);
+        let kl0 = crate::eval::kl_to_teacher(&cfg, &teacher, &qm0.student, &windows);
+        let kl1 = crate::eval::kl_to_teacher(&cfg, &teacher, &qm1.student, &windows);
+        assert!(kl1 < kl0 * 1.05, "FT should not hurt: {kl0} → {kl1}");
+    }
+}

@@ -1,0 +1,168 @@
+//! Bit-level IO for the Huffman coder: MSB-first writer/reader with
+//! u32 varint helpers for headers.
+
+#[derive(Default)]
+pub struct BitWriter {
+    bytes: Vec<u8>,
+    cur: u8,
+    nbits: u8,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn put_bit(&mut self, bit: bool) {
+        self.cur = (self.cur << 1) | bit as u8;
+        self.nbits += 1;
+        if self.nbits == 8 {
+            self.bytes.push(self.cur);
+            self.cur = 0;
+            self.nbits = 0;
+        }
+    }
+
+    /// Write the low `len` bits of `code`, MSB first.
+    #[inline]
+    pub fn put_bits(&mut self, code: u32, len: u8) {
+        for k in (0..len).rev() {
+            self.put_bit((code >> k) & 1 == 1);
+        }
+    }
+
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.cur <<= 8 - self.nbits;
+            self.bytes.push(self.cur);
+        }
+        self.bytes
+    }
+
+    pub fn bit_len(&self) -> usize {
+        self.bytes.len() * 8 + self.nbits as usize
+    }
+}
+
+pub struct BitReader<'a> {
+    bytes: &'a [u8],
+    pos: usize, // bit position
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(bytes: &'a [u8]) -> Self {
+        BitReader { bytes, pos: 0 }
+    }
+
+    #[inline]
+    pub fn get_bit(&mut self) -> anyhow::Result<bool> {
+        let byte = self.pos / 8;
+        if byte >= self.bytes.len() {
+            anyhow::bail!("bitstream exhausted");
+        }
+        let bit = 7 - (self.pos % 8) as u32;
+        self.pos += 1;
+        Ok((self.bytes[byte] >> bit) & 1 == 1)
+    }
+
+    pub fn get_bits(&mut self, len: u8) -> anyhow::Result<u32> {
+        let mut v = 0u32;
+        for _ in 0..len {
+            v = (v << 1) | self.get_bit()? as u32;
+        }
+        Ok(v)
+    }
+}
+
+/// LEB128-style varint for unsigned headers.
+pub fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7f) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(b);
+            return;
+        }
+        out.push(b | 0x80);
+    }
+}
+
+pub fn get_varint(bytes: &[u8], pos: &mut usize) -> anyhow::Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0;
+    loop {
+        let b = *bytes
+            .get(*pos)
+            .ok_or_else(|| anyhow::anyhow!("varint truncated"))?;
+        *pos += 1;
+        v |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+        if shift > 63 {
+            anyhow::bail!("varint too long");
+        }
+    }
+}
+
+/// ZigZag map i32 ↔ u32 (small magnitudes → small codes).
+#[inline]
+pub fn zigzag(v: i32) -> u32 {
+    ((v << 1) ^ (v >> 31)) as u32
+}
+
+#[inline]
+pub fn unzigzag(v: u32) -> i32 {
+    ((v >> 1) as i32) ^ -((v & 1) as i32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bit_roundtrip() {
+        let mut w = BitWriter::new();
+        w.put_bits(0b1011, 4);
+        w.put_bits(0b1, 1);
+        w.put_bits(0x3ff, 10);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.get_bits(4).unwrap(), 0b1011);
+        assert_eq!(r.get_bits(1).unwrap(), 1);
+        assert_eq!(r.get_bits(10).unwrap(), 0x3ff);
+    }
+
+    #[test]
+    fn varint_roundtrip() {
+        let mut buf = Vec::new();
+        let vals = [0u64, 1, 127, 128, 300, 1 << 20, u64::MAX];
+        for &v in &vals {
+            put_varint(&mut buf, v);
+        }
+        let mut pos = 0;
+        for &v in &vals {
+            assert_eq!(get_varint(&buf, &mut pos).unwrap(), v);
+        }
+        assert_eq!(pos, buf.len());
+    }
+
+    #[test]
+    fn zigzag_roundtrip() {
+        for v in [-1000, -1, 0, 1, 5, i32::MAX / 2, i32::MIN / 2] {
+            assert_eq!(unzigzag(zigzag(v)), v);
+        }
+        assert_eq!(zigzag(0), 0);
+        assert_eq!(zigzag(-1), 1);
+        assert_eq!(zigzag(1), 2);
+    }
+
+    #[test]
+    fn reader_detects_exhaustion() {
+        let mut r = BitReader::new(&[0xff]);
+        assert!(r.get_bits(8).is_ok());
+        assert!(r.get_bit().is_err());
+    }
+}

@@ -1,0 +1,247 @@
+//! Canonical Huffman coder over i32 symbols — the "Huffman-GPTQ /
+//! Huffman-RTN" coder of the paper.  Handles arbitrary alphabets via a
+//! (symbol table + canonical code length) header; decode is table-free
+//! canonical (sorted first-code method).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use super::bitio::{get_varint, put_varint, unzigzag, zigzag, BitReader, BitWriter};
+use super::Codec;
+
+const MAX_CODE_LEN: u8 = 32;
+
+pub struct Huffman;
+
+/// Build canonical code lengths for the given counts using the standard
+/// two-queue Huffman construction, then canonicalize.
+fn code_lengths(counts: &[(u32, u64)]) -> Vec<(u32, u8)> {
+    let n = counts.len();
+    if n == 1 {
+        return vec![(counts[0].0, 1)];
+    }
+    // heap of (weight, node). leaves 0..n, internal nodes n..
+    #[derive(PartialEq, Eq)]
+    struct Item(u64, usize);
+    impl Ord for Item {
+        fn cmp(&self, o: &Self) -> std::cmp::Ordering {
+            o.0.cmp(&self.0).then(o.1.cmp(&self.1)) // min-heap
+        }
+    }
+    impl PartialOrd for Item {
+        fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+            Some(self.cmp(o))
+        }
+    }
+    let mut heap: std::collections::BinaryHeap<Item> = counts
+        .iter()
+        .enumerate()
+        .map(|(i, &(_, c))| Item(c.max(1), i))
+        .collect();
+    let mut parent = vec![usize::MAX; 2 * n - 1];
+    let mut next = n;
+    while heap.len() > 1 {
+        let a = heap.pop().unwrap();
+        let b = heap.pop().unwrap();
+        parent[a.1] = next;
+        parent[b.1] = next;
+        heap.push(Item(a.0 + b.0, next));
+        next += 1;
+    }
+    let mut lens: Vec<(u32, u8)> = Vec::with_capacity(n);
+    for (i, &(sym, _)) in counts.iter().enumerate() {
+        let mut d = 0u8;
+        let mut node = i;
+        while parent[node] != usize::MAX {
+            node = parent[node];
+            d += 1;
+        }
+        lens.push((sym, d.min(MAX_CODE_LEN)));
+    }
+    lens
+}
+
+/// Assign canonical codes given (symbol, len) sorted by (len, symbol).
+fn canonical_codes(lens: &mut Vec<(u32, u8)>) -> HashMap<u32, (u32, u8)> {
+    lens.sort_by(|a, b| (a.1, a.0).cmp(&(b.1, b.0)));
+    let mut codes = HashMap::new();
+    let mut code = 0u32;
+    let mut prev_len = 0u8;
+    for &(sym, len) in lens.iter() {
+        code <<= len - prev_len;
+        codes.insert(sym, (code, len));
+        code += 1;
+        prev_len = len;
+    }
+    codes
+}
+
+impl Codec for Huffman {
+    fn name(&self) -> &'static str {
+        "huffman"
+    }
+
+    fn encode(&self, symbols: &[i32]) -> Vec<u8> {
+        let mut out = Vec::new();
+        put_varint(&mut out, symbols.len() as u64);
+        if symbols.is_empty() {
+            return out;
+        }
+        let hist = super::histogram(symbols);
+        let mut counts: Vec<(u32, u64)> =
+            hist.iter().map(|(&s, &c)| (zigzag(s), c)).collect();
+        counts.sort_unstable();
+        let mut lens = code_lengths(&counts);
+        let codes = canonical_codes(&mut lens);
+        // header: alphabet size, then (zigzag sym varint, len byte) in
+        // canonical order
+        put_varint(&mut out, lens.len() as u64);
+        for &(sym, len) in &lens {
+            put_varint(&mut out, sym as u64);
+            out.push(len);
+        }
+        let mut bw = BitWriter::new();
+        for &s in symbols {
+            let (code, len) = codes[&zigzag(s)];
+            bw.put_bits(code, len);
+        }
+        let payload = bw.finish();
+        put_varint(&mut out, payload.len() as u64);
+        out.extend_from_slice(&payload);
+        out
+    }
+
+    fn decode(&self, bytes: &[u8], n_expected: usize) -> Result<Vec<i32>> {
+        let mut pos = 0;
+        let n = get_varint(bytes, &mut pos)? as usize;
+        if n != n_expected {
+            bail!("length mismatch: header {n}, expected {n_expected}");
+        }
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let k = get_varint(bytes, &mut pos)? as usize;
+        let mut lens: Vec<(u32, u8)> = Vec::with_capacity(k);
+        for _ in 0..k {
+            let sym = get_varint(bytes, &mut pos)? as u32;
+            let len = *bytes
+                .get(pos)
+                .ok_or_else(|| anyhow::anyhow!("truncated header"))?;
+            pos += 1;
+            lens.push((sym, len));
+        }
+        let payload_len = get_varint(bytes, &mut pos)? as usize;
+        let payload = bytes
+            .get(pos..pos + payload_len)
+            .ok_or_else(|| anyhow::anyhow!("truncated payload"))?;
+
+        // canonical decode tables: first_code/first_index per length
+        let max_len = lens.iter().map(|l| l.1).max().unwrap_or(1) as usize;
+        let mut count_by_len = vec![0u32; max_len + 1];
+        for &(_, len) in &lens {
+            count_by_len[len as usize] += 1;
+        }
+        let mut first_code = vec![0u32; max_len + 2];
+        let mut first_idx = vec![0u32; max_len + 2];
+        let mut code = 0u32;
+        let mut idx = 0u32;
+        for l in 1..=max_len {
+            first_code[l] = code;
+            first_idx[l] = idx;
+            code = (code + count_by_len[l]) << 1;
+            idx += count_by_len[l];
+        }
+        // symbols in canonical order (lens is already canonical-sorted
+        // from the encoder; enforce)
+        let mut lens_sorted = lens.clone();
+        lens_sorted.sort_by(|a, b| (a.1, a.0).cmp(&(b.1, b.0)));
+        let syms: Vec<u32> = lens_sorted.iter().map(|l| l.0).collect();
+
+        let mut br = BitReader::new(payload);
+        let mut out = Vec::with_capacity(n);
+        if k == 1 {
+            // degenerate single-symbol alphabet: 1-bit codes
+            for _ in 0..n {
+                br.get_bit()?;
+                out.push(unzigzag(syms[0]));
+            }
+            return Ok(out);
+        }
+        for _ in 0..n {
+            let mut code = 0u32;
+            let mut len = 0usize;
+            loop {
+                code = (code << 1) | br.get_bit()? as u32;
+                len += 1;
+                if len > max_len {
+                    bail!("invalid code");
+                }
+                let nl = count_by_len[len];
+                if nl > 0 && code >= first_code[len] && code < first_code[len] + nl
+                {
+                    let sym_idx = first_idx[len] + (code - first_code[len]);
+                    out.push(unzigzag(syms[sym_idx as usize]));
+                    break;
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn roundtrip(symbols: &[i32]) {
+        let h = Huffman;
+        let enc = h.encode(symbols);
+        let dec = h.decode(&enc, symbols.len()).unwrap();
+        assert_eq!(dec, symbols);
+    }
+
+    #[test]
+    fn roundtrips() {
+        roundtrip(&[]);
+        roundtrip(&[0]);
+        roundtrip(&[5; 100]);
+        roundtrip(&[-1, 0, 1, 2, -2, 0, 0, 0, 1]);
+        roundtrip(&(0..1000).map(|i| (i * i) % 17 - 8).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn near_entropy_on_gaussian_codes() {
+        let mut rng = Rng::new(5);
+        let z: Vec<i32> = (0..50_000)
+            .map(|_| (rng.gaussian() * 3.0).round() as i32)
+            .collect();
+        let h = Huffman;
+        let rate = h.rate(&z);
+        let ent = super::super::entropy_bits(&z);
+        // Huffman within 0.1 bit + header overhead of entropy here
+        assert!(rate < ent + 0.15, "rate {rate} vs entropy {ent}");
+        assert!(rate >= ent - 1e-9);
+        roundtrip(&z);
+    }
+
+    #[test]
+    fn handles_outliers() {
+        // entropy coding absorbs rare huge integers (paper §1)
+        let mut z = vec![0i32; 10_000];
+        z[17] = 1 << 20;
+        z[400] = -(1 << 19);
+        roundtrip(&z);
+        let rate = Huffman.rate(&z);
+        // Huffman's floor is 1 bit/symbol; the point is that the two huge
+        // integers cost a few dozen bits total, not 20+ bits/symbol.
+        assert!(rate < 1.1, "outliers must not blow up the rate: {rate}");
+    }
+
+    #[test]
+    fn decode_rejects_wrong_length() {
+        let enc = Huffman.encode(&[1, 2, 3]);
+        assert!(Huffman.decode(&enc, 4).is_err());
+    }
+}

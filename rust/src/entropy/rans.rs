@@ -1,0 +1,252 @@
+//! rANS (range asymmetric numeral system) coder, 32-bit state with
+//! 16-bit renormalization and 12-bit quantized frequencies.  This is the
+//! production coder used by the compressed-model container: ~entropy-
+//! optimal like arithmetic coding but decode is a table lookup + two
+//! multiplies per symbol.
+
+use anyhow::{bail, Result};
+
+use super::bitio::{get_varint, put_varint, unzigzag, zigzag};
+use super::Codec;
+
+const PROB_BITS: u32 = 12;
+const PROB_SCALE: u32 = 1 << PROB_BITS;
+const RANS_L: u32 = 1 << 16; // lower bound of the normalization interval
+
+pub struct Rans;
+
+struct SymStats {
+    /// quantized frequency per symbol (sums to PROB_SCALE)
+    freq: Vec<u32>,
+    /// cumulative frequency
+    cum: Vec<u32>,
+    /// symbol values (zigzagged), canonical order
+    syms: Vec<u32>,
+}
+
+/// Quantize empirical counts to 12-bit frequencies that sum exactly to
+/// PROB_SCALE, every present symbol getting freq ≥ 1.
+fn quantize_freqs(counts: &[(u32, u64)]) -> SymStats {
+    let total: u64 = counts.iter().map(|c| c.1).sum();
+    let k = counts.len();
+    assert!(k as u32 <= PROB_SCALE, "alphabet too large for 12-bit rANS");
+    let mut freq: Vec<u32> = counts
+        .iter()
+        .map(|&(_, c)| {
+            (((c as u128 * PROB_SCALE as u128) / total as u128) as u32).max(1)
+        })
+        .collect();
+    // fix the sum to exactly PROB_SCALE by adjusting the largest entries
+    let mut sum: i64 = freq.iter().map(|&f| f as i64).sum();
+    while sum != PROB_SCALE as i64 {
+        if sum > PROB_SCALE as i64 {
+            // shrink the largest freq > 1
+            let i = (0..k).max_by_key(|&i| freq[i]).unwrap();
+            if freq[i] <= 1 {
+                break;
+            }
+            let d = ((sum - PROB_SCALE as i64) as u32).min(freq[i] - 1);
+            freq[i] -= d;
+            sum -= d as i64;
+        } else {
+            let i = (0..k).max_by_key(|&i| freq[i]).unwrap();
+            let d = (PROB_SCALE as i64 - sum) as u32;
+            freq[i] += d;
+            sum += d as i64;
+        }
+    }
+    let mut cum = vec![0u32; k + 1];
+    for i in 0..k {
+        cum[i + 1] = cum[i] + freq[i];
+    }
+    SymStats {
+        freq,
+        cum,
+        syms: counts.iter().map(|c| c.0).collect(),
+    }
+}
+
+impl Codec for Rans {
+    fn name(&self) -> &'static str {
+        "rans"
+    }
+
+    fn encode(&self, symbols: &[i32]) -> Vec<u8> {
+        let mut out = Vec::new();
+        put_varint(&mut out, symbols.len() as u64);
+        if symbols.is_empty() {
+            return out;
+        }
+        let hist = super::histogram(symbols);
+        let mut counts: Vec<(u32, u64)> =
+            hist.iter().map(|(&s, &c)| (zigzag(s), c)).collect();
+        counts.sort_unstable();
+        let st = quantize_freqs(&counts);
+
+        // header: alphabet + frequencies
+        put_varint(&mut out, counts.len() as u64);
+        for i in 0..counts.len() {
+            put_varint(&mut out, st.syms[i] as u64);
+            put_varint(&mut out, st.freq[i] as u64);
+        }
+
+        // symbol → index map
+        let idx: std::collections::HashMap<u32, usize> = st
+            .syms
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| (s, i))
+            .collect();
+
+        // rANS encodes in reverse so the decoder reads forward
+        let mut state: u32 = RANS_L;
+        let mut stream: Vec<u16> = Vec::new();
+        for &s in symbols.iter().rev() {
+            let i = idx[&zigzag(s)];
+            let f = st.freq[i];
+            let c = st.cum[i];
+            // renormalize: keep state < (RANS_L >> PROB_BITS) << 16) * f
+            let x_max = ((RANS_L as u64 >> PROB_BITS) << 16) * f as u64;
+            while state as u64 >= x_max {
+                stream.push((state & 0xffff) as u16);
+                state >>= 16;
+            }
+            state = (state / f) * PROB_SCALE + (state % f) + c;
+        }
+        put_varint(&mut out, state as u64);
+        put_varint(&mut out, stream.len() as u64);
+        // stream was pushed encoder-order; decoder pops from the end
+        for w in &stream {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        out
+    }
+
+    fn decode(&self, bytes: &[u8], n_expected: usize) -> Result<Vec<i32>> {
+        let mut pos = 0;
+        let n = get_varint(bytes, &mut pos)? as usize;
+        if n != n_expected {
+            bail!("length mismatch: header {n}, expected {n_expected}");
+        }
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let k = get_varint(bytes, &mut pos)? as usize;
+        let mut syms = Vec::with_capacity(k);
+        let mut freq = Vec::with_capacity(k);
+        for _ in 0..k {
+            syms.push(get_varint(bytes, &mut pos)? as u32);
+            freq.push(get_varint(bytes, &mut pos)? as u32);
+        }
+        let mut cum = vec![0u32; k + 1];
+        for i in 0..k {
+            cum[i + 1] = cum[i] + freq[i];
+        }
+        if cum[k] != PROB_SCALE {
+            bail!("corrupt rANS frequency table");
+        }
+        // slot → symbol index lookup
+        let mut slot2sym = vec![0u16; PROB_SCALE as usize];
+        for i in 0..k {
+            for s in cum[i]..cum[i + 1] {
+                slot2sym[s as usize] = i as u16;
+            }
+        }
+        let mut state = get_varint(bytes, &mut pos)? as u32;
+        let nwords = get_varint(bytes, &mut pos)? as usize;
+        let words_start = pos;
+        if bytes.len() < words_start + 2 * nwords {
+            bail!("truncated rANS stream");
+        }
+        let mut widx = nwords; // pop from the end
+
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let slot = state & (PROB_SCALE - 1);
+            let i = slot2sym[slot as usize] as usize;
+            out.push(unzigzag(syms[i]));
+            state = freq[i] * (state >> PROB_BITS) + slot - cum[i];
+            while state < RANS_L {
+                if widx == 0 {
+                    bail!("rANS stream underflow");
+                }
+                widx -= 1;
+                let off = words_start + 2 * widx;
+                let w = u16::from_le_bytes([bytes[off], bytes[off + 1]]);
+                state = (state << 16) | w as u32;
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn roundtrip(symbols: &[i32]) {
+        let enc = Rans.encode(symbols);
+        let dec = Rans.decode(&enc, symbols.len()).unwrap();
+        assert_eq!(dec, symbols);
+    }
+
+    #[test]
+    fn roundtrips() {
+        roundtrip(&[]);
+        roundtrip(&[42]);
+        roundtrip(&[7; 5000]);
+        roundtrip(&[-3, -2, -1, 0, 1, 2, 3, 0, 0, 0, -1, 1]);
+        let mut rng = Rng::new(9);
+        let z: Vec<i32> = (0..30_000)
+            .map(|_| (rng.gaussian() * 2.0).round_ties_even() as i32)
+            .collect();
+        roundtrip(&z);
+    }
+
+    #[test]
+    fn near_entropy() {
+        let mut rng = Rng::new(10);
+        let z: Vec<i32> = (0..100_000)
+            .map(|_| (rng.gaussian() * 4.0).round() as i32)
+            .collect();
+        let rate = Rans.rate(&z);
+        let ent = super::super::entropy_bits(&z);
+        assert!(
+            rate < ent + 0.06,
+            "rANS should be near-optimal: {rate} vs {ent}"
+        );
+    }
+
+    #[test]
+    fn skewed_distribution() {
+        // 99% zeros: rate must approach H ≈ 0.08 bits, not 1 bit
+        let mut rng = Rng::new(11);
+        let z: Vec<i32> = (0..200_000)
+            .map(|_| if rng.uniform() < 0.99 { 0 } else { rng.below(7) as i32 - 3 })
+            .collect();
+        roundtrip(&z);
+        let rate = Rans.rate(&z);
+        let ent = super::super::entropy_bits(&z);
+        assert!(rate < ent + 0.05, "{rate} vs {ent}");
+    }
+
+    #[test]
+    fn freq_quantization_sums() {
+        let counts = vec![(0u32, 1u64), (1, 1_000_000), (2, 3), (3, 17)];
+        let st = quantize_freqs(&counts);
+        assert_eq!(st.freq.iter().sum::<u32>(), PROB_SCALE);
+        assert!(st.freq.iter().all(|&f| f >= 1));
+    }
+
+    #[test]
+    fn decode_rejects_corruption() {
+        let enc = Rans.encode(&[1, 2, 3, 4, 5]);
+        assert!(Rans.decode(&enc, 6).is_err());
+        let mut bad = enc.clone();
+        let last = bad.len() - 1;
+        bad.truncate(last.saturating_sub(1));
+        // may error or mis-decode, but must not panic
+        let _ = Rans.decode(&bad, 5);
+    }
+}

@@ -1,0 +1,285 @@
+//! Evaluation harness: perplexity / bits-per-byte (native and PJRT
+//! paths), KL divergence to the BF16 teacher, the Fig. 11 Gaussianity
+//! study, and the zero-shot-style probe suite standing in for Table 17.
+
+use anyhow::Result;
+
+use crate::calib::corpus::Corpus;
+use crate::linalg::stats::{ks_gaussian, ks_laplace};
+use crate::linalg::Mat;
+use crate::model::transformer::{cross_entropy, forward, kl_divergence, ForwardOpts};
+use crate::model::weights::Weights;
+use crate::model::ModelConfig;
+use crate::runtime::Engine;
+
+/// Teacher-forced perplexity over evaluation windows (native path).
+pub fn perplexity_native(
+    cfg: &ModelConfig,
+    w: &Weights,
+    windows: &[(Vec<i32>, Vec<i32>)],
+) -> f64 {
+    let mut total = 0.0;
+    let mut count = 0usize;
+    for chunk in windows.chunks(4) {
+        let b = chunk.len();
+        let mut toks = Vec::with_capacity(b * cfg.ctx);
+        let mut tgts = Vec::with_capacity(b * cfg.ctx);
+        for (i, t) in chunk {
+            toks.extend_from_slice(i);
+            tgts.extend_from_slice(t);
+        }
+        let out = forward(cfg, w, &toks, b, cfg.ctx, &ForwardOpts::default());
+        total += cross_entropy(&out.logits, &tgts) * (b * cfg.ctx) as f64;
+        count += b * cfg.ctx;
+    }
+    (total / count as f64).exp()
+}
+
+/// Perplexity via the AOT forward artifact (production path; batch is
+/// fixed by the export).  Windows beyond a multiple of the batch are
+/// dropped.
+pub fn perplexity_runtime(
+    engine: &Engine,
+    cfg: &ModelConfig,
+    w: &Weights,
+    windows: &[(Vec<i32>, Vec<i32>)],
+    batch: usize,
+) -> Result<f64> {
+    let mut total = 0.0;
+    let mut count = 0usize;
+    for chunk in windows.chunks(batch) {
+        if chunk.len() < batch {
+            break;
+        }
+        let mut toks = Vec::with_capacity(batch * cfg.ctx);
+        let mut tgts = Vec::with_capacity(batch * cfg.ctx);
+        for (i, t) in chunk {
+            toks.extend_from_slice(i);
+            tgts.extend_from_slice(t);
+        }
+        let logits = engine.run_forward(cfg, w, &toks, batch)?;
+        total += cross_entropy(&logits, &tgts) * (batch * cfg.ctx) as f64;
+        count += batch * cfg.ctx;
+    }
+    anyhow::ensure!(count > 0, "no full batches to evaluate");
+    Ok((total / count as f64).exp())
+}
+
+/// Bits-per-byte from perplexity (byte-level model): log₂ PPL.
+pub fn bits_per_byte(ppl: f64) -> f64 {
+    ppl.log2()
+}
+
+/// Mean KL(P_teacher ‖ P_student) in nats over evaluation windows.
+pub fn kl_to_teacher(
+    cfg: &ModelConfig,
+    teacher: &Weights,
+    student: &Weights,
+    windows: &[(Vec<i32>, Vec<i32>)],
+) -> f64 {
+    let mut total = 0.0;
+    let mut batches = 0usize;
+    for chunk in windows.chunks(4) {
+        let b = chunk.len();
+        let mut toks = Vec::with_capacity(b * cfg.ctx);
+        for (i, _) in chunk {
+            toks.extend_from_slice(i);
+        }
+        let tl = forward(cfg, teacher, &toks, b, cfg.ctx, &ForwardOpts::default()).logits;
+        let sl = forward(cfg, student, &toks, b, cfg.ctx, &ForwardOpts::default()).logits;
+        total += kl_divergence(&tl, &sl);
+        batches += 1;
+    }
+    total / batches.max(1) as f64
+}
+
+/// Fig. 11: KS distance of each quantizable matrix's entries to its
+/// best-fit Gaussian and Laplace, grouped by layer type.
+pub fn gaussianity_report(
+    cfg: &ModelConfig,
+    w: &Weights,
+) -> Vec<(String, f64, f64, bool)> {
+    let mut by_type: std::collections::BTreeMap<String, (Vec<f64>, Vec<f64>, usize, usize)> =
+        std::collections::BTreeMap::new();
+    for name in &cfg.quantizable {
+        let short = name.rsplit('.').next().unwrap().to_string();
+        let m = w.get(name);
+        let kg = ks_gaussian(&m.data);
+        let kl = ks_laplace(&m.data);
+        let e = by_type.entry(short).or_default();
+        e.0.push(kg);
+        e.1.push(kl);
+        if kg <= kl {
+            e.2 += 1; // Gaussian preferred
+        }
+        e.3 += 1;
+    }
+    by_type
+        .into_iter()
+        .map(|(ty, (kg, kl, pref, total))| {
+            (
+                ty,
+                kg.iter().sum::<f64>() / kg.len() as f64,
+                kl.iter().sum::<f64>() / kl.len() as f64,
+                2 * pref >= total,
+            )
+        })
+        .collect()
+}
+
+/// Zero-shot-style probe suite (Table 17/18 analog): next-byte top-1
+/// accuracy overall, on digit positions, on post-punctuation word
+/// starts, and on whitespace — four "tasks" with distinct difficulty.
+#[derive(Clone, Debug, Default)]
+pub struct ProbeScores {
+    pub top1: f64,
+    pub digits: f64,
+    pub word_start: f64,
+    pub whitespace: f64,
+}
+
+pub fn probe_suite(
+    cfg: &ModelConfig,
+    w: &Weights,
+    windows: &[(Vec<i32>, Vec<i32>)],
+) -> ProbeScores {
+    let mut hits = [0usize; 4];
+    let mut tries = [0usize; 4];
+    for chunk in windows.chunks(4) {
+        let b = chunk.len();
+        let mut toks = Vec::new();
+        let mut tgts = Vec::new();
+        for (i, t) in chunk {
+            toks.extend_from_slice(i);
+            tgts.extend_from_slice(t);
+        }
+        let logits = forward(cfg, w, &toks, b, cfg.ctx, &ForwardOpts::default()).logits;
+        for r in 0..logits.rows {
+            let row = logits.row(r);
+            let pred = (0..cfg.vocab)
+                .max_by(|&a, &b| row[a].partial_cmp(&row[b]).unwrap())
+                .unwrap() as i32;
+            let target = tgts[r];
+            let prev = toks[r];
+            let hit = (pred == target) as usize;
+            hits[0] += hit;
+            tries[0] += 1;
+            let tb = target as u8;
+            if tb.is_ascii_digit() {
+                hits[1] += hit;
+                tries[1] += 1;
+            }
+            if (prev as u8) == b' ' && (tb as char).is_ascii_alphabetic() {
+                hits[2] += hit;
+                tries[2] += 1;
+            }
+            if tb == b' ' || tb == b'\n' {
+                hits[3] += hit;
+                tries[3] += 1;
+            }
+        }
+    }
+    let frac = |i: usize| hits[i] as f64 / tries[i].max(1) as f64;
+    ProbeScores {
+        top1: frac(0),
+        digits: frac(1),
+        word_start: frac(2),
+        whitespace: frac(3),
+    }
+}
+
+/// Compressed-size accounting for Fig. 1: bits of all quantized streams
+/// plus 16-bit scalars, over the *whole* model (unquantized embeddings /
+/// head / norms counted at 16 bits as the paper does for BF16 storage).
+pub fn compressed_size_bits(
+    cfg: &ModelConfig,
+    quantized_bits: f64,
+    quantized_params: usize,
+) -> f64 {
+    let residual_params = cfg.n_params - quantized_params;
+    quantized_bits + residual_params as f64 * 16.0
+}
+
+pub fn eval_windows_for(
+    corpus: &Corpus,
+    cfg: &ModelConfig,
+    count: usize,
+    seed: u64,
+) -> Vec<(Vec<i32>, Vec<i32>)> {
+    corpus.eval_windows(count, cfg.ctx, seed)
+}
+
+pub fn _mat_hint() -> Mat {
+    Mat::zeros(0, 0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn setup() -> (ModelConfig, Weights, Vec<(Vec<i32>, Vec<i32>)>) {
+        let cfg = ModelConfig::tiny_test();
+        let w = Weights::random(&cfg, 3);
+        let mut rng = Rng::new(1);
+        let windows: Vec<(Vec<i32>, Vec<i32>)> = (0..6)
+            .map(|_| {
+                let i: Vec<i32> =
+                    (0..cfg.ctx).map(|_| rng.below(cfg.vocab) as i32).collect();
+                let t: Vec<i32> =
+                    (0..cfg.ctx).map(|_| rng.below(cfg.vocab) as i32).collect();
+                (i, t)
+            })
+            .collect();
+        (cfg, w, windows)
+    }
+
+    #[test]
+    fn random_model_ppl_near_uniform() {
+        let (cfg, w, windows) = setup();
+        let ppl = perplexity_native(&cfg, &w, &windows);
+        // untrained model with random targets: PPL ≈ vocab
+        assert!(ppl > cfg.vocab as f64 * 0.3 && ppl < cfg.vocab as f64 * 3.0,
+                "ppl {ppl}");
+        assert!((bits_per_byte(ppl) - ppl.log2()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kl_is_zero_for_same_model_positive_otherwise() {
+        let (cfg, w, windows) = setup();
+        assert!(kl_to_teacher(&cfg, &w, &w, &windows[..2]).abs() < 1e-12);
+        let w2 = Weights::random(&cfg, 99);
+        assert!(kl_to_teacher(&cfg, &w, &w2, &windows[..2]) > 0.0);
+    }
+
+    #[test]
+    fn gaussianity_report_shapes() {
+        let (cfg, w, _) = setup();
+        let rep = gaussianity_report(&cfg, &w);
+        assert_eq!(rep.len(), 7); // w1 w2 w3 wk wo wq wv
+        for (_ty, kg, kl, _pref) in &rep {
+            assert!(*kg >= 0.0 && *kg <= 1.0);
+            assert!(*kl >= 0.0 && *kl <= 1.0);
+        }
+        // random Gaussian init → Gaussian fit preferred
+        let gauss_pref = rep.iter().filter(|r| r.3).count();
+        assert!(gauss_pref >= 5, "{gauss_pref}/7 types preferred Gaussian");
+    }
+
+    #[test]
+    fn probe_suite_in_unit_range() {
+        let (cfg, w, windows) = setup();
+        let p = probe_suite(&cfg, &w, &windows[..2]);
+        for v in [p.top1, p.digits, p.word_start, p.whitespace] {
+            assert!((0.0..=1.0).contains(&v));
+        }
+    }
+
+    #[test]
+    fn compressed_size_accounting() {
+        let mut cfg = ModelConfig::tiny_test();
+        cfg.n_params = 1000;
+        let bits = compressed_size_bits(&cfg, 2_000.0, 800);
+        assert_eq!(bits, 2_000.0 + 200.0 * 16.0);
+    }
+}

@@ -1,0 +1,329 @@
+//! Diagnostic experiments: rescaler statistics (Fig. 4), per-column
+//! entropy distributions (Fig. 5), codec-vs-entropy rates (Table 6),
+//! weight Gaussianity (Fig. 11), component ablations (Figs. 6–10), and
+//! adaptive-mixing coefficients (Tables 3–4).
+
+use anyhow::Result;
+
+use crate::coordinator::{quantize_model, Algo, PipelineOpts};
+use crate::entropy::external::{deflate_bpp, zstd_bpp};
+use crate::entropy::{Codec, column_entropies, entropy_bits};
+use crate::eval::gaussianity_report;
+use crate::linalg::stats::median;
+use crate::util::json::{obj, Json};
+
+use super::llm::pipeline_opts;
+use super::Ctx;
+
+/// Fig. 4 analog: distribution of the diagonal rescalers T and Γ vs rate.
+pub fn fig4(ctx: &Ctx) -> Result<()> {
+    let (cfg, teacher) = ctx.load_model("picollama_s")?;
+    let wiki = ctx.load_corpus("wiki")?;
+    let rates = if ctx.fast {
+        vec![1.0, 4.0]
+    } else {
+        vec![1.0, 2.0, 3.0, 4.0]
+    };
+    println!("Fig. 4 analog — rescaler statistics vs rate (picollama_s)");
+    println!(
+        "{:>5} | {:>8} {:>8} {:>8} | {:>8} {:>8} {:>8}",
+        "Rate", "Γ p10", "Γ med", "Γ p90", "T p10", "T med", "T p90"
+    );
+    println!("{}", "-".repeat(64));
+    let mut records = Vec::new();
+    for &rate in &rates {
+        let o = pipeline_opts(ctx, Algo::WaterSic, rate, false);
+        let qm = quantize_model(&cfg, &teacher, &wiki, &o, ctx.engine.as_ref())?;
+        let mut gammas = Vec::new();
+        let mut ts = Vec::new();
+        for q in qm.quants.values() {
+            // live columns only (dead ones have γ = 0 by construction)
+            for j in 0..q.n {
+                if !q.dead_cols.contains(&j) {
+                    gammas.push(q.gammas[j]);
+                }
+            }
+            ts.extend_from_slice(&q.t);
+        }
+        let pct = |v: &mut Vec<f64>, q: f64| {
+            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v[((v.len() - 1) as f64 * q) as usize]
+        };
+        let (g10, g50, g90) = (pct(&mut gammas, 0.1), pct(&mut gammas, 0.5), pct(&mut gammas, 0.9));
+        let (t10, t50, t90) = (pct(&mut ts, 0.1), pct(&mut ts, 0.5), pct(&mut ts, 0.9));
+        println!(
+            "{rate:>5.1} | {g10:>8.3} {g50:>8.3} {g90:>8.3} | {t10:>8.3} {t50:>8.3} {t90:>8.3}"
+        );
+        records.push(obj(vec![
+            ("rate", Json::Num(rate)),
+            ("gamma_med", Json::Num(g50)),
+            ("t_med", Json::Num(t50)),
+        ]));
+    }
+    println!("(LMMSE shrinkage: Γ well below 1 at 1 bit, → 1 by 4 bits)");
+    ctx.save_results("fig4", Json::Arr(records));
+    Ok(())
+}
+
+/// Fig. 5 analog: per-in-channel entropy distribution.
+pub fn fig5(ctx: &Ctx) -> Result<()> {
+    let (cfg, teacher) = ctx.load_model("picollama_s")?;
+    let wiki = ctx.load_corpus("wiki")?;
+    let rate = 2.125;
+    let o = pipeline_opts(ctx, Algo::WaterSic, rate, false);
+    let qm = quantize_model(&cfg, &teacher, &wiki, &o, ctx.engine.as_ref())?;
+    println!("Fig. 5 analog — per-column entropy distribution at {rate} bits");
+    let mut all: Vec<f64> = Vec::new();
+    for (name, q) in &qm.quants {
+        let ce = q.column_entropies();
+        let live: Vec<f64> = ce
+            .iter()
+            .enumerate()
+            .filter(|(j, _)| !q.dead_cols.contains(j))
+            .map(|(_, &e)| e)
+            .collect();
+        let mx = live.iter().cloned().fold(0.0, f64::max);
+        let avg = live.iter().sum::<f64>() / live.len() as f64;
+        println!("  {name:<22} max {mx:5.2}  avg {avg:5.2}  (n={})", live.len());
+        all.extend(live);
+    }
+    // histogram over all layers
+    println!("\nAll-column histogram (bits):");
+    let buckets = 12usize;
+    let hi = all.iter().cloned().fold(0.0, f64::max).max(1e-9);
+    let mut hist = vec![0usize; buckets];
+    for &e in &all {
+        let b = ((e / hi) * buckets as f64) as usize;
+        hist[b.min(buckets - 1)] += 1;
+    }
+    let peak = *hist.iter().max().unwrap();
+    for (b, &c) in hist.iter().enumerate() {
+        let bar = "#".repeat((c * 48).div_ceil(peak.max(1)));
+        println!(
+            "  [{:4.2}–{:4.2}) {:>5}  {bar}",
+            hi * b as f64 / buckets as f64,
+            hi * (b + 1) as f64 / buckets as f64,
+            c
+        );
+    }
+    let spread = {
+        let mut v = all.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v[(v.len() * 9) / 10] - v[v.len() / 10]
+    };
+    println!(
+        "\np90−p10 column-rate spread: {spread:.2} bits — the unequal \
+         per-channel allocation that uniform-rate methods cannot express."
+    );
+    ctx.save_results(
+        "fig5",
+        obj(vec![
+            ("rate", Json::Num(rate)),
+            ("spread_p90_p10", Json::Num(spread)),
+            ("n_columns", Json::Num(all.len() as f64)),
+        ]),
+    );
+    Ok(())
+}
+
+/// Table 6 analog: entropy estimate vs achieved codec bits/parameter.
+pub fn table6(ctx: &Ctx) -> Result<()> {
+    let (cfg, teacher) = ctx.load_model("picollama_s")?;
+    let wiki = ctx.load_corpus("wiki")?;
+    let o = pipeline_opts(ctx, Algo::WaterSic, 2.0, false);
+    let qm = quantize_model(&cfg, &teacher, &wiki, &o, ctx.engine.as_ref())?;
+    println!("Table 6 analog — entropy vs codec bpp (target 2.0 bits)");
+    println!(
+        "{:<22} {:>8} {:>9} {:>9} {:>8} {:>9} {:>8} {:>8}",
+        "Matrix", "entropy", "max(col)", "avg(col)", "zstd", "deflate", "huff", "rANS"
+    );
+    println!("{}", "-".repeat(88));
+    let mut records = Vec::new();
+    for (name, q) in &qm.quants {
+        let ent = entropy_bits(&q.z);
+        let ce = column_entropies(&q.z, q.a, q.n);
+        let mx = ce.iter().cloned().fold(0.0, f64::max);
+        let avg = ce.iter().sum::<f64>() / ce.len() as f64;
+        let z = zstd_bpp(&q.z, q.a, q.n);
+        let d = deflate_bpp(&q.z, q.a, q.n);
+        let h = crate::entropy::huffman::Huffman.rate(&q.z);
+        let r = crate::entropy::rans::Rans.rate(&q.z);
+        println!(
+            "{name:<22} {ent:>8.3} {mx:>9.3} {avg:>9.3} {z:>8.3} {d:>9.3} {h:>8.3} {r:>8.3}"
+        );
+        records.push(obj(vec![
+            ("matrix", Json::Str(name.clone())),
+            ("entropy", Json::Num(ent)),
+            ("zstd_bpp", Json::Num(z)),
+            ("deflate_bpp", Json::Num(d)),
+            ("huffman_bpp", Json::Num(h)),
+            ("rans_bpp", Json::Num(r)),
+        ]));
+    }
+    println!("(codecs should land within a few tenths of a bit of entropy)");
+    ctx.save_results("table6", Json::Arr(records));
+    Ok(())
+}
+
+/// Fig. 11 analog: Gaussian vs Laplace fits of the trained weights.
+pub fn fig11(ctx: &Ctx) -> Result<()> {
+    println!("Fig. 11 analog — KS distance to best-fit Gaussian/Laplace");
+    let mut records = Vec::new();
+    for model in ["picollama_s", "picollama_m"] {
+        let (cfg, w) = ctx.load_model(model)?;
+        println!("\n{model}:");
+        println!(
+            "  {:<6} {:>10} {:>10}  {}",
+            "type", "KS Gauss", "KS Laplace", "Gaussian preferred?"
+        );
+        for (ty, kg, kl, pref) in gaussianity_report(&cfg, &w) {
+            println!(
+                "  {:<6} {:>10.4} {:>10.4}  {}",
+                ty,
+                kg,
+                kl,
+                if pref { "yes" } else { "no" }
+            );
+            records.push(obj(vec![
+                ("model", Json::Str(model.to_string())),
+                ("type", Json::Str(ty)),
+                ("ks_gauss", Json::Num(kg)),
+                ("ks_laplace", Json::Num(kl)),
+            ]));
+        }
+    }
+    ctx.save_results("fig11", Json::Arr(records));
+    Ok(())
+}
+
+/// Figs. 6–10 analog: component ablation via input relative MSE.
+pub fn ablate(ctx: &Ctx) -> Result<()> {
+    let (cfg, teacher) = ctx.load_model("picollama_s")?;
+    let wiki = ctx.load_corpus("wiki")?;
+    let rate = if ctx.fast { 3.0 } else { 4.0 };
+    println!("Figs. 6–10 analog — input relative MSE per group at {rate} bits");
+
+    let variants: Vec<(&str, Box<dyn Fn(&mut PipelineOpts)>)> = vec![
+        (
+            "base",
+            Box::new(|o: &mut PipelineOpts| {
+                o.drift = false;
+                o.residual = false;
+                o.attn_weighted = false;
+            }),
+        ),
+        (
+            "+residual",
+            Box::new(|o: &mut PipelineOpts| {
+                o.drift = false;
+                o.residual = true;
+                o.attn_weighted = false;
+            }),
+        ),
+        (
+            "+qronos",
+            Box::new(|o: &mut PipelineOpts| {
+                o.drift = true;
+                o.residual = true;
+                o.attn_weighted = false;
+            }),
+        ),
+        (
+            "+attn-weight",
+            Box::new(|o: &mut PipelineOpts| {
+                o.drift = true;
+                o.residual = true;
+                o.attn_weighted = true;
+            }),
+        ),
+        (
+            "full(+mixing)",
+            Box::new(|o: &mut PipelineOpts| {
+                o.drift = true;
+                o.residual = true;
+                o.attn_weighted = true;
+                o.mixing = true;
+                o.mixing_iters = 4;
+            }),
+        ),
+    ];
+
+    let mut rows: Vec<(String, Vec<f64>)> = Vec::new();
+    let mut groups: Vec<String> = Vec::new();
+    for (label, tweak) in &variants {
+        let mut o = pipeline_opts(ctx, Algo::WaterSic, rate, false);
+        tweak(&mut o);
+        let qm = quantize_model(&cfg, &teacher, &wiki, &o, ctx.engine.as_ref())?;
+        if groups.is_empty() {
+            groups = qm.report.input_rel_mse.iter().map(|g| g.0.clone()).collect();
+        }
+        rows.push((
+            label.to_string(),
+            qm.report.input_rel_mse.iter().map(|g| g.1).collect(),
+        ));
+    }
+    print!("{:<22}", "group");
+    for (label, _) in &rows {
+        print!(" {label:>14}");
+    }
+    println!();
+    println!("{}", "-".repeat(22 + 15 * rows.len()));
+    let mut records = Vec::new();
+    for (gi, group) in groups.iter().enumerate() {
+        print!("{group:<22}");
+        for (label, vals) in &rows {
+            print!(" {:>14.3e}", vals[gi]);
+            records.push(obj(vec![
+                ("group", Json::Str(group.clone())),
+                ("variant", Json::Str(label.clone())),
+                ("rel_mse", Json::Num(vals[gi])),
+            ]));
+        }
+        println!();
+    }
+    // verdict: full ≤ base on average
+    let avg = |vals: &[f64]| vals.iter().sum::<f64>() / vals.len() as f64;
+    let base_avg = avg(&rows[0].1);
+    let full_avg = avg(&rows.last().unwrap().1);
+    println!(
+        "\nmean rel MSE: base {base_avg:.3e} → full {full_avg:.3e}  ({})",
+        if full_avg <= base_avg { "improved ✓" } else { "regressed ✗" }
+    );
+    ctx.save_results("ablate", Json::Arr(records));
+    Ok(())
+}
+
+/// Tables 3–4 analog: optimal mixing coefficients per layer and rate.
+pub fn mixing(ctx: &Ctx) -> Result<()> {
+    let (cfg, teacher) = ctx.load_model("picollama_s")?;
+    let wiki = ctx.load_corpus("wiki")?;
+    let rates = if ctx.fast { vec![2.125] } else { vec![2.125, 3.125, 4.125] };
+    println!("Tables 3–4 analog — optimal (ε_qr, ε_aw) per layer");
+    println!(
+        "{:>6} {:>6} {:>8} {:>8}",
+        "layer", "rate", "ε_qr*", "ε_aw*"
+    );
+    println!("{}", "-".repeat(32));
+    let mut records = Vec::new();
+    for &rate in &rates {
+        let mut o = pipeline_opts(ctx, Algo::WaterSic, rate, false);
+        o.mixing = true;
+        o.mixing_iters = if ctx.fast { 4 } else { 8 };
+        let qm = quantize_model(&cfg, &teacher, &wiki, &o, ctx.engine.as_ref())?;
+        for (li, eqr, eaw) in &qm.report.mixing {
+            println!("{li:>6} {rate:>6.3} {eqr:>8.4} {eaw:>8.4}");
+            records.push(obj(vec![
+                ("layer", Json::Num(*li as f64)),
+                ("rate", Json::Num(rate)),
+                ("eps_qr", Json::Num(*eqr)),
+                ("eps_aw", Json::Num(*eaw)),
+            ]));
+        }
+    }
+    ctx.save_results("mixing", Json::Arr(records));
+    Ok(())
+}
+
+pub fn _median_hint(xs: &[f64]) -> f64 {
+    median(xs)
+}

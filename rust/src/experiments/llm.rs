@@ -1,0 +1,485 @@
+//! LLM-scale experiments (picollama substitution for Llama/Qwen):
+//! rate–perplexity tables and figures, calibration/finetuning-set
+//! transfer, KL curves, probe-suite accuracy.
+
+use anyhow::Result;
+
+use crate::calib::corpus::Corpus;
+use crate::coordinator::container::Container;
+use crate::coordinator::{quantize_model, Algo, PipelineOpts, QuantizedModel};
+use crate::eval;
+use crate::ft::FtOpts;
+use crate::model::weights::Weights;
+use crate::model::ModelConfig;
+use crate::util::json::{obj, Json};
+
+use super::Ctx;
+
+pub(crate) struct RunOut {
+    pub qm: QuantizedModel,
+    pub ppl_wiki: f64,
+    pub ppl_web: f64,
+    pub avg_rate: f64,
+}
+
+fn eval_count(ctx: &Ctx) -> usize {
+    if ctx.fast {
+        16
+    } else {
+        48
+    }
+}
+
+pub fn pipeline_opts(ctx: &Ctx, algo: Algo, rate: f64, ft: bool) -> PipelineOpts {
+    let mut o = match algo {
+        Algo::WaterSic => PipelineOpts::watersic(rate),
+        a => PipelineOpts::baseline(a, rate),
+    };
+    if ctx.fast {
+        o.calib_windows = 8;
+        o.calib_batch = 4;
+        o.subsample_rows = 32;
+    }
+    if ft {
+        o.finetune = Some(FtOpts {
+            steps: if ctx.fast { 10 } else { 24 },
+            peak_lr: 5e-3,
+            min_lr: 1e-4,
+        });
+    }
+    o
+}
+
+pub(crate) fn run_config(
+    ctx: &Ctx,
+    cfg: &ModelConfig,
+    teacher: &Weights,
+    calib_corpus: &Corpus,
+    wiki: &Corpus,
+    web: &Corpus,
+    opts: &PipelineOpts,
+) -> Result<RunOut> {
+    let qm = quantize_model(cfg, teacher, calib_corpus, opts, ctx.engine.as_ref())?;
+    let n_eval = eval_count(ctx);
+    let wiki_windows = wiki.eval_windows(n_eval, cfg.ctx, 1234);
+    let web_windows = web.eval_windows(n_eval, cfg.ctx, 1234);
+    let ppl = |windows: &[(Vec<i32>, Vec<i32>)]| -> f64 {
+        if let Some(engine) = &ctx.engine {
+            if let Ok(p) =
+                eval::perplexity_runtime(engine, cfg, &qm.student, windows, 8)
+            {
+                return p;
+            }
+        }
+        eval::perplexity_native(cfg, &qm.student, windows)
+    };
+    let ppl_wiki = ppl(&wiki_windows);
+    let ppl_web = ppl(&web_windows);
+    let avg_rate = qm.report.avg_rate;
+    Ok(RunOut {
+        qm,
+        ppl_wiki,
+        ppl_web,
+        avg_rate,
+    })
+}
+
+fn rate_grid(ctx: &Ctx, full: &[f64], fast: &[f64]) -> Vec<f64> {
+    if ctx.fast {
+        fast.to_vec()
+    } else {
+        full.to_vec()
+    }
+}
+
+/// Table 1 / Fig. 2 analog: rate–PPL frontier on picollama_s across all
+/// algorithms.
+pub fn table1(ctx: &Ctx) -> Result<()> {
+    let (cfg, teacher) = ctx.load_model("picollama_s")?;
+    let wiki = ctx.load_corpus("wiki")?;
+    let web = ctx.load_corpus("web")?;
+    let rates = rate_grid(
+        ctx,
+        &[1.0, 1.5, 2.0, 2.5, 3.0, 3.5, 4.0],
+        &[1.5, 2.5, 3.5],
+    );
+    println!(
+        "Table 1 analog — {} (BF16 wiki PPL {:.3})",
+        cfg.name, cfg.bf16_ppl_wiki
+    );
+    println!(
+        "{:<16} {:>9} {:>12} {:>12}",
+        "Method", "Avg. bits", "wiki PPL ↓", "web PPL ↓"
+    );
+    println!("{}", "-".repeat(54));
+    let mut records = Vec::new();
+    for &rate in &rates {
+        let mut runs: Vec<(String, RunOut)> = Vec::new();
+        for (label, algo, ft) in [
+            ("WaterSIC-FT", Algo::WaterSic, true),
+            ("WaterSIC", Algo::WaterSic, false),
+            ("Huffman-GPTQ", Algo::HuffGptq, false),
+            ("Huffman-RTN", Algo::HuffRtn, false),
+        ] {
+            let o = pipeline_opts(ctx, algo, rate, ft);
+            runs.push((
+                label.to_string(),
+                run_config(ctx, &cfg, &teacher, &wiki, &wiki, &web, &o)?,
+            ));
+        }
+        // log-cardinality baselines at the nearest integer width
+        if (rate - rate.round()).abs() < 1e-9 && rate >= 2.0 {
+            let bits = rate.round() as u32;
+            let o = pipeline_opts(ctx, Algo::Rtn { bits }, rate, false);
+            runs.push((
+                format!("RTN (w{bits})"),
+                run_config(ctx, &cfg, &teacher, &wiki, &wiki, &web, &o)?,
+            ));
+            let maxq = (1i32 << (bits - 1)) - 1;
+            let o = pipeline_opts(ctx, Algo::Gptq { maxq }, rate, false);
+            runs.push((
+                format!("GPTQ (w{bits})"),
+                run_config(ctx, &cfg, &teacher, &wiki, &wiki, &web, &o)?,
+            ));
+        }
+        for (label, r) in &runs {
+            println!(
+                "{:<16} {:>9.2} {:>12.3} {:>12.3}",
+                label, r.avg_rate, r.ppl_wiki, r.ppl_web
+            );
+            records.push(obj(vec![
+                ("method", Json::Str(label.clone())),
+                ("target_rate", Json::Num(rate)),
+                ("avg_rate", Json::Num(r.avg_rate)),
+                ("ppl_wiki", Json::Num(r.ppl_wiki)),
+                ("ppl_web", Json::Num(r.ppl_web)),
+            ]));
+        }
+        println!();
+    }
+    ctx.save_results("table1", Json::Arr(records));
+    Ok(())
+}
+
+/// Table 2 analog on picollama_m at the paper's fractional rates.
+pub fn table2(ctx: &Ctx) -> Result<()> {
+    let (cfg, teacher) = ctx.load_model("picollama_m")?;
+    let wiki = ctx.load_corpus("wiki")?;
+    let web = ctx.load_corpus("web")?;
+    let rates = rate_grid(ctx, &[2.125, 2.625, 3.125, 3.625, 4.125], &[2.125, 3.125]);
+    println!(
+        "Table 2 analog — {} (BF16 wiki PPL {:.3})",
+        cfg.name, cfg.bf16_ppl_wiki
+    );
+    print!("{:<16}", "Method (bits)");
+    for r in &rates {
+        print!(" {r:>8.3}");
+    }
+    println!();
+    println!("{}", "-".repeat(16 + 9 * rates.len()));
+    let mut records = Vec::new();
+    for (label, algo, ft) in [
+        ("Huffman-GPTQ", Algo::HuffGptq, false),
+        ("GPTQ", Algo::Gptq { maxq: 3 }, false),
+        ("Huffman-RTN", Algo::HuffRtn, false),
+        ("RTN", Algo::Rtn { bits: 2 }, false),
+        ("WaterSIC", Algo::WaterSic, false),
+        ("WaterSIC-FT", Algo::WaterSic, true),
+    ] {
+        print!("{label:<16}");
+        for &rate in &rates {
+            // integer-grid baselines track the rate via their bit width
+            let algo = match algo {
+                Algo::Rtn { .. } => Algo::Rtn {
+                    bits: rate.round().max(2.0) as u32,
+                },
+                Algo::Gptq { .. } => Algo::Gptq {
+                    maxq: ((1i32 << (rate.round().max(2.0) as u32 - 1)) - 1).max(1),
+                },
+                a => a,
+            };
+            let o = pipeline_opts(ctx, algo, rate, ft);
+            let r = run_config(ctx, &cfg, &teacher, &wiki, &wiki, &web, &o)?;
+            print!(" {:>8.3}", r.ppl_wiki);
+            records.push(obj(vec![
+                ("method", Json::Str(label.to_string())),
+                ("rate", Json::Num(rate)),
+                ("avg_rate", Json::Num(r.avg_rate)),
+                ("ppl_wiki", Json::Num(r.ppl_wiki)),
+            ]));
+            // keep stdout flowing for long runs
+            use std::io::Write;
+            std::io::stdout().flush().ok();
+        }
+        println!();
+    }
+    ctx.save_results("table2", Json::Arr(records));
+    Ok(())
+}
+
+/// Fig. 1 analog: BPB vs measured compressed size across both models.
+pub fn fig1(ctx: &Ctx) -> Result<()> {
+    let wiki = ctx.load_corpus("wiki")?;
+    let web = ctx.load_corpus("web")?;
+    let rates = rate_grid(ctx, &[1.0, 1.5, 2.0, 3.0, 4.0], &[1.5, 3.0]);
+    println!("Fig. 1 analog — BPB vs compressed size (WaterSIC)");
+    println!(
+        "{:<14} {:>6} {:>12} {:>10} {:>10}",
+        "model", "rate", "size (KiB)", "wiki BPB", "web BPB"
+    );
+    println!("{}", "-".repeat(56));
+    let mut records = Vec::new();
+    for model in ["picollama_s", "picollama_m"] {
+        let (cfg, teacher) = ctx.load_model(model)?;
+        for &rate in &rates {
+            let o = pipeline_opts(ctx, Algo::WaterSic, rate, false);
+            let r = run_config(ctx, &cfg, &teacher, &wiki, &wiki, &web, &o)?;
+            let container =
+                Container::new(&cfg.name, r.qm.quants.clone());
+            // measured container + BF16 residual params (embeds, norms)
+            let resid_bytes =
+                2 * (cfg.n_params - cfg.quantizable_params());
+            let kib =
+                (container.size_bytes() + resid_bytes) as f64 / 1024.0;
+            let bpb_w = eval::bits_per_byte(r.ppl_wiki);
+            let bpb_c = eval::bits_per_byte(r.ppl_web);
+            println!(
+                "{:<14} {:>6.2} {:>12.1} {:>10.3} {:>10.3}",
+                model, r.avg_rate, kib, bpb_w, bpb_c
+            );
+            records.push(obj(vec![
+                ("model", Json::Str(model.to_string())),
+                ("rate", Json::Num(r.avg_rate)),
+                ("size_kib", Json::Num(kib)),
+                ("bpb_wiki", Json::Num(bpb_w)),
+                ("bpb_web", Json::Num(bpb_c)),
+            ]));
+        }
+    }
+    ctx.save_results("fig1", Json::Arr(records));
+    Ok(())
+}
+
+/// Table 7 analog: in-domain (wiki) and off-domain (web ≙ C4) PPL for
+/// WaterSIC and WaterSIC-FT across rates.
+pub fn table7(ctx: &Ctx) -> Result<()> {
+    let (cfg, teacher) = ctx.load_model("picollama_s")?;
+    let wiki = ctx.load_corpus("wiki")?;
+    let web = ctx.load_corpus("web")?;
+    let rates = rate_grid(ctx, &[1.0, 1.5, 2.0, 2.5, 3.0, 4.0], &[1.5, 3.0]);
+    println!("Table 7 analog — {} (calibrated on wiki)", cfg.name);
+    println!(
+        "{:>5} | {:>10} {:>10} | {:>10} {:>10}",
+        "Rate", "WS wiki", "WS web", "FT wiki", "FT web"
+    );
+    println!("{}", "-".repeat(56));
+    let mut records = Vec::new();
+    for &rate in &rates {
+        let base = run_config(
+            ctx, &cfg, &teacher, &wiki, &wiki, &web,
+            &pipeline_opts(ctx, Algo::WaterSic, rate, false),
+        )?;
+        let ft = run_config(
+            ctx, &cfg, &teacher, &wiki, &wiki, &web,
+            &pipeline_opts(ctx, Algo::WaterSic, rate, true),
+        )?;
+        println!(
+            "{:>5.2} | {:>10.3} {:>10.3} | {:>10.3} {:>10.3}",
+            rate, base.ppl_wiki, base.ppl_web, ft.ppl_wiki, ft.ppl_web
+        );
+        records.push(obj(vec![
+            ("rate", Json::Num(rate)),
+            ("ws_wiki", Json::Num(base.ppl_wiki)),
+            ("ws_web", Json::Num(base.ppl_web)),
+            ("ft_wiki", Json::Num(ft.ppl_wiki)),
+            ("ft_web", Json::Num(ft.ppl_web)),
+        ]));
+    }
+    println!(
+        "(off-domain gap should widen at low rates; FT narrows in-domain first)"
+    );
+    ctx.save_results("table7", Json::Arr(records));
+    Ok(())
+}
+
+/// Table 15 analog: calibration set × finetuning set at a low rate.
+pub fn table15(ctx: &Ctx) -> Result<()> {
+    let (cfg, teacher) = ctx.load_model("picollama_s")?;
+    let wiki = ctx.load_corpus("wiki")?;
+    let web = ctx.load_corpus("web")?;
+    let rate = 2.0;
+    println!("Table 15 analog — {} at {rate} bits", cfg.name);
+    println!(
+        "{:<10} {:<10} {:>10} {:>10}",
+        "calib", "FT set", "wiki PPL", "web PPL"
+    );
+    println!("{}", "-".repeat(44));
+    let mut records = Vec::new();
+    for calib_name in ["wiki", "web"] {
+        let calib = if calib_name == "wiki" { &wiki } else { &web };
+        for ft_name in ["none", "wiki", "web"] {
+            let ft = ft_name != "none";
+            let mut o = pipeline_opts(ctx, Algo::WaterSic, rate, ft);
+            if ft && ft_name != calib_name {
+                // FT on a different corpus: re-run the FT stage manually
+                o.finetune = None;
+            }
+            let mut run =
+                run_config(ctx, &cfg, &teacher, calib, &wiki, &web, &o)?;
+            if ft && ft_name != calib_name {
+                let ft_corpus = if ft_name == "wiki" { &wiki } else { &web };
+                ft_on_corpus(ctx, &cfg, &teacher, ft_corpus, &mut run)?;
+            }
+            println!(
+                "{:<10} {:<10} {:>10.3} {:>10.3}",
+                calib_name, ft_name, run.ppl_wiki, run.ppl_web
+            );
+            records.push(obj(vec![
+                ("calib", Json::Str(calib_name.to_string())),
+                ("ft", Json::Str(ft_name.to_string())),
+                ("ppl_wiki", Json::Num(run.ppl_wiki)),
+                ("ppl_web", Json::Num(run.ppl_web)),
+            ]));
+        }
+    }
+    println!("(each FT set should be best on its own evaluation distribution)");
+    ctx.save_results("table15", Json::Arr(records));
+    Ok(())
+}
+
+fn ft_on_corpus(
+    ctx: &Ctx,
+    cfg: &ModelConfig,
+    teacher: &Weights,
+    corpus: &Corpus,
+    run: &mut RunOut,
+) -> Result<()> {
+    use crate::model::transformer::{forward, ForwardOpts};
+    let windows = corpus.calib_windows(8, cfg.ctx, 771);
+    let batches: Vec<Vec<i32>> = crate::calib::corpus::batch_windows(&windows, 4)
+        .into_iter()
+        .map(|(t, _)| t)
+        .collect();
+    let tlogits: Vec<crate::linalg::Mat> = batches
+        .iter()
+        .map(|t| forward(cfg, teacher, t, 4, cfg.ctx, &ForwardOpts::default()).logits)
+        .collect();
+    crate::ft::finetune_rescalers(
+        cfg,
+        &tlogits,
+        &batches,
+        4,
+        &mut run.qm.student,
+        &mut run.qm.quants,
+        &FtOpts {
+            steps: if ctx.fast { 10 } else { 24 },
+            peak_lr: 5e-3,
+            min_lr: 1e-4,
+        },
+    )?;
+    // re-evaluate
+    let n_eval = eval_count(ctx);
+    let wiki = ctx.load_corpus("wiki")?;
+    let web = ctx.load_corpus("web")?;
+    run.ppl_wiki = eval::perplexity_native(
+        cfg,
+        &run.qm.student,
+        &wiki.eval_windows(n_eval, cfg.ctx, 1234),
+    );
+    run.ppl_web = eval::perplexity_native(
+        cfg,
+        &run.qm.student,
+        &web.eval_windows(n_eval, cfg.ctx, 1234),
+    );
+    Ok(())
+}
+
+/// Fig. 12 analog: KL(BF16 ‖ quantized) vs rate.
+pub fn fig12(ctx: &Ctx) -> Result<()> {
+    let (cfg, teacher) = ctx.load_model("picollama_s")?;
+    let wiki = ctx.load_corpus("wiki")?;
+    let web = ctx.load_corpus("web")?;
+    let rates = rate_grid(ctx, &[1.5, 2.0, 2.5, 3.0, 4.0], &[2.0, 3.0]);
+    let n_eval = if ctx.fast { 8 } else { 24 };
+    let windows = wiki.eval_windows(n_eval, cfg.ctx, 555);
+    println!("Fig. 12 analog — KL(P_BF16 ‖ P_quant), nats/token");
+    println!(
+        "{:>5} | {:>12} {:>12} {:>12}",
+        "Rate", "HPTQ", "WaterSIC", "WaterSIC-FT"
+    );
+    println!("{}", "-".repeat(50));
+    let mut records = Vec::new();
+    for &rate in &rates {
+        let mut row = Vec::new();
+        for (algo, ft) in [
+            (Algo::HuffGptq, false),
+            (Algo::WaterSic, false),
+            (Algo::WaterSic, true),
+        ] {
+            let o = pipeline_opts(ctx, algo, rate, ft);
+            let r = run_config(ctx, &cfg, &teacher, &wiki, &wiki, &web, &o)?;
+            row.push(eval::kl_to_teacher(&cfg, &teacher, &r.qm.student, &windows));
+        }
+        println!(
+            "{:>5.2} | {:>12.4} {:>12.4} {:>12.4}",
+            rate, row[0], row[1], row[2]
+        );
+        records.push(obj(vec![
+            ("rate", Json::Num(rate)),
+            ("kl_hptq", Json::Num(row[0])),
+            ("kl_watersic", Json::Num(row[1])),
+            ("kl_watersic_ft", Json::Num(row[2])),
+        ]));
+    }
+    ctx.save_results("fig12", Json::Arr(records));
+    Ok(())
+}
+
+/// Table 17 analog: probe-suite accuracy per method and rate.
+pub fn tasks(ctx: &Ctx) -> Result<()> {
+    let (cfg, teacher) = ctx.load_model("picollama_s")?;
+    let wiki = ctx.load_corpus("wiki")?;
+    let web = ctx.load_corpus("web")?;
+    let rates = rate_grid(ctx, &[2.0, 3.0, 4.0], &[2.0, 3.0]);
+    let n_eval = eval_count(ctx);
+    let windows = wiki.eval_windows(n_eval, cfg.ctx, 808);
+    println!("Table 17 analog — probe accuracies on wiki eval (higher better)");
+    println!(
+        "{:>5} {:<14} {:>8} {:>8} {:>9} {:>11}",
+        "Rate", "Method", "top-1", "digits", "wordstart", "whitespace"
+    );
+    println!("{}", "-".repeat(60));
+    let teach_probe = eval::probe_suite(&cfg, &teacher, &windows);
+    println!(
+        "{:>5} {:<14} {:>8.4} {:>8.4} {:>9.4} {:>11.4}",
+        "BF16", "teacher", teach_probe.top1, teach_probe.digits,
+        teach_probe.word_start, teach_probe.whitespace
+    );
+    let mut records = Vec::new();
+    for &rate in &rates {
+        for (label, algo, ft) in [
+            ("Huffman-GPTQ", Algo::HuffGptq, false),
+            ("WaterSIC", Algo::WaterSic, false),
+            ("WaterSIC-FT", Algo::WaterSic, true),
+        ] {
+            let o = pipeline_opts(ctx, algo, rate, ft);
+            let r = run_config(ctx, &cfg, &teacher, &wiki, &wiki, &web, &o)?;
+            let p = eval::probe_suite(&cfg, &r.qm.student, &windows);
+            println!(
+                "{:>5.1} {:<14} {:>8.4} {:>8.4} {:>9.4} {:>11.4}",
+                rate, label, p.top1, p.digits, p.word_start, p.whitespace
+            );
+            records.push(obj(vec![
+                ("rate", Json::Num(rate)),
+                ("method", Json::Str(label.to_string())),
+                ("top1", Json::Num(p.top1)),
+                ("digits", Json::Num(p.digits)),
+                ("word_start", Json::Num(p.word_start)),
+                ("whitespace", Json::Num(p.whitespace)),
+            ]));
+        }
+        println!();
+    }
+    ctx.save_results("tasks", Json::Arr(records));
+    Ok(())
+}

@@ -1,0 +1,111 @@
+//! Experiment drivers: one function per paper table/figure (DESIGN.md §4).
+//! Each prints the same rows/series the paper reports and dumps a JSON
+//! record under `results/`.
+
+pub mod diag;
+pub mod llm;
+pub mod theory;
+
+use std::path::PathBuf;
+
+use anyhow::{Context as _, Result};
+
+use crate::calib::corpus::Corpus;
+use crate::model::weights::Weights;
+use crate::model::ModelConfig;
+use crate::runtime::Engine;
+use crate::util::json::Json;
+
+/// Shared experiment context.
+pub struct Ctx {
+    pub artifacts: PathBuf,
+    pub engine: Option<Engine>,
+    /// reduced rate grids / calib sizes for quick smoke runs
+    pub fast: bool,
+    pub results_dir: PathBuf,
+}
+
+impl Ctx {
+    pub fn new(fast: bool, use_engine: bool) -> Result<Ctx> {
+        let artifacts = crate::artifacts_dir();
+        let engine = if use_engine {
+            match Engine::new(artifacts.clone()) {
+                Ok(e) => {
+                    eprintln!("[runtime] PJRT platform: {}", e.platform());
+                    Some(e)
+                }
+                Err(e) => {
+                    eprintln!("[runtime] PJRT unavailable ({e:#}); native fallback");
+                    None
+                }
+            }
+        } else {
+            None
+        };
+        let results_dir = artifacts
+            .parent()
+            .map(|p| p.join("results"))
+            .unwrap_or_else(|| "results".into());
+        std::fs::create_dir_all(&results_dir).ok();
+        Ok(Ctx {
+            artifacts,
+            engine,
+            fast,
+            results_dir,
+        })
+    }
+
+    pub fn load_model(&self, name: &str) -> Result<(ModelConfig, Weights)> {
+        let dir = self.artifacts.join("models").join(name);
+        let cfg = ModelConfig::load(&dir.join("meta.json"))
+            .with_context(|| format!("loading model {name} (run `make artifacts`)"))?;
+        let w = Weights::load(&dir, &cfg)?;
+        Ok((cfg, w))
+    }
+
+    pub fn load_corpus(&self, domain: &str) -> Result<Corpus> {
+        Corpus::load(&self.artifacts, domain)
+    }
+
+    pub fn save_results(&self, id: &str, json: Json) {
+        let path = self.results_dir.join(format!("{id}.json"));
+        if let Err(e) = std::fs::write(&path, json.to_string_pretty()) {
+            eprintln!("[results] failed to write {}: {e}", path.display());
+        } else {
+            eprintln!("[results] wrote {}", path.display());
+        }
+    }
+}
+
+/// Dispatch by experiment id (the `repro <id>` CLI).
+pub fn run(id: &str, ctx: &Ctx) -> Result<()> {
+    match id {
+        "theory" => theory::run(ctx),
+        "table1" | "fig2" => llm::table1(ctx),
+        "table2" | "fig3" => llm::table2(ctx),
+        "fig1" => llm::fig1(ctx),
+        "table7" => llm::table7(ctx),
+        "table15" => llm::table15(ctx),
+        "fig12" => llm::fig12(ctx),
+        "tasks" | "table17" => llm::tasks(ctx),
+        "fig4" => diag::fig4(ctx),
+        "fig5" => diag::fig5(ctx),
+        "table6" => diag::table6(ctx),
+        "fig11" => diag::fig11(ctx),
+        "ablate" | "fig6" | "fig7" | "fig8" | "fig10" => diag::ablate(ctx),
+        "mixing" | "table3" | "table4" => diag::mixing(ctx),
+        "all" => {
+            for id in [
+                "theory", "fig11", "fig5", "table6", "fig4", "ablate", "mixing",
+                "table1", "table2", "fig1", "fig12", "table7", "table15", "tasks",
+            ] {
+                println!("\n================ repro {id} ================");
+                run(id, ctx)?;
+            }
+            Ok(())
+        }
+        other => anyhow::bail!(
+            "unknown experiment {other:?}; see DESIGN.md §4 for the index"
+        ),
+    }
+}

@@ -1,0 +1,149 @@
+//! `repro theory` — the headline information-theoretic experiment
+//! (Theorem 3.3): empirical rate gaps of entropy-coded GPTQ and
+//! PlainWaterSIC to the reverse-waterfilling bound, over covariance
+//! families of increasing conditioning.  Shape targets:
+//!   * WaterSIC's gap → ½log₂(2πe/12) ≈ 0.255 bit, uniformly in Σ_X;
+//!   * GPTQ's gap = 0.255 + AM/GM(ℓ_ii²) term, growing without bound.
+
+use anyhow::Result;
+
+use crate::linalg::chol::cholesky;
+use crate::linalg::Mat;
+use crate::quant::waterfilling::{
+    amgm_gap_bits, ar1_sigma, gptq_gap_bits, r_wf, spectrum, spiked_sigma,
+    SHAPING_GAP_BITS,
+};
+use crate::quant::zsic::{geomean_diag, gptq_alphas, watersic_alphas, zsic};
+use crate::util::json::{arr_f64, obj, Json};
+use crate::util::rng::Rng;
+
+use super::Ctx;
+
+struct GapPoint {
+    rate: f64,
+    gap_ws: f64,
+    gap_gptq: f64,
+}
+
+/// Measure empirical (R, D) for both spacing rules at equal lattice
+/// density and return gaps to R_WF.
+fn measure(sigma: &Mat, a: usize, rate_grid: &[f64], seed: u64) -> Vec<GapPoint> {
+    let n = sigma.rows;
+    let mut rng = Rng::new(seed);
+    let w = Mat::from_fn(a, n, |_, _| rng.gaussian());
+    let l = cholesky(sigma).expect("theory sigma must be PD");
+    let y = crate::linalg::gemm::matmul(&w, &l);
+    let lam = spectrum(sigma);
+    let gm = geomean_diag(&l);
+
+    rate_grid
+        .iter()
+        .map(|&target| {
+            // same point density |A|^{1/n} = α for both algorithms
+            let run = |watersic: bool, alpha: f64| -> (f64, f64) {
+                let alphas = if watersic {
+                    watersic_alphas(&l, alpha * gm)
+                } else {
+                    gptq_alphas(n, alpha)
+                };
+                let out = zsic(&y, &l, &alphas, false, None);
+                let rate = crate::entropy::entropy_bits(&out.z);
+                // D = ‖e_SIC‖²/(na) (resid is exactly the per-column error)
+                let d = out.resid.data.iter().map(|x| x * x).sum::<f64>()
+                    / (a * n) as f64;
+                (rate, d)
+            };
+            // secant on α to hit the target entropy for each rule
+            let solve = |watersic: bool| -> (f64, f64) {
+                let rate_of = |alpha: f64| run(watersic, alpha).0;
+                let a0 = (2.0 * std::f64::consts::PI * std::f64::consts::E)
+                    .sqrt()
+                    * 2f64.powf(-target);
+                let alpha = crate::quant::rate_control::secant_scale(
+                    rate_of, a0, target, 0.01, 8,
+                );
+                run(watersic, alpha)
+            };
+            let (r_ws, d_ws) = solve(true);
+            let (r_gq, d_gq) = solve(false);
+            GapPoint {
+                rate: target,
+                gap_ws: r_ws - r_wf(d_ws, &lam, 1.0),
+                gap_gptq: r_gq - r_wf(d_gq, &lam, 1.0),
+            }
+        })
+        .collect()
+}
+
+pub fn run(ctx: &Ctx) -> Result<()> {
+    let (n, a) = if ctx.fast { (48, 384) } else { (96, 1024) };
+    let rates: Vec<f64> = if ctx.fast {
+        vec![3.0, 4.0]
+    } else {
+        vec![2.0, 3.0, 4.0, 5.0]
+    };
+
+    println!("Theorem 3.3 reproduction: rate gap to the waterfilling bound");
+    println!("(n = {n}, {a} i.i.d. Gaussian rows; entropy-coded, no LMMSE)");
+    println!();
+    println!(
+        "{:<22} {:>5} | {:>9} {:>9} | {:>9} {:>9}",
+        "Σ_X family", "R", "WS gap", "theory", "GPTQ gap", "theory"
+    );
+    println!("{}", "-".repeat(74));
+
+    let mut records = Vec::new();
+    let families: Vec<(String, Mat)> = vec![
+        ("white (I)".to_string(), Mat::eye(n)),
+        ("AR(1) ρ=0.5".to_string(), ar1_sigma(n, 0.5)),
+        ("AR(1) ρ=0.9".to_string(), ar1_sigma(n, 0.9)),
+        ("AR(1) ρ=0.99".to_string(), ar1_sigma(n, 0.99)),
+        ("spiked k=8 ×32".to_string(), spiked_sigma(n, 8, 32.0, 7)),
+    ];
+
+    for (name, sigma) in &families {
+        let l = cholesky(sigma)?;
+        let gptq_theory = gptq_gap_bits(&l.diag());
+        let points = measure(sigma, a, &rates, 42);
+        for p in &points {
+            println!(
+                "{:<22} {:>5.1} | {:>9.3} {:>9.3} | {:>9.3} {:>9.3}",
+                name, p.rate, p.gap_ws, SHAPING_GAP_BITS, p.gap_gptq, gptq_theory
+            );
+            records.push(obj(vec![
+                ("family", Json::Str(name.clone())),
+                ("rate", Json::Num(p.rate)),
+                ("gap_watersic", Json::Num(p.gap_ws)),
+                ("gap_gptq", Json::Num(p.gap_gptq)),
+                ("theory_watersic", Json::Num(SHAPING_GAP_BITS)),
+                ("theory_gptq", Json::Num(gptq_theory)),
+                ("amgm_term", Json::Num(amgm_gap_bits(&l.diag()))),
+            ]));
+        }
+        // shape assertions printed as a verdict line
+        let last = points.last().unwrap();
+        let ws_ok = (last.gap_ws - SHAPING_GAP_BITS).abs() < 0.15;
+        let gq_ok = last.gap_gptq >= last.gap_ws - 0.02;
+        println!(
+            "{:<22}       verdict: WaterSIC≈0.255 {}  GPTQ≥WaterSIC {}",
+            "",
+            if ws_ok { "✓" } else { "✗" },
+            if gq_ok { "✓" } else { "✗" }
+        );
+    }
+    println!();
+    println!(
+        "WaterSIC's gap is Σ-independent (rotation invariant); GPTQ's grows \
+         with the AM/GM spread of the Cholesky diagonal — unboundedly as ρ→1."
+    );
+    ctx.save_results(
+        "theory",
+        obj(vec![
+            ("n", Json::Num(n as f64)),
+            ("a", Json::Num(a as f64)),
+            ("rates", arr_f64(&rates)),
+            ("records", Json::Arr(records)),
+        ]),
+    );
+    Ok(())
+}

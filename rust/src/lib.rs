@@ -1,0 +1,54 @@
+//! # WaterSIC — information-theoretically (near) optimal linear layer quantization
+//!
+//! Full-system reproduction of Lifar, Savkin, Ordentlich & Polyanskiy
+//! (ICML 2026).  Three-layer architecture:
+//!
+//! * **Layer 1** (build time): Pallas kernels — the ZSIC successive
+//!   interference cancellation quantizer and a tiled matmul
+//!   (`python/compile/kernels/`).
+//! * **Layer 2** (build time): JAX compute graphs — the `picollama`
+//!   transformer forward pass and the per-shape quantize graph, lowered
+//!   once to HLO text (`python/compile/{model,aot}.py`).
+//! * **Layer 3** (this crate): the Rust coordinator — calibration,
+//!   rate control, entropy coding, the per-layer quantization pipeline,
+//!   the compressed-model container, evaluation, and finetuning.  Python
+//!   never runs on the request path; the binary is self-contained once
+//!   `make artifacts` has been run.
+//!
+//! Module map mirrors DESIGN.md §3.
+
+pub mod calib;
+pub mod coordinator;
+pub mod entropy;
+pub mod eval;
+pub mod experiments;
+pub mod ft;
+pub mod linalg;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Default location of the AOT artifacts relative to the repo root.
+pub const ARTIFACTS_DIR: &str = "artifacts";
+
+/// Resolve the artifacts directory: `$WATERSIC_ARTIFACTS`, else walk up
+/// from the current directory looking for `artifacts/manifest.json`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(p) = std::env::var("WATERSIC_ARTIFACTS") {
+        return p.into();
+    }
+    let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());
+    loop {
+        let cand = dir.join(ARTIFACTS_DIR);
+        if cand.join("manifest.json").exists() {
+            return cand;
+        }
+        if !dir.pop() {
+            return ARTIFACTS_DIR.into();
+        }
+    }
+}

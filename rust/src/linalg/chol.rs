@@ -1,0 +1,184 @@
+//! Cholesky decomposition and triangular solves — the backbone of ZSIC
+//! (Σ = LLᵀ) and of the drift-corrected target ŷ = (WΣ_{X,X̂}+Σ_Δ)(L̂ᵀ)⁻¹.
+
+use anyhow::{bail, Result};
+
+use super::Mat;
+
+/// Lower-triangular Cholesky factor of a PSD matrix: A = L·Lᵀ.
+/// Fails if a pivot goes non-positive (caller should damp / erase dead
+/// features first — exactly the paper's workflow).
+pub fn cholesky(a: &Mat) -> Result<Mat> {
+    let n = a.assert_square()?;
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[(i, j)];
+            for k in 0..j {
+                s -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if s <= 0.0 || !s.is_finite() {
+                    bail!(
+                        "cholesky pivot {i} non-positive ({s:.3e}); \
+                         damp or erase dead features"
+                    );
+                }
+                l[(i, j)] = s.sqrt();
+            } else {
+                l[(i, j)] = s / l[(j, j)];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve L·x = b with L lower-triangular (forward substitution).
+pub fn solve_lower(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    debug_assert_eq!(b.len(), n);
+    let mut x = vec![0.0; n];
+    for i in 0..n {
+        let mut s = b[i];
+        let lrow = l.row(i);
+        for k in 0..i {
+            s -= lrow[k] * x[k];
+        }
+        x[i] = s / lrow[i];
+    }
+    x
+}
+
+/// Solve Lᵀ·x = b with L lower-triangular (back substitution).
+pub fn solve_lower_t(l: &Mat, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    debug_assert_eq!(b.len(), n);
+    let mut x = vec![0.0; n];
+    for i in (0..n).rev() {
+        let mut s = b[i];
+        for k in i + 1..n {
+            s -= l[(k, i)] * x[k];
+        }
+        x[i] = s / l[(i, i)];
+    }
+    x
+}
+
+/// Solve X·Lᵀ = B row-wise, i.e. X = B·(Lᵀ)⁻¹.  This is the exact
+/// operation in eq. (17)/(18): ŷ = (…)·(L̂ᵀ)⁻¹.
+/// Row i of X satisfies Lᵀ xᵢᵀ = … — equivalently for each row b of B we
+/// solve  x L^T = b  ⇔  L x^T = b^T  (forward substitution per row).
+pub fn solve_xlt_eq_b(l: &Mat, b: &Mat) -> Mat {
+    let n = l.rows;
+    assert_eq!(b.cols, n);
+    let mut x = Mat::zeros(b.rows, n);
+    for r in 0..b.rows {
+        let sol = solve_lower(l, b.row(r));
+        x.row_mut(r).copy_from_slice(&sol);
+    }
+    x
+}
+
+/// Inverse of an SPD matrix via Cholesky (used by the Γ-step of Alg. 4:
+/// γ = (G + λI)⁻¹ d, solved rather than inverted when possible).
+pub fn spd_solve(a: &Mat, b: &[f64]) -> Result<Vec<f64>> {
+    let l = cholesky(a)?;
+    let y = solve_lower(&l, b);
+    Ok(solve_lower_t(&l, &y))
+}
+
+/// log-determinant of an SPD matrix: 2·Σ log ℓ_ii.
+pub fn spd_logdet(a: &Mat) -> Result<f64> {
+    let l = cholesky(a)?;
+    Ok(2.0 * l.diag().iter().map(|x| x.ln()).sum::<f64>())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{gram, matmul};
+    use crate::util::rng::Rng;
+
+    fn spd(n: usize, rng: &mut Rng) -> Mat {
+        let a = Mat::from_fn(2 * n, n, |_, _| rng.gaussian());
+        let mut g = gram(&a).scale(1.0 / (2 * n) as f64);
+        g.add_diag(0.05);
+        g
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Rng::new(11);
+        for n in [1, 2, 5, 16, 40] {
+            let a = spd(n, &mut rng);
+            let l = cholesky(&a).unwrap();
+            let re = matmul(&l, &l.transpose());
+            assert!(re.sub(&a).max_abs() < 1e-9, "n={n}");
+            // lower-triangular with positive diagonal
+            for i in 0..n {
+                assert!(l[(i, i)] > 0.0);
+                for j in i + 1..n {
+                    assert_eq!(l[(i, j)], 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eig −1, 3
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn solves_are_inverses() {
+        let mut rng = Rng::new(12);
+        let a = spd(10, &mut rng);
+        let l = cholesky(&a).unwrap();
+        let b: Vec<f64> = (0..10).map(|_| rng.gaussian()).collect();
+        let x = solve_lower(&l, &b);
+        // L x = b
+        let lx = crate::linalg::gemm::matvec(&l, &x);
+        for i in 0..10 {
+            assert!((lx[i] - b[i]).abs() < 1e-10);
+        }
+        let y = solve_lower_t(&l, &b);
+        let lty = crate::linalg::gemm::matvec(&l.transpose(), &y);
+        for i in 0..10 {
+            assert!((lty[i] - b[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn spd_solve_matches_direct() {
+        let mut rng = Rng::new(13);
+        let a = spd(8, &mut rng);
+        let b: Vec<f64> = (0..8).map(|_| rng.gaussian()).collect();
+        let x = spd_solve(&a, &b).unwrap();
+        let ax = crate::linalg::gemm::matvec(&a, &x);
+        for i in 0..8 {
+            assert!((ax[i] - b[i]).abs() < 1e-8);
+        }
+    }
+
+    #[test]
+    fn xlt_solve_matches() {
+        let mut rng = Rng::new(14);
+        let a = spd(6, &mut rng);
+        let l = cholesky(&a).unwrap();
+        let b = Mat::from_fn(4, 6, |_, _| rng.gaussian());
+        let x = solve_xlt_eq_b(&l, &b);
+        let re = matmul(&x, &l.transpose());
+        assert!(re.sub(&b).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn logdet_matches_product_of_pivots() {
+        let mut rng = Rng::new(15);
+        let a = spd(12, &mut rng);
+        let ld = spd_logdet(&a).unwrap();
+        let l = cholesky(&a).unwrap();
+        let direct: f64 = l.diag().iter().map(|x| 2.0 * x.ln()).sum();
+        assert!((ld - direct).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,135 @@
+//! Cyclic Jacobi eigensolver for symmetric matrices — needed for the
+//! waterfilling bound (eigenvalues of Σ_X) and for conditioning
+//! diagnostics.  O(n³) per sweep, converges quadratically; plenty for
+//! the n ≤ 1024 covariances in this system.
+
+use super::Mat;
+
+/// Eigen-decomposition of a symmetric matrix: returns (eigenvalues
+/// descending, eigenvectors as columns of V so that A = V Λ Vᵀ).
+pub fn eigh(a: &Mat) -> (Vec<f64>, Mat) {
+    let n = a.rows;
+    assert_eq!(a.rows, a.cols);
+    let mut m = a.clone();
+    // symmetrize defensively
+    for i in 0..n {
+        for j in 0..i {
+            let avg = 0.5 * (m[(i, j)] + m[(j, i)]);
+            m[(i, j)] = avg;
+            m[(j, i)] = avg;
+        }
+    }
+    let mut v = Mat::eye(n);
+    let max_sweeps = 64;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in i + 1..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() < 1e-12 * (1.0 + m.frob_norm()) {
+            break;
+        }
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let theta = 0.5 * (aqq - app) / apq;
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p and q of m
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+                for k in 0..n {
+                    let vkp = v[(k, p)];
+                    let vkq = v[(k, q)];
+                    v[(k, p)] = c * vkp - s * vkq;
+                    v[(k, q)] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+    let mut pairs: Vec<(f64, usize)> =
+        (0..n).map(|i| (m[(i, i)], i)).collect();
+    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let vals: Vec<f64> = pairs.iter().map(|p| p.0).collect();
+    let mut vv = Mat::zeros(n, n);
+    for (new_j, (_, old_j)) in pairs.iter().enumerate() {
+        for i in 0..n {
+            vv[(i, new_j)] = v[(i, *old_j)];
+        }
+    }
+    (vals, vv)
+}
+
+/// Eigenvalues only (descending).
+pub fn eigvals(a: &Mat) -> Vec<f64> {
+    eigh(a).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::{gram, matmul};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = Mat::diag_from(&[3.0, 1.0, 2.0]);
+        let (vals, _) = eigh(&a);
+        assert!((vals[0] - 3.0).abs() < 1e-12);
+        assert!((vals[1] - 2.0).abs() < 1e-12);
+        assert!((vals[2] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reconstruction_and_orthogonality() {
+        let mut rng = Rng::new(21);
+        for n in [2, 5, 17, 32] {
+            let g = gram(&Mat::from_fn(n + 3, n, |_, _| rng.gaussian()));
+            let (vals, v) = eigh(&g);
+            // A = V diag(vals) Vᵀ
+            let re = matmul(&matmul(&v, &Mat::diag_from(&vals)), &v.transpose());
+            assert!(re.sub(&g).max_abs() < 1e-8, "n={n}");
+            // VᵀV = I
+            let vtv = matmul(&v.transpose(), &v);
+            assert!(vtv.sub(&Mat::eye(n)).max_abs() < 1e-9);
+            // PSD source → nonnegative eigenvalues (tolerance)
+            assert!(vals.iter().all(|&x| x > -1e-9));
+            // descending
+            for w in vals.windows(2) {
+                assert!(w[0] >= w[1] - 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn trace_and_det_invariants() {
+        let mut rng = Rng::new(22);
+        let n = 12;
+        let mut g = gram(&Mat::from_fn(2 * n, n, |_, _| rng.gaussian()));
+        g.add_diag(0.1);
+        let vals = eigvals(&g);
+        let tr: f64 = vals.iter().sum();
+        assert!((tr - g.trace()).abs() < 1e-8);
+        let logdet: f64 = vals.iter().map(|x| x.ln()).sum();
+        let ld = crate::linalg::chol::spd_logdet(&g).unwrap();
+        assert!((logdet - ld).abs() < 1e-8);
+    }
+}

@@ -1,0 +1,242 @@
+//! Blocked matrix multiplication and friends.  This is an L3 hot path
+//! (covariance accumulation, drift statistics, rescaler objectives), so
+//! the kernel is cache-blocked with an ikj inner order that keeps the
+//! C row hot and lets the compiler autovectorize, and row-parallel
+//! across threads.
+
+use super::Mat;
+use crate::util::threadpool::{default_threads, parallel_ranges};
+
+const BLOCK_K: usize = 64;
+
+/// C = A · B
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows, "gemm shape mismatch");
+    let mut c = Mat::zeros(a.rows, b.cols);
+    matmul_into(a, b, &mut c);
+    c
+}
+
+/// C = A · B (C pre-allocated, overwritten).
+pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols));
+    let n = b.cols;
+    let k = a.cols;
+    let threads = if a.rows * n * k > 1 << 18 {
+        default_threads()
+    } else {
+        1
+    };
+    let cdata = std::sync::atomic::AtomicPtr::new(c.data.as_mut_ptr());
+    parallel_ranges(a.rows, threads, |range| {
+        let cptr = cdata.load(std::sync::atomic::Ordering::Relaxed);
+        for i in range {
+            // SAFETY: disjoint row ranges per thread.
+            let crow = unsafe { std::slice::from_raw_parts_mut(cptr.add(i * n), n) };
+            crow.fill(0.0);
+            let arow = a.row(i);
+            for k0 in (0..k).step_by(BLOCK_K) {
+                let k1 = (k0 + BLOCK_K).min(k);
+                for kk in k0..k1 {
+                    let aik = arow[kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = b.row(kk);
+                    for j in 0..n {
+                        crow[j] += aik * brow[j];
+                    }
+                }
+            }
+        }
+    });
+    c
+        .data
+        .iter()
+        .for_each(|x| debug_assert!(x.is_finite() || x.is_nan()));
+}
+
+/// C = A · Bᵀ without materializing the transpose.
+pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.cols, "gemm_nt shape mismatch");
+    let mut c = Mat::zeros(a.rows, b.rows);
+    let n = b.rows;
+    let threads = if a.rows * n * a.cols > 1 << 18 {
+        default_threads()
+    } else {
+        1
+    };
+    let cdata = std::sync::atomic::AtomicPtr::new(c.data.as_mut_ptr());
+    parallel_ranges(a.rows, threads, |range| {
+        let cptr = cdata.load(std::sync::atomic::Ordering::Relaxed);
+        for i in range {
+            let crow = unsafe { std::slice::from_raw_parts_mut(cptr.add(i * n), n) };
+            let arow = a.row(i);
+            for j in 0..n {
+                crow[j] = super::dot(arow, b.row(j));
+            }
+        }
+    });
+    c
+}
+
+/// C = Aᵀ · A (Gram matrix), exploiting symmetry.  The covariance
+/// accumulator reduces to this on activation panels.
+pub fn gram(a: &Mat) -> Mat {
+    let n = a.cols;
+    let mut c = Mat::zeros(n, n);
+    for r in 0..a.rows {
+        let row = a.row(r);
+        for i in 0..n {
+            let xi = row[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let crow = c.row_mut(i);
+            for j in i..n {
+                crow[j] += xi * row[j];
+            }
+        }
+    }
+    for i in 0..n {
+        for j in 0..i {
+            c[(i, j)] = c[(j, i)];
+        }
+    }
+    c
+}
+
+/// y = M · x
+pub fn matvec(m: &Mat, x: &[f64]) -> Vec<f64> {
+    assert_eq!(m.cols, x.len());
+    (0..m.rows).map(|i| super::dot(m.row(i), x)).collect()
+}
+
+/// y = Mᵀ · x
+pub fn matvec_t(m: &Mat, x: &[f64]) -> Vec<f64> {
+    assert_eq!(m.rows, x.len());
+    let mut y = vec![0.0; m.cols];
+    for i in 0..m.rows {
+        super::axpy(x[i], m.row(i), &mut y);
+    }
+    y
+}
+
+/// diag(A · B) without forming the product — Alg. 4 needs diagonals of
+/// several m×m products where only the diagonal is used.
+pub fn diag_of_product(a: &Mat, b: &Mat) -> Vec<f64> {
+    assert_eq!(a.cols, b.rows);
+    assert_eq!(a.rows, b.cols);
+    (0..a.rows)
+        .map(|i| {
+            let mut s = 0.0;
+            for k in 0..a.cols {
+                s += a[(i, k)] * b[(k, i)];
+            }
+            s
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randm(r: usize, c: usize, rng: &mut Rng) -> Mat {
+        Mat::from_fn(r, c, |_, _| rng.gaussian())
+    }
+
+    fn naive(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0.0;
+                for k in 0..a.cols {
+                    s += a[(i, k)] * b[(k, j)];
+                }
+                c[(i, j)] = s;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(1);
+        for (m, k, n) in [(3, 4, 5), (17, 33, 9), (64, 64, 64), (1, 7, 1)] {
+            let a = randm(m, k, &mut rng);
+            let b = randm(k, n, &mut rng);
+            let c = matmul(&a, &b);
+            let c0 = naive(&a, &b);
+            assert!(c.sub(&c0).max_abs() < 1e-9, "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn matmul_nt_matches() {
+        let mut rng = Rng::new(2);
+        let a = randm(13, 21, &mut rng);
+        let b = randm(8, 21, &mut rng);
+        let c = matmul_nt(&a, &b);
+        let c0 = naive(&a, &b.transpose());
+        assert!(c.sub(&c0).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn gram_is_ata() {
+        let mut rng = Rng::new(3);
+        let a = randm(40, 12, &mut rng);
+        let g = gram(&a);
+        let g0 = naive(&a.transpose(), &a);
+        assert!(g.sub(&g0).max_abs() < 1e-9);
+        // symmetry
+        for i in 0..12 {
+            for j in 0..12 {
+                assert_eq!(g[(i, j)], g[(j, i)]);
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_both_ways() {
+        let mut rng = Rng::new(4);
+        let m = randm(6, 9, &mut rng);
+        let x: Vec<f64> = (0..9).map(|_| rng.gaussian()).collect();
+        let y = matvec(&m, &x);
+        let y0 = naive(&m, &Mat::from_vec(9, 1, x.clone()));
+        for i in 0..6 {
+            assert!((y[i] - y0[(i, 0)]).abs() < 1e-12);
+        }
+        let z: Vec<f64> = (0..6).map(|_| rng.gaussian()).collect();
+        let w = matvec_t(&m, &z);
+        let w0 = naive(&m.transpose(), &Mat::from_vec(6, 1, z));
+        for j in 0..9 {
+            assert!((w[j] - w0[(j, 0)]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn diag_of_product_matches() {
+        let mut rng = Rng::new(5);
+        let a = randm(7, 11, &mut rng);
+        let b = randm(11, 7, &mut rng);
+        let d = diag_of_product(&a, &b);
+        let full = matmul(&a, &b);
+        for i in 0..7 {
+            assert!((d[i] - full[(i, i)]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn parallel_path_consistent() {
+        // big enough to trigger the threaded path
+        let mut rng = Rng::new(6);
+        let a = randm(128, 96, &mut rng);
+        let b = randm(96, 80, &mut rng);
+        let c = matmul(&a, &b);
+        let c0 = naive(&a, &b);
+        assert!(c.sub(&c0).max_abs() < 1e-9);
+    }
+}

@@ -1,0 +1,270 @@
+//! Dense linear-algebra substrate (f64, row-major).  No BLAS/LAPACK is
+//! available offline, so everything the pipeline needs is implemented
+//! here: blocked gemm, Cholesky, triangular solves, a Jacobi symmetric
+//! eigensolver (for the waterfilling bound), and streaming statistics.
+
+pub mod chol;
+pub mod eig;
+pub mod gemm;
+pub mod stats;
+
+use anyhow::{bail, Result};
+
+/// Row-major dense f64 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Mat {
+        assert_eq!(rows * cols, data.len());
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Mat {
+        assert_eq!(rows * cols, data.len());
+        Mat {
+            rows,
+            cols,
+            data: data.iter().map(|&x| x as f64).collect(),
+        }
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    pub fn set_col(&mut self, j: usize, v: &[f64]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            self[(i, j)] = v[i];
+        }
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                t[(j, i)] = self[(i, j)];
+            }
+        }
+        t
+    }
+
+    pub fn diag(&self) -> Vec<f64> {
+        (0..self.rows.min(self.cols)).map(|i| self[(i, i)]).collect()
+    }
+
+    /// Construct a diagonal matrix from a vector.
+    pub fn diag_from(v: &[f64]) -> Mat {
+        let mut m = Mat::zeros(v.len(), v.len());
+        for (i, &x) in v.iter().enumerate() {
+            m[(i, i)] = x;
+        }
+        m
+    }
+
+    pub fn trace(&self) -> f64 {
+        self.diag().iter().sum()
+    }
+
+    pub fn scale(&self, s: f64) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|x| x * s).collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a + b)
+                .collect(),
+        }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a - b)
+                .collect(),
+        }
+    }
+
+    /// Element-wise (Hadamard) product — used by the Γ-step of Alg. 4.
+    pub fn hadamard(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a * b)
+                .collect(),
+        }
+    }
+
+    /// Add `delta` to the diagonal in place (Hessian damping).
+    pub fn add_diag(&mut self, delta: f64) {
+        let n = self.rows.min(self.cols);
+        for i in 0..n {
+            self[(i, i)] += delta;
+        }
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0, |m, x| m.max(x.abs()))
+    }
+
+    /// Extract the sub-matrix with the given rows and cols (dead-feature
+    /// erasure builds the reduced system with this).
+    pub fn submatrix(&self, rows: &[usize], cols: &[usize]) -> Mat {
+        let mut m = Mat::zeros(rows.len(), cols.len());
+        for (ii, &i) in rows.iter().enumerate() {
+            for (jj, &j) in cols.iter().enumerate() {
+                m[(ii, jj)] = self[(i, j)];
+            }
+        }
+        m
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+
+    pub fn assert_square(&self) -> Result<usize> {
+        if self.rows != self.cols {
+            bail!("expected square matrix, got {}x{}", self.rows, self.cols);
+        }
+        Ok(self.rows)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// Dot product.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_and_transpose() {
+        let m = Mat::from_fn(2, 3, |i, j| (i * 3 + j) as f64);
+        assert_eq!(m[(1, 2)], 5.0);
+        let t = m.transpose();
+        assert_eq!(t[(2, 1)], 5.0);
+        assert_eq!(t.rows, 3);
+    }
+
+    #[test]
+    fn submatrix_picks() {
+        let m = Mat::from_fn(4, 4, |i, j| (10 * i + j) as f64);
+        let s = m.submatrix(&[1, 3], &[0, 2]);
+        assert_eq!(s.data, vec![10.0, 12.0, 30.0, 32.0]);
+    }
+
+    #[test]
+    fn hadamard_and_trace() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![2.0, 0.5, 1.0, 2.0]);
+        let h = a.hadamard(&b);
+        assert_eq!(h.data, vec![2.0, 1.0, 3.0, 8.0]);
+        assert_eq!(a.trace(), 5.0);
+    }
+}

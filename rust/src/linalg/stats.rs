@@ -1,0 +1,139 @@
+//! Streaming statistics helpers: means, variances, medians, empirical
+//! CDF distances (for the Fig. 11 Gaussianity study), and histograms.
+
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64
+}
+
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// Mean absolute deviation from the mean (Laplace scale estimator is
+/// b̂ = MAD_mean).
+pub fn mean_abs_dev(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    mean(&xs.iter().map(|x| (x - m).abs()).collect::<Vec<_>>())
+}
+
+/// Standard normal CDF via erf approximation (Abramowitz–Stegun 7.1.26,
+/// |err| < 1.5e-7 — plenty for KS distances reported to 3 decimals).
+pub fn normal_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+pub fn erf(x: f64) -> f64 {
+    let sign = x.signum();
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let poly = t
+        * (0.254829592
+            + t * (-0.284496736
+                + t * (1.421413741 + t * (-1.453152027 + t * 1.061405429))));
+    sign * (1.0 - poly * (-x * x).exp())
+}
+
+/// Laplace(μ=mu, b) CDF.
+pub fn laplace_cdf(x: f64, mu: f64, b: f64) -> f64 {
+    let z = (x - mu) / b;
+    if z < 0.0 {
+        0.5 * z.exp()
+    } else {
+        1.0 - 0.5 * (-z).exp()
+    }
+}
+
+/// Kolmogorov–Smirnov distance between the empirical CDF of `xs` and a
+/// model CDF.
+pub fn ks_distance(xs: &[f64], cdf: impl Fn(f64) -> f64) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len() as f64;
+    let mut d: f64 = 0.0;
+    for (i, &x) in v.iter().enumerate() {
+        let f = cdf(x);
+        let lo = i as f64 / n;
+        let hi = (i + 1) as f64 / n;
+        d = d.max((f - lo).abs()).max((hi - f).abs());
+    }
+    d
+}
+
+/// KS distance to the best-fit (moment-matched) Gaussian.
+pub fn ks_gaussian(xs: &[f64]) -> f64 {
+    let mu = mean(xs);
+    let sd = variance(xs).sqrt().max(1e-300);
+    ks_distance(xs, |x| normal_cdf((x - mu) / sd))
+}
+
+/// KS distance to the best-fit Laplace (median/MAD estimators).
+pub fn ks_laplace(xs: &[f64]) -> f64 {
+    let mu = median(xs);
+    let b = mean(&xs.iter().map(|x| (x - mu).abs()).collect::<Vec<_>>())
+        .max(1e-300);
+    ks_distance(xs, |x| laplace_cdf(x, mu, b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn basic_moments() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert_eq!(median(&xs), 2.5);
+        assert!((variance(&xs) - 1.25).abs() < 1e-12);
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+    }
+
+    #[test]
+    fn erf_known_values() {
+        assert!((erf(0.0)).abs() < 1e-9);
+        assert!((erf(1.0) - 0.8427007929).abs() < 1e-5);
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-9);
+        assert!((normal_cdf(1.96) - 0.975).abs() < 1e-3);
+    }
+
+    #[test]
+    fn ks_discriminates_gaussian_from_laplace() {
+        let mut rng = Rng::new(33);
+        let gauss: Vec<f64> = (0..20_000).map(|_| rng.gaussian()).collect();
+        let lap: Vec<f64> = (0..20_000).map(|_| rng.laplace()).collect();
+        // Gaussian sample: close to Gaussian fit, far from it for Laplace.
+        assert!(ks_gaussian(&gauss) < 0.02, "{}", ks_gaussian(&gauss));
+        assert!(ks_gaussian(&lap) > ks_gaussian(&gauss));
+        assert!(ks_laplace(&lap) < ks_laplace(&gauss));
+    }
+
+    #[test]
+    fn ks_distance_of_exact_cdf_is_small() {
+        // uniform sample vs uniform CDF
+        let mut rng = Rng::new(34);
+        let xs: Vec<f64> = (0..50_000).map(|_| rng.uniform()).collect();
+        let d = ks_distance(&xs, |x| x.clamp(0.0, 1.0));
+        assert!(d < 0.01, "{d}");
+    }
+}

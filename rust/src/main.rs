@@ -1,0 +1,321 @@
+//! `watersic` — CLI entrypoint for the WaterSIC reproduction.
+//!
+//! Subcommands:
+//!   quantize   quantize a picollama model to a .wsic container
+//!   eval       evaluate a container (PPL / BPB / KL / probes)
+//!   repro      regenerate a paper table/figure (see DESIGN.md §4)
+//!   selftest   cross-validate PJRT artifacts against the native oracle
+//!   info       print artifact/model inventory
+
+use anyhow::{bail, Context, Result};
+
+use watersic::coordinator::container::Container;
+use watersic::coordinator::{quantize_model, Algo};
+use watersic::experiments::{self, Ctx};
+use watersic::util::cli::Args;
+
+const USAGE: &str = "\
+watersic — WaterSIC: IT-(near)-optimal linear layer quantization (repro)
+
+USAGE:
+  watersic quantize  [--model picollama_s] [--rate 2.0] [--algo watersic|hgptq|hrtn|rtn|gptq]
+                     [--ft] [--mixing] [--out model.wsic] [--fast] [--no-engine]
+  watersic eval      --container model.wsic [--model picollama_s] [--corpus wiki|web]
+  watersic repro     <id> [--fast] [--no-engine]
+                     ids: theory fig1 table1|fig2 table2|fig3 fig4 fig5 table6
+                          ablate fig11 fig12 mixing table7 table15 tasks all
+  watersic selftest  [--no-engine]
+  watersic info
+";
+
+fn main() {
+    env_logger_lite();
+    let args = Args::from_env();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            eprintln!("{USAGE}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn env_logger_lite() {
+    // minimal logger: honor WATERSIC_LOG for debug prints
+    struct L;
+    impl log::Log for L {
+        fn enabled(&self, _: &log::Metadata) -> bool {
+            true
+        }
+        fn log(&self, record: &log::Record) {
+            eprintln!("[{}] {}", record.level(), record.args());
+        }
+        fn flush(&self) {}
+    }
+    static LOGGER: L = L;
+    let _ = log::set_logger(&LOGGER);
+    log::set_max_level(if std::env::var("WATERSIC_LOG").is_ok() {
+        log::LevelFilter::Debug
+    } else {
+        log::LevelFilter::Warn
+    });
+}
+
+fn parse_algo(s: &str) -> Result<Algo> {
+    Ok(match s {
+        "watersic" => Algo::WaterSic,
+        "hgptq" | "huffman-gptq" => Algo::HuffGptq,
+        "hrtn" | "huffman-rtn" => Algo::HuffRtn,
+        "rtn" => Algo::Rtn { bits: 4 },
+        "gptq" => Algo::Gptq { maxq: 7 },
+        other => bail!("unknown algo {other:?}"),
+    })
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    let cmd = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("help");
+    match cmd {
+        "quantize" => cmd_quantize(args),
+        "eval" => cmd_eval(args),
+        "repro" => {
+            let id = args
+                .positional
+                .get(1)
+                .context("repro needs an experiment id")?;
+            let ctx = Ctx::new(args.bool("fast"), !args.bool("no-engine"))?;
+            experiments::run(id, &ctx)
+        }
+        "selftest" => cmd_selftest(args),
+        "sweep" => cmd_sweep(args),
+        "info" => cmd_info(),
+        "help" | "--help" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}"),
+    }
+}
+
+fn cmd_quantize(args: &Args) -> Result<()> {
+    let ctx = Ctx::new(args.bool("fast"), !args.bool("no-engine"))?;
+    let model = args.str_or("model", "picollama_s");
+    let rate = args.f64_or("rate", 2.0)?;
+    let algo = parse_algo(&args.str_or("algo", "watersic"))?;
+    let out = args.str_or("out", "model.wsic");
+    let (cfg, teacher) = ctx.load_model(&model)?;
+    let corpus = ctx.load_corpus(&args.str_or("calib", "wiki"))?;
+    let mut opts = experiments::llm::pipeline_opts(&ctx, algo, rate, args.bool("ft"));
+    opts.mixing = args.bool("mixing");
+    println!(
+        "quantizing {model} with {} @ {rate} bits (calib: {}, engine: {})…",
+        algo.name(),
+        corpus.name,
+        ctx.engine.is_some()
+    );
+    let qm = quantize_model(&cfg, &teacher, &corpus, &opts, ctx.engine.as_ref())?;
+    println!(
+        "avg rate {:.3} bits/weight  ({} matrices, {:.1}s)",
+        qm.report.avg_rate,
+        qm.report.matrices.len(),
+        qm.report.wall_secs
+    );
+    for m in &qm.report.matrices {
+        println!(
+            "  {:<22} H={:.3} R={:.3} relMSE={:.3e} dead={} {}",
+            m.name,
+            m.entropy_bits,
+            m.rate_bits,
+            m.rel_mse_weights,
+            m.dead_cols,
+            if m.via_artifact { "[pjrt]" } else { "[native]" }
+        );
+    }
+    let container = Container::new(&cfg.name, qm.quants.clone());
+    container.save(std::path::Path::new(&out))?;
+    println!(
+        "wrote {out} ({:.1} KiB measured)",
+        container.size_bytes() as f64 / 1024.0
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let ctx = Ctx::new(args.bool("fast"), !args.bool("no-engine"))?;
+    let path = args
+        .str_opt("container")
+        .context("--container required")?
+        .to_string();
+    let container = Container::load(std::path::Path::new(&path))?;
+    let model = args.str_or("model", &container.model_name);
+    let (cfg, teacher) = ctx.load_model(&model)?;
+    let mut student = teacher.clone();
+    for (name, q) in &container.quants {
+        student.set(name, q.dequant());
+    }
+    let domain = args.str_or("corpus", "wiki");
+    let corpus = ctx.load_corpus(&domain)?;
+    let n_eval = args.usize_or("windows", 48)?;
+    let windows = corpus.eval_windows(n_eval, cfg.ctx, 1234);
+    let ppl = match &ctx.engine {
+        Some(e) => watersic::eval::perplexity_runtime(e, &cfg, &student, &windows, 8)
+            .unwrap_or_else(|_| {
+                watersic::eval::perplexity_native(&cfg, &student, &windows)
+            }),
+        None => watersic::eval::perplexity_native(&cfg, &student, &windows),
+    };
+    let kl = watersic::eval::kl_to_teacher(
+        &cfg,
+        &teacher,
+        &student,
+        &windows[..windows.len().min(12)],
+    );
+    let probes = watersic::eval::probe_suite(&cfg, &student, &windows);
+    println!(
+        "container : {path} ({:.1} KiB)",
+        container.size_bytes() as f64 / 1024.0
+    );
+    println!("model     : {model}  corpus: {domain}  windows: {n_eval}");
+    println!(
+        "PPL       : {ppl:.4}   BPB: {:.4}",
+        watersic::eval::bits_per_byte(ppl)
+    );
+    println!("KL(T‖S)   : {kl:.5} nats/token");
+    println!(
+        "probes    : top1 {:.4}  digits {:.4}  word-start {:.4}  ws {:.4}",
+        probes.top1, probes.digits, probes.word_start, probes.whitespace
+    );
+    Ok(())
+}
+
+/// Component sweep at one rate: which §4 corrections help (debugging /
+/// ablation aid; `repro ablate` is the paper-shaped version).
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let ctx = Ctx::new(true, !args.bool("no-engine"))?;
+    let rate = args.f64_or("rate", 1.5)?;
+    let model = args.str_or("model", "picollama_s");
+    let (cfg, teacher) = ctx.load_model(&model)?;
+    let wiki = ctx.load_corpus("wiki")?;
+    let windows = wiki.eval_windows(24, cfg.ctx, 1234);
+    println!("{:<34} {:>9} {:>10}", "variant", "avg bits", "wiki PPL");
+    let variants: Vec<(&str, Box<dyn Fn(&mut watersic::coordinator::PipelineOpts)>)> = vec![
+        ("plain (no corrections)", Box::new(|o: &mut watersic::coordinator::PipelineOpts| {
+            o.drift = false; o.residual = false; o.attn_weighted = false;
+            o.quant.lmmse = false; o.quant.rescalers = false;
+        })),
+        ("+lmmse", Box::new(|o| { o.drift=false; o.residual=false; o.attn_weighted=false; o.quant.rescalers=false; })),
+        ("+lmmse+rescalers", Box::new(|o| { o.drift=false; o.residual=false; o.attn_weighted=false; })),
+        ("+drift", Box::new(|o| { o.residual=false; o.attn_weighted=false; })),
+        ("+drift+residual", Box::new(|o| { o.attn_weighted=false; })),
+        ("+drift+residual+attn (default)", Box::new(|_| {})),
+        ("default, damping 0.01", Box::new(|o| { o.quant.damping = 0.01; })),
+        ("default, damping 0.03", Box::new(|o| { o.quant.damping = 0.03; })),
+        ("default, damping 0.1", Box::new(|o| { o.quant.damping = 0.1; })),
+        ("damping 0.01, no drift", Box::new(|o| { o.quant.damping = 0.01; o.drift=false; o.residual=false; o.attn_weighted=false; })),
+        ("default+mixing", Box::new(|o| { o.mixing = true; o.mixing_iters = 4; })),
+        ("damping 0.01 + mixing", Box::new(|o| { o.quant.damping = 0.01; o.mixing = true; o.mixing_iters = 4; })),
+    ];
+    for (label, tweak) in variants {
+        let mut o = experiments::llm::pipeline_opts(&ctx, Algo::WaterSic, rate, false);
+        tweak(&mut o);
+        let qm = quantize_model(&cfg, &teacher, &wiki, &o, ctx.engine.as_ref())?;
+        let ppl = watersic::eval::perplexity_native(&cfg, &qm.student, &windows);
+        println!("{:<34} {:>9.3} {:>10.3}", label, qm.report.avg_rate, ppl);
+    }
+    Ok(())
+}
+
+fn cmd_selftest(args: &Args) -> Result<()> {
+    let ctx = Ctx::new(true, !args.bool("no-engine"))?;
+    let Some(engine) = &ctx.engine else {
+        bail!("selftest needs the PJRT engine (artifacts + libxla)");
+    };
+    println!("platform: {}", engine.platform());
+
+    // 1. ZSIC artifact vs native oracle on a real shape
+    let (a, n) = (64, 64);
+    let mut rng = watersic::util::rng::Rng::new(5);
+    let w = watersic::linalg::Mat::from_fn(a, n, |_, _| rng.gaussian());
+    let sigma = watersic::quant::waterfilling::ar1_sigma(n, 0.8);
+    let l = watersic::linalg::chol::cholesky(&sigma)?;
+    let y = watersic::linalg::gemm::matmul(&w, &l);
+    let alphas = watersic::quant::zsic::watersic_alphas(&l, 0.3);
+    for lmmse in [false, true] {
+        let native = watersic::quant::zsic::zsic(&y, &l, &alphas, lmmse, None);
+        let art = engine.run_zsic(
+            watersic::runtime::ZsicArtifact { a, n, lmmse },
+            &y,
+            &l,
+            &alphas,
+        )?;
+        let mismatches = native
+            .z
+            .iter()
+            .zip(&art.z)
+            .filter(|(x, y)| x != y)
+            .count();
+        println!(
+            "zsic {a}x{n} lmmse={lmmse}: {mismatches}/{} code mismatches \
+             (f32 artifact vs f64 native)",
+            a * n
+        );
+        anyhow::ensure!(
+            (mismatches as f64) < 0.005 * (a * n) as f64,
+            "too many mismatches"
+        );
+    }
+
+    // 2. forward artifact vs native forward on the trained model
+    let (cfg, weights) = ctx.load_model("picollama_s")?;
+    let corpus = ctx.load_corpus("wiki")?;
+    let windows = corpus.eval_windows(8, cfg.ctx, 77);
+    let mut toks = Vec::new();
+    for (i, _) in &windows {
+        toks.extend_from_slice(i);
+    }
+    let rt = engine.run_forward(&cfg, &weights, &toks, 8)?;
+    let nat = watersic::model::transformer::forward(
+        &cfg,
+        &weights,
+        &toks,
+        8,
+        cfg.ctx,
+        &watersic::model::transformer::ForwardOpts::default(),
+    )
+    .logits;
+    let mut max_rel = 0.0f64;
+    for i in 0..rt.data.len() {
+        let denom = nat.data[i].abs().max(1.0);
+        max_rel = max_rel.max((rt.data[i] - nat.data[i]).abs() / denom);
+    }
+    println!("forward picollama_s: max rel deviation {max_rel:.3e}");
+    anyhow::ensure!(max_rel < 5e-3, "forward mismatch too large");
+    println!("selftest OK");
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let dir = watersic::artifacts_dir();
+    println!("artifacts dir: {}", dir.display());
+    let manifest = dir.join("manifest.json");
+    if !manifest.exists() {
+        bail!("no manifest — run `make artifacts`");
+    }
+    let j = watersic::util::json::Json::parse(&std::fs::read_to_string(manifest)?)?;
+    for (name, meta) in j.req("models")?.as_obj()? {
+        println!(
+            "model {name}: {} params, BF16 wiki PPL {:.3}, web PPL {:.3}",
+            meta.req("n_params")?.as_usize()?,
+            meta.req("bf16_ppl_wiki")?.as_f64()?,
+            meta.req("bf16_ppl_web")?.as_f64()?
+        );
+    }
+    let shapes = j.req("zsic_shapes")?.as_arr()?;
+    println!("zsic artifact shapes: {}", shapes.len());
+    Ok(())
+}

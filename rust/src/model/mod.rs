@@ -1,0 +1,165 @@
+//! The `picollama` model substrate on the Rust side: configuration
+//! (parsed from the artifact manifest), weight IO (.npy directories),
+//! a native f64 forward pass with calibration capture hooks, and a
+//! reverse-mode pass over the quantizable weights (used by WaterSIC-FT).
+//!
+//! The native forward is the *oracle* twin of the AOT HLO artifact
+//! (`runtime::forward`); both are validated against each other.
+
+pub mod autograd;
+pub mod transformer;
+pub mod weights;
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// Architecture hyper-parameters (mirror of python `ModelConfig`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub ctx: usize,
+    pub norm_eps: f64,
+    pub rope_theta: f64,
+    pub n_params: usize,
+    pub param_order: Vec<String>,
+    pub quantizable: Vec<String>,
+    pub bf16_ppl_wiki: f64,
+    pub bf16_ppl_web: f64,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        self.d_model / self.n_heads
+    }
+
+    /// Load from `artifacts/models/<name>/meta.json`.
+    pub fn load(meta_path: &Path) -> Result<ModelConfig> {
+        let text = std::fs::read_to_string(meta_path)
+            .with_context(|| format!("reading {}", meta_path.display()))?;
+        let j = Json::parse(&text)?;
+        let c = j.req("config")?;
+        Ok(ModelConfig {
+            name: j.req("name")?.as_str()?.to_string(),
+            vocab: c.req("vocab")?.as_usize()?,
+            d_model: c.req("d_model")?.as_usize()?,
+            n_heads: c.req("n_heads")?.as_usize()?,
+            n_layers: c.req("n_layers")?.as_usize()?,
+            d_ff: c.req("d_ff")?.as_usize()?,
+            ctx: c.req("ctx")?.as_usize()?,
+            norm_eps: c.req("norm_eps")?.as_f64()?,
+            rope_theta: c.req("rope_theta")?.as_f64()?,
+            n_params: j.req("n_params")?.as_usize()?,
+            param_order: j
+                .req("param_order")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_str().map(str::to_string))
+                .collect::<Result<_>>()?,
+            quantizable: j
+                .req("quantizable")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_str().map(str::to_string))
+                .collect::<Result<_>>()?,
+            bf16_ppl_wiki: j.req("bf16_ppl_wiki")?.as_f64()?,
+            bf16_ppl_web: j.req("bf16_ppl_web")?.as_f64()?,
+        })
+    }
+
+    /// A tiny config for unit tests (no artifact needed).
+    pub fn tiny_test() -> ModelConfig {
+        let mut quantizable = Vec::new();
+        let p = "layers.0.";
+        for w in ["attn.wq", "attn.wk", "attn.wv", "attn.wo"] {
+            quantizable.push(format!("{p}{w}"));
+        }
+        for w in ["ffn.w1", "ffn.w3", "ffn.w2"] {
+            quantizable.push(format!("{p}{w}"));
+        }
+        ModelConfig {
+            name: "tiny_test".into(),
+            vocab: 128,
+            d_model: 16,
+            n_heads: 2,
+            n_layers: 1,
+            d_ff: 32,
+            ctx: 12,
+            norm_eps: 1e-5,
+            rope_theta: 10000.0,
+            n_params: 0,
+            param_order: vec![],
+            quantizable,
+            bf16_ppl_wiki: 0.0,
+            bf16_ppl_web: 0.0,
+        }
+    }
+
+    /// Number of parameters in the quantizable per-block matrices.
+    pub fn quantizable_params(&self) -> usize {
+        self.n_layers
+            * (4 * self.d_model * self.d_model + 3 * self.d_model * self.d_ff)
+    }
+
+    /// Shape (out=a, in=n) of a 2-D parameter by name.
+    pub fn shape_of(&self, name: &str) -> (usize, usize) {
+        let (d, f, v) = (self.d_model, self.d_ff, self.vocab);
+        if name == "embed" || name == "head" {
+            return (v, d);
+        }
+        if name.ends_with("ffn.w1") || name.ends_with("ffn.w3") {
+            return (f, d);
+        }
+        if name.ends_with("ffn.w2") {
+            return (d, f);
+        }
+        if name.contains("attn.") {
+            return (d, d);
+        }
+        (d, 0) // norms are vectors; caller should special-case
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_config_consistent() {
+        let c = ModelConfig::tiny_test();
+        assert_eq!(c.head_dim(), 8);
+        assert_eq!(c.quantizable.len(), 7 * c.n_layers);
+        assert_eq!(c.shape_of("layers.0.ffn.w1"), (32, 16));
+        assert_eq!(c.shape_of("layers.0.ffn.w2"), (16, 32));
+        assert_eq!(c.shape_of("layers.0.attn.wq"), (16, 16));
+        assert_eq!(c.shape_of("head"), (128, 16));
+    }
+
+    #[test]
+    fn parses_meta_json() {
+        let meta = r#"{
+          "name": "m", "n_params": 100,
+          "config": {"vocab": 256, "d_model": 8, "n_heads": 2,
+                     "n_layers": 1, "d_ff": 16, "ctx": 32,
+                     "norm_eps": 1e-5, "rope_theta": 10000.0},
+          "param_order": ["embed", "head"],
+          "param_shapes": {},
+          "quantizable": ["layers.0.attn.wq"],
+          "bf16_ppl_wiki": 1.5, "bf16_ppl_web": 100.0
+        }"#;
+        let dir = std::env::temp_dir().join("wsic_meta_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("meta.json");
+        std::fs::write(&p, meta).unwrap();
+        let c = ModelConfig::load(&p).unwrap();
+        assert_eq!(c.d_model, 8);
+        assert_eq!(c.param_order.len(), 2);
+        assert_eq!(c.bf16_ppl_wiki, 1.5);
+    }
+}

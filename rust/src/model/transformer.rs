@@ -1,0 +1,629 @@
+//! Native forward pass of `picollama` (f64) with calibration capture —
+//! the oracle twin of the AOT HLO artifact and the data source for the
+//! drift / residual / attention-weighted statistics of §4.
+
+use std::collections::BTreeMap;
+
+use crate::linalg::gemm::matmul_nt;
+use crate::linalg::Mat;
+
+use super::weights::Weights;
+use super::ModelConfig;
+
+/// Calibration capture produced by `forward`.
+#[derive(Default, Debug)]
+pub struct Capture {
+    /// activation panels (tokens × n) keyed by *input group*; see
+    /// [`input_group`] for the matrix-name → group mapping.
+    pub inputs: BTreeMap<String, Mat>,
+    /// residual-stream state (tokens × D) at the point where the named
+    /// down-projection (attn.wo / ffn.w2) adds its contribution.
+    pub residuals: BTreeMap<String, Mat>,
+    /// per-layer attention probabilities, flattened (B, H, T, T).
+    pub attn_probs: Vec<Vec<f64>>,
+    pub b: usize,
+    pub t: usize,
+}
+
+/// Which activation panel feeds a given quantizable matrix.
+pub fn input_group(matrix: &str) -> String {
+    if let Some(pos) = matrix.find("attn.w") {
+        let prefix = &matrix[..pos];
+        return match &matrix[pos + 6..pos + 7] {
+            "o" => format!("{prefix}attn.wo"),
+            _ => format!("{prefix}attn.qkv"),
+        };
+    }
+    if let Some(pos) = matrix.find("ffn.w") {
+        let prefix = &matrix[..pos];
+        return match &matrix[pos + 5..pos + 6] {
+            "2" => format!("{prefix}ffn.w2"),
+            _ => format!("{prefix}ffn.in"),
+        };
+    }
+    matrix.to_string()
+}
+
+/// Intermediates stashed for the reverse pass (WaterSIC-FT).
+pub struct Tape {
+    pub tokens: Vec<i32>,
+    pub x_embed: Mat,
+    pub layers: Vec<LayerTape>,
+    pub x_final_in: Mat,
+    pub x_final: Mat,
+    pub logits: Mat,
+}
+
+pub struct LayerTape {
+    pub x_in: Mat,     // residual entering the block
+    pub h1: Mat,       // norm1 output (QKV input)
+    pub q: Vec<Mat>,   // per head, post-RoPE (T_total × hd) rows by token
+    pub k: Vec<Mat>,
+    pub v: Vec<Mat>,
+    pub probs: Vec<Mat>, // per (batch, head): T×T — index b*H+h
+    pub ctxcat: Mat,   // wo input
+    pub x_mid: Mat,    // residual after attention
+    pub h2: Mat,       // norm2 output (FFN input)
+    pub pre1: Mat,     // h2·W1ᵀ (pre-SiLU)
+    pub gate: Mat,
+    pub up: Mat,
+    pub m: Mat,        // gate ⊙ up (w2 input)
+}
+
+fn rms_norm(x: &Mat, gain: &[f64], eps: f64) -> Mat {
+    let mut out = Mat::zeros(x.rows, x.cols);
+    for i in 0..x.rows {
+        let row = x.row(i);
+        let ms = row.iter().map(|v| v * v).sum::<f64>() / x.cols as f64;
+        let r = 1.0 / (ms + eps).sqrt();
+        let orow = out.row_mut(i);
+        for j in 0..x.cols {
+            orow[j] = row[j] * r * gain[j];
+        }
+    }
+    out
+}
+
+fn silu(x: f64) -> f64 {
+    x / (1.0 + (-x).exp())
+}
+
+pub fn silu_prime(x: f64) -> f64 {
+    let s = 1.0 / (1.0 + (-x).exp());
+    s * (1.0 + x * (1.0 - s))
+}
+
+/// RoPE tables (cos, sin): (T × hd/2), matching the jax implementation.
+fn rope_tables(t: usize, hd: usize, theta: f64) -> (Mat, Mat) {
+    let half = hd / 2;
+    let mut cos = Mat::zeros(t, half);
+    let mut sin = Mat::zeros(t, half);
+    for p in 0..t {
+        for i in 0..half {
+            let freq = p as f64 / theta.powf(2.0 * i as f64 / hd as f64);
+            cos[(p, i)] = freq.cos();
+            sin[(p, i)] = freq.sin();
+        }
+    }
+    (cos, sin)
+}
+
+/// Apply RoPE in place to a (tokens × hd) head panel; `pos_of(row)` gives
+/// the position of each row within its sequence.
+fn apply_rope(x: &mut Mat, cos: &Mat, sin: &Mat, t: usize) {
+    let half = x.cols / 2;
+    for r in 0..x.rows {
+        let p = r % t;
+        let row = x.row_mut(r);
+        for i in 0..half {
+            let (c, s) = (cos[(p, i)], sin[(p, i)]);
+            let x1 = row[i];
+            let x2 = row[half + i];
+            row[i] = x1 * c - x2 * s;
+            row[half + i] = x1 * s + x2 * c;
+        }
+    }
+}
+
+/// Reverse of `apply_rope` (rotation transpose) — used by the backward
+/// pass.
+pub fn apply_rope_backward(g: &mut Mat, cos: &Mat, sin: &Mat, t: usize) {
+    let half = g.cols / 2;
+    for r in 0..g.rows {
+        let p = r % t;
+        let row = g.row_mut(r);
+        for i in 0..half {
+            let (c, s) = (cos[(p, i)], sin[(p, i)]);
+            let g1 = row[i];
+            let g2 = row[half + i];
+            row[i] = g1 * c + g2 * s;
+            row[half + i] = -g1 * s + g2 * c;
+        }
+    }
+}
+
+pub struct ForwardOpts {
+    pub capture: bool,
+    pub tape: bool,
+}
+
+impl Default for ForwardOpts {
+    fn default() -> Self {
+        ForwardOpts {
+            capture: false,
+            tape: false,
+        }
+    }
+}
+
+pub struct ForwardOut {
+    /// (B·T × V) logits
+    pub logits: Mat,
+    pub capture: Option<Capture>,
+    pub tape: Option<Tape>,
+}
+
+/// Run the model on `tokens` = B windows of length T (flattened row-major).
+pub fn forward(
+    cfg: &ModelConfig,
+    w: &Weights,
+    tokens: &[i32],
+    b: usize,
+    t: usize,
+    opts: &ForwardOpts,
+) -> ForwardOut {
+    assert_eq!(tokens.len(), b * t);
+    let (d, nh) = (cfg.d_model, cfg.n_heads);
+    let hd = cfg.head_dim();
+    let scale = 1.0 / (hd as f64).sqrt();
+    let rows = b * t;
+
+    let embed = w.get("embed");
+    let mut x = Mat::zeros(rows, d);
+    for r in 0..rows {
+        let tok = tokens[r] as usize;
+        x.row_mut(r).copy_from_slice(embed.row(tok));
+    }
+    let (cos, sin) = rope_tables(t, hd, cfg.rope_theta);
+
+    let mut cap = Capture {
+        b,
+        t,
+        ..Capture::default()
+    };
+    let mut tapes: Vec<LayerTape> = Vec::new();
+    let x_embed = if opts.tape { x.clone() } else { Mat::zeros(0, 0) };
+
+    for li in 0..cfg.n_layers {
+        let p = format!("layers.{li}.");
+        let x_in = if opts.tape { x.clone() } else { Mat::zeros(0, 0) };
+
+        // ---- attention
+        let h1 = rms_norm(&x, w.get_vec(&format!("{p}norm1")), cfg.norm_eps);
+        if opts.capture {
+            cap.inputs.insert(format!("{p}attn.qkv"), h1.clone());
+        }
+        let qf = matmul_nt(&h1, w.get(&format!("{p}attn.wq")));
+        let kf = matmul_nt(&h1, w.get(&format!("{p}attn.wk")));
+        let vf = matmul_nt(&h1, w.get(&format!("{p}attn.wv")));
+
+        // split heads: per head (rows × hd)
+        let split = |m: &Mat, h: usize| -> Mat {
+            let mut out = Mat::zeros(rows, hd);
+            for r in 0..rows {
+                out.row_mut(r)
+                    .copy_from_slice(&m.row(r)[h * hd..(h + 1) * hd]);
+            }
+            out
+        };
+        let mut qs = Vec::with_capacity(nh);
+        let mut ks = Vec::with_capacity(nh);
+        let mut vs = Vec::with_capacity(nh);
+        for h in 0..nh {
+            let mut q = split(&qf, h);
+            let mut k = split(&kf, h);
+            apply_rope(&mut q, &cos, &sin, t);
+            apply_rope(&mut k, &cos, &sin, t);
+            qs.push(q);
+            ks.push(k);
+            vs.push(split(&vf, h));
+        }
+
+        // attention per (batch, head)
+        let mut ctxcat = Mat::zeros(rows, d);
+        let mut probs_store: Vec<Mat> = Vec::new();
+        let mut probs_flat: Vec<f64> = if opts.capture {
+            Vec::with_capacity(b * nh * t * t)
+        } else {
+            Vec::new()
+        };
+        for bi in 0..b {
+            let base = bi * t;
+            for h in 0..nh {
+                let q = &qs[h];
+                let k = &ks[h];
+                let v = &vs[h];
+                let mut probs = Mat::zeros(t, t);
+                for i in 0..t {
+                    let qi = q.row(base + i);
+                    // causal scores + online softmax
+                    let mut maxs = f64::NEG_INFINITY;
+                    let mut srow = vec![0.0; i + 1];
+                    for j in 0..=i {
+                        let s = crate::linalg::dot(qi, k.row(base + j)) * scale;
+                        srow[j] = s;
+                        maxs = maxs.max(s);
+                    }
+                    let mut denom = 0.0;
+                    for j in 0..=i {
+                        srow[j] = (srow[j] - maxs).exp();
+                        denom += srow[j];
+                    }
+                    for j in 0..=i {
+                        probs[(i, j)] = srow[j] / denom;
+                    }
+                    // context vector
+                    let crow = ctxcat.row_mut(base + i);
+                    for j in 0..=i {
+                        let pj = probs[(i, j)];
+                        let vrow = v.row(base + j);
+                        for e in 0..hd {
+                            crow[h * hd + e] += pj * vrow[e];
+                        }
+                    }
+                }
+                if opts.capture {
+                    probs_flat.extend_from_slice(&probs.data);
+                }
+                if opts.tape {
+                    probs_store.push(probs);
+                }
+            }
+        }
+        if opts.capture {
+            cap.attn_probs.push(probs_flat);
+            cap.inputs.insert(format!("{p}attn.wo"), ctxcat.clone());
+            cap.residuals.insert(format!("{p}attn.wo"), x.clone());
+        }
+        let attn_out = matmul_nt(&ctxcat, w.get(&format!("{p}attn.wo")));
+        let mut x_mid = x.clone();
+        for i in 0..rows * d {
+            x_mid.data[i] += attn_out.data[i];
+        }
+
+        // ---- FFN
+        let h2 = rms_norm(&x_mid, w.get_vec(&format!("{p}norm2")), cfg.norm_eps);
+        if opts.capture {
+            cap.inputs.insert(format!("{p}ffn.in"), h2.clone());
+        }
+        let pre1 = matmul_nt(&h2, w.get(&format!("{p}ffn.w1")));
+        let up = matmul_nt(&h2, w.get(&format!("{p}ffn.w3")));
+        let mut gate = pre1.clone();
+        gate.data.iter_mut().for_each(|v| *v = silu(*v));
+        let m = gate.hadamard(&up);
+        if opts.capture {
+            cap.inputs.insert(format!("{p}ffn.w2"), m.clone());
+            cap.residuals.insert(format!("{p}ffn.w2"), x_mid.clone());
+        }
+        let ffn_out = matmul_nt(&m, w.get(&format!("{p}ffn.w2")));
+        let mut x_out = x_mid.clone();
+        for i in 0..rows * d {
+            x_out.data[i] += ffn_out.data[i];
+        }
+
+        if opts.tape {
+            tapes.push(LayerTape {
+                x_in,
+                h1,
+                q: qs,
+                k: ks,
+                v: vs,
+                probs: probs_store,
+                ctxcat,
+                x_mid,
+                h2,
+                pre1,
+                gate,
+                up,
+                m,
+            });
+        }
+        x = x_out;
+    }
+
+    let x_final_in = if opts.tape { x.clone() } else { Mat::zeros(0, 0) };
+    let xf = rms_norm(&x, w.get_vec("final_norm"), cfg.norm_eps);
+    let logits = matmul_nt(&xf, w.get("head"));
+
+    ForwardOut {
+        capture: if opts.capture { Some(cap) } else { None },
+        tape: if opts.tape {
+            Some(Tape {
+                tokens: tokens.to_vec(),
+                x_embed,
+                layers: tapes,
+                x_final_in,
+                x_final: xf,
+                logits: logits.clone(),
+            })
+        } else {
+            None
+        },
+        logits,
+    }
+}
+
+/// Row-wise softmax.
+pub fn softmax(logits: &Mat) -> Mat {
+    let mut out = logits.clone();
+    for i in 0..out.rows {
+        let row = out.row_mut(i);
+        let mx = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut s = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            s += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= s;
+        }
+    }
+    out
+}
+
+/// Mean next-token cross-entropy (nats).  `targets[r]` is the target of
+/// logits row r.
+pub fn cross_entropy(logits: &Mat, targets: &[i32]) -> f64 {
+    assert_eq!(logits.rows, targets.len());
+    let mut total = 0.0;
+    for i in 0..logits.rows {
+        let row = logits.row(i);
+        let mx = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let lse = mx + row.iter().map(|v| (v - mx).exp()).sum::<f64>().ln();
+        total += lse - row[targets[i] as usize];
+    }
+    total / logits.rows as f64
+}
+
+/// KL(P‖Q) per token between two logit matrices (nats).
+pub fn kl_divergence(p_logits: &Mat, q_logits: &Mat) -> f64 {
+    assert_eq!(p_logits.rows, q_logits.rows);
+    let p = softmax(p_logits);
+    let mut total = 0.0;
+    for i in 0..p.rows {
+        let prow = p.row(i);
+        let ql = q_logits.row(i);
+        let mx = ql.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let lse = mx + ql.iter().map(|v| (v - mx).exp()).sum::<f64>().ln();
+        let pl = p_logits.row(i);
+        let mxp = pl.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let lsep = mxp + pl.iter().map(|v| (v - mxp).exp()).sum::<f64>().ln();
+        for j in 0..p.cols {
+            if prow[j] > 0.0 {
+                total += prow[j] * ((pl[j] - lsep) - (ql[j] - lse));
+            }
+        }
+    }
+    total / p.rows as f64
+}
+
+/// Attention output given candidate QKV weights on a given input panel —
+/// the objective evaluator of eq. (60).  `h1` is the (tokens × D) QKV
+/// input panel, laid out as b windows of t tokens.
+pub fn attention_block_output(
+    cfg: &ModelConfig,
+    wq: &Mat,
+    wk: &Mat,
+    wv: &Mat,
+    h1: &Mat,
+    b: usize,
+    t: usize,
+) -> Mat {
+    let (d, nh) = (cfg.d_model, cfg.n_heads);
+    let hd = cfg.head_dim();
+    let scale = 1.0 / (hd as f64).sqrt();
+    let rows = b * t;
+    assert_eq!(h1.rows, rows);
+    let (cos, sin) = rope_tables(t, hd, cfg.rope_theta);
+    let qf = matmul_nt(h1, wq);
+    let kf = matmul_nt(h1, wk);
+    let vf = matmul_nt(h1, wv);
+    let mut out = Mat::zeros(rows, d);
+    for h in 0..nh {
+        let mut q = Mat::zeros(rows, hd);
+        let mut k = Mat::zeros(rows, hd);
+        let mut v = Mat::zeros(rows, hd);
+        for r in 0..rows {
+            q.row_mut(r).copy_from_slice(&qf.row(r)[h * hd..(h + 1) * hd]);
+            k.row_mut(r).copy_from_slice(&kf.row(r)[h * hd..(h + 1) * hd]);
+            v.row_mut(r).copy_from_slice(&vf.row(r)[h * hd..(h + 1) * hd]);
+        }
+        apply_rope(&mut q, &cos, &sin, t);
+        apply_rope(&mut k, &cos, &sin, t);
+        for bi in 0..b {
+            let base = bi * t;
+            for i in 0..t {
+                let qi = q.row(base + i);
+                let mut maxs = f64::NEG_INFINITY;
+                let mut srow = vec![0.0; i + 1];
+                for j in 0..=i {
+                    let s = crate::linalg::dot(qi, k.row(base + j)) * scale;
+                    srow[j] = s;
+                    maxs = maxs.max(s);
+                }
+                let mut denom = 0.0;
+                for j in 0..=i {
+                    srow[j] = (srow[j] - maxs).exp();
+                    denom += srow[j];
+                }
+                let orow = out.row_mut(base + i);
+                for j in 0..=i {
+                    let pj = srow[j] / denom;
+                    let vrow = v.row(base + j);
+                    for e in 0..hd {
+                        orow[h * hd + e] += pj * vrow[e];
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Greedy sample continuation (used by the quickstart example).
+pub fn greedy_continuation(
+    cfg: &ModelConfig,
+    w: &Weights,
+    prompt: &[i32],
+    steps: usize,
+) -> Vec<i32> {
+    let mut toks = prompt.to_vec();
+    for _ in 0..steps {
+        let t = toks.len().min(cfg.ctx);
+        let window = &toks[toks.len() - t..];
+        let out = forward(cfg, w, window, 1, t, &ForwardOpts::default());
+        let last = out.logits.row(t - 1);
+        let arg = (0..cfg.vocab)
+            .max_by(|&a, &b| last[a].partial_cmp(&last[b]).unwrap())
+            .unwrap();
+        toks.push(arg as i32);
+    }
+    toks
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn setup() -> (ModelConfig, Weights, Vec<i32>) {
+        let cfg = ModelConfig::tiny_test();
+        let w = Weights::random(&cfg, 5);
+        let mut rng = Rng::new(9);
+        let tokens: Vec<i32> = (0..2 * cfg.ctx)
+            .map(|_| rng.below(cfg.vocab) as i32)
+            .collect();
+        (cfg, w, tokens)
+    }
+
+    #[test]
+    fn forward_shapes_and_finiteness() {
+        let (cfg, w, tokens) = setup();
+        let out = forward(&cfg, &w, &tokens, 2, cfg.ctx, &ForwardOpts::default());
+        assert_eq!(out.logits.rows, 2 * cfg.ctx);
+        assert_eq!(out.logits.cols, cfg.vocab);
+        assert!(out.logits.is_finite());
+    }
+
+    #[test]
+    fn capture_panels_have_expected_shapes() {
+        let (cfg, w, tokens) = setup();
+        let out = forward(
+            &cfg,
+            &w,
+            &tokens,
+            2,
+            cfg.ctx,
+            &ForwardOpts {
+                capture: true,
+                tape: false,
+            },
+        );
+        let cap = out.capture.unwrap();
+        let rows = 2 * cfg.ctx;
+        assert_eq!(cap.inputs["layers.0.attn.qkv"].rows, rows);
+        assert_eq!(cap.inputs["layers.0.attn.wo"].cols, cfg.d_model);
+        assert_eq!(cap.inputs["layers.0.ffn.in"].cols, cfg.d_model);
+        assert_eq!(cap.inputs["layers.0.ffn.w2"].cols, cfg.d_ff);
+        assert_eq!(cap.residuals["layers.0.ffn.w2"].rows, rows);
+        assert_eq!(
+            cap.attn_probs[0].len(),
+            2 * cfg.n_heads * cfg.ctx * cfg.ctx
+        );
+        // attention rows sum to 1 (causal softmax)
+        let t = cfg.ctx;
+        let probs = &cap.attn_probs[0];
+        for i in 0..t {
+            let row_sum: f64 = (0..t).map(|j| probs[i * t + j]).sum();
+            assert!((row_sum - 1.0).abs() < 1e-9, "row {i}: {row_sum}");
+        }
+    }
+
+    #[test]
+    fn input_group_mapping() {
+        assert_eq!(input_group("layers.3.attn.wq"), "layers.3.attn.qkv");
+        assert_eq!(input_group("layers.3.attn.wv"), "layers.3.attn.qkv");
+        assert_eq!(input_group("layers.3.attn.wo"), "layers.3.attn.wo");
+        assert_eq!(input_group("layers.0.ffn.w1"), "layers.0.ffn.in");
+        assert_eq!(input_group("layers.0.ffn.w2"), "layers.0.ffn.w2");
+    }
+
+    #[test]
+    fn cross_entropy_uniform_logits() {
+        let logits = Mat::zeros(5, 64);
+        let ce = cross_entropy(&logits, &[0, 1, 2, 3, 4]);
+        assert!((ce - (64f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn kl_zero_for_identical() {
+        let (cfg, w, tokens) = setup();
+        let out = forward(&cfg, &w, &tokens, 2, cfg.ctx, &ForwardOpts::default());
+        assert!(kl_divergence(&out.logits, &out.logits).abs() < 1e-12);
+        // and positive for different models
+        let w2 = Weights::random(&cfg, 17);
+        let out2 = forward(&cfg, &w2, &tokens, 2, cfg.ctx, &ForwardOpts::default());
+        assert!(kl_divergence(&out.logits, &out2.logits) > 0.0);
+    }
+
+    #[test]
+    fn attention_block_output_matches_forward_capture() {
+        let (cfg, w, tokens) = setup();
+        let out = forward(
+            &cfg,
+            &w,
+            &tokens,
+            2,
+            cfg.ctx,
+            &ForwardOpts {
+                capture: true,
+                tape: false,
+            },
+        );
+        let cap = out.capture.unwrap();
+        let h1 = &cap.inputs["layers.0.attn.qkv"];
+        let ctx = attention_block_output(
+            &cfg,
+            w.get("layers.0.attn.wq"),
+            w.get("layers.0.attn.wk"),
+            w.get("layers.0.attn.wv"),
+            h1,
+            2,
+            cfg.ctx,
+        );
+        let expect = &cap.inputs["layers.0.attn.wo"];
+        assert!(ctx.sub(expect).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn rope_backward_is_inverse_rotation() {
+        let cfg = ModelConfig::tiny_test();
+        let hd = cfg.head_dim();
+        let (cos, sin) = rope_tables(6, hd, cfg.rope_theta);
+        let mut rng = Rng::new(2);
+        let orig = Mat::from_fn(6, hd, |_, _| rng.gaussian());
+        let mut x = orig.clone();
+        apply_rope(&mut x, &cos, &sin, 6);
+        apply_rope_backward(&mut x, &cos, &sin, 6);
+        assert!(x.sub(&orig).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn greedy_continuation_extends() {
+        let (cfg, w, tokens) = setup();
+        let out = greedy_continuation(&cfg, &w, &tokens[..4], 3);
+        assert_eq!(out.len(), 7);
+        assert!(out.iter().all(|&t| (t as usize) < cfg.vocab));
+    }
+}

@@ -1,0 +1,188 @@
+//! Weight storage: named f64 matrices/vectors, loaded from the
+//! `artifacts/models/<name>/*.npy` directory written by the build-time
+//! trainer, mutated in place by the quantization pipeline.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::linalg::Mat;
+use crate::util::npy::{Npy, NpyData};
+
+use super::ModelConfig;
+
+/// Named parameters; 2-D ones as `Mat`, 1-D gains as vectors.
+#[derive(Clone, Debug, Default)]
+pub struct Weights {
+    pub mats: BTreeMap<String, Mat>,
+    pub vecs: BTreeMap<String, Vec<f64>>,
+}
+
+impl Weights {
+    /// Load all `.npy` files of a model directory.
+    pub fn load(dir: &Path, cfg: &ModelConfig) -> Result<Weights> {
+        let mut w = Weights::default();
+        for entry in std::fs::read_dir(dir)
+            .with_context(|| format!("reading {}", dir.display()))?
+        {
+            let path = entry?.path();
+            let fname = path
+                .file_name()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_default();
+            let Some(name) = fname.strip_suffix(".npy") else {
+                continue;
+            };
+            let npy = Npy::read(&path)?;
+            let data = match &npy.data {
+                NpyData::F32(v) => v.iter().map(|&x| x as f64).collect::<Vec<f64>>(),
+                NpyData::I32(_) => bail!("unexpected int weights in {fname}"),
+            };
+            match npy.shape.len() {
+                1 => {
+                    w.vecs.insert(name.to_string(), data);
+                }
+                2 => {
+                    w.mats.insert(
+                        name.to_string(),
+                        Mat::from_vec(npy.shape[0], npy.shape[1], data),
+                    );
+                }
+                d => bail!("{fname}: unsupported rank {d}"),
+            }
+        }
+        w.validate(cfg)?;
+        Ok(w)
+    }
+
+    /// Structural validation against the config.
+    pub fn validate(&self, cfg: &ModelConfig) -> Result<()> {
+        for name in &cfg.quantizable {
+            let m = self
+                .mats
+                .get(name)
+                .with_context(|| format!("missing weight {name}"))?;
+            let (a, n) = cfg.shape_of(name);
+            if (m.rows, m.cols) != (a, n) {
+                bail!(
+                    "{name}: shape {}x{} != expected {a}x{n}",
+                    m.rows,
+                    m.cols
+                );
+            }
+        }
+        for req in ["embed", "head"] {
+            if !self.mats.contains_key(req) {
+                bail!("missing weight {req}");
+            }
+        }
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> &Mat {
+        &self.mats[name]
+    }
+
+    pub fn get_vec(&self, name: &str) -> &[f64] {
+        &self.vecs[name]
+    }
+
+    pub fn set(&mut self, name: &str, m: Mat) {
+        self.mats.insert(name.to_string(), m);
+    }
+
+    /// Random-initialized weights for tests (matches python init scheme).
+    pub fn random(cfg: &ModelConfig, seed: u64) -> Weights {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        let mut w = Weights::default();
+        let d = cfg.d_model;
+        let names: Vec<String> = {
+            let mut v = vec!["embed".to_string(), "head".to_string()];
+            for i in 0..cfg.n_layers {
+                let p = format!("layers.{i}.");
+                for s in ["attn.wq", "attn.wk", "attn.wv", "attn.wo",
+                          "ffn.w1", "ffn.w3", "ffn.w2"] {
+                    v.push(format!("{p}{s}"));
+                }
+                w.vecs.insert(format!("{p}norm1"), vec![1.0; d]);
+                w.vecs.insert(format!("{p}norm2"), vec![1.0; d]);
+            }
+            w.vecs.insert("final_norm".to_string(), vec![1.0; d]);
+            v
+        };
+        for name in names {
+            let (a, n) = cfg.shape_of(&name);
+            let scale = 1.0 / (n.max(1) as f64).sqrt();
+            w.mats.insert(
+                name,
+                Mat::from_fn(a, n, |_, _| scale * rng.gaussian()),
+            );
+        }
+        w
+    }
+
+    /// Flattened f32 buffers in `param_order` — the exact argument list
+    /// of the AOT forward artifact.
+    pub fn flatten_f32(&self, order: &[String]) -> Vec<Vec<f32>> {
+        order
+            .iter()
+            .map(|name| {
+                if let Some(m) = self.mats.get(name) {
+                    m.to_f32()
+                } else {
+                    self.vecs[name].iter().map(|&x| x as f32).collect()
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_weights_validate() {
+        let cfg = ModelConfig::tiny_test();
+        let w = Weights::random(&cfg, 1);
+        w.validate(&cfg).unwrap();
+        assert_eq!(w.get("layers.0.ffn.w1").rows, 32);
+        assert_eq!(w.get_vec("layers.0.norm1").len(), 16);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let cfg = ModelConfig::tiny_test();
+        let w = Weights::random(&cfg, 2);
+        let dir = std::env::temp_dir().join("wsic_weights_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        for (name, m) in &w.mats {
+            Npy::f32(vec![m.rows, m.cols], m.to_f32())
+                .write(&dir.join(format!("{name}.npy")))
+                .unwrap();
+        }
+        for (name, v) in &w.vecs {
+            Npy::f32(vec![v.len()], v.iter().map(|&x| x as f32).collect())
+                .write(&dir.join(format!("{name}.npy")))
+                .unwrap();
+        }
+        let w2 = Weights::load(&dir, &cfg).unwrap();
+        assert_eq!(w.mats.len(), w2.mats.len());
+        let a = w.get("layers.0.attn.wq");
+        let b = w2.get("layers.0.attn.wq");
+        assert!(a.sub(b).max_abs() < 1e-6); // f32 roundtrip tolerance
+    }
+
+    #[test]
+    fn flatten_follows_order() {
+        let cfg = ModelConfig::tiny_test();
+        let w = Weights::random(&cfg, 3);
+        let order = vec!["embed".to_string(), "final_norm".to_string()];
+        let flat = w.flatten_f32(&order);
+        assert_eq!(flat.len(), 2);
+        assert_eq!(flat[0].len(), 128 * 16);
+        assert_eq!(flat[1].len(), 16);
+    }
+}

@@ -1,0 +1,153 @@
+//! GPTQ and Huffman-GPTQ baselines.  The canonical GPTQ algorithm is
+//! exactly ZSIC with the uniform spacing A = αI (Chen et al. 2026;
+//! Birnick 2026), so it shares the ZSIC core; the `maxq` variant clamps
+//! codes to a finite alphabet and reports log-cardinality rates, the
+//! Huffman variant entropy-codes the unbounded codes (HPTQ).
+
+use anyhow::{Context, Result};
+
+use crate::linalg::chol::{cholesky, solve_xlt_eq_b};
+use crate::linalg::Mat;
+
+use super::rescalers::effective_target;
+use super::zsic::{gptq_alphas, zsic};
+use super::{LayerQuant, LayerStats};
+
+/// GPTQ at uniform spacing `alpha`; `clamp` = Some(maxq/2) reproduces
+/// the finite-alphabet variant.
+pub fn gptq_layer(
+    w: &Mat,
+    sigma: &Mat,
+    alpha: f64,
+    lmmse: bool,
+    clamp: Option<i32>,
+) -> Result<LayerQuant> {
+    gptq_layer_stats(
+        w,
+        &LayerStats::from_sigma(sigma.clone()),
+        alpha,
+        lmmse,
+        clamp,
+        0.1,
+    )
+}
+
+/// GPTQ with drift-aware statistics (the "quantized activation
+/// statistics X̂" variant labeled Huffman-GPTQ in Appendix D) and
+/// explicit damping δ (relative).
+pub fn gptq_layer_stats(
+    w: &Mat,
+    stats: &LayerStats,
+    alpha: f64,
+    lmmse: bool,
+    clamp: Option<i32>,
+    damping: f64,
+) -> Result<LayerQuant> {
+    let (a, n) = (w.rows, w.cols);
+    let mut h = stats.sigma_xhat.clone();
+    let mean_diag = h.trace() / n as f64;
+    h.add_diag(damping * mean_diag.max(1e-300));
+    let l = cholesky(&h).context("cholesky of damped Σ (GPTQ)")?;
+    let target = effective_target(w, stats);
+    let y = solve_xlt_eq_b(&l, &target);
+    let alphas = gptq_alphas(n, alpha);
+    let out = zsic(&y, &l, &alphas, lmmse, clamp);
+    let entropy = crate::entropy::column_coded_rate(&out.z, a, n);
+    let rate = match clamp {
+        Some(c) => ((2 * c + 1) as f64).log2() + 16.0 / n as f64,
+        None => entropy + 16.0 / a as f64 + 16.0 / n as f64,
+    };
+    Ok(LayerQuant {
+        a,
+        n,
+        z: out.z,
+        alphas,
+        gammas: out.gammas,
+        t: vec![1.0; a],
+        entropy_bits: entropy,
+        rate_bits: rate,
+        dead_cols: vec![],
+    })
+}
+
+/// Huffman-GPTQ at a target entropy rate: secant on α.
+pub fn gptq_at_rate(
+    w: &Mat,
+    stats: &LayerStats,
+    target_bits: f64,
+    lmmse: bool,
+    damping: f64,
+) -> Result<LayerQuant> {
+    let sigma_w = {
+        let m = w.data.iter().sum::<f64>() / w.data.len() as f64;
+        (w.data
+            .iter()
+            .map(|x| (x - m) * (x - m))
+            .sum::<f64>()
+            / w.data.len() as f64)
+            .sqrt()
+    };
+    let rate_of = |alpha: f64| -> f64 {
+        gptq_layer_stats(w, stats, alpha, lmmse, None, damping)
+            .map(|q| q.entropy_bits)
+            .unwrap_or(f64::NAN)
+    };
+    let target_entropy = target_bits.max(0.05); // entropy-reported rates
+    let a0 = (sigma_w * (2.0 * std::f64::consts::PI * std::f64::consts::E).sqrt()
+        / 2f64.powf(target_entropy))
+    .max(1e-9);
+    let alpha = super::rate_control::secant_scale(rate_of, a0, target_entropy, 0.005, 10);
+    gptq_layer_stats(w, stats, alpha, lmmse, None, damping)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::gemm::gram;
+    use crate::quant::distortion;
+    use crate::util::rng::Rng;
+
+    fn problem(a: usize, n: usize, seed: u64) -> (Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        let w = Mat::from_fn(a, n, |_, _| rng.gaussian());
+        let mut sigma =
+            gram(&Mat::from_fn(2 * n, n, |_, _| rng.gaussian())).scale(1.0 / (2 * n) as f64);
+        sigma.add_diag(0.05);
+        (w, sigma)
+    }
+
+    #[test]
+    fn gptq_beats_rtn_at_matched_entropy() {
+        // the original GPTQ claim; needs *correlated* activations (real
+        // LLM covariances have fast-decaying spectra — AR(1) stands in)
+        let (w, _) = problem(96, 48, 1);
+        let sigma = crate::quant::waterfilling::ar1_sigma(48, 0.9);
+        let stats = LayerStats::from_sigma(sigma.clone());
+        let q_g = gptq_at_rate(&w, &stats, 3.0, false, 0.1).unwrap();
+        // match RTN to GPTQ's *achieved entropy* for a fair comparison
+        let q_r = crate::quant::rtn::rtn_grid_at_rate(&w, q_g.entropy_bits);
+        let d_g = distortion(&w, &q_g.dequant(), &sigma);
+        let d_r = distortion(&w, &q_r.dequant(), &sigma);
+        assert!(d_g < d_r, "GPTQ {d_g} must beat RTN {d_r}");
+    }
+
+    #[test]
+    fn maxq_rate_is_log_cardinality() {
+        let (w, sigma) = problem(16, 16, 2);
+        let q = gptq_layer(&w, &sigma, 0.5, false, Some(3)).unwrap();
+        assert!((q.rate_bits - ((7f64).log2() + 1.0)) < 1.1);
+        assert!(q.z.iter().all(|&z| z.abs() <= 3));
+    }
+
+    #[test]
+    fn rate_targeting() {
+        let (w, sigma) = problem(128, 32, 3);
+        let stats = LayerStats::from_sigma(sigma);
+        let q = gptq_at_rate(&w, &stats, 2.5, false, 0.1).unwrap();
+        assert!(
+            (q.entropy_bits - 2.5).abs() < 0.06,
+            "got entropy {}",
+            q.entropy_bits
+        );
+    }
+}

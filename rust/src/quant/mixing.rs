@@ -1,0 +1,152 @@
+//! Adaptive mixing (§4, eq. 58–60): golden-section search over the
+//! drift-mixing coefficient ε_qr and the attention-weighting coefficient
+//! ε_aw, each minimizing a caller-supplied objective (the w_o-input
+//! relative MSE of the jointly re-quantized QKV projections).
+
+use crate::linalg::Mat;
+
+use super::LayerStats;
+
+const INV_PHI: f64 = 0.618_033_988_749_894_9;
+
+/// Golden-section minimization of a unimodal f over [lo, hi].
+/// Returns (argmin, min).  `iters` function evaluations ≈ `iters`+2.
+pub fn golden_section(
+    mut f: impl FnMut(f64) -> f64,
+    lo: f64,
+    hi: f64,
+    iters: usize,
+) -> (f64, f64) {
+    let (mut a, mut b) = (lo, hi);
+    let mut c = b - INV_PHI * (b - a);
+    let mut d = a + INV_PHI * (b - a);
+    let mut fc = f(c);
+    let mut fd = f(d);
+    for _ in 0..iters {
+        if fc < fd {
+            b = d;
+            d = c;
+            fd = fc;
+            c = b - INV_PHI * (b - a);
+            fc = f(c);
+        } else {
+            a = c;
+            c = d;
+            fc = fd;
+            d = a + INV_PHI * (b - a);
+            fd = f(d);
+        }
+    }
+    // also probe the endpoints: the optimum is often exactly 0 or 1
+    let (fl, fh) = (f(lo), f(hi));
+    let mid = if fc < fd { (c, fc) } else { (d, fd) };
+    let mut best = mid;
+    if fl < best.1 {
+        best = (lo, fl);
+    }
+    if fh < best.1 {
+        best = (hi, fh);
+    }
+    best
+}
+
+/// Drift mixing (eq. 58): interpolate the drift-corrected statistics
+/// toward the unquantized ones by ε_qr.
+pub fn mix_drift(stats: &LayerStats, eps_qr: f64) -> LayerStats {
+    let lerp = |a: &Mat, b: &Mat| a.scale(1.0 - eps_qr).add(&b.scale(eps_qr));
+    LayerStats {
+        sigma_x: stats.sigma_x.clone(),
+        sigma_xhat: lerp(&stats.sigma_xhat, &stats.sigma_x),
+        sigma_x_xhat: lerp(&stats.sigma_x_xhat, &stats.sigma_x),
+        // Σ_{Δ,X̂} is a pure drift term: it vanishes as ε_qr → 1
+        sigma_d_xhat: stats
+            .sigma_d_xhat
+            .as_ref()
+            .map(|d| d.scale(1.0 - eps_qr)),
+    }
+}
+
+/// Attention-weight mixing (eq. 59): interpolate the attention-weighted
+/// covariances toward the uniformly-weighted (already drift-mixed) ones.
+pub fn mix_attention(
+    weighted: &LayerStats,
+    uniform: &LayerStats,
+    eps_aw: f64,
+) -> LayerStats {
+    let lerp = |a: &Mat, b: &Mat| a.scale(1.0 - eps_aw).add(&b.scale(eps_aw));
+    LayerStats {
+        sigma_x: lerp(&weighted.sigma_x, &uniform.sigma_x),
+        sigma_xhat: lerp(&weighted.sigma_xhat, &uniform.sigma_xhat),
+        sigma_x_xhat: lerp(&weighted.sigma_x_xhat, &uniform.sigma_x_xhat),
+        sigma_d_xhat: match (&weighted.sigma_d_xhat, &uniform.sigma_d_xhat) {
+            (Some(a), Some(b)) => Some(lerp(a, b)),
+            (Some(a), None) => Some(a.scale(1.0 - eps_aw)),
+            (None, Some(b)) => Some(b.scale(eps_aw)),
+            (None, None) => None,
+        },
+    }
+}
+
+/// The two-stage per-layer coordinate search of Appendix C/D:
+/// 1. ε_qr by golden-section with ε_aw = 0,
+/// 2. ε_aw by golden-section with ε_qr fixed at its optimum.
+/// `objective(eps_qr, eps_aw)` re-quantizes QKV and evaluates (60).
+pub fn optimize_mixing(
+    mut objective: impl FnMut(f64, f64) -> f64,
+    iters: usize,
+) -> (f64, f64) {
+    let (eqr, _) = golden_section(|e| objective(e, 0.0), 0.0, 1.0, iters);
+    let (eaw, _) = golden_section(|e| objective(eqr, e), 0.0, 1.0, iters);
+    (eqr, eaw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn golden_finds_parabola_min() {
+        let (x, fx) = golden_section(|x| (x - 0.3) * (x - 0.3), 0.0, 1.0, 20);
+        assert!((x - 0.3).abs() < 1e-3, "x = {x}");
+        assert!(fx < 1e-6);
+    }
+
+    #[test]
+    fn golden_probes_endpoints() {
+        // monotone decreasing → optimum at 1.0 exactly (paper's ε_qr→1
+        // "phase change" rows need this)
+        let (x, _) = golden_section(|x| 1.0 - x, 0.0, 1.0, 10);
+        assert_eq!(x, 1.0);
+        let (x0, _) = golden_section(|x| x, 0.0, 1.0, 10);
+        assert_eq!(x0, 0.0);
+    }
+
+    #[test]
+    fn mix_drift_endpoints() {
+        let sx = Mat::eye(3);
+        let mut sxh = Mat::eye(3);
+        sxh[(0, 0)] = 5.0;
+        let stats = LayerStats {
+            sigma_x: sx.clone(),
+            sigma_xhat: sxh.clone(),
+            sigma_x_xhat: sxh.clone(),
+            sigma_d_xhat: Some(Mat::from_vec(2, 3, vec![1.0; 6])),
+        };
+        let m0 = mix_drift(&stats, 0.0);
+        assert_eq!(m0.sigma_xhat, sxh); // full drift correction
+        let m1 = mix_drift(&stats, 1.0);
+        assert_eq!(m1.sigma_xhat, sx); // fall back to unquantized Hessian
+        assert!(m1.sigma_d_xhat.unwrap().max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn optimize_mixing_two_stage() {
+        // objective minimized at (0.7, 0.2); unimodal in each coordinate
+        let (eqr, eaw) = optimize_mixing(
+            |q, a| (q - 0.7) * (q - 0.7) + 0.5 * (a - 0.2) * (a - 0.2),
+            12,
+        );
+        assert!((eqr - 0.7).abs() < 0.02, "{eqr}");
+        assert!((eaw - 0.2).abs() < 0.02, "{eaw}");
+    }
+}

@@ -1,0 +1,128 @@
+//! Rate targeting (§4 "Rate assignment"): the final entropy is a
+//! monotone, approximately unit-slope function of −log₂ c, so a secant
+//! iteration on log₂ c converges to < 0.005 bit in 2–3 steps.  Row
+//! subsampling for cheap evaluations is the caller's concern (the
+//! coordinator passes a subsampled closure, then re-runs full).
+
+/// Generic secant search: find `scale` such that `rate_of(scale) ≈
+/// target`, exploiting rate ≈ K − log₂(scale).  Returns the best scale
+/// found.  `rate_of` must be monotone decreasing in scale.
+pub fn secant_scale(
+    rate_of: impl Fn(f64) -> f64,
+    scale0: f64,
+    target: f64,
+    tol_bits: f64,
+    max_iter: usize,
+) -> f64 {
+    // work in u = log2(scale); model rate(u) ≈ K − u
+    let mut u0 = scale0.log2();
+    let mut r0 = rate_of(scale0);
+    if (r0 - target).abs() < tol_bits {
+        return scale0;
+    }
+    // unit-slope first correction
+    let mut u1 = u0 + (r0 - target);
+    let mut best = (r0, u0);
+    for _ in 0..max_iter {
+        let r1 = rate_of(2f64.powf(u1));
+        if (r1 - target).abs() < (best.0 - target).abs() {
+            best = (r1, u1);
+        }
+        if (r1 - target).abs() < tol_bits {
+            return 2f64.powf(u1);
+        }
+        let denom = r1 - r0;
+        let step = if denom.abs() > 1e-9 {
+            (target - r1) * (u1 - u0) / denom
+        } else {
+            r1 - target // fall back to unit slope
+        };
+        u0 = u1;
+        r0 = r1;
+        u1 += step.clamp(-8.0, 8.0);
+    }
+    2f64.powf(best.1)
+}
+
+/// Running global rate budget (§4 / Appendix D): layers are quantized
+/// sequentially; each layer is assigned the remaining budget spread over
+/// the remaining parameters, and its *achieved* bits are charged back —
+/// so savings (e.g. dead features) flow to later layers.
+#[derive(Clone, Debug)]
+pub struct RateBudget {
+    total_bits: f64,
+    spent_bits: f64,
+    remaining_params: f64,
+}
+
+impl RateBudget {
+    /// `target_rate` bits/param over `total_params` parameters.
+    pub fn new(target_rate: f64, total_params: usize) -> Self {
+        RateBudget {
+            total_bits: target_rate * total_params as f64,
+            spent_bits: 0.0,
+            remaining_params: total_params as f64,
+        }
+    }
+
+    /// Rate to assign to the next layer of `params` parameters.
+    pub fn assign(&self, _params: usize) -> f64 {
+        ((self.total_bits - self.spent_bits) / self.remaining_params).max(0.05)
+    }
+
+    /// Charge the achieved rate of a finished layer.
+    pub fn charge(&mut self, params: usize, achieved_rate: f64) {
+        self.spent_bits += achieved_rate * params as f64;
+        self.remaining_params -= params as f64;
+    }
+
+    /// Average rate actually spent so far.
+    pub fn spent_average(&self, total_params: usize) -> f64 {
+        self.spent_bits / total_params as f64
+    }
+
+    pub fn done(&self) -> bool {
+        self.remaining_params <= 0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn secant_converges_on_ideal_model() {
+        // rate(c) = 5 − log2(c) exactly
+        let rate = |c: f64| 5.0 - c.log2();
+        let c = secant_scale(rate, 1.0, 2.0, 0.001, 10);
+        assert!((rate(c) - 2.0).abs() < 0.001, "rate {}", rate(c));
+    }
+
+    #[test]
+    fn secant_converges_on_distorted_model() {
+        // slope 0.8 with curvature — still converges via secant
+        let rate = |c: f64| 4.0 - 0.8 * c.log2() + 0.05 * c.log2().sin();
+        let c = secant_scale(rate, 0.5, 2.5, 0.005, 20);
+        assert!((rate(c) - 2.5).abs() < 0.005);
+    }
+
+    #[test]
+    fn budget_redistribution() {
+        let mut b = RateBudget::new(2.0, 1000);
+        assert!((b.assign(100) - 2.0).abs() < 1e-12);
+        // first layer comes in cheap (dead features) → later layers get more
+        b.charge(500, 1.5);
+        let next = b.assign(100);
+        assert!(next > 2.0, "saved bits must be redistributed: {next}");
+        b.charge(500, next);
+        assert!(b.done());
+        assert!((b.spent_average(1000) - (0.5 * 1.5 + 0.5 * next)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn budget_floor() {
+        let mut b = RateBudget::new(1.0, 100);
+        b.charge(50, 10.0); // overspend
+        assert!(b.assign(10) >= 0.05);
+    }
+}

@@ -1,0 +1,231 @@
+//! Algorithm 4 — FINDOPTIMALRESCALERS: alternating closed-form updates
+//! of the diagonal row (T) and column (Γ) rescalers minimizing
+//!
+//!   J(T,Γ) = (1/an)·tr( WΣ_XWᵀ − 2(WΣ_{X,X̂}+Σ_{Δ,X̂})(TŴ₀Γ)ᵀ
+//!                        + TŴ₀ΓΣ_X̂ΓŴ₀ᵀT )
+//!
+//! with the normalization ‖t‖₁ = a after every alternation.
+
+use crate::linalg::chol::spd_solve;
+use crate::linalg::gemm::{diag_of_product, matmul};
+use crate::linalg::Mat;
+
+use super::LayerStats;
+
+pub struct RescalerOut {
+    pub t: Vec<f64>,
+    pub gamma: Vec<f64>,
+    /// J after each alternation (tests assert non-increasing)
+    pub loss_trace: Vec<f64>,
+}
+
+/// Evaluate the objective J(T,Γ).
+pub fn objective(
+    w0: &Mat,
+    w: &Mat,
+    stats: &LayerStats,
+    t: &[f64],
+    gamma: &[f64],
+) -> f64 {
+    let (a, n) = (w.rows, w.cols);
+    // TŴ₀Γ
+    let mut twg = w0.clone();
+    for i in 0..a {
+        let row = twg.row_mut(i);
+        for j in 0..n {
+            row[j] *= t[i] * gamma[j];
+        }
+    }
+    let target = effective_target(w, stats); // WΣ_{X,X̂}+Σ_Δ  (a×n)
+    let t1: f64 = {
+        let ws = matmul(w, &stats.sigma_x);
+        diag_of_product(&ws, &w.transpose()).iter().sum()
+    };
+    let t2: f64 = diag_of_product(&target, &twg.transpose()).iter().sum();
+    let t3: f64 = {
+        let s = matmul(&twg, &stats.sigma_xhat);
+        diag_of_product(&s, &twg.transpose()).iter().sum()
+    };
+    (t1 - 2.0 * t2 + t3) / (a * n) as f64
+}
+
+/// (WΣ_{X,X̂} + Σ_{Δ,X̂}) — the drift/residual-corrected regression
+/// target appearing in both Alg. 3 and Alg. 4.
+pub fn effective_target(w: &Mat, stats: &LayerStats) -> Mat {
+    let mut tgt = matmul(w, &stats.sigma_x_xhat);
+    if let Some(d) = &stats.sigma_d_xhat {
+        tgt = tgt.add(d);
+    }
+    tgt
+}
+
+/// Run the alternating optimization.  `gamma_init` is the LMMSE γ from
+/// ZSIC (Alg. 3 line 13).
+pub fn find_optimal_rescalers(
+    w0: &Mat,
+    w: &Mat,
+    stats: &LayerStats,
+    gamma_init: &[f64],
+    max_iters: usize,
+    ridge: f64,
+    tol: f64,
+) -> RescalerOut {
+    let (a, n) = (w.rows, w.cols);
+    let mut t = vec![1.0f64; a];
+    let mut gamma = gamma_init.to_vec();
+    normalize(&mut t, &mut gamma);
+
+    let target = effective_target(w, stats);
+    let mut trace = vec![objective(w0, w, stats, &t, &gamma)];
+
+    for _ in 0..max_iters {
+        // ---- Γ-step: γ = (Σ_X̂ ∘ (Ŵ₀ᵀT²Ŵ₀) + λI)⁻¹ diag(Ŵ₀ᵀT·target)
+        let mut w0t2 = w0.clone(); // rows scaled by t_i²
+        for i in 0..a {
+            let ti2 = t[i] * t[i];
+            w0t2.row_mut(i).iter_mut().for_each(|x| *x *= ti2);
+        }
+        let f = matmul(&w0.transpose(), &w0t2); // n×n
+        let mut g = stats.sigma_xhat.hadamard(&f);
+        // adaptive ridge: scale-relative so it is meaningful for any Σ
+        let lam = ridge * (g.trace() / n as f64).max(1e-300);
+        g.add_diag(lam);
+        let mut w0t = w0.clone();
+        for i in 0..a {
+            let ti = t[i];
+            w0t.row_mut(i).iter_mut().for_each(|x| *x *= ti);
+        }
+        let d = diag_of_product(&w0t.transpose(), &target);
+        match spd_solve(&g, &d) {
+            Ok(sol) => gamma = sol,
+            Err(_) => { /* keep previous γ if G is numerically singular */ }
+        }
+
+        // ---- T-step: t_i = p_i / (q_i + λ)
+        let mut w0g = w0.clone(); // cols scaled by γ_j
+        for i in 0..a {
+            let row = w0g.row_mut(i);
+            for j in 0..n {
+                row[j] *= gamma[j];
+            }
+        }
+        let p = diag_of_product(&target, &w0g.transpose());
+        let s = matmul(&w0g, &stats.sigma_xhat);
+        let q = diag_of_product(&s, &w0g.transpose());
+        let lam_t = ridge * (q.iter().sum::<f64>() / a as f64).max(1e-300);
+        for i in 0..a {
+            let denom = q[i] + lam_t;
+            t[i] = if denom > 0.0 { p[i] / denom } else { 1.0 };
+        }
+
+        normalize(&mut t, &mut gamma);
+        let loss = objective(w0, w, stats, &t, &gamma);
+        let prev = *trace.last().unwrap();
+        trace.push(loss);
+        if (loss - prev).abs() / (prev.abs() + 1e-12) < tol {
+            break;
+        }
+    }
+    RescalerOut {
+        t,
+        gamma,
+        loss_trace: trace,
+    }
+}
+
+/// Enforce ‖t‖₁ = a, moving the scale into γ (scale invariance of TŴ₀Γ).
+fn normalize(t: &mut [f64], gamma: &mut [f64]) {
+    let a = t.len() as f64;
+    let s = t.iter().map(|x| x.abs()).sum::<f64>() / a;
+    if s > 0.0 && s.is_finite() {
+        t.iter_mut().for_each(|x| *x /= s);
+        gamma.iter_mut().for_each(|x| *x *= s);
+    }
+}
+
+fn _diag(v: &[f64]) -> Mat {
+    Mat::diag_from(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::chol::cholesky;
+    use crate::linalg::gemm::gram;
+    use crate::quant::zsic::{watersic_alphas, zsic};
+    use crate::util::rng::Rng;
+
+    fn setup(a: usize, n: usize, c: f64, seed: u64) -> (Mat, Mat, LayerStats, Vec<f64>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let w = Mat::from_fn(a, n, |_, _| rng.gaussian());
+        let mut sigma =
+            gram(&Mat::from_fn(2 * n, n, |_, _| rng.gaussian())).scale(1.0 / (2 * n) as f64);
+        sigma.add_diag(0.05);
+        let l = cholesky(&sigma).unwrap();
+        let y = crate::linalg::gemm::matmul(&w, &l);
+        let alphas = watersic_alphas(&l, c);
+        let out = zsic(&y, &l, &alphas, true, None);
+        let mut w0 = Mat::zeros(a, n);
+        for i in 0..a {
+            for j in 0..n {
+                w0[(i, j)] = out.z[i * n + j] as f64 * alphas[j];
+            }
+        }
+        let stats = LayerStats::from_sigma(sigma);
+        (w0, w, stats, out.gammas, alphas)
+    }
+
+    #[test]
+    fn loss_non_increasing() {
+        let (w0, w, stats, g0, _) = setup(24, 16, 0.8, 3);
+        let out = find_optimal_rescalers(&w0, &w, &stats, &g0, 20, 1e-10, 0.0);
+        for win in out.loss_trace.windows(2) {
+            assert!(
+                win[1] <= win[0] + 1e-9 * win[0].abs().max(1.0),
+                "loss increased: {:?}",
+                out.loss_trace
+            );
+        }
+    }
+
+    #[test]
+    fn improves_over_lmmse_initialization() {
+        let (w0, w, stats, g0, _) = setup(32, 24, 1.0, 7);
+        let t0 = vec![1.0; 32];
+        let before = objective(&w0, &w, &stats, &t0, &g0);
+        let out = find_optimal_rescalers(&w0, &w, &stats, &g0, 25, 1e-10, 1e-9);
+        let after = objective(&w0, &w, &stats, &out.t, &out.gamma);
+        assert!(after <= before + 1e-12, "{after} vs {before}");
+    }
+
+    #[test]
+    fn normalization_holds() {
+        let (w0, w, stats, g0, _) = setup(16, 12, 0.6, 9);
+        let out = find_optimal_rescalers(&w0, &w, &stats, &g0, 10, 1e-10, 0.0);
+        let l1: f64 = out.t.iter().map(|x| x.abs()).sum::<f64>() / 16.0;
+        assert!((l1 - 1.0).abs() < 1e-9, "‖t‖₁/a = {l1}");
+    }
+
+    #[test]
+    fn gamma_step_recovers_known_scaling() {
+        // If Ŵ₀ = W·diag(1/s) exactly, the optimal Γ is s (T = 1).
+        let mut rng = Rng::new(11);
+        let w = Mat::from_fn(20, 8, |_, _| rng.gaussian());
+        let s: Vec<f64> = (0..8).map(|j| 0.5 + 0.25 * j as f64).collect();
+        let mut w0 = w.clone();
+        for i in 0..20 {
+            for j in 0..8 {
+                w0[(i, j)] /= s[j];
+            }
+        }
+        let mut sigma = gram(&Mat::from_fn(32, 8, |_, _| rng.gaussian())).scale(1.0 / 32.0);
+        sigma.add_diag(0.1);
+        let stats = LayerStats::from_sigma(sigma);
+        let out = find_optimal_rescalers(&w0, &w, &stats, &vec![1.0; 8], 30, 1e-12, 1e-12);
+        let loss = objective(&w0, &w, &stats, &out.t, &out.gamma);
+        assert!(loss < 1e-8, "should reach ~exact fit, J = {loss}");
+        for j in 0..8 {
+            assert!((out.gamma[j] - s[j]).abs() < 1e-4, "γ_{j} = {}", out.gamma[j]);
+        }
+    }
+}

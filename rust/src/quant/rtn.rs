@@ -1,0 +1,140 @@
+//! Round-to-nearest baselines: classical absmax RTN (log-cardinality
+//! rates) and entropy-coded Huffman-RTN (ε-grid + entropy coding), as
+//! compared against in Table 2.
+
+use crate::linalg::Mat;
+use crate::util::round_ties_even;
+
+use super::LayerQuant;
+
+/// Classical RTN at `bits` with per-row absmax scaling: each row is
+/// mapped to the symmetric integer grid {−(2^{b−1}−1) … 2^{b−1}−1}.
+/// Reported rate is log-cardinality = `bits` (+ scale overhead).
+pub fn rtn_absmax(w: &Mat, bits: u32) -> LayerQuant {
+    let (a, n) = (w.rows, w.cols);
+    let qmax = ((1i64 << (bits - 1)) - 1).max(1) as f64;
+    let mut z = vec![0i32; a * n];
+    let mut t = vec![1.0; a];
+    for i in 0..a {
+        let absmax = w.row(i).iter().fold(0.0f64, |m, x| m.max(x.abs()));
+        let scale = if absmax > 0.0 { absmax / qmax } else { 1.0 };
+        t[i] = scale;
+        for j in 0..n {
+            z[i * n + j] = round_ties_even(w[(i, j)] / scale) as i32;
+        }
+    }
+    let entropy = crate::entropy::entropy_bits(&z);
+    LayerQuant {
+        a,
+        n,
+        z,
+        alphas: vec![1.0; n],
+        gammas: vec![1.0; n],
+        t,
+        entropy_bits: entropy,
+        rate_bits: bits as f64 + 16.0 / n as f64,
+        dead_cols: vec![],
+    }
+}
+
+/// Huffman-RTN: uniform ε-grid over the whole matrix, entropy-coded.
+/// `eps` is the grid spacing; rate is the empirical entropy.
+pub fn rtn_grid(w: &Mat, eps: f64) -> LayerQuant {
+    let (a, n) = (w.rows, w.cols);
+    let mut z = vec![0i32; a * n];
+    for i in 0..a {
+        for j in 0..n {
+            z[i * n + j] = round_ties_even(w[(i, j)] / eps) as i32;
+        }
+    }
+    let entropy = crate::entropy::entropy_bits(&z);
+    LayerQuant {
+        a,
+        n,
+        z,
+        alphas: vec![eps; n],
+        gammas: vec![1.0; n],
+        t: vec![1.0; a],
+        entropy_bits: entropy,
+        rate_bits: entropy + 16.0 / n as f64,
+        dead_cols: vec![],
+    }
+}
+
+/// Find the ε hitting a target entropy rate via the same secant scheme
+/// as WaterSIC (rate ≈ const − log₂ ε).
+pub fn rtn_grid_at_rate(w: &Mat, target_bits: f64) -> LayerQuant {
+    let sd = {
+        let m = w.data.iter().sum::<f64>() / w.data.len() as f64;
+        (w.data.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / w.data.len() as f64)
+            .sqrt()
+    };
+    let rate_of = |eps: f64| rtn_grid(w, eps).entropy_bits;
+    let eps0 = sd * (2.0f64 * std::f64::consts::PI * std::f64::consts::E).sqrt()
+        / 2.0f64.powf(target_bits);
+    let eps = super::rate_control::secant_scale(rate_of, eps0, target_bits, 0.005, 12);
+    rtn_grid(w, eps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn gaussian_w(a: usize, n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(a, n, |_, _| rng.gaussian())
+    }
+
+    #[test]
+    fn rtn_absmax_reconstruction_error_bounded() {
+        let w = gaussian_w(32, 32, 1);
+        let q = rtn_absmax(&w, 4);
+        let wh = q.dequant();
+        for i in 0..32 {
+            let absmax = w.row(i).iter().fold(0.0f64, |m, x| m.max(x.abs()));
+            let step = absmax / 7.0;
+            for j in 0..32 {
+                assert!(
+                    (w[(i, j)] - wh[(i, j)]).abs() <= 0.5 * step + 1e-12,
+                    "({i},{j})"
+                );
+            }
+        }
+        assert!(q.z.iter().all(|&z| z.abs() <= 7));
+    }
+
+    #[test]
+    fn rtn_grid_entropy_decreases_with_eps() {
+        let w = gaussian_w(64, 64, 2);
+        let fine = rtn_grid(&w, 0.05).entropy_bits;
+        let coarse = rtn_grid(&w, 0.5).entropy_bits;
+        assert!(fine > coarse);
+    }
+
+    #[test]
+    fn rtn_rate_targeting() {
+        let w = gaussian_w(128, 64, 3);
+        for target in [2.0, 3.0, 4.0] {
+            let q = rtn_grid_at_rate(&w, target);
+            assert!(
+                (q.entropy_bits - target).abs() < 0.05,
+                "target {target}, got {}",
+                q.entropy_bits
+            );
+        }
+    }
+
+    #[test]
+    fn higher_bits_lower_error() {
+        let w = gaussian_w(16, 48, 4);
+        let e = |bits| {
+            let q = rtn_absmax(&w, bits);
+            let wh = q.dequant();
+            w.sub(&wh).frob_norm()
+        };
+        assert!(e(8) < e(4));
+        assert!(e(4) < e(2));
+    }
+}

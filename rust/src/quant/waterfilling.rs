@@ -1,0 +1,232 @@
+//! Information-theoretic bounds of §3: the reverse-waterfilling
+//! rate-distortion function (eq. 2), its high-rate closed form (eq. 3),
+//! and the asymptotic gaps of Theorem 3.3 (eqs. 13–14).
+//!
+//! Rates are in bits (log base 2) throughout, matching the paper's
+//! plots.
+
+use crate::linalg::{eig, Mat};
+
+/// ½·log₂(2πe/12) ≈ 0.2546 bit — the integer-lattice shaping gap, the
+/// *entire* asymptotic WaterSIC-to-IT-limit gap (eq. 14).
+pub const SHAPING_GAP_BITS: f64 = 0.25461433482006296;
+
+fn log2(x: f64) -> f64 {
+    x.log2()
+}
+
+/// Reverse waterfilling (eq. 2): given water level τ, the (R, D) pair.
+fn rd_at_tau(tau: f64, lambdas: &[f64], sigma_w2: f64) -> (f64, f64) {
+    let n = lambdas.len() as f64;
+    let mut r = 0.0;
+    let mut d = 0.0;
+    for &lam in lambdas {
+        let s = sigma_w2 * lam;
+        if s > tau {
+            r += 0.5 * log2(s / tau);
+            d += tau;
+        } else {
+            d += s;
+        }
+    }
+    (r / n, d / n)
+}
+
+/// R_WF(D, Σ_X): bisect the water level τ to hit distortion `d`.
+pub fn r_wf(d: f64, lambdas: &[f64], sigma_w2: f64) -> f64 {
+    let dmax: f64 =
+        lambdas.iter().map(|&l| sigma_w2 * l).sum::<f64>() / lambdas.len() as f64;
+    if d >= dmax {
+        return 0.0;
+    }
+    let (mut lo, mut hi) = (1e-300, sigma_w2 * lambdas.iter().cloned().fold(0.0, f64::max));
+    for _ in 0..200 {
+        let mid = (lo * hi).sqrt(); // geometric bisection for dynamic range
+        let (_, dm) = rd_at_tau(mid, lambdas, sigma_w2);
+        if dm < d {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    rd_at_tau((lo * hi).sqrt(), lambdas, sigma_w2).0
+}
+
+/// D_WF(R, Σ_X): the distortion-rate function (inverse of r_wf).
+pub fn d_wf(r: f64, lambdas: &[f64], sigma_w2: f64) -> f64 {
+    if r <= 0.0 {
+        return lambdas.iter().map(|&l| sigma_w2 * l).sum::<f64>()
+            / lambdas.len() as f64;
+    }
+    let (mut lo, mut hi) = (1e-300, sigma_w2 * lambdas.iter().cloned().fold(0.0, f64::max));
+    for _ in 0..200 {
+        let mid = (lo * hi).sqrt();
+        let (rm, _) = rd_at_tau(mid, lambdas, sigma_w2);
+        if rm > r {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    rd_at_tau((lo * hi).sqrt(), lambdas, sigma_w2).1
+}
+
+/// High-rate form (eq. 3): R = ½ log₂(σ_W²·|Σ|^{1/n} / D), valid for
+/// D < min σ_W²λ_i.
+pub fn r_high_rate(d: f64, lambdas: &[f64], sigma_w2: f64) -> f64 {
+    let mean_log: f64 =
+        lambdas.iter().map(|&l| l.ln()).sum::<f64>() / lambdas.len() as f64;
+    0.5 * log2(sigma_w2 * mean_log.exp() / d)
+}
+
+/// Eigenvalues of a covariance matrix (descending) — convenience entry.
+pub fn spectrum(sigma: &Mat) -> Vec<f64> {
+    eig::eigvals(sigma)
+        .into_iter()
+        .map(|x| x.max(1e-300))
+        .collect()
+}
+
+/// Asymptotic GPTQ gap to waterfilling (eq. 13), given the Cholesky
+/// diagonal ℓ_ii of Σ_X: shaping gap + ½ log₂(AM/GM of ℓ_ii²).
+pub fn gptq_gap_bits(l_diag: &[f64]) -> f64 {
+    SHAPING_GAP_BITS + amgm_gap_bits(l_diag)
+}
+
+/// ½ log₂( (1/n Σ ℓ_ii²) / (Π ℓ_ii²)^{1/n} ) ≥ 0 — the AM/GM spread term
+/// that WaterSIC's spacing rule eliminates.
+pub fn amgm_gap_bits(l_diag: &[f64]) -> f64 {
+    let n = l_diag.len() as f64;
+    let am: f64 = l_diag.iter().map(|&x| x * x).sum::<f64>() / n;
+    let log_gm: f64 =
+        l_diag.iter().map(|&x| (x * x).ln()).sum::<f64>() / n;
+    0.5 * log2(am / log_gm.exp())
+}
+
+/// Asymptotic WaterSIC gap to waterfilling (eq. 14): the shaping gap,
+/// independent of Σ_X.
+pub fn watersic_gap_bits(_l_diag: &[f64]) -> f64 {
+    SHAPING_GAP_BITS
+}
+
+/// AR(1) covariance Σ_ij = ρ^{|i−j|} — the standard stress family used
+/// by the `repro theory` experiment (strong conditioning as ρ→1).
+pub fn ar1_sigma(n: usize, rho: f64) -> Mat {
+    Mat::from_fn(n, n, |i, j| rho.powi((i as i32 - j as i32).abs()))
+}
+
+/// "Spiked" covariance: identity plus k strong random directions —
+/// models the PCA concentration of real activations.
+pub fn spiked_sigma(n: usize, k: usize, strength: f64, seed: u64) -> Mat {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    let mut sigma = Mat::eye(n);
+    for _ in 0..k {
+        let mut v: Vec<f64> = (0..n).map(|_| rng.gaussian()).collect();
+        let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+        v.iter_mut().for_each(|x| *x /= norm);
+        for i in 0..n {
+            for j in 0..n {
+                sigma[(i, j)] += strength * v[i] * v[j];
+            }
+        }
+    }
+    sigma
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::chol::cholesky;
+
+    #[test]
+    fn shaping_gap_constant() {
+        let expect = 0.5 * (2.0 * std::f64::consts::PI * std::f64::consts::E / 12.0).log2();
+        assert!((SHAPING_GAP_BITS - expect).abs() < 1e-12);
+        assert!((SHAPING_GAP_BITS - 0.255).abs() < 5e-4); // paper's 0.255
+    }
+
+    #[test]
+    fn white_source_matches_shannon() {
+        // Σ = I: R(D) = ½log₂(σ²/D)
+        let lambdas = vec![1.0; 64];
+        for d in [0.5, 0.1, 0.01] {
+            let r = r_wf(d, &lambdas, 1.0);
+            assert!((r - 0.5 * (1.0f64 / d).log2()).abs() < 1e-6, "d={d}");
+        }
+    }
+
+    #[test]
+    fn wf_and_inverse_consistent() {
+        let sigma = ar1_sigma(32, 0.9);
+        let lam = spectrum(&sigma);
+        for r in [0.5, 1.0, 2.0, 4.0] {
+            let d = d_wf(r, &lam, 1.0);
+            let r2 = r_wf(d, &lam, 1.0);
+            assert!((r - r2).abs() < 1e-4, "r={r} r2={r2}");
+        }
+    }
+
+    #[test]
+    fn high_rate_form_matches_wf_at_low_distortion() {
+        let sigma = ar1_sigma(24, 0.8);
+        let lam = spectrum(&sigma);
+        let dmin = lam.iter().cloned().fold(f64::INFINITY, f64::min);
+        let d = dmin * 0.1;
+        let r1 = r_wf(d, &lam, 1.0);
+        let r2 = r_high_rate(d, &lam, 1.0);
+        assert!((r1 - r2).abs() < 1e-6, "{r1} vs {r2}");
+    }
+
+    #[test]
+    fn high_rate_form_is_a_lower_bound() {
+        // the high-rate expression is the Shannon lower bound: R_WF ≥ it
+        // everywhere, with equality only below the min eigenvalue
+        let sigma = ar1_sigma(24, 0.95);
+        let lam = spectrum(&sigma);
+        for d in [1e-4, 1e-2, 0.2] {
+            assert!(
+                r_wf(d, &lam, 1.0) >= r_high_rate(d, &lam, 1.0) - 1e-9,
+                "d={d}"
+            );
+        }
+        // strictly above once D exceeds the smallest eigenvalue
+        let d = lam.iter().sum::<f64>() / 48.0;
+        assert!(r_wf(d, &lam, 1.0) > r_high_rate(d, &lam, 1.0) + 1e-6);
+    }
+
+    #[test]
+    fn gptq_gap_grows_with_conditioning() {
+        // the paper's headline negative result: GPTQ's gap is unbounded
+        let mut prev = 0.0;
+        for rho in [0.0, 0.5, 0.9, 0.99] {
+            let sigma = ar1_sigma(48, rho);
+            let l = cholesky(&sigma).unwrap();
+            let gap = gptq_gap_bits(&l.diag());
+            assert!(gap >= prev - 1e-12, "rho={rho}: {gap} < {prev}");
+            prev = gap;
+            // WaterSIC's gap is constant
+            assert!((watersic_gap_bits(&l.diag()) - SHAPING_GAP_BITS).abs() < 1e-15);
+        }
+        assert!(prev > 0.5, "gap at rho=0.99 should exceed 0.5 bit: {prev}");
+    }
+
+    #[test]
+    fn amgm_zero_for_white() {
+        let l = cholesky(&Mat::eye(16)).unwrap();
+        assert!(amgm_gap_bits(&l.diag()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rotation_invariance_of_watersic_bound() {
+        // |Σ| is rotation invariant → D*_WaterSIC unchanged under UΣUᵀ;
+        // verify via spectrum (rotation = same eigenvalues)
+        let sigma = spiked_sigma(16, 3, 10.0, 5);
+        let lam = spectrum(&sigma);
+        let r1 = r_high_rate(0.001, &lam, 1.0);
+        // "rotate" = reuse eigenvalues in different order
+        let mut lam2 = lam.clone();
+        lam2.reverse();
+        let r2 = r_high_rate(0.001, &lam2, 1.0);
+        assert!((r1 - r2).abs() < 1e-12);
+    }
+}

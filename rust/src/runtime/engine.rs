@@ -1,0 +1,218 @@
+//! The PJRT engine: artifact registry + compiled-executable cache +
+//! typed wrappers for the two artifact families (ZSIC quantize graphs
+//! and picollama forward passes).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::linalg::Mat;
+use crate::model::weights::Weights;
+use crate::model::ModelConfig;
+use crate::quant::zsic::ZsicOut;
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+}
+
+/// Identifies one exported ZSIC graph.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct ZsicArtifact {
+    pub a: usize,
+    pub n: usize,
+    pub lmmse: bool,
+}
+
+impl ZsicArtifact {
+    pub fn file_name(&self) -> String {
+        let tag = if self.lmmse { "lmmse" } else { "plain" };
+        format!("zsic_{tag}_{}x{}.hlo.txt", self.a, self.n)
+    }
+}
+
+impl Engine {
+    /// Create a CPU PJRT client rooted at the artifacts directory.
+    pub fn new(artifacts_dir: PathBuf) -> Result<Engine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            artifacts_dir,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_path(&self, name: &str) -> PathBuf {
+        self.artifacts_dir.join(name)
+    }
+
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.artifact_path(name).exists()
+    }
+
+    /// Compile (or fetch from cache) an HLO-text artifact.
+    fn load(&self, name: &str) -> Result<()> {
+        let mut cache = self.cache.lock().unwrap();
+        if cache.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.artifact_path(name);
+        if !path.exists() {
+            bail!("artifact {} not found (run `make artifacts`)", path.display());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    fn execute(&self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.load(name)?;
+        let cache = self.cache.lock().unwrap();
+        let exe = cache.get(name).unwrap();
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("executing {name}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .context("fetching result literal")?;
+        // jax lowers with return_tuple=True → outputs are a tuple
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Run the ZSIC quantize artifact for a fixed shape.  Inputs are the
+    /// L3-prepared (ŷ, L, α); outputs mirror `quant::zsic::zsic`.
+    pub fn run_zsic(
+        &self,
+        art: ZsicArtifact,
+        y: &Mat,
+        l: &Mat,
+        alphas: &[f64],
+    ) -> Result<ZsicOut> {
+        let (a, n) = (art.a, art.n);
+        anyhow::ensure!(y.rows == a && y.cols == n, "shape mismatch");
+        let ylit = xla::Literal::vec1(&y.to_f32()).reshape(&[a as i64, n as i64])?;
+        let llit = xla::Literal::vec1(&l.to_f32()).reshape(&[n as i64, n as i64])?;
+        let alit =
+            xla::Literal::vec1(&alphas.iter().map(|&x| x as f32).collect::<Vec<f32>>());
+        let outs = self.execute(&art.file_name(), &[ylit, llit, alit])?;
+        anyhow::ensure!(outs.len() == 3, "zsic artifact must return 3 outputs");
+        let z = outs[0].to_vec::<i32>()?;
+        let gammas: Vec<f64> = outs[1]
+            .to_vec::<f32>()?
+            .into_iter()
+            .map(|x| x as f64)
+            .collect();
+        let resid_f: Vec<f32> = outs[2].to_vec::<f32>()?;
+        Ok(ZsicOut {
+            z,
+            gammas,
+            resid: Mat::from_f32(a, n, &resid_f),
+        })
+    }
+
+    /// Run the picollama forward artifact: weights (in manifest
+    /// `param_order`) + a (B × ctx) token batch → (B·ctx × V) logits.
+    pub fn run_forward(
+        &self,
+        cfg: &ModelConfig,
+        weights: &Weights,
+        tokens: &[i32],
+        batch: usize,
+    ) -> Result<Mat> {
+        anyhow::ensure!(
+            tokens.len() == batch * cfg.ctx,
+            "token batch must be {}x{}",
+            batch,
+            cfg.ctx
+        );
+        let name = format!("forward_{}.hlo.txt", cfg.name);
+        let mut args: Vec<xla::Literal> = Vec::new();
+        for (pname, buf) in cfg
+            .param_order
+            .iter()
+            .zip(weights.flatten_f32(&cfg.param_order))
+        {
+            let lit = xla::Literal::vec1(&buf);
+            let lit = if let Some(m) = weights.mats.get(pname) {
+                lit.reshape(&[m.rows as i64, m.cols as i64])?
+            } else {
+                lit
+            };
+            args.push(lit);
+        }
+        args.push(
+            xla::Literal::vec1(tokens).reshape(&[batch as i64, cfg.ctx as i64])?,
+        );
+        let outs = self.execute(&name, &args)?;
+        let logits: Vec<f32> = outs[0].to_vec::<f32>()?;
+        anyhow::ensure!(
+            logits.len() == batch * cfg.ctx * cfg.vocab,
+            "bad logits size"
+        );
+        Ok(Mat::from_f32(batch * cfg.ctx, cfg.vocab, &logits))
+    }
+
+    /// The ZSIC executor closure used by the coordinator: routes to the
+    /// artifact when one exists for the shape, else falls back to the
+    /// native implementation.  Returns whether the artifact path was hit.
+    pub fn zsic_exec(
+        &self,
+        y: &Mat,
+        l: &Mat,
+        alphas: &[f64],
+        lmmse: bool,
+    ) -> (ZsicOut, bool) {
+        let art = ZsicArtifact {
+            a: y.rows,
+            n: y.cols,
+            lmmse,
+        };
+        if self.has_artifact(&art.file_name()) {
+            match self.run_zsic(art, y, l, alphas) {
+                Ok(out) => return (out, true),
+                Err(e) => {
+                    log::warn!("zsic artifact failed ({e:#}); falling back to native");
+                }
+            }
+        }
+        (crate::quant::zsic::zsic(y, l, alphas, lmmse, None), false)
+    }
+}
+
+// Integration-level tests that need built artifacts live in
+// rust/tests/runtime_integration.rs; here only pure helpers are tested.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_names() {
+        let a = ZsicArtifact {
+            a: 512,
+            n: 128,
+            lmmse: true,
+        };
+        assert_eq!(a.file_name(), "zsic_lmmse_512x128.hlo.txt");
+        let b = ZsicArtifact {
+            a: 64,
+            n: 64,
+            lmmse: false,
+        };
+        assert_eq!(b.file_name(), "zsic_plain_64x64.hlo.txt");
+    }
+}

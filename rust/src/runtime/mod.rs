@@ -1,0 +1,8 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the CPU PJRT client via
+//! the `xla` crate.  This is the production execution path — python
+//! never runs here.  Executables are compiled once and cached.
+
+pub mod engine;
+
+pub use engine::{Engine, ZsicArtifact};

@@ -1,0 +1,149 @@
+//! Minimal measured-median benchmark harness (criterion is unavailable
+//! offline).  Used by every target in `benches/` (declared with
+//! `harness = false`).
+//!
+//! Protocol: warm up, then run batches until either `max_time` elapses
+//! or `min_batches` are collected; report median / p10 / p90 wall time
+//! per iteration and optional throughput.
+
+use std::time::{Duration, Instant};
+
+pub struct Bench {
+    pub name: String,
+    min_batches: usize,
+    max_time: Duration,
+}
+
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub name: String,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+    pub iters: usize,
+}
+
+impl Stats {
+    pub fn per_iter_secs(&self) -> f64 {
+        self.median.as_secs_f64()
+    }
+
+    /// items/sec given an item count per iteration.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.per_iter_secs()
+    }
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        Bench {
+            name: name.to_string(),
+            min_batches: 12,
+            max_time: Duration::from_secs(3),
+        }
+    }
+
+    pub fn with_budget(mut self, min_batches: usize, max_time: Duration) -> Self {
+        self.min_batches = min_batches;
+        self.max_time = max_time;
+        self
+    }
+
+    /// Run `f` repeatedly; `f` must perform exactly one "iteration".
+    pub fn run<F: FnMut()>(&self, mut f: F) -> Stats {
+        // warmup + calibrate how many inner iters fill ~10ms
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().max(Duration::from_nanos(50));
+        let inner =
+            ((Duration::from_millis(10).as_nanos() / once.as_nanos()).max(1)) as usize;
+
+        let mut samples = Vec::new();
+        let start = Instant::now();
+        while samples.len() < self.min_batches && start.elapsed() < self.max_time
+            || samples.len() < 3
+        {
+            let t = Instant::now();
+            for _ in 0..inner {
+                f();
+            }
+            samples.push(t.elapsed() / inner as u32);
+        }
+        samples.sort();
+        let pick = |q: f64| samples[((samples.len() - 1) as f64 * q) as usize];
+        Stats {
+            name: self.name.clone(),
+            median: pick(0.5),
+            p10: pick(0.1),
+            p90: pick(0.9),
+            iters: samples.len() * inner,
+        }
+    }
+}
+
+/// Pretty-print one result row (optionally with throughput).
+pub fn report(stats: &Stats, throughput: Option<(f64, &str)>) {
+    let med = stats.median.as_secs_f64();
+    let unit = |t: f64| {
+        if t < 1e-6 {
+            format!("{:8.1} ns", t * 1e9)
+        } else if t < 1e-3 {
+            format!("{:8.2} µs", t * 1e6)
+        } else if t < 1.0 {
+            format!("{:8.2} ms", t * 1e3)
+        } else {
+            format!("{t:8.3} s ")
+        }
+    };
+    let tp = match throughput {
+        Some((items, label)) => {
+            let rate = items / med;
+            if rate > 1e9 {
+                format!("  {:9.2} G{label}/s", rate / 1e9)
+            } else if rate > 1e6 {
+                format!("  {:9.2} M{label}/s", rate / 1e6)
+            } else {
+                format!("  {rate:9.0} {label}/s")
+            }
+        }
+        None => String::new(),
+    };
+    println!(
+        "{:44} {}  [p10 {} p90 {}]{}",
+        stats.name,
+        unit(med),
+        unit(stats.p10.as_secs_f64()),
+        unit(stats.p90.as_secs_f64()),
+        tp
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bench::new("spin").with_budget(3, Duration::from_millis(200));
+        let stats = b.run(|| {
+            let mut x = 0u64;
+            for i in 0..10_000u64 {
+                x = x.wrapping_add(std::hint::black_box(i));
+            }
+            std::hint::black_box(x);
+        });
+        // in release the batched timer can round a trivial body to 0ns;
+        // require only ordering + iteration accounting
+        assert!(stats.p90 >= stats.median);
+        assert!(stats.iters >= 3);
+    }
+
+    #[test]
+    fn percentiles_ordered() {
+        let b = Bench::new("ord").with_budget(5, Duration::from_millis(100));
+        let s = b.run(|| {
+            std::hint::black_box(3u32.pow(7));
+        });
+        assert!(s.p10 <= s.median && s.median <= s.p90);
+    }
+}

@@ -1,0 +1,128 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and
+//! positional arguments, with typed getters and a usage dump.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an explicit list (first element is NOT the program name).
+    pub fn parse(argv: &[String]) -> Args {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some(eq) = body.find('=') {
+                    out.flags
+                        .insert(body[..eq].to_string(), body[eq + 1..].to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    out.flags.insert(body.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    out.flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv)
+    }
+
+    pub fn str_opt(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.str_opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<f64>()
+                .map_err(|_| anyhow!("--{key} expects a number, got {s:?}")),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse::<usize>()
+                .map_err(|_| anyhow!("--{key} expects an integer, got {s:?}")),
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(
+            self.flags.get(key).map(|s| s.as_str()),
+            Some("true") | Some("1") | Some("yes")
+        )
+    }
+
+    /// Comma-separated f64 list, e.g. `--rates 1.0,2.0,3.0`.
+    pub fn f64_list_or(&self, key: &str, default: &[f64]) -> Result<Vec<f64>> {
+        match self.flags.get(key) {
+            None => Ok(default.to_vec()),
+            Some(s) => s
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse::<f64>()
+                        .map_err(|_| anyhow!("bad value {t:?} in --{key}"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(&sv(&[
+            "repro", "table1", "--rate", "2.5", "--lmmse", "--model=pico",
+        ]));
+        assert_eq!(a.positional, vec!["repro", "table1"]);
+        assert_eq!(a.f64_or("rate", 0.0).unwrap(), 2.5);
+        assert!(a.bool("lmmse"));
+        assert_eq!(a.str_or("model", ""), "pico");
+        assert!(!a.bool("absent"));
+    }
+
+    #[test]
+    fn list_parsing() {
+        let a = Args::parse(&sv(&["--rates", "1,2.5,4"]));
+        assert_eq!(a.f64_list_or("rates", &[]).unwrap(), vec![1.0, 2.5, 4.0]);
+        let b = Args::parse(&sv(&[]));
+        assert_eq!(b.f64_list_or("rates", &[3.0]).unwrap(), vec![3.0]);
+    }
+
+    #[test]
+    fn errors_on_bad_number() {
+        let a = Args::parse(&sv(&["--rate", "abc"]));
+        assert!(a.f64_or("rate", 0.0).is_err());
+    }
+}

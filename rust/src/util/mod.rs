@@ -1,0 +1,50 @@
+//! Infrastructure substrates the offline environment cannot pull from
+//! crates.io: RNG, JSON, npy IO, a CLI parser, a scoped thread pool, and
+//! a criterion-style bench harness.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod npy;
+pub mod rng;
+pub mod threadpool;
+
+/// Round half-to-even for f64 — matches `numpy.round` / `jnp.round` and
+/// the Pallas kernel, bit-for-bit on .5 ties.  The single rounding rule
+/// used by every quantizer in the crate.
+#[inline]
+pub fn round_ties_even(x: f64) -> f64 {
+    x.round_ties_even()
+}
+
+/// log2 that maps 0 → 0 (for entropy sums).
+#[inline]
+pub fn xlog2x(p: f64) -> f64 {
+    if p <= 0.0 {
+        0.0
+    } else {
+        p * p.log2()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ties_even_matches_numpy() {
+        assert_eq!(round_ties_even(0.5), 0.0);
+        assert_eq!(round_ties_even(1.5), 2.0);
+        assert_eq!(round_ties_even(2.5), 2.0);
+        assert_eq!(round_ties_even(-0.5), -0.0);
+        assert_eq!(round_ties_even(-1.5), -2.0);
+        assert_eq!(round_ties_even(0.4999), 0.0);
+        assert_eq!(round_ties_even(2.501), 3.0);
+    }
+
+    #[test]
+    fn xlog2x_zero() {
+        assert_eq!(xlog2x(0.0), 0.0);
+        assert!((xlog2x(0.5) + 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,252 @@
+//! Reader/writer for the NumPy `.npy` format (v1.0), C-contiguous,
+//! little-endian `f32`/`i32` — the weight interchange format between
+//! the build-time python trainer and the Rust runtime.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const MAGIC: &[u8] = b"\x93NUMPY";
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Npy {
+    pub shape: Vec<usize>,
+    pub data: NpyData,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum NpyData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Npy {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Npy {
+            shape,
+            data: NpyData::F32(data),
+        }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            NpyData::F32(v) => Ok(v),
+            _ => bail!("npy is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            NpyData::I32(v) => Ok(v),
+            _ => bail!("npy is not i32"),
+        }
+    }
+
+    pub fn read(path: &Path) -> Result<Npy> {
+        let raw = std::fs::read(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&raw).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn parse(raw: &[u8]) -> Result<Npy> {
+        if raw.len() < 10 || &raw[..6] != MAGIC {
+            bail!("bad npy magic");
+        }
+        let (major, _minor) = (raw[6], raw[7]);
+        let (hlen, hstart) = if major == 1 {
+            (u16::from_le_bytes([raw[8], raw[9]]) as usize, 10)
+        } else {
+            (
+                u32::from_le_bytes([raw[8], raw[9], raw[10], raw[11]]) as usize,
+                12,
+            )
+        };
+        let header = std::str::from_utf8(&raw[hstart..hstart + hlen])?;
+        let descr_rest = extract(header, "'descr':")?;
+        let descr_field = descr_rest.split(',').next().unwrap_or("");
+        let fortran = extract(header, "'fortran_order':")?;
+        if fortran.trim_start().starts_with("True") {
+            bail!("fortran order unsupported");
+        }
+        let shape_str = extract(header, "'shape':")?;
+        let shape = parse_shape(shape_str)?;
+        let n: usize = shape.iter().product();
+        let body = &raw[hstart + hlen..];
+        let descr = descr_field.trim().trim_matches(|c| c == '\'' || c == '"');
+        let data = match descr {
+            "<f4" | "|f4" => {
+                if body.len() < 4 * n {
+                    bail!("truncated f32 body");
+                }
+                let mut v = Vec::with_capacity(n);
+                for i in 0..n {
+                    v.push(f32::from_le_bytes(
+                        body[4 * i..4 * i + 4].try_into().unwrap(),
+                    ));
+                }
+                NpyData::F32(v)
+            }
+            "<i4" | "|i4" => {
+                if body.len() < 4 * n {
+                    bail!("truncated i32 body");
+                }
+                let mut v = Vec::with_capacity(n);
+                for i in 0..n {
+                    v.push(i32::from_le_bytes(
+                        body[4 * i..4 * i + 4].try_into().unwrap(),
+                    ));
+                }
+                NpyData::I32(v)
+            }
+            other => bail!("unsupported dtype {other:?} (want <f4 or <i4)"),
+        };
+        Ok(Npy { shape, data })
+    }
+
+    pub fn write(&self, path: &Path) -> Result<()> {
+        let mut f = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        f.write_all(&self.to_bytes())?;
+        Ok(())
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let descr = match self.data {
+            NpyData::F32(_) => "<f4",
+            NpyData::I32(_) => "<i4",
+        };
+        let shape = match self.shape.len() {
+            1 => format!("({},)", self.shape[0]),
+            _ => format!(
+                "({})",
+                self.shape
+                    .iter()
+                    .map(|d| d.to_string())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ),
+        };
+        let mut header = format!(
+            "{{'descr': '{descr}', 'fortran_order': False, 'shape': {shape}, }}"
+        );
+        // pad so that data starts at a multiple of 64
+        let unpadded = MAGIC.len() + 4 + header.len() + 1;
+        let pad = (64 - unpadded % 64) % 64;
+        header.push_str(&" ".repeat(pad));
+        header.push('\n');
+
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        out.push(1);
+        out.push(0);
+        out.extend_from_slice(&(header.len() as u16).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        match &self.data {
+            NpyData::F32(v) => {
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            NpyData::I32(v) => {
+                for x in v {
+                    out.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+        }
+        out
+    }
+}
+
+fn extract<'a>(header: &'a str, key: &str) -> Result<&'a str> {
+    let pos = header
+        .find(key)
+        .with_context(|| format!("npy header missing {key}"))?;
+    Ok(&header[pos + key.len()..])
+}
+
+fn parse_shape(s: &str) -> Result<Vec<usize>> {
+    let open = s.find('(').context("no ( in shape")?;
+    let close = s[open..].find(')').context("no ) in shape")? + open;
+    let inner = &s[open + 1..close];
+    let mut shape = Vec::new();
+    for part in inner.split(',') {
+        let t = part.trim();
+        if t.is_empty() {
+            continue;
+        }
+        shape.push(t.parse::<usize>()?);
+    }
+    if shape.is_empty() {
+        shape.push(1); // 0-d scalar treated as shape (1,)
+    }
+    Ok(shape)
+}
+
+/// Read every `.npy` file in a directory into (stem → array).
+pub fn read_dir(dir: &Path) -> Result<std::collections::BTreeMap<String, Npy>> {
+    let mut out = std::collections::BTreeMap::new();
+    for entry in std::fs::read_dir(dir)
+        .with_context(|| format!("reading dir {}", dir.display()))?
+    {
+        let path = entry?.path();
+        if path.extension().and_then(|e| e.to_str()) == Some("npy") {
+            let stem = path
+                .file_stem()
+                .unwrap()
+                .to_string_lossy()
+                .into_owned();
+            out.insert(stem, Npy::read(&path)?);
+        }
+    }
+    Ok(out)
+}
+
+/// Read a whole file into bytes (tiny helper used by corpus loading).
+pub fn read_bytes(path: &Path) -> Result<Vec<u8>> {
+    let mut buf = Vec::new();
+    std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?
+        .read_to_end(&mut buf)?;
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_f32() {
+        let a = Npy::f32(vec![3, 4], (0..12).map(|i| i as f32 * 0.5).collect());
+        let b = Npy::parse(&a.to_bytes()).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn roundtrip_i32_1d() {
+        let a = Npy {
+            shape: vec![5],
+            data: NpyData::I32(vec![-2, -1, 0, 1, 2]),
+        };
+        let b = Npy::parse(&a.to_bytes()).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn parses_python_written_header_variants() {
+        // header with different spacing, as numpy itself writes it
+        let a = Npy::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let mut bytes = a.to_bytes();
+        // mutate header spacing minimally: parse should be robust anyway
+        let b = Npy::parse(&bytes).unwrap();
+        assert_eq!(b.shape, vec![2, 2]);
+        // corrupt magic
+        bytes[0] = 0;
+        assert!(Npy::parse(&bytes).is_err());
+    }
+}

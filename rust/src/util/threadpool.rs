@@ -1,0 +1,116 @@
+//! Scoped data-parallel helpers built on `std::thread` (tokio/rayon are
+//! unavailable offline).  The coordinator uses `parallel_map` to quantize
+//! the independent matrices of a layer concurrently, and `parallel_chunks`
+//! for row-parallel gemm in the hot path.
+
+/// Number of worker threads to use (respects `WATERSIC_THREADS`).
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("WATERSIC_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+/// Apply `f` to each item of `items`, running up to `threads` at a time,
+/// preserving order of results.
+pub fn parallel_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let threads = threads.max(1);
+    if threads == 1 || items.len() <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    let n = items.len();
+    let work: std::sync::Mutex<Vec<Option<T>>> =
+        std::sync::Mutex::new(items.into_iter().map(Some).collect());
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let slots: Vec<std::sync::Mutex<&mut Option<R>>> =
+        results.iter_mut().map(std::sync::Mutex::new).collect();
+
+    std::thread::scope(|scope| {
+        for _ in 0..threads.min(n) {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                if i >= n {
+                    break;
+                }
+                let item = work.lock().unwrap()[i].take().unwrap();
+                let r = f(item);
+                **slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    drop(slots);
+    results.into_iter().map(|r| r.unwrap()).collect()
+}
+
+/// Split `0..n` into contiguous ranges and run `f(range)` on each in
+/// parallel.  Used for row-blocked gemm.
+pub fn parallel_ranges<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>) + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n == 0 {
+        f(0..n);
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|scope| {
+        for t in 0..threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let f = &f;
+            scope.spawn(move || f(lo..hi));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_preserves_order() {
+        let items: Vec<usize> = (0..100).collect();
+        let out = parallel_map(items, 8, |x| x * x);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+    }
+
+    #[test]
+    fn map_single_thread_fallback() {
+        let out = parallel_map(vec![1, 2, 3], 1, |x| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn ranges_cover_everything_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let hits: Vec<AtomicUsize> = (0..97).map(|_| AtomicUsize::new(0)).collect();
+        parallel_ranges(97, 5, |r| {
+            for i in r {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn default_threads_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

@@ -1,0 +1,206 @@
+//! Randomized property sweeps over the core invariants (proptest-style,
+//! driven by the in-repo RNG so failures reproduce from the printed
+//! seed).  These complement the per-module unit tests with cross-module
+//! invariants at many random operating points.
+
+use watersic::entropy::huffman::Huffman;
+use watersic::entropy::rans::Rans;
+use watersic::entropy::{column_coded_rate, entropy_bits, Codec};
+use watersic::linalg::chol::cholesky;
+use watersic::linalg::gemm::{gram, matmul};
+use watersic::linalg::Mat;
+use watersic::quant::rate_control::RateBudget;
+use watersic::quant::waterfilling::{d_wf, r_wf, spectrum};
+use watersic::quant::zsic::{watersic_alphas, zsic};
+use watersic::util::rng::Rng;
+
+fn random_spd(n: usize, rng: &mut Rng) -> Mat {
+    let samples = Mat::from_fn(2 * n, n, |_, _| rng.gaussian());
+    let mut s = gram(&samples).scale(1.0 / (2 * n) as f64);
+    s.add_diag(0.02 + 0.2 * rng.uniform());
+    s
+}
+
+#[test]
+fn lemma_3_2_sweep() {
+    // e_SIC ∈ CUBE·A·diag(L) for 40 random (W, Σ, c) draws
+    for trial in 0..40u64 {
+        let mut rng = Rng::new(1000 + trial);
+        let a = 4 + rng.below(24);
+        let n = 4 + rng.below(28);
+        let sigma = random_spd(n, &mut rng);
+        let l = cholesky(&sigma).unwrap();
+        let w = Mat::from_fn(a, n, |_, _| rng.gaussian() * (0.2 + rng.uniform()));
+        let y = matmul(&w, &l);
+        let c = 0.05 + rng.uniform();
+        let alphas = watersic_alphas(&l, c);
+        let out = zsic(&y, &l, &alphas, false, None);
+        for i in 0..a {
+            for j in 0..n {
+                let bound = 0.5 * alphas[j] * l[(j, j)].abs() + 1e-9;
+                assert!(
+                    out.resid[(i, j)].abs() <= bound,
+                    "trial {trial} ({i},{j})"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn codec_roundtrip_sweep() {
+    // adversarial-ish distributions: heavy skew, wide alphabets, runs
+    for trial in 0..25u64 {
+        let mut rng = Rng::new(2000 + trial);
+        let len = 100 + rng.below(20_000);
+        let mode = trial % 5;
+        let z: Vec<i32> = (0..len)
+            .map(|i| match mode {
+                0 => (rng.gaussian() * 3.0) as i32,
+                1 => {
+                    if rng.uniform() < 0.98 {
+                        0
+                    } else {
+                        rng.below(1000) as i32 - 500
+                    }
+                }
+                2 => (i % 7) as i32 - 3, // periodic
+                3 => rng.below(2) as i32, // binary
+                _ => (rng.gaussian() * 200.0) as i32, // wide
+            })
+            .collect();
+        for codec in [&Huffman as &dyn Codec, &Rans] {
+            let enc = codec.encode(&z);
+            let dec = codec.decode(&enc, z.len()).unwrap();
+            assert_eq!(dec, z, "trial {trial} codec {}", codec.name());
+        }
+    }
+}
+
+#[test]
+fn coded_rate_dominates_entropy_lower_bound() {
+    // achieved codec rates must be ≥ joint empirical entropy − ε and
+    // within a modest overhead of it at realistic sizes
+    let mut rng = Rng::new(7);
+    let z: Vec<i32> = (0..60_000)
+        .map(|_| (rng.gaussian() * 2.5).round_ties_even() as i32)
+        .collect();
+    let h = entropy_bits(&z);
+    for codec in [&Huffman as &dyn Codec, &Rans] {
+        let r = codec.rate(&z);
+        assert!(r >= h - 1e-6, "{}: {r} < entropy {h}", codec.name());
+        assert!(r <= h + 0.2, "{}: {r} ≫ entropy {h}", codec.name());
+    }
+}
+
+#[test]
+fn per_column_rate_consistency() {
+    // per-column coded rate ≤ joint entropy + correction, and both agree
+    // for iid columns at large a
+    let mut rng = Rng::new(8);
+    let (a, n) = (4096usize, 16usize);
+    let z: Vec<i32> = (0..a * n)
+        .map(|_| (rng.gaussian() * 2.0).round_ties_even() as i32)
+        .collect();
+    let joint = entropy_bits(&z);
+    let per_col = column_coded_rate(&z, a, n);
+    assert!(
+        (joint - per_col).abs() < 0.03,
+        "iid columns at a=4096: joint {joint} vs per-col {per_col}"
+    );
+}
+
+#[test]
+fn waterfilling_rd_curve_properties() {
+    // R(D) decreasing and convex-ish in D; d_wf inverse of r_wf
+    for trial in 0..10u64 {
+        let mut rng = Rng::new(3000 + trial);
+        let sigma = random_spd(12 + rng.below(20), &mut rng);
+        let lam = spectrum(&sigma);
+        let dmax: f64 = lam.iter().sum::<f64>() / lam.len() as f64;
+        let mut prev = f64::INFINITY;
+        for k in 1..10 {
+            let d = dmax * k as f64 / 10.0;
+            let r = r_wf(d, &lam, 1.0);
+            assert!(r <= prev + 1e-9, "R(D) must be non-increasing");
+            assert!(r >= 0.0);
+            prev = r;
+            // inverse consistency where the curve is strictly decreasing
+            if r > 1e-6 {
+                let d2 = d_wf(r, &lam, 1.0);
+                assert!((d2 - d).abs() < 1e-3 * dmax, "trial {trial}: {d} vs {d2}");
+            }
+        }
+    }
+}
+
+#[test]
+fn budget_conserves_bits() {
+    for trial in 0..20u64 {
+        let mut rng = Rng::new(4000 + trial);
+        let layers: Vec<usize> = (0..5 + rng.below(10))
+            .map(|_| 1000 + rng.below(100_000))
+            .collect();
+        let total: usize = layers.iter().sum();
+        let target = 0.5 + 4.0 * rng.uniform();
+        let mut budget = RateBudget::new(target, total);
+        for &params in &layers {
+            let assigned = budget.assign(params);
+            // achieved rate wiggles around the assignment
+            let achieved = (assigned + 0.2 * (rng.uniform() - 0.5)).max(0.05);
+            budget.charge(params, achieved);
+        }
+        assert!(budget.done());
+        let avg = budget.spent_average(total);
+        assert!(
+            (avg - target).abs() < 0.15,
+            "trial {trial}: avg {avg} vs target {target}"
+        );
+    }
+}
+
+#[test]
+fn dequant_scale_invariance() {
+    // moving scale between t and γ leaves Ŵ unchanged (the Alg. 4
+    // normalization relies on this)
+    let mut rng = Rng::new(5);
+    let (a, n) = (12usize, 9usize);
+    let q = watersic::quant::LayerQuant {
+        a,
+        n,
+        z: (0..a * n).map(|_| rng.below(9) as i32 - 4).collect(),
+        alphas: (0..n).map(|_| 0.1 + rng.uniform()).collect(),
+        gammas: (0..n).map(|_| 0.5 + rng.uniform()).collect(),
+        t: (0..a).map(|_| 0.5 + rng.uniform()).collect(),
+        entropy_bits: 0.0,
+        rate_bits: 0.0,
+        dead_cols: vec![],
+    };
+    let w1 = q.dequant();
+    let s = 2.7;
+    let mut q2 = q;
+    q2.t.iter_mut().for_each(|t| *t /= s);
+    q2.gammas.iter_mut().for_each(|g| *g *= s);
+    let w2 = q2.dequant();
+    assert!(w1.sub(&w2).max_abs() < 1e-12);
+}
+
+#[test]
+fn zsic_distortion_monotone_in_density() {
+    // finer lattices (smaller c) never increase distortion — 12 draws
+    for trial in 0..12u64 {
+        let mut rng = Rng::new(6000 + trial);
+        let (a, n) = (24 + rng.below(40), 8 + rng.below(24));
+        let sigma = random_spd(n, &mut rng);
+        let l = cholesky(&sigma).unwrap();
+        let w = Mat::from_fn(a, n, |_, _| rng.gaussian());
+        let y = matmul(&w, &l);
+        let d_at = |c: f64| {
+            let out = zsic(&y, &l, &watersic_alphas(&l, c), false, None);
+            out.resid.data.iter().map(|x| x * x).sum::<f64>()
+        };
+        let coarse = d_at(0.9);
+        let fine = d_at(0.15);
+        assert!(fine < coarse, "trial {trial}: {fine} !< {coarse}");
+    }
+}
