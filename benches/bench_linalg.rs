@@ -1,43 +1,173 @@
 //! Dense linear-algebra substrate throughput: gemm / Gram / Cholesky /
 //! triangular solve — the flop backbone of calibration and rescaler
 //! optimization.
+//!
+//! Benchmarks the packed micro-kernel generation AGAINST transcriptions
+//! of the seed scalar kernels (row-parallel ikj matmul with
+//! spawn-per-call threading; single-threaded triangle gram), and emits
+//! everything to `BENCH_linalg.json` so the perf trajectory is tracked
+//! from this PR onward.  Acceptance targets: ≥2× GFLOP/s on
+//! `matmul 512³` and ≥4× on `gram 2048x256` versus the seed kernels.
+//! The ratios are recorded as `speedup <shape>` JSON entries; set
+//! `WATERSIC_BENCH_ENFORCE=1` to turn them into hard gates (exit 1 on
+//! miss) — off by default because shared CI runners are too noisy to
+//! fail builds on.
 
 use std::time::Duration;
 
 use watersic::linalg::chol::{cholesky, solve_xlt_eq_b};
 use watersic::linalg::gemm::{gram, matmul, matmul_nt};
 use watersic::linalg::Mat;
-use watersic::util::bench::{report, Bench};
+use watersic::util::bench::{report, Bench, BenchLog};
+use watersic::util::json::Json;
 use watersic::util::rng::Rng;
+use watersic::util::threadpool::default_threads;
+
+// ---------------------------------------------------------------------
+// seed-kernel transcriptions (the pre-packing generation), kept here so
+// every bench run re-measures the baseline on the same machine
+
+/// Seed `matmul`: scalar ikj, BLOCK_K = 64, row-parallel with
+/// spawn-per-call scoped threads — faithful to the seed including its
+/// threading model.
+fn seed_matmul(a: &Mat, b: &Mat) -> Mat {
+    const BLOCK_K: usize = 64;
+    assert_eq!(a.cols, b.rows);
+    let mut c = Mat::zeros(a.rows, b.cols);
+    let n = b.cols;
+    let k = a.cols;
+    let threads = (if a.rows * n * k > 1 << 18 {
+        default_threads()
+    } else {
+        1
+    })
+    .min(a.rows.max(1));
+    let chunk = a.rows.div_ceil(threads);
+    let cdata = std::sync::atomic::AtomicPtr::new(c.data.as_mut_ptr());
+    std::thread::scope(|scope| {
+        for tid in 0..threads {
+            let lo = tid * chunk;
+            let hi = ((tid + 1) * chunk).min(a.rows);
+            if lo >= hi {
+                break;
+            }
+            let cdata = &cdata;
+            scope.spawn(move || {
+                let cptr = cdata.load(std::sync::atomic::Ordering::Relaxed);
+                for i in lo..hi {
+                    // SAFETY: disjoint row ranges per thread.
+                    let crow =
+                        unsafe { std::slice::from_raw_parts_mut(cptr.add(i * n), n) };
+                    crow.fill(0.0);
+                    let arow = a.row(i);
+                    for k0 in (0..k).step_by(BLOCK_K) {
+                        let k1 = (k0 + BLOCK_K).min(k);
+                        for kk in k0..k1 {
+                            let aik = arow[kk];
+                            if aik == 0.0 {
+                                continue;
+                            }
+                            let brow = b.row(kk);
+                            for j in 0..n {
+                                crow[j] += aik * brow[j];
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    });
+    c
+}
+
+/// Seed `gram`: single-threaded upper-triangle accumulation.
+fn seed_gram(a: &Mat) -> Mat {
+    let n = a.cols;
+    let mut c = Mat::zeros(n, n);
+    for r in 0..a.rows {
+        let row = a.row(r);
+        for i in 0..n {
+            let xi = row[i];
+            if xi == 0.0 {
+                continue;
+            }
+            let crow = c.row_mut(i);
+            for j in i..n {
+                crow[j] += xi * row[j];
+            }
+        }
+    }
+    for i in 0..n {
+        for j in 0..i {
+            c[(i, j)] = c[(j, i)];
+        }
+    }
+    c
+}
 
 fn main() {
-    println!("== bench_linalg: f64 dense kernels ==");
+    println!("== bench_linalg: f64 dense kernels (packed vs seed) ==");
     let mut rng = Rng::new(3);
+    let mut log = BenchLog::new("BENCH_linalg.json");
+    log.meta("bench", Json::Str("linalg".to_string()));
+
+    let mut packed_medians: Vec<(String, f64)> = Vec::new();
+    let mut seed_medians: Vec<(String, f64)> = Vec::new();
+
     for n in [64usize, 128, 256, 512] {
         let a = Mat::from_fn(n, n, |_, _| rng.gaussian());
         let b = Mat::from_fn(n, n, |_, _| rng.gaussian());
         let flops = 2.0 * (n * n * n) as f64;
+
         let s = Bench::new(&format!("matmul {n}³"))
             .with_budget(6, Duration::from_secs(2))
             .run(|| {
                 std::hint::black_box(matmul(&a, &b));
             });
         report(&s, Some((flops, "FLOP")));
+        log.record(&s, Some(flops), "packed");
+        packed_medians.push((s.name.clone(), s.median.as_secs_f64()));
+
+        let s = Bench::new(&format!("matmul {n}³ [seed]"))
+            .with_budget(4, Duration::from_secs(2))
+            .run(|| {
+                std::hint::black_box(seed_matmul(&a, &b));
+            });
+        report(&s, Some((flops, "FLOP")));
+        log.record(&s, Some(flops), "seed");
+        seed_medians.push((format!("matmul {n}³"), s.median.as_secs_f64()));
+
         let s = Bench::new(&format!("matmul_nt {n}³"))
             .with_budget(6, Duration::from_secs(2))
             .run(|| {
                 std::hint::black_box(matmul_nt(&a, &b));
             });
         report(&s, Some((flops, "FLOP")));
+        log.record(&s, Some(flops), "packed");
     }
+
     for n in [64usize, 128, 256] {
         let panel = Mat::from_fn(2048, n, |_, _| rng.gaussian());
+        let flops = 2048.0 * (n * n) as f64;
+
         let s = Bench::new(&format!("gram 2048x{n}"))
             .with_budget(6, Duration::from_secs(2))
             .run(|| {
                 std::hint::black_box(gram(&panel));
             });
-        report(&s, Some((2048.0 * (n * n) as f64, "FLOP")));
+        report(&s, Some((flops, "FLOP")));
+        log.record(&s, Some(flops), "packed");
+        packed_medians.push((s.name.clone(), s.median.as_secs_f64()));
+
+        let s = Bench::new(&format!("gram 2048x{n} [seed]"))
+            .with_budget(4, Duration::from_secs(2))
+            .run(|| {
+                std::hint::black_box(seed_gram(&panel));
+            });
+        report(&s, Some((flops, "FLOP")));
+        log.record(&s, Some(flops), "seed");
+        seed_medians.push((format!("gram 2048x{n}"), s.median.as_secs_f64()));
+
         let mut spd = gram(&panel).scale(1.0 / 2048.0);
         spd.add_diag(0.01);
         let s = Bench::new(&format!("cholesky {n}"))
@@ -46,6 +176,7 @@ fn main() {
                 std::hint::black_box(cholesky(&spd).unwrap());
             });
         report(&s, Some(((n * n * n) as f64 / 3.0, "FLOP")));
+        log.record(&s, Some((n * n * n) as f64 / 3.0), "packed");
         let l = cholesky(&spd).unwrap();
         let rhs = Mat::from_fn(256, n, |_, _| rng.gaussian());
         let s = Bench::new(&format!("trisolve 256x{n}"))
@@ -54,5 +185,49 @@ fn main() {
                 std::hint::black_box(solve_xlt_eq_b(&l, &rhs));
             });
         report(&s, Some((256.0 * (n * n) as f64, "FLOP")));
+        log.record(&s, Some(256.0 * (n * n) as f64), "packed");
+    }
+
+    // ---- derived speedups (seed median / packed median per shape)
+    println!("\n-- speedups vs seed kernels --");
+    let mut speedups: Vec<(String, f64)> = Vec::new();
+    for (name, seed_t) in &seed_medians {
+        if let Some((_, packed_t)) =
+            packed_medians.iter().find(|(n, _)| n == name)
+        {
+            if *packed_t > 0.0 {
+                let speedup = seed_t / packed_t;
+                println!("{name:44} {speedup:6.2}×");
+                log.note(&format!("speedup {name}"), speedup);
+                speedups.push((name.clone(), speedup));
+            }
+        }
+    }
+
+    match log.write() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("failed to write bench log: {e}"),
+    }
+
+    // opt-in hard gates (see module docs)
+    if std::env::var("WATERSIC_BENCH_ENFORCE").as_deref() == Ok("1") {
+        let gates = [("matmul 512³", 2.0), ("gram 2048x256", 4.0)];
+        let mut failed = false;
+        for (shape, min) in gates {
+            let got = speedups
+                .iter()
+                .find(|(n, _)| n == shape)
+                .map(|(_, s)| *s)
+                .unwrap_or(0.0);
+            if got < min {
+                eprintln!("GATE FAILED: {shape} speedup {got:.2}× < {min}×");
+                failed = true;
+            } else {
+                println!("gate ok: {shape} {got:.2}× ≥ {min}×");
+            }
+        }
+        if failed {
+            std::process::exit(1);
+        }
     }
 }

@@ -1,18 +1,26 @@
 //! End-to-end coordinator latency: full-model quantization wall time per
 //! algorithm (the paper's practical-cost axis), on the real trained
-//! picollama_s with artifacts when available.
+//! picollama_s with artifacts when available.  Emits
+//! `BENCH_pipeline.json` alongside the console table.
 
 use std::time::Duration;
 
 use watersic::coordinator::{quantize_model, Algo};
 use watersic::experiments::{llm::pipeline_opts, Ctx};
-use watersic::util::bench::{report, Bench};
+use watersic::util::bench::{report, Bench, BenchLog};
+use watersic::util::json::Json;
 
 fn main() -> anyhow::Result<()> {
     println!("== bench_pipeline: full-model quantization latency ==");
+    let mut log = BenchLog::new("BENCH_pipeline.json");
+    log.meta("bench", Json::Str("pipeline".to_string()));
     let ctx = Ctx::new(true, true)?;
     let Ok((cfg, teacher)) = ctx.load_model("picollama_s") else {
         println!("skipped: run `make artifacts` first");
+        log.meta("skipped", Json::Bool(true));
+        if let Ok(path) = log.write() {
+            println!("wrote {}", path.display());
+        }
         return Ok(());
     };
     let wiki = ctx.load_corpus("wiki")?;
@@ -34,6 +42,7 @@ fn main() -> anyhow::Result<()> {
             &s,
             Some((cfg.quantizable_params() as f64, "weights")),
         );
+        log.record(&s, None, "packed");
     }
     // the PJRT-vs-native ZSIC split inside the pipeline
     for use_engine in [false, true] {
@@ -51,6 +60,9 @@ fn main() -> anyhow::Result<()> {
             );
         });
         report(&s, Some((cfg.quantizable_params() as f64, "weights")));
+        log.record(&s, None, "packed");
     }
+    let path = log.write()?;
+    println!("wrote {}", path.display());
     Ok(())
 }

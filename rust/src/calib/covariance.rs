@@ -1,7 +1,14 @@
 //! Streaming (cross-)covariance accumulators over activation panels.
 //! Covariances here are *uncentered* second moments E[x xᵀ], matching
 //! the GPTQ/WaterSIC Hessian convention Σ_X = E[XXᵀ].
+//!
+//! Panels stream through the packed gemm substrate: the symmetric
+//! auto-moment case (same panel, unit weights) goes through the
+//! blocked-symmetric `gram_acc` (half the flops, parallel blocks), and
+//! the general/weighted case through the packed `matmul_tn_acc`
+//! (C += XᵀY) with row weights folded into a scaled copy of X.
 
+use crate::linalg::gemm::{gram_acc, matmul_tn_acc};
 use crate::linalg::Mat;
 
 /// Accumulates Σ = E[x yᵀ] from row panels, optionally with per-row
@@ -12,6 +19,9 @@ pub struct CovAccum {
     pub ny: usize,
     sum: Mat,
     weight: f64,
+    /// true while every update so far used the mirror-symmetric gram
+    /// path — the invariant that makes the next such update valid
+    symmetric: bool,
 }
 
 impl CovAccum {
@@ -21,6 +31,7 @@ impl CovAccum {
             ny,
             sum: Mat::zeros(nx, ny),
             weight: 0.0,
+            symmetric: true,
         }
     }
 
@@ -34,25 +45,35 @@ impl CovAccum {
         assert_eq!(x.rows, y.rows);
         assert_eq!(x.cols, self.nx);
         assert_eq!(y.cols, self.ny);
-        for r in 0..x.rows {
-            let wr = w.map(|w| w[r]).unwrap_or(1.0);
-            if wr == 0.0 {
-                continue;
+        let wsum = match w {
+            Some(w) => {
+                assert_eq!(w.len(), x.rows);
+                w.iter().sum::<f64>()
             }
-            let xr = x.row(r);
-            let yr = y.row(r);
-            for i in 0..self.nx {
-                let xi = wr * xr[i];
-                if xi == 0.0 {
-                    continue;
-                }
-                let srow = self.sum.row_mut(i);
-                for j in 0..self.ny {
-                    srow[j] += xi * yr[j];
+            None => x.rows as f64,
+        };
+        let same_panel = std::ptr::eq(x, y) && self.nx == self.ny;
+        if w.is_none() && same_panel && self.symmetric {
+            gram_acc(x, &mut self.sum);
+        } else {
+            self.symmetric = false;
+            match w {
+                None => matmul_tn_acc(x, y, &mut self.sum),
+                Some(w) => {
+                    // fold the row weights into one factor: Σ += Xᵀdiag(w)Y
+                    let mut xs = x.clone();
+                    for (r, &wr) in w.iter().enumerate() {
+                        if wr == 0.0 {
+                            xs.row_mut(r).fill(0.0);
+                        } else if wr != 1.0 {
+                            xs.row_mut(r).iter_mut().for_each(|v| *v *= wr);
+                        }
+                    }
+                    matmul_tn_acc(&xs, y, &mut self.sum);
                 }
             }
-            self.weight += wr;
         }
+        self.weight += wsum;
     }
 
     /// Normalized covariance estimate.

@@ -12,6 +12,7 @@ use crate::model::transformer::{forward, input_group, Capture, ForwardOpts};
 use crate::model::weights::Weights;
 use crate::model::ModelConfig;
 use crate::quant::LayerStats;
+use crate::util::threadpool::{default_threads, parallel_map};
 
 use super::attention::row_weights;
 use super::covariance::CovAccum;
@@ -53,29 +54,26 @@ impl CalibSet {
         batches: Vec<Vec<i32>>,
         b: usize,
     ) -> CalibSet {
-        let caps: Vec<Capture> = batches
-            .iter()
-            .map(|toks| {
-                forward(
-                    cfg,
-                    teacher,
-                    toks,
-                    b,
-                    cfg.ctx,
-                    &ForwardOpts {
-                        capture: true,
-                        tape: false,
-                    },
-                )
-            })
-            .map(|o| o.capture.unwrap())
-            .collect();
-        let logits: Vec<Mat> = batches
-            .iter()
-            .map(|toks| {
-                forward(cfg, teacher, toks, b, cfg.ctx, &ForwardOpts::default()).logits
-            })
-            .collect();
+        // batches are independent: fan the teacher passes out over the
+        // persistent pool; one capture pass yields both the panels and
+        // the logits (the seed ran a second forward for the latter)
+        let threads = default_threads().min(batches.len().max(1));
+        let refs: Vec<&Vec<i32>> = batches.iter().collect();
+        let outs: Vec<(Capture, Mat)> = parallel_map(refs, threads, |toks| {
+            let out = forward(
+                cfg,
+                teacher,
+                toks,
+                b,
+                cfg.ctx,
+                &ForwardOpts {
+                    capture: true,
+                    tape: false,
+                },
+            );
+            (out.capture.unwrap(), out.logits)
+        });
+        let (caps, logits): (Vec<Capture>, Vec<Mat>) = outs.into_iter().unzip();
         CalibSet {
             batches,
             b,
@@ -84,26 +82,26 @@ impl CalibSet {
         }
     }
 
-    /// Run the (partially quantized) student over the calibration set.
+    /// Run the (partially quantized) student over the calibration set
+    /// (batch-parallel over the persistent pool).
     pub fn student_pass(&self, cfg: &ModelConfig, student: &Weights) -> Vec<Capture> {
-        self.batches
-            .iter()
-            .map(|toks| {
-                forward(
-                    cfg,
-                    student,
-                    toks,
-                    self.b,
-                    cfg.ctx,
-                    &ForwardOpts {
-                        capture: true,
-                        tape: false,
-                    },
-                )
-                .capture
-                .unwrap()
-            })
-            .collect()
+        let threads = default_threads().min(self.batches.len().max(1));
+        let refs: Vec<&Vec<i32>> = self.batches.iter().collect();
+        parallel_map(refs, threads, |toks| {
+            forward(
+                cfg,
+                student,
+                toks,
+                self.b,
+                cfg.ctx,
+                &ForwardOpts {
+                    capture: true,
+                    tape: false,
+                },
+            )
+            .capture
+            .unwrap()
+        })
     }
 
     /// Assemble `LayerStats` for one quantizable matrix.

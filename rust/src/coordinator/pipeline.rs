@@ -308,10 +308,20 @@ pub fn quantize_model(
                 format!("{p}ffn.w2"),
             ])
             .collect();
-        for name in order {
+        // the drift statistics depend only on the per-layer captures,
+        // not on the running quantization — assemble all 7 in parallel
+        // before the (inherently sequential) budgeted quantization loop
+        let stats_threads =
+            crate::util::threadpool::default_threads().min(order.len());
+        let stats_list: Vec<LayerStats> = crate::util::threadpool::parallel_map(
+            order.clone(),
+            stats_threads,
+            |name| cs.stats_for(cfg, &name, &scaps, stats_opts),
+        );
+        for (name, precomputed) in order.into_iter().zip(stats_list) {
             let w = teacher.get(&name).clone();
             let is_qkv = name.contains("attn.w") && !name.ends_with("wo");
-            let mut stats = cs.stats_for(cfg, &name, &scaps, stats_opts);
+            let mut stats = precomputed;
             if opts.mixing && opts.algo == Algo::WaterSic && is_qkv {
                 let uniform = cs.stats_for(
                     cfg,

@@ -1,13 +1,307 @@
-//! Blocked matrix multiplication and friends.  This is an L3 hot path
-//! (covariance accumulation, drift statistics, rescaler objectives), so
-//! the kernel is cache-blocked with an ikj inner order that keeps the
-//! C row hot and lets the compiler autovectorize, and row-parallel
-//! across threads.
+//! Packed, cache-blocked matrix kernels.  This is an L3 hot path
+//! (covariance accumulation, drift statistics, rescaler objectives,
+//! GPTQ/ZSIC panel updates), so the dense products run through a
+//! BLIS-style three-level blocking scheme:
+//!
+//! * `KC`×`NC` panels of B and `MC`×`KC` blocks of A are **packed**
+//!   into contiguous buffers laid out exactly as the micro-kernel
+//!   consumes them (A in `MR`-row column-interleaved panels, B in
+//!   `NR`-column row-interleaved panels), so the inner loop is pure
+//!   sequential loads;
+//! * an unrolled `MR`×`NR` = 4×8 register-tile **micro-kernel**
+//!   accumulates into 32 scalar f64 accumulators the compiler keeps in
+//!   vector registers (autovectorizes to AVX/NEON without intrinsics);
+//! * the `MC`-row blocks are distributed over the persistent thread
+//!   pool (`util::threadpool`) with chunk stealing.
+//!
+//! Determinism: every C element is produced by exactly one micro-tile,
+//! and the K reduction order (KC blocks ascending, k ascending inside)
+//! is independent of the thread count — threaded and single-threaded
+//! runs are bit-for-bit identical.
+//!
+//! Operand views are `Panel`s (base pointer + row stride + optional
+//! transpose), so the same driver serves `matmul`, `matmul_nt`
+//! (A·Bᵀ without materializing the transpose), `gram` (Aᵀ·A by
+//! symmetric blocks), the covariance accumulators (C += XᵀY), and the
+//! ZSIC deferred rank-B panel update (C -= S·L on strided views).
+
+use std::sync::atomic::{AtomicPtr, Ordering};
 
 use super::Mat;
 use crate::util::threadpool::{default_threads, parallel_ranges};
 
-const BLOCK_K: usize = 64;
+/// Register tile: MR×NR accumulators (MR is hard-wired into the
+/// micro-kernel unroll).
+const MR: usize = 4;
+const NR: usize = 8;
+/// Rows of A per cache block (multiple of MR; A block = MC×KC ≈ 128 KiB
+/// — L2-resident).
+const MC: usize = 64;
+/// K extent per packing pass (B panel = KC×NC ≈ 2 MiB — L3-resident).
+const KC: usize = 256;
+/// Columns of B per packing pass.
+const NC: usize = 1024;
+/// Below this m·k·n the packing overhead dominates — use the simple
+/// serial kernel.
+const SMALL_GEMM: usize = 1 << 14;
+
+const _: () = assert!(MC % MR == 0, "MC must be a multiple of MR");
+
+/// Borrowed view of an m×k operand: element (i, j) lives at
+/// `data[i*ld + j]`, or at `data[j*ld + i]` when `trans` is set (the
+/// view then presents the transpose of the underlying storage).
+#[derive(Clone, Copy)]
+struct Panel<'a> {
+    data: &'a [f64],
+    /// operator rows (after any transpose)
+    rows: usize,
+    /// operator cols (after any transpose)
+    cols: usize,
+    /// row stride of the underlying storage
+    ld: usize,
+    trans: bool,
+}
+
+impl<'a> Panel<'a> {
+    fn normal(m: &'a Mat) -> Panel<'a> {
+        Panel {
+            data: &m.data,
+            rows: m.rows,
+            cols: m.cols,
+            ld: m.cols,
+            trans: false,
+        }
+    }
+
+    fn transposed(m: &'a Mat) -> Panel<'a> {
+        Panel {
+            data: &m.data,
+            rows: m.cols,
+            cols: m.rows,
+            ld: m.cols,
+            trans: true,
+        }
+    }
+
+    #[inline(always)]
+    fn at(&self, i: usize, j: usize) -> f64 {
+        if self.trans {
+            self.data[j * self.ld + i]
+        } else {
+            self.data[i * self.ld + j]
+        }
+    }
+}
+
+/// 4×8 register-tile micro-kernel over packed panels.
+///
+/// `ap` holds `kc` steps of MR interleaved A values, `bp` holds `kc`
+/// steps of NR interleaved B values.  The full MR×NR accumulator is
+/// always computed (panels are zero-padded); only the `mr`×`nr` valid
+/// corner is written back.
+///
+/// # Safety
+/// `ap`/`bp` must be valid for `kc*MR` / `kc*NR` reads; `c` must be
+/// valid for the `mr`×`nr` tile at row stride `ldc`, with exclusive
+/// access.
+#[inline(always)]
+unsafe fn microkernel(
+    kc: usize,
+    ap: *const f64,
+    bp: *const f64,
+    c: *mut f64,
+    ldc: usize,
+    mr: usize,
+    nr: usize,
+    store: bool,
+    alpha: f64,
+) {
+    let mut acc = [[0.0f64; NR]; MR];
+    for kk in 0..kc {
+        let apk = ap.add(kk * MR);
+        let bpk = bp.add(kk * NR);
+        let a0 = *apk;
+        let a1 = *apk.add(1);
+        let a2 = *apk.add(2);
+        let a3 = *apk.add(3);
+        for cc in 0..NR {
+            let bv = *bpk.add(cc);
+            acc[0][cc] += a0 * bv;
+            acc[1][cc] += a1 * bv;
+            acc[2][cc] += a2 * bv;
+            acc[3][cc] += a3 * bv;
+        }
+    }
+    for r in 0..mr {
+        let crow = c.add(r * ldc);
+        for cc in 0..nr {
+            let v = alpha * acc[r][cc];
+            let dst = crow.add(cc);
+            if store {
+                *dst = v;
+            } else {
+                *dst += v;
+            }
+        }
+    }
+}
+
+/// Blocked packed GEMM: C ⟵ α·A·B (`accumulate = false`) or
+/// C += α·A·B (`accumulate = true`), with C row-major at stride `ldc`.
+///
+/// # Safety
+/// `c` must be valid for `(m-1)*ldc + n` elements with exclusive
+/// access for the duration of the call.
+unsafe fn gemm_driver(
+    a: Panel,
+    b: Panel,
+    c: *mut f64,
+    ldc: usize,
+    accumulate: bool,
+    alpha: f64,
+    threads: usize,
+) {
+    let (m, k) = (a.rows, a.cols);
+    let n = b.cols;
+    debug_assert_eq!(b.rows, k, "gemm driver inner-dim mismatch");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        if !accumulate {
+            for i in 0..m {
+                std::slice::from_raw_parts_mut(c.add(i * ldc), n).fill(0.0);
+            }
+        }
+        return;
+    }
+
+    let cshared = AtomicPtr::new(c);
+    let nblocks = m.div_ceil(MC);
+    // one B-pack buffer reused across every (jc, pc) pass — the pack
+    // loops overwrite every slot they use (padding written explicitly)
+    let mut bpack = vec![0.0f64; (NC.min(n).div_ceil(NR) * NR) * KC.min(k)];
+    for jc0 in (0..n).step_by(NC) {
+        let nc_eff = NC.min(n - jc0);
+        let ncr = nc_eff.div_ceil(NR) * NR;
+        for pc0 in (0..k).step_by(KC) {
+            let kc_eff = KC.min(k - pc0);
+            let store = pc0 == 0 && !accumulate;
+
+            // ---- pack B: ncr/NR panels of NR interleaved columns
+            {
+                let bp = &mut bpack[..ncr * kc_eff];
+                for q in 0..ncr / NR {
+                    let joff = jc0 + q * NR;
+                    let dst0 = q * NR * kc_eff;
+                    for kk in 0..kc_eff {
+                        let dst = dst0 + kk * NR;
+                        for cc in 0..NR {
+                            let j = joff + cc;
+                            bp[dst + cc] = if j < jc0 + nc_eff {
+                                b.at(pc0 + kk, j)
+                            } else {
+                                0.0
+                            };
+                        }
+                    }
+                }
+            }
+
+            let bpack_ref = &bpack[..ncr * kc_eff];
+            parallel_ranges(nblocks, threads, |range| {
+                let cbase = cshared.load(Ordering::Relaxed);
+                let mut apack = vec![0.0f64; MC * kc_eff];
+                for blk in range {
+                    let ic0 = blk * MC;
+                    let mc_eff = MC.min(m - ic0);
+                    let mcr = mc_eff.div_ceil(MR) * MR;
+
+                    // ---- pack A block: mcr/MR panels of MR rows
+                    for p in 0..mcr / MR {
+                        let ioff = ic0 + p * MR;
+                        let dst0 = p * MR * kc_eff;
+                        for kk in 0..kc_eff {
+                            let dst = dst0 + kk * MR;
+                            for r in 0..MR {
+                                let i = ioff + r;
+                                apack[dst + r] = if i < ic0 + mc_eff {
+                                    a.at(i, pc0 + kk)
+                                } else {
+                                    0.0
+                                };
+                            }
+                        }
+                    }
+
+                    // ---- micro-tile sweep
+                    for q in 0..ncr / NR {
+                        let j0 = q * NR;
+                        let nr_eff = NR.min(nc_eff - j0);
+                        for p in 0..mcr / MR {
+                            let i0 = p * MR;
+                            let mr_eff = MR.min(mc_eff - i0);
+                            // SAFETY: pack offsets are in range by
+                            // construction; C tiles of distinct blocks
+                            // are disjoint row ranges.
+                            unsafe {
+                                let ap = apack.as_ptr().add(p * MR * kc_eff);
+                                let bp = bpack_ref.as_ptr().add(q * NR * kc_eff);
+                                let ctile =
+                                    cbase.add((ic0 + i0) * ldc + jc0 + j0);
+                                microkernel(
+                                    kc_eff, ap, bp, ctile, ldc, mr_eff, nr_eff,
+                                    store, alpha,
+                                );
+                            }
+                        }
+                    }
+                }
+            });
+        }
+    }
+}
+
+fn threads_for(work: usize) -> usize {
+    if work > 1 << 18 {
+        default_threads()
+    } else {
+        1
+    }
+}
+
+/// Serial fallback for small products (ikj order, C row hot).
+fn matmul_small_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    let n = b.cols;
+    let k = a.cols;
+    for i in 0..a.rows {
+        let crow = c.row_mut(i);
+        crow.fill(0.0);
+        let arow = a.row(i);
+        for kk in 0..k {
+            let aik = arow[kk];
+            let brow = b.row(kk);
+            for j in 0..n {
+                crow[j] += aik * brow[j];
+            }
+        }
+    }
+}
+
+/// Sampled overflow check (debug builds only): a ±∞ in C means the
+/// product overflowed somewhere.  O(16) instead of the O(mn) full scan
+/// the seed kernel paid on every call.
+fn debug_check_overflow(c: &Mat) {
+    if cfg!(debug_assertions) && !c.data.is_empty() {
+        let step = (c.data.len() / 16).max(1);
+        for idx in (0..c.data.len()).step_by(step) {
+            debug_assert!(
+                !c.data[idx].is_infinite(),
+                "gemm output overflowed to ±∞ at flat index {idx}"
+            );
+        }
+    }
+}
 
 /// C = A · B
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
@@ -17,94 +311,258 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     c
 }
 
+/// C = A · B with an explicit thread count — the threaded and
+/// single-threaded results are bit-for-bit identical (see module docs);
+/// exposed for determinism tests and tuning.
+pub fn matmul_with_threads(a: &Mat, b: &Mat, threads: usize) -> Mat {
+    assert_eq!(a.cols, b.rows, "gemm shape mismatch");
+    let mut c = Mat::zeros(a.rows, b.cols);
+    matmul_into_threads(a, b, &mut c, threads);
+    c
+}
+
 /// C = A · B (C pre-allocated, overwritten).
 pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
+    let threads = threads_for(a.rows * b.cols * a.cols);
+    matmul_into_threads(a, b, c, threads);
+}
+
+fn matmul_into_threads(a: &Mat, b: &Mat, c: &mut Mat, threads: usize) {
     assert_eq!(a.cols, b.rows);
     assert_eq!((c.rows, c.cols), (a.rows, b.cols));
-    let n = b.cols;
-    let k = a.cols;
-    let threads = if a.rows * n * k > 1 << 18 {
-        default_threads()
+    if a.rows * b.cols * a.cols <= SMALL_GEMM {
+        matmul_small_into(a, b, c);
     } else {
-        1
-    };
-    let cdata = std::sync::atomic::AtomicPtr::new(c.data.as_mut_ptr());
-    parallel_ranges(a.rows, threads, |range| {
-        let cptr = cdata.load(std::sync::atomic::Ordering::Relaxed);
-        for i in range {
-            // SAFETY: disjoint row ranges per thread.
-            let crow = unsafe { std::slice::from_raw_parts_mut(cptr.add(i * n), n) };
-            crow.fill(0.0);
-            let arow = a.row(i);
-            for k0 in (0..k).step_by(BLOCK_K) {
-                let k1 = (k0 + BLOCK_K).min(k);
-                for kk in k0..k1 {
-                    let aik = arow[kk];
-                    if aik == 0.0 {
-                        continue;
-                    }
-                    let brow = b.row(kk);
-                    for j in 0..n {
-                        crow[j] += aik * brow[j];
-                    }
-                }
-            }
+        let ldc = c.cols;
+        // SAFETY: c.data is exactly rows×cols and exclusively borrowed.
+        unsafe {
+            gemm_driver(
+                Panel::normal(a),
+                Panel::normal(b),
+                c.data.as_mut_ptr(),
+                ldc,
+                false,
+                1.0,
+                threads,
+            );
         }
-    });
-    c
-        .data
-        .iter()
-        .for_each(|x| debug_assert!(x.is_finite() || x.is_nan()));
+    }
+    debug_check_overflow(c);
 }
 
 /// C = A · Bᵀ without materializing the transpose.
 pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols, b.cols, "gemm_nt shape mismatch");
-    let mut c = Mat::zeros(a.rows, b.rows);
     let n = b.rows;
-    let threads = if a.rows * n * a.cols > 1 << 18 {
-        default_threads()
-    } else {
-        1
-    };
-    let cdata = std::sync::atomic::AtomicPtr::new(c.data.as_mut_ptr());
-    parallel_ranges(a.rows, threads, |range| {
-        let cptr = cdata.load(std::sync::atomic::Ordering::Relaxed);
-        for i in range {
-            let crow = unsafe { std::slice::from_raw_parts_mut(cptr.add(i * n), n) };
+    let mut c = Mat::zeros(a.rows, n);
+    if a.rows * n * a.cols <= SMALL_GEMM {
+        for i in 0..a.rows {
             let arow = a.row(i);
+            let crow = c.row_mut(i);
             for j in 0..n {
                 crow[j] = super::dot(arow, b.row(j));
             }
         }
-    });
+    } else {
+        let threads = threads_for(a.rows * n * a.cols);
+        // SAFETY: c.data is exactly rows×cols and exclusively borrowed.
+        unsafe {
+            gemm_driver(
+                Panel::normal(a),
+                Panel::transposed(b),
+                c.data.as_mut_ptr(),
+                n,
+                false,
+                1.0,
+                threads,
+            );
+        }
+    }
+    debug_check_overflow(&c);
     c
 }
 
-/// C = Aᵀ · A (Gram matrix), exploiting symmetry.  The covariance
-/// accumulator reduces to this on activation panels.
-pub fn gram(a: &Mat) -> Mat {
-    let n = a.cols;
-    let mut c = Mat::zeros(n, n);
-    for r in 0..a.rows {
-        let row = a.row(r);
-        for i in 0..n {
-            let xi = row[i];
-            if xi == 0.0 {
-                continue;
-            }
-            let crow = c.row_mut(i);
-            for j in i..n {
-                crow[j] += xi * row[j];
+/// C += Xᵀ · Y (cross-moment accumulation; X is r×m, Y is r×n, C is
+/// m×n).  The covariance accumulators stream panels through this.
+pub fn matmul_tn_acc(x: &Mat, y: &Mat, c: &mut Mat) {
+    assert_eq!(x.rows, y.rows, "gemm_tn shape mismatch");
+    assert_eq!((c.rows, c.cols), (x.cols, y.cols));
+    let (m, k, n) = (x.cols, x.rows, y.cols);
+    if m * k * n <= SMALL_GEMM {
+        for r in 0..k {
+            let xr = x.row(r);
+            let yr = y.row(r);
+            for i in 0..m {
+                let xi = xr[i];
+                if xi == 0.0 {
+                    continue;
+                }
+                let crow = c.row_mut(i);
+                for j in 0..n {
+                    crow[j] += xi * yr[j];
+                }
             }
         }
+        return;
     }
-    for i in 0..n {
+    let threads = threads_for(m * k * n);
+    // SAFETY: c.data is exactly m×n and exclusively borrowed.
+    unsafe {
+        gemm_driver(
+            Panel::transposed(x),
+            Panel::normal(y),
+            c.data.as_mut_ptr(),
+            n,
+            true,
+            1.0,
+            threads,
+        );
+    }
+}
+
+/// C = Aᵀ · A (Gram matrix), exploiting symmetry: only upper-triangle
+/// blocks are computed (in parallel), the strict lower triangle is
+/// mirrored.  The covariance accumulator reduces to this on activation
+/// panels.
+pub fn gram(a: &Mat) -> Mat {
+    gram_with_threads(a, threads_for(a.rows * a.cols * a.cols))
+}
+
+/// [`gram`] with an explicit thread count (bit-for-bit identical across
+/// thread counts; exposed for determinism tests and tuning).
+pub fn gram_with_threads(a: &Mat, threads: usize) -> Mat {
+    let n = a.cols;
+    let mut c = Mat::zeros(n, n);
+    syrk_upper(a, &mut c, threads);
+    mirror_lower(&mut c);
+    c
+}
+
+/// C += Aᵀ · A for a symmetric accumulator.  C must be exactly
+/// symmetric on entry (e.g. zero, or only ever updated through this
+/// function): the update computes upper-triangle blocks and mirrors,
+/// which preserves exact symmetry.
+pub fn gram_acc(a: &Mat, c: &mut Mat) {
+    assert_eq!((c.rows, c.cols), (a.cols, a.cols), "gram_acc shape");
+    syrk_upper(a, c, threads_for(a.rows * a.cols * a.cols));
+    mirror_lower(c);
+}
+
+/// Accumulate the upper triangle (incl. diagonal blocks in full) of
+/// Aᵀ·A into C.
+fn syrk_upper(a: &Mat, c: &mut Mat, threads: usize) {
+    let n = a.cols;
+    let m = a.rows;
+    if n == 0 || m == 0 {
+        return;
+    }
+    if m * n * n <= SMALL_GEMM {
+        // serial triangle, row-streaming
+        for r in 0..m {
+            let row = a.row(r);
+            for i in 0..n {
+                let xi = row[i];
+                if xi == 0.0 {
+                    continue;
+                }
+                let crow = c.row_mut(i);
+                for j in i..n {
+                    crow[j] += xi * row[j];
+                }
+            }
+        }
+        return;
+    }
+
+    // output-block edge for the symmetric sweep
+    const GB: usize = 64;
+    let nb = n.div_ceil(GB);
+    let pairs: Vec<(usize, usize)> = (0..nb)
+        .flat_map(|i| (i..nb).map(move |j| (i, j)))
+        .collect();
+    let cptr = AtomicPtr::new(c.data.as_mut_ptr());
+    let adata = &a.data;
+    parallel_ranges(pairs.len(), threads, |range| {
+        let base = cptr.load(Ordering::Relaxed);
+        for t in range {
+            let (bi, bj) = pairs[t];
+            let i0 = bi * GB;
+            let i1 = ((bi + 1) * GB).min(n);
+            let j0 = bj * GB;
+            let j1 = ((bj + 1) * GB).min(n);
+            // C[i0..i1, j0..j1] += A[:, i0..i1]ᵀ · A[:, j0..j1]
+            let at = Panel {
+                data: &adata[i0..],
+                rows: i1 - i0,
+                cols: m,
+                ld: n,
+                trans: true,
+            };
+            let ap = Panel {
+                data: &adata[j0..],
+                rows: m,
+                cols: j1 - j0,
+                ld: n,
+                trans: false,
+            };
+            // SAFETY: block (bi, bj) owns the disjoint C region
+            // [i0..i1)×[j0..j1); serial inner driver (threads = 1).
+            unsafe {
+                gemm_driver(at, ap, base.add(i0 * n + j0), n, true, 1.0, 1);
+            }
+        }
+    });
+}
+
+fn mirror_lower(c: &mut Mat) {
+    for i in 1..c.rows {
         for j in 0..i {
             c[(i, j)] = c[(j, i)];
         }
     }
-    c
+}
+
+/// C += α · A·B over raw strided views (A is m×k at stride `a_ld`, B is
+/// k×n at stride `b_ld`, C is m×n at stride `c_ld`).  Fused panel
+/// update for the ZSIC/GPTQ deferred rank-B interference subtraction —
+/// the α = −1 path replaces the per-element axpy sweep.
+pub(crate) fn gemm_acc_strided(
+    m: usize,
+    k: usize,
+    n: usize,
+    a_data: &[f64],
+    a_ld: usize,
+    b_data: &[f64],
+    b_ld: usize,
+    c_data: &mut [f64],
+    c_ld: usize,
+    alpha: f64,
+    threads: usize,
+) {
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    debug_assert!(a_data.len() >= (m - 1) * a_ld + k);
+    debug_assert!(b_data.len() >= (k - 1) * b_ld + n);
+    debug_assert!(c_data.len() >= (m - 1) * c_ld + n);
+    let ap = Panel {
+        data: a_data,
+        rows: m,
+        cols: k,
+        ld: a_ld,
+        trans: false,
+    };
+    let bp = Panel {
+        data: b_data,
+        rows: k,
+        cols: n,
+        ld: b_ld,
+        trans: false,
+    };
+    // SAFETY: extents checked above; c_data exclusively borrowed.
+    unsafe {
+        gemm_driver(ap, bp, c_data.as_mut_ptr(), c_ld, true, alpha, threads);
+    }
 }
 
 /// y = M · x
@@ -175,10 +633,72 @@ mod tests {
     }
 
     #[test]
+    fn matmul_matches_naive_nondivisible_tiles() {
+        // shapes straddling every tile edge: MR=4, NR=8, MC=64, KC=256
+        let mut rng = Rng::new(41);
+        for (m, k, n) in [
+            (5, 70, 9),      // nothing divides
+            (63, 65, 67),    // just under/over MC
+            (129, 257, 33),  // crosses MC and KC boundaries
+            (8, 600, 8),     // exact tile, K spans three KC blocks
+            (66, 40, 1030),  // crosses the NC panel edge
+        ] {
+            let a = randm(m, k, &mut rng);
+            let b = randm(k, n, &mut rng);
+            let c = matmul(&a, &b);
+            let c0 = naive(&a, &b);
+            assert!(c.sub(&c0).max_abs() < 1e-9, "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn matmul_degenerate_shapes() {
+        let mut rng = Rng::new(42);
+        // empty result dimensions
+        let a = Mat::zeros(0, 7);
+        let b = randm(7, 5, &mut rng);
+        let c = matmul(&a, &b);
+        assert_eq!((c.rows, c.cols), (0, 5));
+        // empty inner dimension → exact zeros
+        let a = Mat::zeros(3, 0);
+        let b = Mat::zeros(0, 4);
+        let c = matmul(&a, &b);
+        assert!(c.data.iter().all(|&x| x == 0.0));
+        // single row / single column
+        let a = randm(1, 200, &mut rng);
+        let b = randm(200, 100, &mut rng);
+        assert!(matmul(&a, &b).sub(&naive(&a, &b)).max_abs() < 1e-9);
+        let b1 = randm(200, 1, &mut rng);
+        assert!(matmul(&a, &b1).sub(&naive(&a, &b1)).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn threaded_matches_single_thread_bitwise() {
+        // same tile decomposition and K order regardless of thread
+        // count ⇒ bit-for-bit equality, not just tolerance
+        let mut rng = Rng::new(43);
+        let a = randm(150, 170, &mut rng);
+        let b = randm(170, 130, &mut rng);
+        let c1 = matmul_with_threads(&a, &b, 1);
+        let c8 = matmul_with_threads(&a, &b, 8);
+        assert_eq!(c1.data, c8.data, "threaded gemm must be deterministic");
+        let p = randm(300, 90, &mut rng);
+        let g1 = gram_with_threads(&p, 1);
+        let g8 = gram_with_threads(&p, 8);
+        assert_eq!(g1.data, g8.data, "threaded gram must be deterministic");
+    }
+
+    #[test]
     fn matmul_nt_matches() {
         let mut rng = Rng::new(2);
         let a = randm(13, 21, &mut rng);
         let b = randm(8, 21, &mut rng);
+        let c = matmul_nt(&a, &b);
+        let c0 = naive(&a, &b.transpose());
+        assert!(c.sub(&c0).max_abs() < 1e-9);
+        // large enough to hit the packed transposed-B path
+        let a = randm(70, 90, &mut rng);
+        let b = randm(110, 90, &mut rng);
         let c = matmul_nt(&a, &b);
         let c0 = naive(&a, &b.transpose());
         assert!(c.sub(&c0).max_abs() < 1e-9);
@@ -197,6 +717,80 @@ mod tests {
                 assert_eq!(g[(i, j)], g[(j, i)]);
             }
         }
+    }
+
+    #[test]
+    fn gram_packed_path_matches_and_is_symmetric() {
+        // big enough for the blocked symmetric sweep, non-divisible n
+        let mut rng = Rng::new(44);
+        let a = randm(200, 70, &mut rng);
+        let g = gram(&a);
+        let g0 = naive(&a.transpose(), &a);
+        assert!(g.sub(&g0).max_abs() < 1e-9);
+        for i in 0..70 {
+            for j in 0..70 {
+                assert_eq!(g[(i, j)], g[(j, i)]);
+            }
+        }
+        // and across the GB=64 block edge with >1 block in each dim
+        let a = randm(150, 130, &mut rng);
+        let g = gram(&a);
+        let g0 = naive(&a.transpose(), &a);
+        assert!(g.sub(&g0).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn gram_acc_accumulates() {
+        let mut rng = Rng::new(45);
+        let a = randm(120, 40, &mut rng);
+        let b = randm(80, 40, &mut rng);
+        let mut acc = Mat::zeros(40, 40);
+        gram_acc(&a, &mut acc);
+        gram_acc(&b, &mut acc);
+        let expect = naive(&a.transpose(), &a).add(&naive(&b.transpose(), &b));
+        assert!(acc.sub(&expect).max_abs() < 1e-9);
+        for i in 0..40 {
+            for j in 0..40 {
+                assert_eq!(acc[(i, j)], acc[(j, i)]);
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_tn_acc_matches() {
+        let mut rng = Rng::new(46);
+        for (r, m, n) in [(30, 6, 8), (120, 40, 50)] {
+            let x = randm(r, m, &mut rng);
+            let y = randm(r, n, &mut rng);
+            let mut c = Mat::zeros(m, n);
+            matmul_tn_acc(&x, &y, &mut c);
+            matmul_tn_acc(&x, &y, &mut c); // accumulate twice
+            let expect = naive(&x.transpose(), &y).scale(2.0);
+            assert!(c.sub(&expect).max_abs() < 1e-9, "{r}x{m}x{n}");
+        }
+    }
+
+    #[test]
+    fn strided_acc_matches_axpy_reference() {
+        // emulate the ZSIC deferred update: C[:, :blo] -= S · L-block
+        let mut rng = Rng::new(47);
+        let (a, bw, blo, ld) = (40, 16, 50, 64);
+        let s = randm(a, ld, &mut rng); // only first bw cols used
+        let l = randm(bw, blo, &mut rng);
+        let mut c = randm(a, blo, &mut rng);
+        let mut c_ref = c.clone();
+        for r in 0..a {
+            for k in 0..bw {
+                let coeff = s[(r, k)];
+                for j in 0..blo {
+                    c_ref[(r, j)] -= coeff * l[(k, j)];
+                }
+            }
+        }
+        gemm_acc_strided(
+            a, bw, blo, &s.data, ld, &l.data, blo, &mut c.data, blo, -1.0, 2,
+        );
+        assert!(c.sub(&c_ref).max_abs() < 1e-9);
     }
 
     #[test]

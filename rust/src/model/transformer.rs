@@ -229,21 +229,32 @@ pub fn forward(
             vs.push(split(&vf, h));
         }
 
-        // attention per (batch, head)
-        let mut ctxcat = Mat::zeros(rows, d);
-        let mut probs_store: Vec<Mat> = Vec::new();
-        let mut probs_flat: Vec<f64> = if opts.capture {
-            Vec::with_capacity(b * nh * t * t)
-        } else {
-            Vec::new()
-        };
-        for bi in 0..b {
-            let base = bi * t;
-            for h in 0..nh {
+        // attention per (batch, head) — independent tasks, fanned out
+        // over the persistent pool and scattered back in (bi, h) order
+        // so captures/tapes are identical to the serial sweep
+        let pairs: Vec<(usize, usize)> = (0..b)
+            .flat_map(|bi| (0..nh).map(move |h| (bi, h)))
+            .collect();
+        let threads =
+            crate::util::threadpool::default_threads().min(pairs.len().max(1));
+        // probs matrices are only materialized when someone will read
+        // them — a plain inference forward keeps each head's scratch
+        // row-local instead of retaining b·nh t×t panels
+        let need_probs = opts.capture || opts.tape;
+        let head_outs: Vec<(Mat, Option<Mat>)> = crate::util::threadpool::parallel_map(
+            pairs,
+            threads,
+            |(bi, h)| {
+                let base = bi * t;
                 let q = &qs[h];
                 let k = &ks[h];
                 let v = &vs[h];
-                let mut probs = Mat::zeros(t, t);
+                let mut probs = if need_probs {
+                    Some(Mat::zeros(t, t))
+                } else {
+                    None
+                };
+                let mut ctx_head = Mat::zeros(t, hd);
                 for i in 0..t {
                     let qi = q.row(base + i);
                     // causal scores + online softmax
@@ -259,24 +270,41 @@ pub fn forward(
                         srow[j] = (srow[j] - maxs).exp();
                         denom += srow[j];
                     }
-                    for j in 0..=i {
-                        probs[(i, j)] = srow[j] / denom;
-                    }
                     // context vector
-                    let crow = ctxcat.row_mut(base + i);
+                    let crow = ctx_head.row_mut(i);
                     for j in 0..=i {
-                        let pj = probs[(i, j)];
+                        let pj = srow[j] / denom;
+                        if let Some(p) = probs.as_mut() {
+                            p[(i, j)] = pj;
+                        }
                         let vrow = v.row(base + j);
                         for e in 0..hd {
-                            crow[h * hd + e] += pj * vrow[e];
+                            crow[e] += pj * vrow[e];
                         }
                     }
                 }
+                (ctx_head, probs)
+            },
+        );
+        let mut ctxcat = Mat::zeros(rows, d);
+        let mut probs_store: Vec<Mat> = Vec::new();
+        let mut probs_flat: Vec<f64> = if opts.capture {
+            Vec::with_capacity(b * nh * t * t)
+        } else {
+            Vec::new()
+        };
+        for (idx, (ctx_head, probs)) in head_outs.into_iter().enumerate() {
+            let (bi, h) = (idx / nh, idx % nh);
+            for i in 0..t {
+                ctxcat.row_mut(bi * t + i)[h * hd..(h + 1) * hd]
+                    .copy_from_slice(ctx_head.row(i));
+            }
+            if let Some(p) = probs {
                 if opts.capture {
-                    probs_flat.extend_from_slice(&probs.data);
+                    probs_flat.extend_from_slice(&p.data);
                 }
                 if opts.tape {
-                    probs_store.push(probs);
+                    probs_store.push(p);
                 }
             }
         }
@@ -428,43 +456,59 @@ pub fn attention_block_output(
     let qf = matmul_nt(h1, wq);
     let kf = matmul_nt(h1, wk);
     let vf = matmul_nt(h1, wv);
-    let mut out = Mat::zeros(rows, d);
-    for h in 0..nh {
-        let mut q = Mat::zeros(rows, hd);
-        let mut k = Mat::zeros(rows, hd);
-        let mut v = Mat::zeros(rows, hd);
-        for r in 0..rows {
-            q.row_mut(r).copy_from_slice(&qf.row(r)[h * hd..(h + 1) * hd]);
-            k.row_mut(r).copy_from_slice(&kf.row(r)[h * hd..(h + 1) * hd]);
-            v.row_mut(r).copy_from_slice(&vf.row(r)[h * hd..(h + 1) * hd]);
-        }
-        apply_rope(&mut q, &cos, &sin, t);
-        apply_rope(&mut k, &cos, &sin, t);
-        for bi in 0..b {
-            let base = bi * t;
-            for i in 0..t {
-                let qi = q.row(base + i);
-                let mut maxs = f64::NEG_INFINITY;
-                let mut srow = vec![0.0; i + 1];
-                for j in 0..=i {
-                    let s = crate::linalg::dot(qi, k.row(base + j)) * scale;
-                    srow[j] = s;
-                    maxs = maxs.max(s);
-                }
-                let mut denom = 0.0;
-                for j in 0..=i {
-                    srow[j] = (srow[j] - maxs).exp();
-                    denom += srow[j];
-                }
-                let orow = out.row_mut(base + i);
-                for j in 0..=i {
-                    let pj = srow[j] / denom;
-                    let vrow = v.row(base + j);
-                    for e in 0..hd {
-                        orow[h * hd + e] += pj * vrow[e];
+    // heads are independent — evaluate them across the persistent pool
+    // (this sits inside the eq. 60 mixing objective, which is called
+    // once per candidate (ε_qr, ε_aw) point)
+    let threads = crate::util::threadpool::default_threads().min(nh.max(1));
+    let heads: Vec<usize> = (0..nh).collect();
+    let head_outs: Vec<Mat> = crate::util::threadpool::parallel_map(
+        heads,
+        threads,
+        |h| {
+            let mut q = Mat::zeros(rows, hd);
+            let mut k = Mat::zeros(rows, hd);
+            let mut v = Mat::zeros(rows, hd);
+            for r in 0..rows {
+                q.row_mut(r).copy_from_slice(&qf.row(r)[h * hd..(h + 1) * hd]);
+                k.row_mut(r).copy_from_slice(&kf.row(r)[h * hd..(h + 1) * hd]);
+                v.row_mut(r).copy_from_slice(&vf.row(r)[h * hd..(h + 1) * hd]);
+            }
+            apply_rope(&mut q, &cos, &sin, t);
+            apply_rope(&mut k, &cos, &sin, t);
+            let mut ctx_head = Mat::zeros(rows, hd);
+            for bi in 0..b {
+                let base = bi * t;
+                for i in 0..t {
+                    let qi = q.row(base + i);
+                    let mut maxs = f64::NEG_INFINITY;
+                    let mut srow = vec![0.0; i + 1];
+                    for j in 0..=i {
+                        let s = crate::linalg::dot(qi, k.row(base + j)) * scale;
+                        srow[j] = s;
+                        maxs = maxs.max(s);
+                    }
+                    let mut denom = 0.0;
+                    for j in 0..=i {
+                        srow[j] = (srow[j] - maxs).exp();
+                        denom += srow[j];
+                    }
+                    let orow = ctx_head.row_mut(base + i);
+                    for j in 0..=i {
+                        let pj = srow[j] / denom;
+                        let vrow = v.row(base + j);
+                        for e in 0..hd {
+                            orow[e] += pj * vrow[e];
+                        }
                     }
                 }
             }
+            ctx_head
+        },
+    );
+    let mut out = Mat::zeros(rows, d);
+    for (h, ctx_head) in head_outs.iter().enumerate() {
+        for r in 0..rows {
+            out.row_mut(r)[h * hd..(h + 1) * hd].copy_from_slice(ctx_head.row(r));
         }
     }
     out

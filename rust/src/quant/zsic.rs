@@ -45,9 +45,12 @@ pub fn zsic(y: &Mat, l: &Mat, alphas: &[f64], lmmse: bool, clamp: Option<i32>) -
     // interference update is applied immediately (those columns are read
     // next); the update of everything left of the block is deferred and
     // applied once per block as a rank-B panel product — the residual
-    // panel is traversed n/B times instead of n times.  Bitwise
-    // identical to the unblocked recursion (the deferred contributions
-    // are linear and the left columns are not read in between).
+    // panel is traversed n/B times instead of n times.  The deferred
+    // contributions are linear and the left columns are not read in
+    // between, so the recursion is exact; large blocks route the panel
+    // product through the packed gemm (same sums reassociated, ≲1e-15
+    // relative to the unblocked recursion), small blocks keep the
+    // serial axpy order and stay bit-identical to it.
     const BLOCK: usize = 64;
     let mut bhi = n;
     // per-block scaled codes s_{r,k} = γ_k α_k z_{r,k}
@@ -94,27 +97,47 @@ pub fn zsic(y: &Mat, l: &Mat, alphas: &[f64], lmmse: bool, clamp: Option<i32>) -
         // deferred rank-bw panel update of columns 0..blo:
         //   yw[:, :blo] -= scaled · L[blo..bhi, :blo]
         if blo > 0 {
-            let ywp = std::sync::atomic::AtomicPtr::new(yw.data.as_mut_ptr());
-            let scaled_ref = &scaled;
-            parallel_ranges(a, threads, |range| {
-                let p = ywp.load(std::sync::atomic::Ordering::Relaxed);
-                for r in range {
-                    // SAFETY: disjoint row ranges per thread.
-                    let row = unsafe {
-                        std::slice::from_raw_parts_mut(p.add(r * n), blo)
-                    };
-                    for k in 0..bw {
-                        let coeff = scaled_ref[r * BLOCK + k];
-                        if coeff == 0.0 {
-                            continue;
-                        }
-                        let lrow = l.row(blo + k);
-                        for j in 0..blo {
-                            row[j] -= coeff * lrow[j];
+            if a * bw * blo > 1 << 14 {
+                // fused packed panel product (α = −1) instead of bw
+                // separate axpy sweeps over the residual panel
+                crate::linalg::gemm::gemm_acc_strided(
+                    a,
+                    bw,
+                    blo,
+                    &scaled,
+                    BLOCK,
+                    &l.data[blo * n..],
+                    n,
+                    &mut yw.data,
+                    n,
+                    -1.0,
+                    threads,
+                );
+            } else {
+                // small blocks: keep the serial axpy order, which is
+                // bit-identical to the unblocked reference recursion
+                let ywp = std::sync::atomic::AtomicPtr::new(yw.data.as_mut_ptr());
+                let scaled_ref = &scaled;
+                parallel_ranges(a, threads, |range| {
+                    let p = ywp.load(std::sync::atomic::Ordering::Relaxed);
+                    for r in range {
+                        // SAFETY: disjoint row ranges per thread.
+                        let row = unsafe {
+                            std::slice::from_raw_parts_mut(p.add(r * n), blo)
+                        };
+                        for k in 0..bw {
+                            let coeff = scaled_ref[r * BLOCK + k];
+                            if coeff == 0.0 {
+                                continue;
+                            }
+                            let lrow = l.row(blo + k);
+                            for j in 0..blo {
+                                row[j] -= coeff * lrow[j];
+                            }
                         }
                     }
-                }
-            });
+                });
+            }
         }
         bhi = blo;
     }

@@ -5,8 +5,15 @@
 //! Protocol: warm up, then run batches until either `max_time` elapses
 //! or `min_batches` are collected; report median / p10 / p90 wall time
 //! per iteration and optional throughput.
+//!
+//! [`BenchLog`] additionally collects results into a machine-readable
+//! JSON file (`BENCH_<name>.json`) so the perf trajectory is tracked
+//! across PRs: each entry carries the shape name, a tag (e.g. `seed`
+//! vs `packed`), percentile timings, and derived GFLOP/s.
 
 use std::time::{Duration, Instant};
+
+use crate::util::json::{obj, Json};
 
 pub struct Bench {
     pub name: String,
@@ -81,6 +88,86 @@ impl Bench {
     }
 }
 
+/// Machine-readable benchmark sink.  Records [`Stats`] rows (plus free
+/// scalar notes like speedup ratios) and serializes them with the
+/// in-repo JSON writer.  The output directory defaults to the current
+/// working directory and can be redirected with `WATERSIC_BENCH_DIR`.
+pub struct BenchLog {
+    file: String,
+    entries: Vec<Json>,
+    meta: Vec<(String, Json)>,
+}
+
+impl BenchLog {
+    pub fn new(file: &str) -> BenchLog {
+        BenchLog {
+            file: file.to_string(),
+            entries: Vec::new(),
+            meta: vec![(
+                "threads".to_string(),
+                Json::Num(crate::util::threadpool::default_threads() as f64),
+            )],
+        }
+    }
+
+    /// Attach a top-level metadata field.
+    pub fn meta(&mut self, key: &str, value: Json) {
+        self.meta.push((key.to_string(), value));
+    }
+
+    /// Record one measured result.  `tag` distinguishes kernel
+    /// generations (`seed` vs `packed`); `flops` per iteration, when
+    /// known, derives a GFLOP/s field.
+    pub fn record(&mut self, stats: &Stats, flops: Option<f64>, tag: &str) {
+        let med = stats.median.as_secs_f64();
+        let mut fields = vec![
+            ("name", Json::Str(stats.name.clone())),
+            ("tag", Json::Str(tag.to_string())),
+            ("median_secs", Json::Num(med)),
+            ("p10_secs", Json::Num(stats.p10.as_secs_f64())),
+            ("p90_secs", Json::Num(stats.p90.as_secs_f64())),
+            ("iters", Json::Num(stats.iters as f64)),
+        ];
+        if let Some(fl) = flops {
+            fields.push(("flops", Json::Num(fl)));
+            if med > 0.0 {
+                fields.push(("gflops", Json::Num(fl / med / 1e9)));
+            }
+        }
+        self.entries.push(obj(fields));
+    }
+
+    /// Record a derived scalar (e.g. a seed→packed speedup ratio).
+    pub fn note(&mut self, name: &str, value: f64) {
+        self.entries.push(obj(vec![
+            ("name", Json::Str(name.to_string())),
+            ("tag", Json::Str("derived".to_string())),
+            ("value", Json::Num(value)),
+        ]));
+    }
+
+    /// Serialize to `$WATERSIC_BENCH_DIR/<file>` (cwd by default).
+    pub fn write(&self) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::env::var("WATERSIC_BENCH_DIR").unwrap_or_else(|_| ".".to_string());
+        self.write_to(std::path::Path::new(&dir))
+    }
+
+    /// Serialize to an explicit directory (no env lookup — tests use
+    /// this to avoid mutating process-global state).
+    pub fn write_to(&self, dir: &std::path::Path) -> std::io::Result<std::path::PathBuf> {
+        let path = dir.join(&self.file);
+        let mut fields: Vec<(&str, Json)> = self
+            .meta
+            .iter()
+            .map(|(k, v)| (k.as_str(), v.clone()))
+            .collect();
+        let entries = Json::Arr(self.entries.clone());
+        fields.push(("entries", entries));
+        std::fs::write(&path, obj(fields).to_string_pretty())?;
+        Ok(path)
+    }
+}
+
 /// Pretty-print one result row (optionally with throughput).
 pub fn report(stats: &Stats, throughput: Option<(f64, &str)>) {
     let med = stats.median.as_secs_f64();
@@ -136,6 +223,27 @@ mod tests {
         // require only ordering + iteration accounting
         assert!(stats.p90 >= stats.median);
         assert!(stats.iters >= 3);
+    }
+
+    #[test]
+    fn bench_log_serializes_and_parses_back() {
+        let b = Bench::new("tiny").with_budget(3, Duration::from_millis(50));
+        let s = b.run(|| {
+            std::hint::black_box(1u64 + 1);
+        });
+        let mut log = BenchLog::new("BENCH_test_harness.json");
+        log.record(&s, Some(1e6), "packed");
+        log.note("speedup matmul", 2.0);
+        log.meta("note", Json::Str("unit-test".into()));
+        let path = log.write_to(&std::env::temp_dir()).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let v = Json::parse(&text).unwrap();
+        let entries = v.req("entries").unwrap().as_arr().unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].req("tag").unwrap().as_str().unwrap(), "packed");
+        assert!(entries[0].req("gflops").unwrap().as_f64().unwrap() > 0.0);
+        assert!(v.req("threads").unwrap().as_f64().unwrap() >= 1.0);
     }
 
     #[test]

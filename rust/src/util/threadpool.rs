@@ -1,7 +1,41 @@
-//! Scoped data-parallel helpers built on `std::thread` (tokio/rayon are
-//! unavailable offline).  The coordinator uses `parallel_map` to quantize
-//! the independent matrices of a layer concurrently, and `parallel_chunks`
-//! for row-parallel gemm in the hot path.
+//! Persistent data-parallel worker pool (tokio/rayon are unavailable
+//! offline).
+//!
+//! The seed implementation spawned scoped `std::thread`s on *every*
+//! `parallel_ranges` call — tens of microseconds of spawn/join latency
+//! per gemm, paid millions of times across a pipeline run.  This
+//! version keeps a lazily-initialized pool of parked workers alive for
+//! the process lifetime and hands them jobs through a generation
+//! counter + condvar; work is distributed by atomic chunk stealing, so
+//! uneven ranges (triangular gram blocks, ragged tails) balance
+//! automatically.
+//!
+//! The public surface is unchanged: `default_threads`,
+//! `parallel_ranges`, `parallel_map` — every existing call site picks
+//! up the pool without churn.
+//!
+//! Known limitation (see ROADMAP): there is a single job slot, so a
+//! newer submission evicts an older in-flight job from workers' view;
+//! the evicted job still completes correctly (its submitter processes
+//! every unclaimed chunk itself), but under heavy nested parallelism
+//! worker utilization favors the newest job.
+//!
+//! Safety model: a submitted closure's lifetime is erased to `'static`
+//! so parked workers can hold it.  This is sound because the submitting
+//! thread (a) participates in chunk processing itself and (b) blocks
+//! until every item is accounted for (`done == end`); no worker touches
+//! the closure after its last `done` increment, so the borrow can never
+//! outlive the submitting frame.  Panics inside chunks are caught
+//! (`catch_unwind`): the first payload is stashed on the job, remaining
+//! chunks are claimed-and-skipped so `done` still reaches `end`, and
+//! the submitter re-raises the payload (`resume_unwind`) after every
+//! in-flight worker is done touching the closure — so an assertion
+//! failure inside a parallel region behaves like a normal panic to the
+//! caller, and the pool stays usable.
+
+use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Number of worker threads to use (respects `WATERSIC_THREADS`).
 pub fn default_threads() -> usize {
@@ -16,8 +50,206 @@ pub fn default_threads() -> usize {
         .min(16)
 }
 
-/// Apply `f` to each item of `items`, running up to `threads` at a time,
-/// preserving order of results.
+// ---------------------------------------------------------------------
+// pool internals
+
+/// Lifetime-erased fat pointer to the job closure `(lo, hi)`.
+struct TaskPtr(*const (dyn Fn(usize, usize) + Sync));
+// SAFETY: the pointee is `Sync`, and the submission protocol (see
+// module docs) guarantees it outlives every dereference.
+unsafe impl Send for TaskPtr {}
+unsafe impl Sync for TaskPtr {}
+
+struct Job {
+    task: TaskPtr,
+    /// next unclaimed item index (claimed `chunk` at a time)
+    next: AtomicUsize,
+    end: usize,
+    chunk: usize,
+    /// items accounted for (processed or skipped-after-panic); the job
+    /// is complete at `done == end`
+    done: AtomicUsize,
+    /// workers that joined this job (capped at `max_helpers`)
+    joined: AtomicUsize,
+    max_helpers: usize,
+    /// set on the first chunk panic: later chunks are skipped
+    panicked: std::sync::atomic::AtomicBool,
+    /// payload of the first panic, re-raised by the submitter
+    panic_payload: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+    mx: Mutex<()>,
+    cv: Condvar,
+}
+
+struct Shared {
+    generation: u64,
+    job: Option<Arc<Job>>,
+}
+
+struct Pool {
+    mx: Mutex<Shared>,
+    cv: Condvar,
+    workers: usize,
+}
+
+static POOL: OnceLock<Arc<Pool>> = OnceLock::new();
+
+fn pool() -> &'static Arc<Pool> {
+    POOL.get_or_init(|| {
+        // the submitting thread is always a participant, so park one
+        // fewer worker than the target parallelism
+        let workers = default_threads().saturating_sub(1);
+        let pool = Arc::new(Pool {
+            mx: Mutex::new(Shared {
+                generation: 0,
+                job: None,
+            }),
+            cv: Condvar::new(),
+            workers,
+        });
+        for i in 0..workers {
+            let p = Arc::clone(&pool);
+            std::thread::Builder::new()
+                .name(format!("watersic-pool-{i}"))
+                .spawn(move || worker_loop(p))
+                .expect("spawning pool worker");
+        }
+        pool
+    })
+}
+
+fn worker_loop(pool: Arc<Pool>) {
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut g = pool.mx.lock().unwrap();
+            loop {
+                if g.generation != seen {
+                    if let Some(job) = g.job.as_ref() {
+                        seen = g.generation;
+                        break Arc::clone(job);
+                    }
+                    seen = g.generation;
+                }
+                g = pool.cv.wait(g).unwrap();
+            }
+        };
+        if job.joined.fetch_add(1, Ordering::SeqCst) < job.max_helpers {
+            run_chunks(&job);
+        }
+    }
+}
+
+fn run_chunks(job: &Job) {
+    loop {
+        let lo = job.next.fetch_add(job.chunk, Ordering::SeqCst);
+        if lo >= job.end {
+            return;
+        }
+        let hi = (lo + job.chunk).min(job.end);
+        if !job.panicked.load(Ordering::SeqCst) {
+            // SAFETY: see module docs — the submitter blocks until
+            // `done == end`, and this call strictly precedes the
+            // increment that can make that condition true.
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
+                (*job.task.0)(lo, hi)
+            }));
+            if let Err(payload) = result {
+                job.panicked.store(true, Ordering::SeqCst);
+                let mut slot = job.panic_payload.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+        }
+        // count the chunk either way so the job always completes
+        let prev = job.done.fetch_add(hi - lo, Ordering::SeqCst);
+        if prev + (hi - lo) == job.end {
+            // take the lock before notifying so the submitter cannot
+            // check the predicate and sleep between our increment and
+            // our notify
+            let _g = job.mx.lock().unwrap();
+            job.cv.notify_all();
+        }
+    }
+}
+
+/// Split `0..n` into chunks and run `f(range)` across the persistent
+/// pool, chunk-stealing for balance.  The calling thread participates,
+/// so at most `threads` ranges execute concurrently.  The set of chunk
+/// boundaries depends only on `(n, threads)` — never on scheduling —
+/// so numeric results are reproducible run-to-run.
+pub fn parallel_ranges<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(Range<usize>) + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n == 0 {
+        f(0..n);
+        return;
+    }
+    let pool = pool();
+    if pool.workers == 0 {
+        f(0..n);
+        return;
+    }
+
+    // over-split ~4× the thread count so stragglers can be stolen, but
+    // never below one item per chunk
+    let chunk = n.div_ceil(threads * 4).max(1);
+    let run = |lo: usize, hi: usize| f(lo..hi);
+    let task_ref: &(dyn Fn(usize, usize) + Sync) = &run;
+    // SAFETY: lifetime erasure; this frame does not return until
+    // `done == n` (see module docs).
+    let task_ref: &'static (dyn Fn(usize, usize) + Sync) =
+        unsafe { std::mem::transmute(task_ref) };
+    let job = Arc::new(Job {
+        task: TaskPtr(task_ref as *const _),
+        next: AtomicUsize::new(0),
+        end: n,
+        chunk,
+        done: AtomicUsize::new(0),
+        joined: AtomicUsize::new(0),
+        max_helpers: threads - 1,
+        panicked: std::sync::atomic::AtomicBool::new(false),
+        panic_payload: Mutex::new(None),
+        mx: Mutex::new(()),
+        cv: Condvar::new(),
+    });
+
+    {
+        let mut g = pool.mx.lock().unwrap();
+        g.generation = g.generation.wrapping_add(1);
+        g.job = Some(Arc::clone(&job));
+        pool.cv.notify_all();
+    }
+
+    // participate, then wait out any stragglers
+    run_chunks(&job);
+    {
+        let mut g = job.mx.lock().unwrap();
+        while job.done.load(Ordering::SeqCst) < n {
+            g = job.cv.wait(g).unwrap();
+        }
+    }
+    // every chunk is accounted for and no worker will touch the task
+    // again — safe to re-raise a caught panic as our own
+    let payload = job.panic_payload.lock().unwrap().take();
+    if let Some(p) = payload {
+        std::panic::resume_unwind(p);
+    }
+}
+
+/// `&[UnsafeCell<X>]` wrapper that may cross threads: every index is
+/// touched by exactly one thread (disjoint ranges from
+/// `parallel_ranges`), so there is no aliased access.
+struct SyncSlice<'a, X>(&'a [std::cell::UnsafeCell<X>]);
+unsafe impl<'a, X: Send> Sync for SyncSlice<'a, X> {}
+
+/// Apply `f` to each item of `items`, running up to `threads` at a
+/// time, preserving order of results.  Lock-free: items and result
+/// slots are per-index `UnsafeCell`s claimed through the disjoint
+/// ranges handed out by [`parallel_ranges`] — no global work mutex, no
+/// per-slot mutexes, so layer-parallel quantization never serializes.
 pub fn parallel_map<T, R, F>(items: Vec<T>, threads: usize, f: F) -> Vec<R>
 where
     T: Send,
@@ -25,62 +257,41 @@ where
     F: Fn(T) -> R + Sync,
 {
     let threads = threads.max(1);
-    if threads == 1 || items.len() <= 1 {
+    let n = items.len();
+    if threads == 1 || n <= 1 {
         return items.into_iter().map(f).collect();
     }
-    let n = items.len();
-    let work: std::sync::Mutex<Vec<Option<T>>> =
-        std::sync::Mutex::new(items.into_iter().map(Some).collect());
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    let mut results: Vec<Option<R>> = (0..n).map(|_| None).collect();
-    let slots: Vec<std::sync::Mutex<&mut Option<R>>> =
-        results.iter_mut().map(std::sync::Mutex::new).collect();
-
-    std::thread::scope(|scope| {
-        for _ in 0..threads.min(n) {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
-                if i >= n {
-                    break;
-                }
-                let item = work.lock().unwrap()[i].take().unwrap();
+    let work: Vec<std::cell::UnsafeCell<Option<T>>> = items
+        .into_iter()
+        .map(|t| std::cell::UnsafeCell::new(Some(t)))
+        .collect();
+    let out: Vec<std::cell::UnsafeCell<Option<R>>> =
+        (0..n).map(|_| std::cell::UnsafeCell::new(None)).collect();
+    {
+        let work_s = SyncSlice(&work);
+        let out_s = SyncSlice(&out);
+        parallel_ranges(n, threads, |range| {
+            for i in range {
+                // SAFETY: parallel_ranges hands out disjoint ranges
+                // covering 0..n exactly once, so slot i has a single
+                // accessor.
+                let item = unsafe { (*work_s.0[i].get()).take().unwrap() };
                 let r = f(item);
-                **slots[i].lock().unwrap() = Some(r);
-            });
-        }
-    });
-    drop(slots);
-    results.into_iter().map(|r| r.unwrap()).collect()
-}
-
-/// Split `0..n` into contiguous ranges and run `f(range)` on each in
-/// parallel.  Used for row-blocked gemm.
-pub fn parallel_ranges<F>(n: usize, threads: usize, f: F)
-where
-    F: Fn(std::ops::Range<usize>) + Sync,
-{
-    let threads = threads.max(1).min(n.max(1));
-    if threads <= 1 || n == 0 {
-        f(0..n);
-        return;
-    }
-    let chunk = n.div_ceil(threads);
-    std::thread::scope(|scope| {
-        for t in 0..threads {
-            let lo = t * chunk;
-            let hi = ((t + 1) * chunk).min(n);
-            if lo >= hi {
-                break;
+                unsafe {
+                    *out_s.0[i].get() = Some(r);
+                }
             }
-            let f = &f;
-            scope.spawn(move || f(lo..hi));
-        }
-    });
+        });
+    }
+    out.into_iter()
+        .map(|c| c.into_inner().expect("parallel_map slot unfilled"))
+        .collect()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
 
     #[test]
     fn map_preserves_order() {
@@ -98,8 +309,16 @@ mod tests {
     }
 
     #[test]
+    fn map_moves_non_copy_items() {
+        let items: Vec<String> = (0..40).map(|i| format!("s{i}")).collect();
+        let out = parallel_map(items, 4, |s| s.len());
+        assert_eq!(out.len(), 40);
+        assert_eq!(out[0], 2);
+        assert_eq!(out[10], 3);
+    }
+
+    #[test]
     fn ranges_cover_everything_once() {
-        use std::sync::atomic::{AtomicUsize, Ordering};
         let hits: Vec<AtomicUsize> = (0..97).map(|_| AtomicUsize::new(0)).collect();
         parallel_ranges(97, 5, |r| {
             for i in r {
@@ -107,6 +326,83 @@ mod tests {
             }
         });
         assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn pool_survives_many_submissions() {
+        // the persistent pool must be reusable back-to-back (the seed
+        // spawn-per-call version trivially was; this guards the
+        // generation/condvar handoff)
+        for round in 0..200usize {
+            let total = AtomicUsize::new(0);
+            parallel_ranges(round + 1, 4, |r| {
+                total.fetch_add(r.len(), Ordering::SeqCst);
+            });
+            assert_eq!(total.load(Ordering::SeqCst), round + 1);
+        }
+    }
+
+    #[test]
+    fn nested_parallelism_completes() {
+        // a job body that itself submits a job must not deadlock: the
+        // inner submitter participates in its own work
+        let outer_sum = AtomicUsize::new(0);
+        parallel_ranges(8, 4, |outer| {
+            for _ in outer {
+                let inner_sum = AtomicUsize::new(0);
+                parallel_ranges(50, 4, |r| {
+                    inner_sum.fetch_add(r.len(), Ordering::SeqCst);
+                });
+                outer_sum.fetch_add(inner_sum.load(Ordering::SeqCst), Ordering::SeqCst);
+            }
+        });
+        assert_eq!(outer_sum.load(Ordering::SeqCst), 8 * 50);
+    }
+
+    #[test]
+    fn panics_propagate_and_pool_survives() {
+        let caught = std::panic::catch_unwind(|| {
+            parallel_ranges(64, 4, |range| {
+                if range.contains(&13) {
+                    panic!("boom-13");
+                }
+            });
+        });
+        let payload = caught.unwrap_err();
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert_eq!(msg, "boom-13", "original panic payload must survive");
+        // the pool must remain fully usable afterwards
+        let total = AtomicUsize::new(0);
+        parallel_ranges(64, 4, |r| {
+            total.fetch_add(r.len(), Ordering::SeqCst);
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 64);
+    }
+
+    #[test]
+    fn concurrent_submitters_all_complete() {
+        // two os threads racing to submit jobs: both must finish even
+        // though the pool has a single job slot
+        let h1 = std::thread::spawn(|| {
+            let s = AtomicUsize::new(0);
+            for _ in 0..50 {
+                parallel_ranges(64, 4, |r| {
+                    s.fetch_add(r.len(), Ordering::SeqCst);
+                });
+            }
+            s.load(Ordering::SeqCst)
+        });
+        let h2 = std::thread::spawn(|| {
+            let s = AtomicUsize::new(0);
+            for _ in 0..50 {
+                parallel_ranges(64, 4, |r| {
+                    s.fetch_add(r.len(), Ordering::SeqCst);
+                });
+            }
+            s.load(Ordering::SeqCst)
+        });
+        assert_eq!(h1.join().unwrap(), 50 * 64);
+        assert_eq!(h2.join().unwrap(), 50 * 64);
     }
 
     #[test]

@@ -204,3 +204,66 @@ fn zsic_distortion_monotone_in_density() {
         assert!(fine < coarse, "trial {trial}: {fine} !< {coarse}");
     }
 }
+
+#[test]
+fn packed_kernels_deterministic_across_thread_counts() {
+    // the packed gemm/gram tile decomposition and K order are fixed, so
+    // results must be bit-for-bit identical whatever the thread count
+    // (the WATERSIC_THREADS=1 vs threaded contract)
+    use watersic::linalg::gemm::{gram_with_threads, matmul_with_threads};
+    let mut rng = Rng::new(7777);
+    let a = Mat::from_fn(180, 140, |_, _| rng.gaussian());
+    let b = Mat::from_fn(140, 160, |_, _| rng.gaussian());
+    let c1 = matmul_with_threads(&a, &b, 1);
+    for t in [2usize, 3, 8] {
+        let ct = matmul_with_threads(&a, &b, t);
+        assert!(c1.sub(&ct).max_abs() <= 1e-9, "threads={t}");
+        assert_eq!(c1.data, ct.data, "threads={t}: not bit-identical");
+    }
+    let g1 = gram_with_threads(&a, 1);
+    for t in [2usize, 8] {
+        assert_eq!(
+            g1.data,
+            gram_with_threads(&a, t).data,
+            "gram threads={t}: not bit-identical"
+        );
+    }
+}
+
+#[test]
+fn zsic_packed_deferred_update_keeps_invariants() {
+    // n > 64 activates the packed rank-B deferred panel update inside
+    // zsic; the reconstruction identity and the Lemma 3.2 cube bound
+    // must survive the kernel swap
+    let mut rng = Rng::new(4242);
+    let (a, n) = (48usize, 160usize);
+    let sigma = random_spd(n, &mut rng);
+    let l = cholesky(&sigma).unwrap();
+    let w = Mat::from_fn(a, n, |_, _| rng.gaussian());
+    let y = matmul(&w, &l);
+    let alphas = watersic_alphas(&l, 0.4);
+    // lmmse off: the cube bound below is a property of the plain
+    // quantizer (γ ≡ 1); the reconstruction identity holds either way
+    let out = zsic(&y, &l, &alphas, false, None);
+    // Y − Z·diag(γα)·L == resid
+    let mut zm = Mat::zeros(a, n);
+    for r in 0..a {
+        for j in 0..n {
+            zm[(r, j)] = out.z[r * n + j] as f64 * out.gammas[j] * alphas[j];
+        }
+    }
+    let recon = matmul(&zm, &l);
+    let diff = y.sub(&recon).sub(&out.resid);
+    assert!(diff.max_abs() < 1e-9, "reconstruction drift {}", diff.max_abs());
+    // e_SIC ∈ CUBE·A·diag(L)
+    for i in 0..a {
+        for j in 0..n {
+            let bound = 0.5 * alphas[j] * l[(j, j)].abs() + 1e-9;
+            assert!(
+                out.resid[(i, j)].abs() <= bound,
+                "({i},{j}): {} > {bound}",
+                out.resid[(i, j)].abs()
+            );
+        }
+    }
+}

@@ -1,0 +1,77 @@
+//! Offline stand-in for the `flate2` crate (write-side Zlib encoder
+//! only).  Output is the [`microcomp`] order-0 Huffman stream, not RFC
+//! 1950 zlib — round-trip exact and near order-0 entropy, which is all
+//! the workspace's codec-comparison tables need from it offline.
+
+/// Compression level (accepted for API compatibility, ignored).
+#[derive(Clone, Copy, Debug)]
+pub struct Compression(u32);
+
+impl Compression {
+    pub fn new(level: u32) -> Compression {
+        Compression(level)
+    }
+
+    pub fn best() -> Compression {
+        Compression(9)
+    }
+
+    pub fn fast() -> Compression {
+        Compression(1)
+    }
+
+    pub fn level(&self) -> u32 {
+        self.0
+    }
+}
+
+pub mod write {
+    use std::io::{self, Write};
+
+    /// Buffers all writes, compresses on [`finish`](ZlibEncoder::finish).
+    pub struct ZlibEncoder<W: Write> {
+        inner: W,
+        buf: Vec<u8>,
+    }
+
+    impl<W: Write> ZlibEncoder<W> {
+        pub fn new(inner: W, _level: super::Compression) -> ZlibEncoder<W> {
+            ZlibEncoder {
+                inner,
+                buf: Vec::new(),
+            }
+        }
+
+        pub fn finish(mut self) -> io::Result<W> {
+            let comp = microcomp::compress(&self.buf);
+            self.inner.write_all(&comp)?;
+            self.inner.flush()?;
+            Ok(self.inner)
+        }
+    }
+
+    impl<W: Write> Write for ZlibEncoder<W> {
+        fn write(&mut self, data: &[u8]) -> io::Result<usize> {
+            self.buf.extend_from_slice(data);
+            Ok(data.len())
+        }
+
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::io::Write;
+
+    #[test]
+    fn encoder_compresses_through_finish() {
+        let mut enc = super::write::ZlibEncoder::new(Vec::new(), super::Compression::best());
+        enc.write_all(&vec![42u8; 4096]).unwrap();
+        let out = enc.finish().unwrap();
+        assert!(!out.is_empty() && out.len() < 4096);
+        assert_eq!(microcomp::decompress(&out).unwrap(), vec![42u8; 4096]);
+    }
+}

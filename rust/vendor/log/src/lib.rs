@@ -1,0 +1,198 @@
+//! Offline stand-in for the `log` facade crate: the `Log` trait, a
+//! global logger slot, level filtering, and the five level macros.
+//! Covers exactly the surface the `watersic` binary uses.
+
+use std::fmt;
+use std::sync::atomic::{AtomicPtr, AtomicUsize, Ordering};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Level {
+    Error = 1,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl fmt::Display for Level {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        })
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum LevelFilter {
+    Off = 0,
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+pub struct Metadata {
+    level: Level,
+}
+
+impl Metadata {
+    pub fn level(&self) -> Level {
+        self.level
+    }
+}
+
+pub struct Record<'a> {
+    level: Level,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    pub fn level(&self) -> Level {
+        self.level
+    }
+
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+
+    pub fn metadata(&self) -> Metadata {
+        Metadata { level: self.level }
+    }
+}
+
+pub trait Log: Send + Sync {
+    fn enabled(&self, metadata: &Metadata) -> bool;
+    fn log(&self, record: &Record);
+    fn flush(&self);
+}
+
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("a logger has already been installed")
+    }
+}
+
+impl std::error::Error for SetLoggerError {}
+
+// Global logger: a fat pointer cannot live in one AtomicPtr, so store
+// the &'static dyn Log behind a leaked thin box.
+static LOGGER: AtomicPtr<&'static dyn Log> = AtomicPtr::new(std::ptr::null_mut());
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(LevelFilter::Off as usize);
+
+pub fn set_logger(logger: &'static dyn Log) -> Result<(), SetLoggerError> {
+    let boxed: *mut &'static dyn Log = Box::into_raw(Box::new(logger));
+    match LOGGER.compare_exchange(
+        std::ptr::null_mut(),
+        boxed,
+        Ordering::SeqCst,
+        Ordering::SeqCst,
+    ) {
+        Ok(_) => Ok(()),
+        Err(_) => {
+            // SAFETY: `boxed` came from Box::into_raw above and was
+            // never published.
+            drop(unsafe { Box::from_raw(boxed) });
+            Err(SetLoggerError(()))
+        }
+    }
+}
+
+pub fn set_max_level(filter: LevelFilter) {
+    MAX_LEVEL.store(filter as usize, Ordering::SeqCst);
+}
+
+pub fn max_level() -> LevelFilter {
+    match MAX_LEVEL.load(Ordering::SeqCst) {
+        0 => LevelFilter::Off,
+        1 => LevelFilter::Error,
+        2 => LevelFilter::Warn,
+        3 => LevelFilter::Info,
+        4 => LevelFilter::Debug,
+        _ => LevelFilter::Trace,
+    }
+}
+
+/// Macro plumbing — not part of the public API.
+#[doc(hidden)]
+pub fn __private_log(level: Level, args: fmt::Arguments) {
+    if (level as usize) > MAX_LEVEL.load(Ordering::SeqCst) {
+        return;
+    }
+    let ptr = LOGGER.load(Ordering::SeqCst);
+    if ptr.is_null() {
+        return;
+    }
+    // SAFETY: once published the box is never freed (set_logger only
+    // installs into an empty slot).
+    let logger: &'static dyn Log = unsafe { *ptr };
+    let record = Record { level, args };
+    if logger.enabled(&record.metadata()) {
+        logger.log(&record);
+    }
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)*) => { $crate::__private_log($crate::Level::Error, ::std::format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)*) => { $crate::__private_log($crate::Level::Warn, ::std::format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)*) => { $crate::__private_log($crate::Level::Info, ::std::format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)*) => { $crate::__private_log($crate::Level::Debug, ::std::format_args!($($arg)*)) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)*) => { $crate::__private_log($crate::Level::Trace, ::std::format_args!($($arg)*)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    static HITS: AtomicUsize = AtomicUsize::new(0);
+
+    struct Counter;
+    impl Log for Counter {
+        fn enabled(&self, _: &Metadata) -> bool {
+            true
+        }
+        fn log(&self, record: &Record) {
+            let _ = format!("{} {}", record.level(), record.args());
+            HITS.fetch_add(1, Ordering::SeqCst);
+        }
+        fn flush(&self) {}
+    }
+
+    #[test]
+    fn filter_and_dispatch() {
+        static C: Counter = Counter;
+        let _ = set_logger(&C);
+        set_max_level(LevelFilter::Warn);
+        crate::warn!("visible {}", 1);
+        crate::debug!("filtered");
+        assert_eq!(HITS.load(Ordering::SeqCst), 1);
+        assert_eq!(max_level(), LevelFilter::Warn);
+        // second install fails
+        assert!(set_logger(&C).is_err());
+    }
+}

@@ -1,0 +1,275 @@
+//! A tiny, dependency-free, byte-oriented entropy codec: order-0
+//! canonical Huffman with an explicit 256-entry code-length header.
+//! It backs the offline stand-ins for `zstd` and `flate2`, giving the
+//! workspace *real* (near-entropy, round-trip exact) general-purpose
+//! compression without network access.  It is NOT the zstd/DEFLATE wire
+//! format.
+//!
+//! Stream layout:
+//!   [0]      format tag (1)
+//!   [1..9]   u64 LE uncompressed length
+//!   [9..265] 256 code lengths (u8; 0 = symbol absent)
+//!   [265..]  MSB-first bit-packed payload
+
+const TAG: u8 = 1;
+
+/// Compress `src`; always succeeds.
+pub fn compress(src: &[u8]) -> Vec<u8> {
+    let mut freq = [0u64; 256];
+    for &b in src {
+        freq[b as usize] += 1;
+    }
+    let mut lengths = huffman_lengths(&freq);
+    // Bit-packer safety: keep codes ≤ 32 bits.  Depths past 32 need
+    // fibonacci-like frequency profiles over terabytes of input; if one
+    // ever shows up, fall back to a flat 8-bit prefix code (Kraft ≤ 1
+    // for ≤ 256 symbols, so it stays a valid canonical code).
+    if lengths.iter().any(|&l| l > 32) {
+        for l in lengths.iter_mut() {
+            if *l > 0 {
+                *l = 8;
+            }
+        }
+    }
+    let codes = canonical_codes(&lengths);
+
+    let mut out = Vec::with_capacity(265 + src.len() / 2);
+    out.push(TAG);
+    out.extend_from_slice(&(src.len() as u64).to_le_bytes());
+    out.extend_from_slice(&lengths);
+
+    let mut acc: u64 = 0;
+    let mut nbits: u32 = 0;
+    for &b in src {
+        let (code, len) = codes[b as usize];
+        debug_assert!(len > 0);
+        acc = (acc << len) | code as u64;
+        nbits += len;
+        while nbits >= 8 {
+            nbits -= 8;
+            out.push((acc >> nbits) as u8);
+        }
+    }
+    if nbits > 0 {
+        out.push((acc << (8 - nbits)) as u8);
+    }
+    out
+}
+
+/// Decompress a [`compress`] stream.
+pub fn decompress(src: &[u8]) -> Result<Vec<u8>, String> {
+    if src.len() < 265 || src[0] != TAG {
+        return Err("microcomp: bad header".to_string());
+    }
+    let n = u64::from_le_bytes(src[1..9].try_into().unwrap()) as usize;
+    let mut lengths = [0u8; 256];
+    lengths.copy_from_slice(&src[9..265]);
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    if lengths.iter().any(|&l| l > 32) {
+        return Err("microcomp: invalid code length".to_string());
+    }
+
+    // Canonical decode: first-code arithmetic per length.
+    let mut first_code = [0u32; 64]; // first canonical code of each length
+    let mut count = [0u32; 64];
+    for &l in lengths.iter() {
+        if l > 0 {
+            count[l as usize] += 1;
+        }
+    }
+    let mut code: u32 = 0;
+    for l in 1..64usize {
+        code = (code + count[l - 1]) << 1;
+        first_code[l] = code;
+    }
+    // symbols of each length in symbol order (canonical assignment order)
+    let mut syms_by_len: Vec<Vec<u8>> = vec![Vec::new(); 64];
+    for (sym, &l) in lengths.iter().enumerate() {
+        if l > 0 {
+            syms_by_len[l as usize].push(sym as u8);
+        }
+    }
+
+    let payload = &src[265..];
+    let mut out = Vec::with_capacity(n);
+    let mut bitpos: usize = 0;
+    let total_bits = payload.len() * 8;
+    while out.len() < n {
+        let mut code: u32 = 0;
+        let mut len: usize = 0;
+        loop {
+            if bitpos >= total_bits {
+                return Err("microcomp: truncated stream".to_string());
+            }
+            let bit = (payload[bitpos / 8] >> (7 - (bitpos % 8))) & 1;
+            bitpos += 1;
+            code = (code << 1) | bit as u32;
+            len += 1;
+            if len >= 64 {
+                return Err("microcomp: invalid code".to_string());
+            }
+            let cnt = count[len];
+            if cnt > 0 {
+                let first = first_code[len];
+                if code >= first && code < first + cnt {
+                    out.push(syms_by_len[len][(code - first) as usize]);
+                    break;
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Huffman code lengths from byte frequencies (package-free pairing via
+/// a simple two-queue merge on sorted leaves).
+fn huffman_lengths(freq: &[u64; 256]) -> [u8; 256] {
+    let mut lengths = [0u8; 256];
+    let present: Vec<usize> = (0..256).filter(|&i| freq[i] > 0).collect();
+    match present.len() {
+        0 => return lengths,
+        1 => {
+            lengths[present[0]] = 1;
+            return lengths;
+        }
+        _ => {}
+    }
+
+    // nodes: (weight, id); leaves have id < 256, internal nodes ≥ 256
+    #[derive(Clone)]
+    struct Node {
+        weight: u64,
+        left: Option<usize>,  // index into `nodes`
+        right: Option<usize>, // index into `nodes`
+        symbol: Option<usize>,
+    }
+    let mut nodes: Vec<Node> = present
+        .iter()
+        .map(|&s| Node {
+            weight: freq[s],
+            left: None,
+            right: None,
+            symbol: Some(s),
+        })
+        .collect();
+    // simple O(k²) merge — alphabet ≤ 256, negligible
+    let mut live: Vec<usize> = (0..nodes.len()).collect();
+    while live.len() > 1 {
+        // find two smallest weights
+        let mut a = 0usize;
+        let mut b = 1usize;
+        if nodes[live[b]].weight < nodes[live[a]].weight {
+            std::mem::swap(&mut a, &mut b);
+        }
+        for i in 2..live.len() {
+            let w = nodes[live[i]].weight;
+            if w < nodes[live[a]].weight {
+                b = a;
+                a = i;
+            } else if w < nodes[live[b]].weight {
+                b = i;
+            }
+        }
+        let (ia, ib) = (live[a], live[b]);
+        let merged = Node {
+            weight: nodes[ia].weight + nodes[ib].weight,
+            left: Some(ia),
+            right: Some(ib),
+            symbol: None,
+        };
+        nodes.push(merged);
+        let mi = nodes.len() - 1;
+        // remove the two (larger index first to keep positions valid)
+        let (hi, lo) = if a > b { (a, b) } else { (b, a) };
+        live.remove(hi);
+        live.remove(lo);
+        live.push(mi);
+    }
+
+    // depth-first assign lengths
+    let mut stack: Vec<(usize, u8)> = vec![(live[0], 0)];
+    while let Some((idx, depth)) = stack.pop() {
+        let node = nodes[idx].clone();
+        if let Some(sym) = node.symbol {
+            lengths[sym] = depth.max(1);
+        } else {
+            if let Some(l) = node.left {
+                stack.push((l, depth + 1));
+            }
+            if let Some(r) = node.right {
+                stack.push((r, depth + 1));
+            }
+        }
+    }
+    lengths
+}
+
+/// Canonical codes from lengths: (code, len) per symbol.
+fn canonical_codes(lengths: &[u8; 256]) -> [(u32, u32); 256] {
+    let mut codes = [(0u32, 0u32); 256];
+    let mut count = [0u32; 64];
+    for &l in lengths.iter() {
+        if l > 0 {
+            count[l as usize] += 1;
+        }
+    }
+    let mut next = [0u32; 64];
+    let mut code: u32 = 0;
+    for l in 1..64usize {
+        code = (code + count[l - 1]) << 1;
+        next[l] = code;
+    }
+    for sym in 0..256usize {
+        let l = lengths[sym] as usize;
+        if l > 0 {
+            codes[sym] = (next[l], l as u32);
+            next[l] += 1;
+        }
+    }
+    codes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(data: &[u8]) {
+        let c = compress(data);
+        let d = decompress(&c).unwrap();
+        assert_eq!(d, data);
+    }
+
+    #[test]
+    fn roundtrips() {
+        roundtrip(b"");
+        roundtrip(b"a");
+        roundtrip(b"aaaaaaaaaaaaaaaa");
+        roundtrip(b"the quick brown fox jumps over the lazy dog");
+        let all: Vec<u8> = (0..=255u8).cycle().take(4096).collect();
+        roundtrip(&all);
+        // skewed pseudo-random
+        let mut x = 12345u64;
+        let skew: Vec<u8> = (0..20_000)
+            .map(|_| {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+                ((x >> 60) as u8).min(4)
+            })
+            .collect();
+        roundtrip(&skew);
+    }
+
+    #[test]
+    fn compresses_skewed_data() {
+        let data = vec![7u8; 10_000];
+        let c = compress(&data);
+        assert!(c.len() < 2000, "constant stream should compress: {}", c.len());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(decompress(&[]).is_err());
+        assert!(decompress(&[9; 300]).is_err());
+    }
+}

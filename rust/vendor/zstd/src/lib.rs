@@ -1,0 +1,48 @@
+//! Offline stand-in for the `zstd` crate (bulk API only).  Compression
+//! is a real, round-trip-exact order-0 canonical-Huffman byte codec
+//! ([`microcomp`]), which lands near the order-0 entropy on the i.i.d.
+//! integer-code streams this workspace feeds it — but it is NOT the
+//! zstd wire format and has no LZ77 matching.  Numbers reported through
+//! it are an order-0 upper bound on what real zstd would achieve.
+
+pub mod bulk {
+    use std::io;
+
+    /// Compress `source` (the level is accepted for API compatibility
+    /// and ignored — the backing codec has a single operating point).
+    pub fn compress(source: &[u8], _level: i32) -> io::Result<Vec<u8>> {
+        Ok(microcomp::compress(source))
+    }
+
+    /// Decompress a [`compress`] stream; `capacity` is an upper bound
+    /// hint in the real API and is only sanity-checked here.
+    pub fn decompress(source: &[u8], capacity: usize) -> io::Result<Vec<u8>> {
+        let out = microcomp::decompress(source)
+            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?;
+        if out.len() > capacity {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                "decompressed size exceeds declared capacity",
+            ));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn bulk_roundtrip() {
+        let data: Vec<u8> = (0..5000u32).map(|i| (i % 7) as u8).collect();
+        let c = super::bulk::compress(&data, 19).unwrap();
+        assert!(c.len() < data.len());
+        let d = super::bulk::decompress(&c, data.len()).unwrap();
+        assert_eq!(d, data);
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let c = super::bulk::compress(&[1u8; 100], 3).unwrap();
+        assert!(super::bulk::decompress(&c, 10).is_err());
+    }
+}
