@@ -7,16 +7,23 @@
 //! spawn-per-call threading; single-threaded triangle gram), and emits
 //! everything to `BENCH_linalg.json` so the perf trajectory is tracked
 //! from this PR onward.  Acceptance targets: ≥2× GFLOP/s on
-//! `matmul 512³` and ≥4× on `gram 2048x256` versus the seed kernels.
-//! The ratios are recorded as `speedup <shape>` JSON entries; set
-//! `WATERSIC_BENCH_ENFORCE=1` to turn them into hard gates (exit 1 on
-//! miss) — off by default because shared CI runners are too noisy to
-//! fail builds on.
+//! `matmul 512³` and ≥4× on `gram 2048x256` versus the seed kernels,
+//! and ≥1.5× for the f32 path over the packed f64 kernel on
+//! `matmul 512³`.  The ratios are recorded as `speedup <shape>` /
+//! `speedup f32 <shape>` JSON entries; `dispatch`-tagged rows measure
+//! the forced-scalar rung so `speedup dispatch <shape>` isolates the
+//! SIMD micro-kernel win from the element-width win.  Set
+//! `WATERSIC_BENCH_ENFORCE=1` to turn the targets into hard gates
+//! (exit 1 on miss) — off by default because shared CI runners are too
+//! noisy to fail builds on.
 
 use std::time::Duration;
 
 use watersic::linalg::chol::{cholesky, solve_xlt_eq_b};
-use watersic::linalg::gemm::{gram, matmul, matmul_nt};
+use watersic::linalg::gemm::{
+    gram, gram_prec, matmul, matmul_f32, matmul_f32_with, matmul_nt,
+    simd_backend, Precision, SimdBackend,
+};
 use watersic::linalg::Mat;
 use watersic::util::bench::{report, Bench, BenchLog};
 use watersic::util::json::Json;
@@ -110,9 +117,12 @@ fn main() {
     let mut rng = Rng::new(3);
     let mut log = BenchLog::new("BENCH_linalg.json");
     log.meta("bench", Json::Str("linalg".to_string()));
+    log.meta("simd_backend", Json::Str(simd_backend().name().to_string()));
 
     let mut packed_medians: Vec<(String, f64)> = Vec::new();
     let mut seed_medians: Vec<(String, f64)> = Vec::new();
+    let mut f32_medians: Vec<(String, f64)> = Vec::new();
+    let mut scalar32_medians: Vec<(String, f64)> = Vec::new();
 
     for n in [64usize, 128, 256, 512] {
         let a = Mat::from_fn(n, n, |_, _| rng.gaussian());
@@ -136,6 +146,32 @@ fn main() {
         report(&s, Some((flops, "FLOP")));
         log.record(&s, Some(flops), "seed");
         seed_medians.push((format!("matmul {n}³"), s.median.as_secs_f64()));
+
+        // f32 packed path (dispatched kernel)
+        let s = Bench::new(&format!("matmul {n}³ [f32]"))
+            .with_budget(6, Duration::from_secs(2))
+            .run(|| {
+                std::hint::black_box(matmul_f32(&a, &b));
+            });
+        report(&s, Some((flops, "FLOP")));
+        log.record(&s, Some(flops), "f32");
+        f32_medians.push((format!("matmul {n}³"), s.median.as_secs_f64()));
+
+        // forced-scalar rung of the f32 ladder: isolates the SIMD
+        // dispatch win from the element-width win
+        let s = Bench::new(&format!("matmul {n}³ [f32 scalar]"))
+            .with_budget(4, Duration::from_secs(2))
+            .run(|| {
+                std::hint::black_box(matmul_f32_with(
+                    &a,
+                    &b,
+                    default_threads(),
+                    SimdBackend::Scalar,
+                ));
+            });
+        report(&s, Some((flops, "FLOP")));
+        log.record(&s, Some(flops), "dispatch");
+        scalar32_medians.push((format!("matmul {n}³"), s.median.as_secs_f64()));
 
         let s = Bench::new(&format!("matmul_nt {n}³"))
             .with_budget(6, Duration::from_secs(2))
@@ -167,6 +203,15 @@ fn main() {
         report(&s, Some((flops, "FLOP")));
         log.record(&s, Some(flops), "seed");
         seed_medians.push((format!("gram 2048x{n}"), s.median.as_secs_f64()));
+
+        let s = Bench::new(&format!("gram 2048x{n} [f32]"))
+            .with_budget(6, Duration::from_secs(2))
+            .run(|| {
+                std::hint::black_box(gram_prec(&panel, Precision::F32));
+            });
+        report(&s, Some((flops, "FLOP")));
+        log.record(&s, Some(flops), "f32");
+        f32_medians.push((format!("gram 2048x{n}"), s.median.as_secs_f64()));
 
         let mut spd = gram(&panel).scale(1.0 / 2048.0);
         spd.add_diag(0.01);
@@ -204,6 +249,34 @@ fn main() {
         }
     }
 
+    // ---- f32 path vs the packed f64 kernel, per shape
+    println!("\n-- f32 speedups vs packed f64 --");
+    let mut f32_speedups: Vec<(String, f64)> = Vec::new();
+    for (name, f32_t) in &f32_medians {
+        if let Some((_, packed_t)) =
+            packed_medians.iter().find(|(n, _)| n == name)
+        {
+            if *f32_t > 0.0 {
+                let speedup = packed_t / f32_t;
+                println!("{name:44} {speedup:6.2}×");
+                log.note(&format!("speedup f32 {name}"), speedup);
+                f32_speedups.push((name.clone(), speedup));
+            }
+        }
+    }
+
+    // ---- dispatched kernel vs the forced-scalar rung (f32)
+    println!("\n-- dispatch speedups vs scalar rung (f32) --");
+    for (name, scalar_t) in &scalar32_medians {
+        if let Some((_, f32_t)) = f32_medians.iter().find(|(n, _)| n == name) {
+            if *f32_t > 0.0 {
+                let speedup = scalar_t / f32_t;
+                println!("{name:44} {speedup:6.2}×");
+                log.note(&format!("speedup dispatch {name}"), speedup);
+            }
+        }
+    }
+
     match log.write() {
         Ok(path) => println!("\nwrote {}", path.display()),
         Err(e) => eprintln!("failed to write bench log: {e}"),
@@ -224,6 +297,23 @@ fn main() {
                 failed = true;
             } else {
                 println!("gate ok: {shape} {got:.2}× ≥ {min}×");
+            }
+        }
+        // f32 path must beat the packed f64 kernel on the flagship shape
+        let f32_gates = [("matmul 512³", 1.5)];
+        for (shape, min) in f32_gates {
+            let got = f32_speedups
+                .iter()
+                .find(|(n, _)| n == shape)
+                .map(|(_, s)| *s)
+                .unwrap_or(0.0);
+            if got < min {
+                eprintln!(
+                    "GATE FAILED: {shape} f32 speedup {got:.2}× < {min}×"
+                );
+                failed = true;
+            } else {
+                println!("gate ok: {shape} f32 {got:.2}× ≥ {min}×");
             }
         }
         if failed {

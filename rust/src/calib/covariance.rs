@@ -7,8 +7,13 @@
 //! blocked-symmetric `gram_acc` (half the flops, parallel blocks), and
 //! the general/weighted case through the packed `matmul_tn_acc`
 //! (C += XᵀY) with row weights folded into a scaled copy of X.
+//!
+//! Both paths are precision-gated: in f32 mode
+//! ([`CovAccum::with_precision`], fed by `WATERSIC_PRECISION`) the
+//! panels pack and multiply in f32 while the running sum stays f64 —
+//! accumulate in f64, store/pack in f32.
 
-use crate::linalg::gemm::{gram_acc, matmul_tn_acc};
+use crate::linalg::gemm::{gram_acc_prec, matmul_tn_acc_prec, Precision};
 use crate::linalg::Mat;
 
 /// Accumulates Σ = E[x yᵀ] from row panels, optionally with per-row
@@ -22,16 +27,26 @@ pub struct CovAccum {
     /// true while every update so far used the mirror-symmetric gram
     /// path — the invariant that makes the next such update valid
     symmetric: bool,
+    /// kernel precision for the panel products (the sum stays f64)
+    precision: Precision,
 }
 
 impl CovAccum {
     pub fn new(nx: usize, ny: usize) -> CovAccum {
+        CovAccum::with_precision(nx, ny, Precision::F64)
+    }
+
+    /// Accumulator whose panel gemms run at `precision`; the running
+    /// f64 sum (and therefore `finalize`) is unaffected by rounding
+    /// across updates, only within each streamed panel product.
+    pub fn with_precision(nx: usize, ny: usize, precision: Precision) -> CovAccum {
         CovAccum {
             nx,
             ny,
             sum: Mat::zeros(nx, ny),
             weight: 0.0,
             symmetric: true,
+            precision,
         }
     }
 
@@ -54,11 +69,11 @@ impl CovAccum {
         };
         let same_panel = std::ptr::eq(x, y) && self.nx == self.ny;
         if w.is_none() && same_panel && self.symmetric {
-            gram_acc(x, &mut self.sum);
+            gram_acc_prec(x, &mut self.sum, self.precision);
         } else {
             self.symmetric = false;
             match w {
-                None => matmul_tn_acc(x, y, &mut self.sum),
+                None => matmul_tn_acc_prec(x, y, &mut self.sum, self.precision),
                 Some(w) => {
                     // fold the row weights into one factor: Σ += Xᵀdiag(w)Y
                     let mut xs = x.clone();
@@ -69,7 +84,7 @@ impl CovAccum {
                             xs.row_mut(r).iter_mut().for_each(|v| *v *= wr);
                         }
                     }
-                    matmul_tn_acc(&xs, y, &mut self.sum);
+                    matmul_tn_acc_prec(&xs, y, &mut self.sum, self.precision);
                 }
             }
         }
@@ -136,6 +151,34 @@ mod tests {
         let c = acc.finalize();
         assert!((c[(0, 1)] - 1.0).abs() < 1e-12);
         assert!((c[(1, 0)] - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f32_accumulation_close_to_f64() {
+        // the f32 panel path (gram + weighted cross-moment) must agree
+        // with the f64 reference to f32 rounding, panel sizes chosen to
+        // clear the packed threshold
+        let mut rng = Rng::new(9);
+        let x = Mat::from_fn(400, 48, |_, _| rng.gaussian());
+        let mut a64 = CovAccum::new(48, 48);
+        a64.add(&x, &x);
+        let mut a32 = CovAccum::with_precision(48, 48, Precision::F32);
+        a32.add(&x, &x);
+        let c64 = a64.finalize();
+        let c32 = a32.finalize();
+        let rel = c32.sub(&c64).frob_norm() / c64.frob_norm();
+        assert!(rel > 0.0, "f32 path did not engage");
+        assert!(rel < 1e-5, "f32 gram accumulation drifted: {rel}");
+
+        let ws: Vec<f64> = (0..400).map(|r| 0.5 + (r % 3) as f64).collect();
+        let mut w64 = CovAccum::new(48, 48);
+        w64.add_weighted(&x, &x, Some(&ws));
+        let mut w32 = CovAccum::with_precision(48, 48, Precision::F32);
+        w32.add_weighted(&x, &x, Some(&ws));
+        let c64 = w64.finalize();
+        let c32 = w32.finalize();
+        let rel = c32.sub(&c64).frob_norm() / c64.frob_norm();
+        assert!(rel < 1e-5, "f32 weighted accumulation drifted: {rel}");
     }
 
     #[test]

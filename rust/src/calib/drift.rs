@@ -7,6 +7,7 @@
 
 use std::collections::BTreeMap;
 
+use crate::linalg::gemm::Precision;
 use crate::linalg::Mat;
 use crate::model::transformer::{forward, input_group, Capture, ForwardOpts};
 use crate::model::weights::Weights;
@@ -45,6 +46,9 @@ pub struct CalibSet {
     pub b: usize,
     pub teacher_caps: Vec<Capture>,
     pub teacher_logits: Vec<Mat>,
+    /// kernel precision for every forward and covariance product this
+    /// set performs (`WATERSIC_PRECISION` unless plumbed explicitly)
+    pub precision: Precision,
 }
 
 impl CalibSet {
@@ -53,6 +57,18 @@ impl CalibSet {
         teacher: &Weights,
         batches: Vec<Vec<i32>>,
         b: usize,
+    ) -> CalibSet {
+        CalibSet::build_prec(cfg, teacher, batches, b, Precision::from_env())
+    }
+
+    /// [`CalibSet::build`] at an explicit kernel precision (the
+    /// pipeline threads `PipelineOpts::precision` through here).
+    pub fn build_prec(
+        cfg: &ModelConfig,
+        teacher: &Weights,
+        batches: Vec<Vec<i32>>,
+        b: usize,
+        precision: Precision,
     ) -> CalibSet {
         // batches are independent: fan the teacher passes out over the
         // persistent pool; one capture pass yields both the panels and
@@ -69,6 +85,7 @@ impl CalibSet {
                 &ForwardOpts {
                     capture: true,
                     tape: false,
+                    precision,
                 },
             );
             (out.capture.unwrap(), out.logits)
@@ -79,6 +96,7 @@ impl CalibSet {
             b,
             teacher_caps: caps,
             teacher_logits: logits,
+            precision,
         }
     }
 
@@ -97,6 +115,7 @@ impl CalibSet {
                 &ForwardOpts {
                     capture: true,
                     tape: false,
+                    precision: self.precision,
                 },
             )
             .capture
@@ -127,11 +146,11 @@ impl CalibSet {
         } else {
             0 // Σ_Δ unused
         };
-        let mut acc_x = CovAccum::new(n, n);
-        let mut acc_xh = CovAccum::new(n, n);
-        let mut acc_x_xh = CovAccum::new(n, n);
+        let mut acc_x = CovAccum::with_precision(n, n, self.precision);
+        let mut acc_xh = CovAccum::with_precision(n, n, self.precision);
+        let mut acc_x_xh = CovAccum::with_precision(n, n, self.precision);
         let mut acc_d = if is_down && opts.residual {
-            Some(CovAccum::new(a, n))
+            Some(CovAccum::with_precision(a, n, self.precision))
         } else {
             None
         };
@@ -243,6 +262,39 @@ mod tests {
         let t_panels = cs.teacher_panels("layers.0.ffn.w2");
         let s_panels = student_panels(&scaps, "layers.0.ffn.w2");
         assert!(panel_rel_mse(&t_panels, &s_panels) > 1e-9);
+    }
+
+    #[test]
+    fn env_precision_stats_engage_packed_path() {
+        // panels sized past the packed-gemm threshold so the
+        // env-selected precision (f64 by default; f32 in the rust-f32
+        // CI job) actually drives the forward and covariance kernels
+        let cfg = ModelConfig {
+            vocab: 64,
+            d_model: 32,
+            n_heads: 2,
+            d_ff: 64,
+            ctx: 32,
+            ..ModelConfig::tiny_test()
+        };
+        let teacher = Weights::random(&cfg, 19);
+        let mut rng = crate::util::rng::Rng::new(23);
+        let batches: Vec<Vec<i32>> = (0..2)
+            .map(|_| {
+                (0..2 * cfg.ctx)
+                    .map(|_| rng.below(cfg.vocab) as i32)
+                    .collect()
+            })
+            .collect();
+        let cs = CalibSet::build(&cfg, &teacher, batches, 2);
+        assert_eq!(cs.precision, Precision::from_env());
+        let scaps = cs.student_pass(&cfg, &teacher);
+        let stats = cs.stats_for(&cfg, "layers.0.ffn.w2", &scaps, StatsOpts::default());
+        // identical student ⇒ identical captures bitwise ⇒ exact
+        // agreement in either precision; values must stay finite
+        assert!(stats.sigma_x.sub(&stats.sigma_xhat).max_abs() < 1e-9);
+        assert!(stats.sigma_x.is_finite());
+        assert!(stats.sigma_d_xhat.unwrap().max_abs() < 1e-9);
     }
 
     #[test]

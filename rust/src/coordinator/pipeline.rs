@@ -21,7 +21,7 @@ use crate::quant::rate_control::RateBudget;
 use crate::quant::rtn::{rtn_absmax, rtn_grid_at_rate};
 use crate::quant::watersic::watersic_at_rate;
 use crate::quant::{LayerQuant, LayerStats, QuantOpts};
-use crate::runtime::Engine;
+use crate::runtime::{Engine, Precision};
 
 /// Which algorithm the pipeline runs — the rows of Tables 1/2.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -67,6 +67,10 @@ pub struct PipelineOpts {
     pub quant: QuantOpts,
     /// rows used during secant rate search
     pub subsample_rows: usize,
+    /// kernel precision for calibration forwards and covariance
+    /// streaming (the quantizer core stays f64 regardless); defaults
+    /// to the `WATERSIC_PRECISION` engine option
+    pub precision: Precision,
     /// route fixed shapes through the PJRT ZSIC artifact
     pub use_engine: bool,
     /// run WaterSIC-FT afterwards
@@ -88,6 +92,7 @@ impl PipelineOpts {
             mixing_iters: 5,
             quant: QuantOpts::default(),
             subsample_rows: 64,
+            precision: Precision::from_env(),
             use_engine: true,
             finetune: None,
         }
@@ -215,7 +220,10 @@ pub fn quantize_model(
             .into_iter()
             .map(|(t, _)| t)
             .collect();
-    let cs = CalibSet::build(cfg, teacher, batches, opts.calib_batch);
+    // the pipeline opts own the native-path kernel precision
+    // (Engine::precision reflects the same WATERSIC_PRECISION default
+    // for the runtime's own info surfaces)
+    let cs = CalibSet::build_prec(cfg, teacher, batches, opts.calib_batch, opts.precision);
 
     let mut student = teacher.clone();
     let mut quants: BTreeMap<String, LayerQuant> = BTreeMap::new();

@@ -31,7 +31,11 @@ impl Ctx {
         let engine = if use_engine {
             match Engine::new(artifacts.clone()) {
                 Ok(e) => {
-                    eprintln!("[runtime] PJRT platform: {}", e.platform());
+                    eprintln!(
+                        "[runtime] PJRT platform: {}; native kernels: {}",
+                        e.platform(),
+                        e.precision().name()
+                    );
                     Some(e)
                 }
                 Err(e) => {

@@ -106,6 +106,7 @@ pub fn finetune_rescalers(
             &ForwardOpts {
                 capture: false,
                 tape: true,
+                ..ForwardOpts::default()
             },
         );
         let loss = kl_divergence(&teacher_logits[bi], &out.logits);

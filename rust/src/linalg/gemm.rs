@@ -8,16 +8,51 @@
 //!   consumes them (A in `MR`-row column-interleaved panels, B in
 //!   `NR`-column row-interleaved panels), so the inner loop is pure
 //!   sequential loads;
-//! * an unrolled `MR`×`NR` = 4×8 register-tile **micro-kernel**
-//!   accumulates into 32 scalar f64 accumulators the compiler keeps in
-//!   vector registers (autovectorizes to AVX/NEON without intrinsics);
+//! * an unrolled `MR`×`NR` register-tile **micro-kernel** accumulates
+//!   into scalar or vector registers (4×8 for f64, 8×8 for f32 — the
+//!   lanes double when the element halves);
 //! * the `MC`-row blocks are distributed over the persistent thread
 //!   pool (`util::threadpool`) with chunk stealing.
+//!
+//! # Precision
+//!
+//! The packed driver is generic over an [`Element`] (f64 or f32).  In
+//! f32 mode the pack buffers and the micro-kernel run in f32 (double
+//! the vector lanes, half the pack bandwidth) while C stays f64: each
+//! micro-tile reduces one `KC` block in f32 registers and folds the
+//! partial into the f64 accumulator, so cross-block accumulation is
+//! always f64.  The `*_prec` entry points select the mode; consumers
+//! that tolerate reduced precision (covariance/drift streaming, the
+//! model forward) opt in through the `WATERSIC_PRECISION` engine
+//! option ([`Precision::from_env`]), while the quantizer core stays
+//! f64.  Products below `SMALL_GEMM` always use the serial f64 kernel
+//! (packing overhead dominates), so f32 mode only changes packed-path
+//! shapes.
+//!
+//! # Dispatch ladder
+//!
+//! Each element type owns a ladder of micro-kernels selected once per
+//! process by [`simd_backend`]:
+//!
+//! * **avx2** (x86-64, via `is_x86_feature_detected!`): explicit
+//!   256-bit intrinsics — 8 f32 / 4 f64 lanes per register;
+//! * **neon** (aarch64, baseline feature — no runtime check needed):
+//!   explicit 128-bit intrinsics;
+//! * **scalar**: the unrolled register-tile loops the compiler
+//!   autovectorizes for the build target's baseline features.
+//!
+//! Every rung uses separate mul + add (never FMA), keeping each
+//! accumulator lane's reduction chain bit-identical across the ladder:
+//! dispatch never changes a single output bit, only throughput.
+//! `WATERSIC_SIMD=scalar` forces the fallback rung (AVX-512 is left
+//! out: this tree grows in a container without a local toolchain, so
+//! only rungs that are verifiable on stable Rust across both arches —
+//! AVX2 and NEON — are wired in; see ROADMAP).
 //!
 //! Determinism: every C element is produced by exactly one micro-tile,
 //! and the K reduction order (KC blocks ascending, k ascending inside)
 //! is independent of the thread count — threaded and single-threaded
-//! runs are bit-for-bit identical.
+//! runs are bit-for-bit identical, in both precisions.
 //!
 //! Operand views are `Panel`s (base pointer + row stride + optional
 //! transpose), so the same driver serves `matmul`, `matmul_nt`
@@ -26,16 +61,19 @@
 //! ZSIC deferred rank-B panel update (C -= S·L on strided views).
 
 use std::sync::atomic::{AtomicPtr, Ordering};
+use std::sync::OnceLock;
 
 use super::Mat;
 use crate::util::threadpool::{default_threads, parallel_ranges};
 
-/// Register tile: MR×NR accumulators (MR is hard-wired into the
-/// micro-kernel unroll).
-const MR: usize = 4;
-const NR: usize = 8;
-/// Rows of A per cache block (multiple of MR; A block = MC×KC ≈ 128 KiB
-/// — L2-resident).
+/// f64 register tile: MR×NR accumulators.
+const MR_F64: usize = 4;
+const NR_F64: usize = 8;
+/// f32 register tile: lanes double, so the tile widens to 8×8.
+const MR_F32: usize = 8;
+const NR_F32: usize = 8;
+/// Rows of A per cache block (multiple of every MR; A block = MC×KC ≈
+/// 128 KiB — L2-resident).
 const MC: usize = 64;
 /// K extent per packing pass (B panel = KC×NC ≈ 2 MiB — L3-resident).
 const KC: usize = 256;
@@ -45,7 +83,208 @@ const NC: usize = 1024;
 /// serial kernel.
 const SMALL_GEMM: usize = 1 << 14;
 
-const _: () = assert!(MC % MR == 0, "MC must be a multiple of MR");
+const _: () = assert!(MC % MR_F64 == 0, "MC must be a multiple of f64 MR");
+const _: () = assert!(MC % MR_F32 == 0, "MC must be a multiple of f32 MR");
+
+/// Storage/compute precision of the packed kernel path.  C (and every
+/// `Mat`) stays f64 in both modes; f32 selects f32 pack buffers and
+/// micro-kernels with per-KC-block f64 accumulation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    F64,
+    F32,
+}
+
+impl Precision {
+    /// Engine-wide default from `WATERSIC_PRECISION={f32,f64}` (cached
+    /// on first read; defaults to f64, warning on unrecognized values
+    /// so a typo'd env never silently runs the wrong path).
+    pub fn from_env() -> Precision {
+        static CHOSEN: OnceLock<Precision> = OnceLock::new();
+        *CHOSEN.get_or_init(|| {
+            match std::env::var("WATERSIC_PRECISION").as_deref() {
+                Ok("f32") | Ok("F32") => Precision::F32,
+                Ok("f64") | Ok("F64") | Err(_) => Precision::F64,
+                Ok(other) => {
+                    eprintln!(
+                        "[linalg] unrecognized WATERSIC_PRECISION={other:?} \
+                         (expected f32 or f64); using f64"
+                    );
+                    Precision::F64
+                }
+            }
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+        }
+    }
+}
+
+/// Which micro-kernel rung the dispatch ladder selected.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SimdBackend {
+    /// Portable unrolled loops (autovectorized at the build target's
+    /// baseline features).  Bit-identical to every SIMD rung.
+    Scalar,
+    /// Explicit 256-bit AVX2 kernels (x86-64, runtime-detected).
+    Avx2,
+    /// Explicit 128-bit NEON kernels (aarch64 baseline).
+    Neon,
+}
+
+impl SimdBackend {
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdBackend::Scalar => "scalar",
+            SimdBackend::Avx2 => "avx2",
+            SimdBackend::Neon => "neon",
+        }
+    }
+}
+
+#[allow(unreachable_code)]
+fn detect_backend() -> SimdBackend {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return SimdBackend::Avx2;
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        // NEON is part of the aarch64 baseline — no runtime check.
+        return SimdBackend::Neon;
+    }
+    SimdBackend::Scalar
+}
+
+/// The process-wide kernel backend (cached on first call).  Honors
+/// `WATERSIC_SIMD=scalar` to force the fallback rung; anything else
+/// takes the best runtime-detected rung (unrecognized values warn —
+/// features the CPU lacks cannot be forced on).
+pub fn simd_backend() -> SimdBackend {
+    static CHOSEN: OnceLock<SimdBackend> = OnceLock::new();
+    *CHOSEN.get_or_init(|| {
+        match std::env::var("WATERSIC_SIMD").as_deref() {
+            Ok("scalar") => return SimdBackend::Scalar,
+            Ok(other) => eprintln!(
+                "[linalg] unrecognized WATERSIC_SIMD={other:?} \
+                 (only \"scalar\" can be forced); using runtime detection"
+            ),
+            Err(_) => {}
+        }
+        detect_backend()
+    })
+}
+
+/// Element of the packed panels.  Implementations own their register
+/// tile geometry and micro-kernel dispatch ladder; the blocked driver
+/// is generic over this.
+trait Element: Copy + Send + Sync + 'static {
+    /// Register-tile rows (interleave factor of packed A panels).
+    const MR: usize;
+    /// Register-tile cols (interleave factor of packed B panels).
+    const NR: usize;
+    const ZERO: Self;
+    fn from_f64(x: f64) -> Self;
+
+    /// MR×NR micro-kernel over packed panels, writing α·(A·B) for one
+    /// KC block into the f64 C tile (`store` overwrites, else adds).
+    ///
+    /// # Safety
+    /// `ap`/`bp` must be valid for `kc*MR` / `kc*NR` reads; `c` must be
+    /// valid for the `mr`×`nr` tile at row stride `ldc`, with exclusive
+    /// access.
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn microkernel(
+        backend: SimdBackend,
+        kc: usize,
+        ap: *const Self,
+        bp: *const Self,
+        c: *mut f64,
+        ldc: usize,
+        mr: usize,
+        nr: usize,
+        store: bool,
+        alpha: f64,
+    );
+}
+
+impl Element for f64 {
+    const MR: usize = MR_F64;
+    const NR: usize = NR_F64;
+    const ZERO: f64 = 0.0;
+
+    #[inline(always)]
+    fn from_f64(x: f64) -> f64 {
+        x
+    }
+
+    #[inline(always)]
+    unsafe fn microkernel(
+        backend: SimdBackend,
+        kc: usize,
+        ap: *const f64,
+        bp: *const f64,
+        c: *mut f64,
+        ldc: usize,
+        mr: usize,
+        nr: usize,
+        store: bool,
+        alpha: f64,
+    ) {
+        #[cfg(target_arch = "x86_64")]
+        if backend == SimdBackend::Avx2 {
+            return microkernel_f64_avx2(kc, ap, bp, c, ldc, mr, nr, store, alpha);
+        }
+        #[cfg(target_arch = "aarch64")]
+        if backend == SimdBackend::Neon {
+            return microkernel_f64_neon(kc, ap, bp, c, ldc, mr, nr, store, alpha);
+        }
+        let _ = backend;
+        microkernel_f64_scalar(kc, ap, bp, c, ldc, mr, nr, store, alpha)
+    }
+}
+
+impl Element for f32 {
+    const MR: usize = MR_F32;
+    const NR: usize = NR_F32;
+    const ZERO: f32 = 0.0;
+
+    #[inline(always)]
+    fn from_f64(x: f64) -> f32 {
+        x as f32
+    }
+
+    #[inline(always)]
+    unsafe fn microkernel(
+        backend: SimdBackend,
+        kc: usize,
+        ap: *const f32,
+        bp: *const f32,
+        c: *mut f64,
+        ldc: usize,
+        mr: usize,
+        nr: usize,
+        store: bool,
+        alpha: f64,
+    ) {
+        #[cfg(target_arch = "x86_64")]
+        if backend == SimdBackend::Avx2 {
+            return microkernel_f32_avx2(kc, ap, bp, c, ldc, mr, nr, store, alpha);
+        }
+        #[cfg(target_arch = "aarch64")]
+        if backend == SimdBackend::Neon {
+            return microkernel_f32_neon(kc, ap, bp, c, ldc, mr, nr, store, alpha);
+        }
+        let _ = backend;
+        microkernel_f32_scalar(kc, ap, bp, c, ldc, mr, nr, store, alpha)
+    }
+}
 
 /// Borrowed view of an m×k operand: element (i, j) lives at
 /// `data[i*ld + j]`, or at `data[j*ld + i]` when `trans` is set (the
@@ -93,7 +332,10 @@ impl<'a> Panel<'a> {
     }
 }
 
-/// 4×8 register-tile micro-kernel over packed panels.
+// ---------------------------------------------------------------------
+// micro-kernels (the rungs of the dispatch ladder)
+
+/// 4×8 f64 scalar micro-kernel over packed panels.
 ///
 /// `ap` holds `kc` steps of MR interleaved A values, `bp` holds `kc`
 /// steps of NR interleaved B values.  The full MR×NR accumulator is
@@ -101,11 +343,10 @@ impl<'a> Panel<'a> {
 /// corner is written back.
 ///
 /// # Safety
-/// `ap`/`bp` must be valid for `kc*MR` / `kc*NR` reads; `c` must be
-/// valid for the `mr`×`nr` tile at row stride `ldc`, with exclusive
-/// access.
+/// See [`Element::microkernel`].
+#[allow(clippy::too_many_arguments)]
 #[inline(always)]
-unsafe fn microkernel(
+unsafe fn microkernel_f64_scalar(
     kc: usize,
     ap: *const f64,
     bp: *const f64,
@@ -116,15 +357,15 @@ unsafe fn microkernel(
     store: bool,
     alpha: f64,
 ) {
-    let mut acc = [[0.0f64; NR]; MR];
+    let mut acc = [[0.0f64; NR_F64]; MR_F64];
     for kk in 0..kc {
-        let apk = ap.add(kk * MR);
-        let bpk = bp.add(kk * NR);
+        let apk = ap.add(kk * MR_F64);
+        let bpk = bp.add(kk * NR_F64);
         let a0 = *apk;
         let a1 = *apk.add(1);
         let a2 = *apk.add(2);
         let a3 = *apk.add(3);
-        for cc in 0..NR {
+        for cc in 0..NR_F64 {
             let bv = *bpk.add(cc);
             acc[0][cc] += a0 * bv;
             acc[1][cc] += a1 * bv;
@@ -132,10 +373,60 @@ unsafe fn microkernel(
             acc[3][cc] += a3 * bv;
         }
     }
-    for r in 0..mr {
+    write_tile_f64(&acc, c, ldc, mr, nr, store, alpha);
+}
+
+/// 8×8 f32 scalar micro-kernel: the KC-block partial product reduces
+/// in f32 registers and folds into the f64 C tile (cross-block
+/// accumulation stays f64).
+///
+/// # Safety
+/// See [`Element::microkernel`].
+#[allow(clippy::too_many_arguments)]
+#[inline(always)]
+unsafe fn microkernel_f32_scalar(
+    kc: usize,
+    ap: *const f32,
+    bp: *const f32,
+    c: *mut f64,
+    ldc: usize,
+    mr: usize,
+    nr: usize,
+    store: bool,
+    alpha: f64,
+) {
+    let mut acc = [[0.0f32; NR_F32]; MR_F32];
+    for kk in 0..kc {
+        let apk = ap.add(kk * MR_F32);
+        let bpk = bp.add(kk * NR_F32);
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let ar = *apk.add(r);
+            for (cc, slot) in accr.iter_mut().enumerate() {
+                *slot += ar * *bpk.add(cc);
+            }
+        }
+    }
+    write_tile_f32(&acc, c, ldc, mr, nr, store, alpha);
+}
+
+/// Write back the valid `mr`×`nr` corner of an f64 accumulator tile.
+///
+/// # Safety
+/// `c` must be valid for the tile at stride `ldc` with exclusive access.
+#[inline(always)]
+unsafe fn write_tile_f64(
+    acc: &[[f64; NR_F64]; MR_F64],
+    c: *mut f64,
+    ldc: usize,
+    mr: usize,
+    nr: usize,
+    store: bool,
+    alpha: f64,
+) {
+    for (r, accr) in acc.iter().enumerate().take(mr) {
         let crow = c.add(r * ldc);
-        for cc in 0..nr {
-            let v = alpha * acc[r][cc];
+        for (cc, &v0) in accr.iter().enumerate().take(nr) {
+            let v = alpha * v0;
             let dst = crow.add(cc);
             if store {
                 *dst = v;
@@ -146,13 +437,208 @@ unsafe fn microkernel(
     }
 }
 
+/// Write back the valid `mr`×`nr` corner of an f32 accumulator tile
+/// into the f64 C tile (lane-wise widen, then α in f64).
+///
+/// # Safety
+/// `c` must be valid for the tile at stride `ldc` with exclusive access.
+#[inline(always)]
+unsafe fn write_tile_f32(
+    acc: &[[f32; NR_F32]; MR_F32],
+    c: *mut f64,
+    ldc: usize,
+    mr: usize,
+    nr: usize,
+    store: bool,
+    alpha: f64,
+) {
+    for (r, accr) in acc.iter().enumerate().take(mr) {
+        let crow = c.add(r * ldc);
+        for (cc, &v0) in accr.iter().enumerate().take(nr) {
+            let v = alpha * v0 as f64;
+            let dst = crow.add(cc);
+            if store {
+                *dst = v;
+            } else {
+                *dst += v;
+            }
+        }
+    }
+}
+
+/// AVX2 rung of the f64 ladder: 4 rows × two 4-lane ymm columns.
+/// Separate mul + add (no FMA) keeps every lane's reduction chain
+/// bit-identical to [`microkernel_f64_scalar`].
+///
+/// # Safety
+/// See [`Element::microkernel`]; additionally requires AVX2 at runtime.
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+unsafe fn microkernel_f64_avx2(
+    kc: usize,
+    ap: *const f64,
+    bp: *const f64,
+    c: *mut f64,
+    ldc: usize,
+    mr: usize,
+    nr: usize,
+    store: bool,
+    alpha: f64,
+) {
+    use std::arch::x86_64::*;
+    let mut acc = [[_mm256_setzero_pd(); 2]; MR_F64];
+    for kk in 0..kc {
+        let apk = ap.add(kk * MR_F64);
+        let bpk = bp.add(kk * NR_F64);
+        let b0 = _mm256_loadu_pd(bpk);
+        let b1 = _mm256_loadu_pd(bpk.add(4));
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let av = _mm256_set1_pd(*apk.add(r));
+            accr[0] = _mm256_add_pd(accr[0], _mm256_mul_pd(av, b0));
+            accr[1] = _mm256_add_pd(accr[1], _mm256_mul_pd(av, b1));
+        }
+    }
+    let mut buf = [[0.0f64; NR_F64]; MR_F64];
+    for (r, accr) in acc.iter().enumerate() {
+        _mm256_storeu_pd(buf[r].as_mut_ptr(), accr[0]);
+        _mm256_storeu_pd(buf[r].as_mut_ptr().add(4), accr[1]);
+    }
+    write_tile_f64(&buf, c, ldc, mr, nr, store, alpha);
+}
+
+/// AVX2 rung of the f32 ladder: 8 rows × one 8-lane ymm column.
+///
+/// # Safety
+/// See [`Element::microkernel`]; additionally requires AVX2 at runtime.
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+unsafe fn microkernel_f32_avx2(
+    kc: usize,
+    ap: *const f32,
+    bp: *const f32,
+    c: *mut f64,
+    ldc: usize,
+    mr: usize,
+    nr: usize,
+    store: bool,
+    alpha: f64,
+) {
+    use std::arch::x86_64::*;
+    let mut acc = [_mm256_setzero_ps(); MR_F32];
+    for kk in 0..kc {
+        let apk = ap.add(kk * MR_F32);
+        let bv = _mm256_loadu_ps(bp.add(kk * NR_F32));
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let av = _mm256_set1_ps(*apk.add(r));
+            *accr = _mm256_add_ps(*accr, _mm256_mul_ps(av, bv));
+        }
+    }
+    let mut buf = [[0.0f32; NR_F32]; MR_F32];
+    for (r, accr) in acc.iter().enumerate() {
+        _mm256_storeu_ps(buf[r].as_mut_ptr(), *accr);
+    }
+    write_tile_f32(&buf, c, ldc, mr, nr, store, alpha);
+}
+
+/// NEON rung of the f64 ladder: 4 rows × four 2-lane q-register
+/// columns.  Explicit mul + add (not `vfmaq`) for scalar bit-identity.
+///
+/// # Safety
+/// See [`Element::microkernel`].
+#[cfg(target_arch = "aarch64")]
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "neon")]
+unsafe fn microkernel_f64_neon(
+    kc: usize,
+    ap: *const f64,
+    bp: *const f64,
+    c: *mut f64,
+    ldc: usize,
+    mr: usize,
+    nr: usize,
+    store: bool,
+    alpha: f64,
+) {
+    use std::arch::aarch64::*;
+    let mut acc = [[vdupq_n_f64(0.0); 4]; MR_F64];
+    for kk in 0..kc {
+        let apk = ap.add(kk * MR_F64);
+        let bpk = bp.add(kk * NR_F64);
+        let b = [
+            vld1q_f64(bpk),
+            vld1q_f64(bpk.add(2)),
+            vld1q_f64(bpk.add(4)),
+            vld1q_f64(bpk.add(6)),
+        ];
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let av = vdupq_n_f64(*apk.add(r));
+            for (q, bq) in b.iter().enumerate() {
+                accr[q] = vaddq_f64(accr[q], vmulq_f64(av, *bq));
+            }
+        }
+    }
+    let mut buf = [[0.0f64; NR_F64]; MR_F64];
+    for (r, accr) in acc.iter().enumerate() {
+        for (q, aq) in accr.iter().enumerate() {
+            vst1q_f64(buf[r].as_mut_ptr().add(2 * q), *aq);
+        }
+    }
+    write_tile_f64(&buf, c, ldc, mr, nr, store, alpha);
+}
+
+/// NEON rung of the f32 ladder: 8 rows × two 4-lane q-register columns.
+///
+/// # Safety
+/// See [`Element::microkernel`].
+#[cfg(target_arch = "aarch64")]
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "neon")]
+unsafe fn microkernel_f32_neon(
+    kc: usize,
+    ap: *const f32,
+    bp: *const f32,
+    c: *mut f64,
+    ldc: usize,
+    mr: usize,
+    nr: usize,
+    store: bool,
+    alpha: f64,
+) {
+    use std::arch::aarch64::*;
+    let mut acc = [[vdupq_n_f32(0.0); 2]; MR_F32];
+    for kk in 0..kc {
+        let apk = ap.add(kk * MR_F32);
+        let bpk = bp.add(kk * NR_F32);
+        let b0 = vld1q_f32(bpk);
+        let b1 = vld1q_f32(bpk.add(4));
+        for (r, accr) in acc.iter_mut().enumerate() {
+            let av = vdupq_n_f32(*apk.add(r));
+            accr[0] = vaddq_f32(accr[0], vmulq_f32(av, b0));
+            accr[1] = vaddq_f32(accr[1], vmulq_f32(av, b1));
+        }
+    }
+    let mut buf = [[0.0f32; NR_F32]; MR_F32];
+    for (r, accr) in acc.iter().enumerate() {
+        vst1q_f32(buf[r].as_mut_ptr(), accr[0]);
+        vst1q_f32(buf[r].as_mut_ptr().add(4), accr[1]);
+    }
+    write_tile_f32(&buf, c, ldc, mr, nr, store, alpha);
+}
+
+// ---------------------------------------------------------------------
+// blocked driver
+
 /// Blocked packed GEMM: C ⟵ α·A·B (`accumulate = false`) or
 /// C += α·A·B (`accumulate = true`), with C row-major at stride `ldc`.
+/// Generic over the pack/kernel [`Element`]; C is always f64.
 ///
 /// # Safety
 /// `c` must be valid for `(m-1)*ldc + n` elements with exclusive
 /// access for the duration of the call.
-unsafe fn gemm_driver(
+#[allow(clippy::too_many_arguments)]
+unsafe fn gemm_driver<T: Element>(
     a: Panel,
     b: Panel,
     c: *mut f64,
@@ -160,6 +646,7 @@ unsafe fn gemm_driver(
     accumulate: bool,
     alpha: f64,
     threads: usize,
+    backend: SimdBackend,
 ) {
     let (m, k) = (a.rows, a.cols);
     let n = b.cols;
@@ -180,10 +667,10 @@ unsafe fn gemm_driver(
     let nblocks = m.div_ceil(MC);
     // one B-pack buffer reused across every (jc, pc) pass — the pack
     // loops overwrite every slot they use (padding written explicitly)
-    let mut bpack = vec![0.0f64; (NC.min(n).div_ceil(NR) * NR) * KC.min(k)];
+    let mut bpack = vec![T::ZERO; (NC.min(n).div_ceil(T::NR) * T::NR) * KC.min(k)];
     for jc0 in (0..n).step_by(NC) {
         let nc_eff = NC.min(n - jc0);
-        let ncr = nc_eff.div_ceil(NR) * NR;
+        let ncr = nc_eff.div_ceil(T::NR) * T::NR;
         for pc0 in (0..k).step_by(KC) {
             let kc_eff = KC.min(k - pc0);
             let store = pc0 == 0 && !accumulate;
@@ -191,17 +678,17 @@ unsafe fn gemm_driver(
             // ---- pack B: ncr/NR panels of NR interleaved columns
             {
                 let bp = &mut bpack[..ncr * kc_eff];
-                for q in 0..ncr / NR {
-                    let joff = jc0 + q * NR;
-                    let dst0 = q * NR * kc_eff;
+                for q in 0..ncr / T::NR {
+                    let joff = jc0 + q * T::NR;
+                    let dst0 = q * T::NR * kc_eff;
                     for kk in 0..kc_eff {
-                        let dst = dst0 + kk * NR;
-                        for cc in 0..NR {
+                        let dst = dst0 + kk * T::NR;
+                        for cc in 0..T::NR {
                             let j = joff + cc;
                             bp[dst + cc] = if j < jc0 + nc_eff {
-                                b.at(pc0 + kk, j)
+                                T::from_f64(b.at(pc0 + kk, j))
                             } else {
-                                0.0
+                                T::ZERO
                             };
                         }
                     }
@@ -211,53 +698,86 @@ unsafe fn gemm_driver(
             let bpack_ref = &bpack[..ncr * kc_eff];
             parallel_ranges(nblocks, threads, |range| {
                 let cbase = cshared.load(Ordering::Relaxed);
-                let mut apack = vec![0.0f64; MC * kc_eff];
+                let mut apack = vec![T::ZERO; MC * kc_eff];
                 for blk in range {
                     let ic0 = blk * MC;
                     let mc_eff = MC.min(m - ic0);
-                    let mcr = mc_eff.div_ceil(MR) * MR;
+                    let mcr = mc_eff.div_ceil(T::MR) * T::MR;
 
                     // ---- pack A block: mcr/MR panels of MR rows
-                    for p in 0..mcr / MR {
-                        let ioff = ic0 + p * MR;
-                        let dst0 = p * MR * kc_eff;
+                    for p in 0..mcr / T::MR {
+                        let ioff = ic0 + p * T::MR;
+                        let dst0 = p * T::MR * kc_eff;
                         for kk in 0..kc_eff {
-                            let dst = dst0 + kk * MR;
-                            for r in 0..MR {
+                            let dst = dst0 + kk * T::MR;
+                            for r in 0..T::MR {
                                 let i = ioff + r;
                                 apack[dst + r] = if i < ic0 + mc_eff {
-                                    a.at(i, pc0 + kk)
+                                    T::from_f64(a.at(i, pc0 + kk))
                                 } else {
-                                    0.0
+                                    T::ZERO
                                 };
                             }
                         }
                     }
 
                     // ---- micro-tile sweep
-                    for q in 0..ncr / NR {
-                        let j0 = q * NR;
-                        let nr_eff = NR.min(nc_eff - j0);
-                        for p in 0..mcr / MR {
-                            let i0 = p * MR;
-                            let mr_eff = MR.min(mc_eff - i0);
+                    for q in 0..ncr / T::NR {
+                        let j0 = q * T::NR;
+                        let nr_eff = T::NR.min(nc_eff - j0);
+                        for p in 0..mcr / T::MR {
+                            let i0 = p * T::MR;
+                            let mr_eff = T::MR.min(mc_eff - i0);
                             // SAFETY: pack offsets are in range by
                             // construction; C tiles of distinct blocks
                             // are disjoint row ranges.
                             unsafe {
-                                let ap = apack.as_ptr().add(p * MR * kc_eff);
-                                let bp = bpack_ref.as_ptr().add(q * NR * kc_eff);
-                                let ctile =
-                                    cbase.add((ic0 + i0) * ldc + jc0 + j0);
-                                microkernel(
-                                    kc_eff, ap, bp, ctile, ldc, mr_eff, nr_eff,
-                                    store, alpha,
+                                let ap = apack.as_ptr().add(p * T::MR * kc_eff);
+                                let bp = bpack_ref.as_ptr().add(q * T::NR * kc_eff);
+                                let ctile = cbase.add((ic0 + i0) * ldc + jc0 + j0);
+                                T::microkernel(
+                                    backend,
+                                    kc_eff,
+                                    ap,
+                                    bp,
+                                    ctile,
+                                    ldc,
+                                    mr_eff,
+                                    nr_eff,
+                                    store,
+                                    alpha,
                                 );
                             }
                         }
                     }
                 }
             });
+        }
+    }
+}
+
+/// Invoke the packed driver at the requested precision.
+///
+/// # Safety
+/// Same contract as [`gemm_driver`].
+#[allow(clippy::too_many_arguments)]
+unsafe fn gemm_driver_prec(
+    prec: Precision,
+    a: Panel,
+    b: Panel,
+    c: *mut f64,
+    ldc: usize,
+    accumulate: bool,
+    alpha: f64,
+    threads: usize,
+    backend: SimdBackend,
+) {
+    match prec {
+        Precision::F64 => {
+            gemm_driver::<f64>(a, b, c, ldc, accumulate, alpha, threads, backend)
+        }
+        Precision::F32 => {
+            gemm_driver::<f32>(a, b, c, ldc, accumulate, alpha, threads, backend)
         }
     }
 }
@@ -311,6 +831,30 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
     c
 }
 
+/// C = A · B at the given kernel precision (see module docs; shapes
+/// below the packed threshold always compute in f64).
+pub fn matmul_prec(a: &Mat, b: &Mat, prec: Precision) -> Mat {
+    match prec {
+        Precision::F64 => matmul(a, b),
+        Precision::F32 => matmul_f32(a, b),
+    }
+}
+
+/// C = A · B through the f32 packed path: pack/multiply in f32 (double
+/// lanes, half pack bandwidth), per-KC-block accumulation in f64.
+pub fn matmul_f32(a: &Mat, b: &Mat) -> Mat {
+    matmul_f32_with(a, b, threads_for(a.rows * b.cols * a.cols), simd_backend())
+}
+
+/// [`matmul_f32`] with an explicit thread count and kernel backend —
+/// exposed for dispatch-equivalence tests and the benches (forcing
+/// [`SimdBackend::Scalar`] measures the ladder's fallback rung).
+pub fn matmul_f32_with(a: &Mat, b: &Mat, threads: usize, backend: SimdBackend) -> Mat {
+    let mut c = Mat::zeros(a.rows, b.cols);
+    matmul_into_with(a, b, &mut c, threads, backend, Precision::F32);
+    c
+}
+
 /// C = A · B with an explicit thread count — the threaded and
 /// single-threaded results are bit-for-bit identical (see module docs);
 /// exposed for determinism tests and tuning.
@@ -328,7 +872,20 @@ pub fn matmul_into(a: &Mat, b: &Mat, c: &mut Mat) {
 }
 
 fn matmul_into_threads(a: &Mat, b: &Mat, c: &mut Mat, threads: usize) {
-    assert_eq!(a.cols, b.rows);
+    matmul_into_with(a, b, c, threads, simd_backend(), Precision::F64);
+}
+
+/// Shared C = A·B body: shape checks, small-product fallback, packed
+/// driver at the requested precision/backend, overflow sampling.
+fn matmul_into_with(
+    a: &Mat,
+    b: &Mat,
+    c: &mut Mat,
+    threads: usize,
+    backend: SimdBackend,
+    prec: Precision,
+) {
+    assert_eq!(a.cols, b.rows, "gemm shape mismatch");
     assert_eq!((c.rows, c.cols), (a.rows, b.cols));
     if a.rows * b.cols * a.cols <= SMALL_GEMM {
         matmul_small_into(a, b, c);
@@ -336,7 +893,8 @@ fn matmul_into_threads(a: &Mat, b: &Mat, c: &mut Mat, threads: usize) {
         let ldc = c.cols;
         // SAFETY: c.data is exactly rows×cols and exclusively borrowed.
         unsafe {
-            gemm_driver(
+            gemm_driver_prec(
+                prec,
                 Panel::normal(a),
                 Panel::normal(b),
                 c.data.as_mut_ptr(),
@@ -344,6 +902,7 @@ fn matmul_into_threads(a: &Mat, b: &Mat, c: &mut Mat, threads: usize) {
                 false,
                 1.0,
                 threads,
+                backend,
             );
         }
     }
@@ -352,6 +911,12 @@ fn matmul_into_threads(a: &Mat, b: &Mat, c: &mut Mat, threads: usize) {
 
 /// C = A · Bᵀ without materializing the transpose.
 pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
+    matmul_nt_prec(a, b, Precision::F64)
+}
+
+/// [`matmul_nt`] at the given kernel precision — the model forward
+/// routes its projection gemms through this.
+pub fn matmul_nt_prec(a: &Mat, b: &Mat, prec: Precision) -> Mat {
     assert_eq!(a.cols, b.cols, "gemm_nt shape mismatch");
     let n = b.rows;
     let mut c = Mat::zeros(a.rows, n);
@@ -367,7 +932,8 @@ pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
         let threads = threads_for(a.rows * n * a.cols);
         // SAFETY: c.data is exactly rows×cols and exclusively borrowed.
         unsafe {
-            gemm_driver(
+            gemm_driver_prec(
+                prec,
                 Panel::normal(a),
                 Panel::transposed(b),
                 c.data.as_mut_ptr(),
@@ -375,6 +941,7 @@ pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
                 false,
                 1.0,
                 threads,
+                simd_backend(),
             );
         }
     }
@@ -385,6 +952,12 @@ pub fn matmul_nt(a: &Mat, b: &Mat) -> Mat {
 /// C += Xᵀ · Y (cross-moment accumulation; X is r×m, Y is r×n, C is
 /// m×n).  The covariance accumulators stream panels through this.
 pub fn matmul_tn_acc(x: &Mat, y: &Mat, c: &mut Mat) {
+    matmul_tn_acc_prec(x, y, c, Precision::F64)
+}
+
+/// [`matmul_tn_acc`] at the given kernel precision: panels pack and
+/// multiply in f32, the running moment C stays f64.
+pub fn matmul_tn_acc_prec(x: &Mat, y: &Mat, c: &mut Mat, prec: Precision) {
     assert_eq!(x.rows, y.rows, "gemm_tn shape mismatch");
     assert_eq!((c.rows, c.cols), (x.cols, y.cols));
     let (m, k, n) = (x.cols, x.rows, y.cols);
@@ -408,7 +981,8 @@ pub fn matmul_tn_acc(x: &Mat, y: &Mat, c: &mut Mat) {
     let threads = threads_for(m * k * n);
     // SAFETY: c.data is exactly m×n and exclusively borrowed.
     unsafe {
-        gemm_driver(
+        gemm_driver_prec(
+            prec,
             Panel::transposed(x),
             Panel::normal(y),
             c.data.as_mut_ptr(),
@@ -416,6 +990,7 @@ pub fn matmul_tn_acc(x: &Mat, y: &Mat, c: &mut Mat) {
             true,
             1.0,
             threads,
+            simd_backend(),
         );
     }
 }
@@ -428,12 +1003,21 @@ pub fn gram(a: &Mat) -> Mat {
     gram_with_threads(a, threads_for(a.rows * a.cols * a.cols))
 }
 
+/// [`gram`] at the given kernel precision.
+pub fn gram_prec(a: &Mat, prec: Precision) -> Mat {
+    gram_threads_prec(a, threads_for(a.rows * a.cols * a.cols), prec)
+}
+
 /// [`gram`] with an explicit thread count (bit-for-bit identical across
 /// thread counts; exposed for determinism tests and tuning).
 pub fn gram_with_threads(a: &Mat, threads: usize) -> Mat {
+    gram_threads_prec(a, threads, Precision::F64)
+}
+
+fn gram_threads_prec(a: &Mat, threads: usize, prec: Precision) -> Mat {
     let n = a.cols;
     let mut c = Mat::zeros(n, n);
-    syrk_upper(a, &mut c, threads);
+    syrk_upper(a, &mut c, threads, prec);
     mirror_lower(&mut c);
     c
 }
@@ -443,14 +1027,19 @@ pub fn gram_with_threads(a: &Mat, threads: usize) -> Mat {
 /// function): the update computes upper-triangle blocks and mirrors,
 /// which preserves exact symmetry.
 pub fn gram_acc(a: &Mat, c: &mut Mat) {
+    gram_acc_prec(a, c, Precision::F64)
+}
+
+/// [`gram_acc`] at the given kernel precision (C stays f64).
+pub fn gram_acc_prec(a: &Mat, c: &mut Mat, prec: Precision) {
     assert_eq!((c.rows, c.cols), (a.cols, a.cols), "gram_acc shape");
-    syrk_upper(a, c, threads_for(a.rows * a.cols * a.cols));
+    syrk_upper(a, c, threads_for(a.rows * a.cols * a.cols), prec);
     mirror_lower(c);
 }
 
 /// Accumulate the upper triangle (incl. diagonal blocks in full) of
 /// Aᵀ·A into C.
-fn syrk_upper(a: &Mat, c: &mut Mat, threads: usize) {
+fn syrk_upper(a: &Mat, c: &mut Mat, threads: usize, prec: Precision) {
     let n = a.cols;
     let m = a.rows;
     if n == 0 || m == 0 {
@@ -482,6 +1071,7 @@ fn syrk_upper(a: &Mat, c: &mut Mat, threads: usize) {
         .collect();
     let cptr = AtomicPtr::new(c.data.as_mut_ptr());
     let adata = &a.data;
+    let backend = simd_backend();
     parallel_ranges(pairs.len(), threads, |range| {
         let base = cptr.load(Ordering::Relaxed);
         for t in range {
@@ -508,7 +1098,7 @@ fn syrk_upper(a: &Mat, c: &mut Mat, threads: usize) {
             // SAFETY: block (bi, bj) owns the disjoint C region
             // [i0..i1)×[j0..j1); serial inner driver (threads = 1).
             unsafe {
-                gemm_driver(at, ap, base.add(i0 * n + j0), n, true, 1.0, 1);
+                gemm_driver_prec(prec, at, ap, base.add(i0 * n + j0), n, true, 1.0, 1, backend);
             }
         }
     });
@@ -525,7 +1115,10 @@ fn mirror_lower(c: &mut Mat) {
 /// C += α · A·B over raw strided views (A is m×k at stride `a_ld`, B is
 /// k×n at stride `b_ld`, C is m×n at stride `c_ld`).  Fused panel
 /// update for the ZSIC/GPTQ deferred rank-B interference subtraction —
-/// the α = −1 path replaces the per-element axpy sweep.
+/// the α = −1 path replaces the per-element axpy sweep.  Always f64:
+/// the quantizer core is pinned for reproducibility of the paper's
+/// numbers.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn gemm_acc_strided(
     m: usize,
     k: usize,
@@ -561,7 +1154,16 @@ pub(crate) fn gemm_acc_strided(
     };
     // SAFETY: extents checked above; c_data exclusively borrowed.
     unsafe {
-        gemm_driver(ap, bp, c_data.as_mut_ptr(), c_ld, true, alpha, threads);
+        gemm_driver::<f64>(
+            ap,
+            bp,
+            c_data.as_mut_ptr(),
+            c_ld,
+            true,
+            alpha,
+            threads,
+            simd_backend(),
+        );
     }
 }
 
@@ -637,11 +1239,11 @@ mod tests {
         // shapes straddling every tile edge: MR=4, NR=8, MC=64, KC=256
         let mut rng = Rng::new(41);
         for (m, k, n) in [
-            (5, 70, 9),      // nothing divides
-            (63, 65, 67),    // just under/over MC
-            (129, 257, 33),  // crosses MC and KC boundaries
-            (8, 600, 8),     // exact tile, K spans three KC blocks
-            (66, 40, 1030),  // crosses the NC panel edge
+            (5, 70, 9),     // nothing divides
+            (63, 65, 67),   // just under/over MC
+            (129, 257, 33), // crosses MC and KC boundaries
+            (8, 600, 8),    // exact tile, K spans three KC blocks
+            (66, 40, 1030), // crosses the NC panel edge
         ] {
             let a = randm(m, k, &mut rng);
             let b = randm(k, n, &mut rng);
@@ -686,6 +1288,118 @@ mod tests {
         let g1 = gram_with_threads(&p, 1);
         let g8 = gram_with_threads(&p, 8);
         assert_eq!(g1.data, g8.data, "threaded gram must be deterministic");
+    }
+
+    #[test]
+    fn f32_threaded_matches_single_thread_bitwise() {
+        let mut rng = Rng::new(48);
+        let a = randm(150, 170, &mut rng);
+        let b = randm(170, 130, &mut rng);
+        let be = simd_backend();
+        let c1 = matmul_f32_with(&a, &b, 1, be);
+        let c8 = matmul_f32_with(&a, &b, 8, be);
+        assert_eq!(c1.data, c8.data, "threaded f32 gemm must be deterministic");
+    }
+
+    #[test]
+    fn f32_matmul_parity_nondivisible() {
+        // f32 packed path vs the f64 kernel across tile-straddling
+        // shapes: the KC-block f32 reduction bounds the relative error
+        // to ~ε₃₂·√k ≈ 1e-6 on gaussian data
+        let mut rng = Rng::new(50);
+        for (m, k, n) in [(37, 41, 29), (63, 65, 67), (129, 257, 33), (66, 40, 1030)] {
+            let a = randm(m, k, &mut rng);
+            let b = randm(k, n, &mut rng);
+            let c64 = matmul(&a, &b);
+            let c32 = matmul_f32(&a, &b);
+            let rel = c32.sub(&c64).frob_norm() / c64.frob_norm().max(1e-30);
+            assert!(rel < 2e-5, "{m}x{k}x{n}: rel err {rel}");
+        }
+    }
+
+    #[test]
+    fn f32_prec_variants_parity() {
+        // matmul_nt / gram / tn_acc through the f32 packed path
+        let mut rng = Rng::new(51);
+        let a = randm(70, 90, &mut rng);
+        let b = randm(110, 90, &mut rng);
+        let c64 = matmul_nt(&a, &b);
+        let c32 = matmul_nt_prec(&a, &b, Precision::F32);
+        assert!(c32.sub(&c64).frob_norm() / c64.frob_norm() < 2e-5);
+
+        let p = randm(300, 90, &mut rng);
+        let g64 = gram(&p);
+        let g32 = gram_prec(&p, Precision::F32);
+        assert!(g32.sub(&g64).frob_norm() / g64.frob_norm() < 2e-5);
+        for i in 0..90 {
+            for j in 0..i {
+                assert_eq!(g32[(i, j)], g32[(j, i)], "f32 gram symmetry");
+            }
+        }
+
+        let x = randm(120, 40, &mut rng);
+        let y = randm(120, 50, &mut rng);
+        let mut c = Mat::zeros(40, 50);
+        matmul_tn_acc_prec(&x, &y, &mut c, Precision::F32);
+        let expect = naive(&x.transpose(), &y);
+        assert!(c.sub(&expect).frob_norm() / expect.frob_norm() < 2e-5);
+    }
+
+    #[test]
+    fn simd_and_scalar_dispatch_agree_bitwise() {
+        // every SIMD rung uses mul+add in the same per-lane order as
+        // the scalar kernel, so the dispatch choice must not change a
+        // single bit (on machines without SIMD this degenerates to
+        // scalar == scalar)
+        let mut rng = Rng::new(52);
+        let a = randm(150, 170, &mut rng);
+        let b = randm(170, 130, &mut rng);
+        let auto = simd_backend();
+        let c_auto = matmul_f32_with(&a, &b, 4, auto);
+        let c_scalar = matmul_f32_with(&a, &b, 4, SimdBackend::Scalar);
+        assert_eq!(
+            c_auto.data,
+            c_scalar.data,
+            "f32 dispatch must be bit-identical (backend {auto:?})"
+        );
+    }
+
+    #[test]
+    fn f64_simd_and_scalar_dispatch_agree_bitwise() {
+        let mut rng = Rng::new(53);
+        let a = randm(129, 257, &mut rng);
+        let b = randm(257, 66, &mut rng);
+        let auto = simd_backend();
+        let mut c_auto = Mat::zeros(129, 66);
+        let mut c_scalar = Mat::zeros(129, 66);
+        // SAFETY: each C is exactly rows×cols and exclusively borrowed.
+        unsafe {
+            gemm_driver::<f64>(
+                Panel::normal(&a),
+                Panel::normal(&b),
+                c_auto.data.as_mut_ptr(),
+                66,
+                false,
+                1.0,
+                2,
+                auto,
+            );
+            gemm_driver::<f64>(
+                Panel::normal(&a),
+                Panel::normal(&b),
+                c_scalar.data.as_mut_ptr(),
+                66,
+                false,
+                1.0,
+                2,
+                SimdBackend::Scalar,
+            );
+        }
+        assert_eq!(
+            c_auto.data,
+            c_scalar.data,
+            "f64 dispatch must be bit-identical (backend {auto:?})"
+        );
     }
 
     #[test]
@@ -832,5 +1546,32 @@ mod tests {
         let c = matmul(&a, &b);
         let c0 = naive(&a, &b);
         assert!(c.sub(&c0).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn env_precision_packed_parity() {
+        // runs at whatever WATERSIC_PRECISION selects (the rust-f32 CI
+        // job sets f32) on a shape past the packed threshold, checked
+        // against the f64 reference — under f64 this is exact, under
+        // f32 it exercises the environment-driven path at scale
+        let mut rng = Rng::new(54);
+        let a = randm(80, 120, &mut rng);
+        let b = randm(120, 90, &mut rng);
+        let c = matmul_prec(&a, &b, Precision::from_env());
+        let c64 = matmul(&a, &b);
+        let rel = c.sub(&c64).frob_norm() / c64.frob_norm();
+        assert!(rel < 2e-5, "env-precision gemm drifted: {rel}");
+    }
+
+    #[test]
+    fn precision_env_and_names() {
+        assert_eq!(Precision::F32.name(), "f32");
+        assert_eq!(Precision::F64.name(), "f64");
+        // from_env is cached and must be one of the two modes
+        let p = Precision::from_env();
+        assert!(p == Precision::F32 || p == Precision::F64);
+        assert_eq!(p, Precision::from_env());
+        // the selected backend is stable across calls
+        assert_eq!(simd_backend(), simd_backend());
     }
 }

@@ -236,6 +236,7 @@ fn cmd_selftest(args: &Args) -> Result<()> {
         bail!("selftest needs the PJRT engine (artifacts + libxla)");
     };
     println!("platform: {}", engine.platform());
+    println!("native kernel precision: {}", engine.precision().name());
 
     // 1. ZSIC artifact vs native oracle on a real shape
     let (a, n) = (64, 64);

@@ -232,6 +232,7 @@ pub fn kl_loss_and_grads(
         &super::transformer::ForwardOpts {
             capture: false,
             tape: true,
+            ..Default::default()
         },
     );
     let loss = super::transformer::kl_divergence(teacher_logits, &out.logits);
@@ -276,6 +277,7 @@ mod tests {
             &ForwardOpts {
                 capture: false,
                 tape: true,
+                ..Default::default()
             },
         );
         let dlogits = ce_grad(&out.logits, &targets);

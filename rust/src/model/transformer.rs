@@ -3,8 +3,9 @@
 //! drift / residual / attention-weighted statistics of §4.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicPtr, Ordering};
 
-use crate::linalg::gemm::matmul_nt;
+use crate::linalg::gemm::{matmul_nt, matmul_nt_prec, Precision};
 use crate::linalg::Mat;
 
 use super::weights::Weights;
@@ -145,6 +146,12 @@ pub fn apply_rope_backward(g: &mut Mat, cos: &Mat, sin: &Mat, t: usize) {
 pub struct ForwardOpts {
     pub capture: bool,
     pub tape: bool,
+    /// Kernel precision for the projection gemms (QKV, wo, FFN, head).
+    /// Attention score/softmax math always runs in f64, and a taped
+    /// forward is pinned to f64 (the reverse pass needs the f64
+    /// oracle).  The calibration paths thread `WATERSIC_PRECISION`
+    /// through here; direct callers default to f64.
+    pub precision: Precision,
 }
 
 impl Default for ForwardOpts {
@@ -152,6 +159,7 @@ impl Default for ForwardOpts {
         ForwardOpts {
             capture: false,
             tape: false,
+            precision: Precision::F64,
         }
     }
 }
@@ -177,6 +185,13 @@ pub fn forward(
     let hd = cfg.head_dim();
     let scale = 1.0 / (hd as f64).sqrt();
     let rows = b * t;
+    // taped forwards stay f64: the reverse pass differentiates against
+    // the f64 oracle (see ForwardOpts::precision)
+    let prec = if opts.tape {
+        Precision::F64
+    } else {
+        opts.precision
+    };
 
     let embed = w.get("embed");
     let mut x = Mat::zeros(rows, d);
@@ -203,9 +218,9 @@ pub fn forward(
         if opts.capture {
             cap.inputs.insert(format!("{p}attn.qkv"), h1.clone());
         }
-        let qf = matmul_nt(&h1, w.get(&format!("{p}attn.wq")));
-        let kf = matmul_nt(&h1, w.get(&format!("{p}attn.wk")));
-        let vf = matmul_nt(&h1, w.get(&format!("{p}attn.wv")));
+        let qf = matmul_nt_prec(&h1, w.get(&format!("{p}attn.wq")), prec);
+        let kf = matmul_nt_prec(&h1, w.get(&format!("{p}attn.wk")), prec);
+        let vf = matmul_nt_prec(&h1, w.get(&format!("{p}attn.wv")), prec);
 
         // split heads: per head (rows × hd)
         let split = |m: &Mat, h: usize| -> Mat {
@@ -237,20 +252,34 @@ pub fn forward(
             .collect();
         let threads =
             crate::util::threadpool::default_threads().min(pairs.len().max(1));
-        // probs matrices are only materialized when someone will read
-        // them — a plain inference forward keeps each head's scratch
-        // row-local instead of retaining b·nh t×t panels
-        let need_probs = opts.capture || opts.tape;
-        let head_outs: Vec<(Mat, Option<Mat>)> = crate::util::threadpool::parallel_map(
-            pairs,
-            threads,
-            |(bi, h)| {
+        // capture probs scatter directly: each (bi, h) task owns the
+        // disjoint [(bi·H+h)·t², +t²) slice of probs_flat, so the
+        // b·nh t×t blocks are written in place instead of being staged
+        // in head_outs and copied (which transiently doubled the
+        // capture footprint).  Tape (the rare path) still keeps the
+        // per-task Mat; plain inference materializes neither.
+        let mut probs_flat: Vec<f64> = if opts.capture {
+            vec![0.0; b * nh * t * t]
+        } else {
+            Vec::new()
+        };
+        let probs_ptr = AtomicPtr::new(probs_flat.as_mut_ptr());
+        let head_outs: Vec<(Mat, Option<Mat>)> =
+            crate::util::threadpool::parallel_map(pairs, threads, |(bi, h)| {
                 let base = bi * t;
                 let q = &qs[h];
                 let k = &ks[h];
                 let v = &vs[h];
-                let mut probs = if need_probs {
+                let mut probs = if opts.tape {
                     Some(Mat::zeros(t, t))
+                } else {
+                    None
+                };
+                let flat_base = if opts.capture {
+                    // SAFETY: task (bi, h) exclusively owns this t×t
+                    // block; probs_flat is not reallocated or read
+                    // until every task has completed.
+                    Some(unsafe { probs_ptr.load(Ordering::Relaxed).add((bi * nh + h) * t * t) })
                 } else {
                     None
                 };
@@ -274,6 +303,13 @@ pub fn forward(
                     let crow = ctx_head.row_mut(i);
                     for j in 0..=i {
                         let pj = srow[j] / denom;
+                        if let Some(pbase) = flat_base {
+                            // SAFETY: (i, j) indexes inside this task's
+                            // exclusive block.
+                            unsafe {
+                                *pbase.add(i * t + j) = pj;
+                            }
+                        }
                         if let Some(p) = probs.as_mut() {
                             p[(i, j)] = pj;
                         }
@@ -284,15 +320,9 @@ pub fn forward(
                     }
                 }
                 (ctx_head, probs)
-            },
-        );
+            });
         let mut ctxcat = Mat::zeros(rows, d);
         let mut probs_store: Vec<Mat> = Vec::new();
-        let mut probs_flat: Vec<f64> = if opts.capture {
-            Vec::with_capacity(b * nh * t * t)
-        } else {
-            Vec::new()
-        };
         for (idx, (ctx_head, probs)) in head_outs.into_iter().enumerate() {
             let (bi, h) = (idx / nh, idx % nh);
             for i in 0..t {
@@ -300,12 +330,7 @@ pub fn forward(
                     .copy_from_slice(ctx_head.row(i));
             }
             if let Some(p) = probs {
-                if opts.capture {
-                    probs_flat.extend_from_slice(&p.data);
-                }
-                if opts.tape {
-                    probs_store.push(p);
-                }
+                probs_store.push(p);
             }
         }
         if opts.capture {
@@ -313,7 +338,7 @@ pub fn forward(
             cap.inputs.insert(format!("{p}attn.wo"), ctxcat.clone());
             cap.residuals.insert(format!("{p}attn.wo"), x.clone());
         }
-        let attn_out = matmul_nt(&ctxcat, w.get(&format!("{p}attn.wo")));
+        let attn_out = matmul_nt_prec(&ctxcat, w.get(&format!("{p}attn.wo")), prec);
         let mut x_mid = x.clone();
         for i in 0..rows * d {
             x_mid.data[i] += attn_out.data[i];
@@ -324,8 +349,8 @@ pub fn forward(
         if opts.capture {
             cap.inputs.insert(format!("{p}ffn.in"), h2.clone());
         }
-        let pre1 = matmul_nt(&h2, w.get(&format!("{p}ffn.w1")));
-        let up = matmul_nt(&h2, w.get(&format!("{p}ffn.w3")));
+        let pre1 = matmul_nt_prec(&h2, w.get(&format!("{p}ffn.w1")), prec);
+        let up = matmul_nt_prec(&h2, w.get(&format!("{p}ffn.w3")), prec);
         let mut gate = pre1.clone();
         gate.data.iter_mut().for_each(|v| *v = silu(*v));
         let m = gate.hadamard(&up);
@@ -333,7 +358,7 @@ pub fn forward(
             cap.inputs.insert(format!("{p}ffn.w2"), m.clone());
             cap.residuals.insert(format!("{p}ffn.w2"), x_mid.clone());
         }
-        let ffn_out = matmul_nt(&m, w.get(&format!("{p}ffn.w2")));
+        let ffn_out = matmul_nt_prec(&m, w.get(&format!("{p}ffn.w2")), prec);
         let mut x_out = x_mid.clone();
         for i in 0..rows * d {
             x_out.data[i] += ffn_out.data[i];
@@ -361,7 +386,7 @@ pub fn forward(
 
     let x_final_in = if opts.tape { x.clone() } else { Mat::zeros(0, 0) };
     let xf = rms_norm(&x, w.get_vec("final_norm"), cfg.norm_eps);
-    let logits = matmul_nt(&xf, w.get("head"));
+    let logits = matmul_nt_prec(&xf, w.get("head"), prec);
 
     ForwardOut {
         capture: if opts.capture { Some(cap) } else { None },
@@ -572,6 +597,7 @@ mod tests {
             &ForwardOpts {
                 capture: true,
                 tape: false,
+                ..ForwardOpts::default()
             },
         );
         let cap = out.capture.unwrap();
@@ -633,6 +659,7 @@ mod tests {
             &ForwardOpts {
                 capture: true,
                 tape: false,
+                ..ForwardOpts::default()
             },
         );
         let cap = out.capture.unwrap();
@@ -661,6 +688,41 @@ mod tests {
         apply_rope(&mut x, &cos, &sin, 6);
         apply_rope_backward(&mut x, &cos, &sin, 6);
         assert!(x.sub(&orig).max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn f32_forward_close_to_f64() {
+        // a config wide enough that the projection gemms clear the
+        // packed-path threshold, so f32 mode actually engages
+        let cfg = ModelConfig {
+            vocab: 64,
+            d_model: 64,
+            n_heads: 4,
+            d_ff: 128,
+            ctx: 64,
+            ..ModelConfig::tiny_test()
+        };
+        let w = Weights::random(&cfg, 7);
+        let mut rng = Rng::new(13);
+        let tokens: Vec<i32> = (0..2 * cfg.ctx)
+            .map(|_| rng.below(cfg.vocab) as i32)
+            .collect();
+        let o64 = forward(&cfg, &w, &tokens, 2, cfg.ctx, &ForwardOpts::default());
+        let o32 = forward(
+            &cfg,
+            &w,
+            &tokens,
+            2,
+            cfg.ctx,
+            &ForwardOpts {
+                precision: Precision::F32,
+                ..ForwardOpts::default()
+            },
+        );
+        let rel = o32.logits.sub(&o64.logits).frob_norm()
+            / o64.logits.frob_norm().max(1e-30);
+        assert!(rel > 0.0, "f32 path did not engage");
+        assert!(rel < 1e-4, "f32 forward drifted: {rel}");
     }
 
     #[test]

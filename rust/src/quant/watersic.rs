@@ -74,7 +74,12 @@ pub fn watersic_layer(
 
     // ---- Phase 3: rate computation (joint entropy + side-info overhead)
     let entropy = crate::entropy::column_coded_rate(&out.z, a, nl);
-    let rate = entropy + 16.0 / a as f64 + 16.0 / n as f64;
+    // per-weight entropy averages over the full width n (dead columns
+    // cost ~0 coded bits), but the BF16 side info — one row rescaler
+    // per row, one column scale per column — is stored for the full
+    // matrix and must NOT shrink with dead columns
+    let entropy_bits = entropy * (nl as f64 / n as f64);
+    let rate_bits = entropy_bits + 16.0 / a as f64 + 16.0 / n as f64;
 
     // ---- Phase 4: diagonal rescaler optimization
     let mut gamma = out.gammas.clone();
@@ -122,8 +127,8 @@ pub fn watersic_layer(
         alphas: alphas_full,
         gammas: gamma_full,
         t,
-        entropy_bits: entropy * (nl as f64 / n as f64), // zeros cost ~0
-        rate_bits: rate * (nl as f64 / n as f64),
+        entropy_bits,
+        rate_bits,
         dead_cols: dead,
     })
 }
@@ -279,6 +284,32 @@ mod tests {
             assert_eq!(wh[(i, 9)], 0.0);
         }
         assert!(q.dequant().is_finite());
+    }
+
+    #[test]
+    fn rate_accounting_charges_full_side_info_with_dead_columns() {
+        // regression: rate_bits used to scale the whole
+        // (entropy + 16/a + 16/n) sum by nl/n, under-reporting the
+        // per-row/per-column side info whenever columns are dead
+        let (w, mut sigma) = problem(24, 16, 7);
+        for &j in &[2usize, 11] {
+            for i in 0..16 {
+                sigma[(i, j)] = 0.0;
+                sigma[(j, i)] = 0.0;
+            }
+            sigma[(j, j)] = 1e-12;
+        }
+        let stats = LayerStats::from_sigma(sigma);
+        let q = watersic_layer(&w, &stats, 0.3, &QuantOpts::default(), None)
+            .unwrap();
+        assert_eq!(q.dead_cols, vec![2, 11]);
+        let side = 16.0 / 24.0 + 16.0 / 16.0;
+        assert!(
+            (q.rate_bits - (q.entropy_bits + side)).abs() < 1e-12,
+            "side info must not shrink with dead columns: rate {} entropy {}",
+            q.rate_bits,
+            q.entropy_bits
+        );
     }
 
     #[test]

@@ -8,6 +8,7 @@ use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
+use crate::linalg::gemm::Precision;
 use crate::linalg::Mat;
 use crate::model::weights::Weights;
 use crate::model::ModelConfig;
@@ -47,6 +48,15 @@ impl Engine {
 
     pub fn platform(&self) -> String {
         self.client.platform_name()
+    }
+
+    /// Default kernel precision for native-path consumers (the
+    /// `WATERSIC_PRECISION` engine option; `PipelineOpts::precision`
+    /// can override per run).  Derived, not stored — there is exactly
+    /// one source of truth.  The PJRT artifacts already run f32
+    /// on-device regardless.
+    pub fn precision(&self) -> Precision {
+        Precision::from_env()
     }
 
     pub fn artifact_path(&self, name: &str) -> PathBuf {

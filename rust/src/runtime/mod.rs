@@ -6,3 +6,6 @@
 pub mod engine;
 
 pub use engine::{Engine, ZsicArtifact};
+// The native-path kernel options are part of the engine surface: the
+// coordinator reads them from here rather than reaching into linalg.
+pub use crate::linalg::gemm::{simd_backend, Precision, SimdBackend};

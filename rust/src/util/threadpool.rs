@@ -5,20 +5,22 @@
 //! `parallel_ranges` call — tens of microseconds of spawn/join latency
 //! per gemm, paid millions of times across a pipeline run.  This
 //! version keeps a lazily-initialized pool of parked workers alive for
-//! the process lifetime and hands them jobs through a generation
-//! counter + condvar; work is distributed by atomic chunk stealing, so
-//! uneven ranges (triangular gram blocks, ragged tails) balance
-//! automatically.
+//! the process lifetime and hands them jobs through a condvar-guarded
+//! job queue; work is distributed by atomic chunk stealing, so uneven
+//! ranges (triangular gram blocks, ragged tails) balance automatically.
 //!
 //! The public surface is unchanged: `default_threads`,
 //! `parallel_ranges`, `parallel_map` — every existing call site picks
 //! up the pool without churn.
 //!
-//! Known limitation (see ROADMAP): there is a single job slot, so a
-//! newer submission evicts an older in-flight job from workers' view;
-//! the evicted job still completes correctly (its submitter processes
-//! every unclaimed chunk itself), but under heavy nested parallelism
-//! worker utilization favors the newest job.
+//! Jobs queue in a small `VecDeque` drained oldest-first: a worker
+//! finishing (or waking into) the pool scans the queue for the oldest
+//! job that still has unclaimed chunks and helper capacity, so nested
+//! submissions (batch-parallel forwards each submitting gemm jobs) no
+//! longer evict in-flight jobs to submitter-only execution — every
+//! queued job keeps attracting idle workers until its chunks are
+//! exhausted.  Exhausted entries are pruned on every scan and by the
+//! submitter on completion, so the queue never outlives its jobs.
 //!
 //! Safety model: a submitted closure's lifetime is erased to `'static`
 //! so parked workers can hold it.  This is sound because the submitting
@@ -33,6 +35,7 @@
 //! failure inside a parallel region behaves like a normal panic to the
 //! caller, and the pool stays usable.
 
+use std::collections::VecDeque;
 use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
@@ -81,8 +84,9 @@ struct Job {
 }
 
 struct Shared {
-    generation: u64,
-    job: Option<Arc<Job>>,
+    /// submitted jobs, oldest first; entries are pruned once their
+    /// chunks are fully claimed
+    jobs: VecDeque<Arc<Job>>,
 }
 
 struct Pool {
@@ -100,8 +104,7 @@ fn pool() -> &'static Arc<Pool> {
         let workers = default_threads().saturating_sub(1);
         let pool = Arc::new(Pool {
             mx: Mutex::new(Shared {
-                generation: 0,
-                job: None,
+                jobs: VecDeque::new(),
             }),
             cv: Condvar::new(),
             workers,
@@ -118,25 +121,41 @@ fn pool() -> &'static Arc<Pool> {
 }
 
 fn worker_loop(pool: Arc<Pool>) {
-    let mut seen = 0u64;
     loop {
         let job = {
             let mut g = pool.mx.lock().unwrap();
             loop {
-                if g.generation != seen {
-                    if let Some(job) = g.job.as_ref() {
-                        seen = g.generation;
-                        break Arc::clone(job);
-                    }
-                    seen = g.generation;
+                if let Some(job) = claim_job(&mut g) {
+                    break job;
                 }
                 g = pool.cv.wait(g).unwrap();
             }
         };
-        if job.joined.fetch_add(1, Ordering::SeqCst) < job.max_helpers {
-            run_chunks(&job);
+        run_chunks(&job);
+    }
+}
+
+/// Pick the oldest queued job that still has unclaimed chunks and
+/// helper capacity, registering the caller as a helper.  Exhausted
+/// entries at the front are pruned.  Runs under the pool lock, so the
+/// joined check/increment pair is atomic with respect to other workers.
+fn claim_job(g: &mut Shared) -> Option<Arc<Job>> {
+    while let Some(front) = g.jobs.front() {
+        if front.next.load(Ordering::SeqCst) >= front.end {
+            g.jobs.pop_front();
+        } else {
+            break;
         }
     }
+    for job in g.jobs.iter() {
+        if job.next.load(Ordering::SeqCst) < job.end
+            && job.joined.load(Ordering::SeqCst) < job.max_helpers
+        {
+            job.joined.fetch_add(1, Ordering::SeqCst);
+            return Some(Arc::clone(job));
+        }
+    }
+    None
 }
 
 fn run_chunks(job: &Job) {
@@ -218,8 +237,9 @@ where
 
     {
         let mut g = pool.mx.lock().unwrap();
-        g.generation = g.generation.wrapping_add(1);
-        g.job = Some(Arc::clone(&job));
+        // opportunistic prune keeps the queue bounded by in-flight jobs
+        g.jobs.retain(|j| j.next.load(Ordering::SeqCst) < j.end);
+        g.jobs.push_back(Arc::clone(&job));
         pool.cv.notify_all();
     }
 
@@ -230,6 +250,12 @@ where
         while job.done.load(Ordering::SeqCst) < n {
             g = job.cv.wait(g).unwrap();
         }
+    }
+    // our job is exhausted — drop its queue entry eagerly so the deque
+    // holds only live work even if no worker ever scans again
+    {
+        let mut g = pool.mx.lock().unwrap();
+        g.jobs.retain(|j| !Arc::ptr_eq(j, &job));
     }
     // every chunk is accounted for and no worker will touch the task
     // again — safe to re-raise a caught panic as our own
@@ -332,7 +358,7 @@ mod tests {
     fn pool_survives_many_submissions() {
         // the persistent pool must be reusable back-to-back (the seed
         // spawn-per-call version trivially was; this guards the
-        // generation/condvar handoff)
+        // queue/condvar handoff)
         for round in 0..200usize {
             let total = AtomicUsize::new(0);
             parallel_ranges(round + 1, 4, |r| {
@@ -381,8 +407,8 @@ mod tests {
 
     #[test]
     fn concurrent_submitters_all_complete() {
-        // two os threads racing to submit jobs: both must finish even
-        // though the pool has a single job slot
+        // two os threads racing to submit jobs: both must finish, with
+        // their jobs coexisting in the queue
         let h1 = std::thread::spawn(|| {
             let s = AtomicUsize::new(0);
             for _ in 0..50 {
@@ -408,5 +434,74 @@ mod tests {
     #[test]
     fn default_threads_positive() {
         assert!(default_threads() >= 1);
+    }
+
+    #[test]
+    fn queued_jobs_get_worker_participation() {
+        // Regression for the single-job-slot starvation: a job
+        // submitted while every worker is pinned elsewhere, then
+        // shadowed by a *newer* submission, must still attract workers
+        // once they free up (the old slot dropped it forever and its
+        // submitter drained it alone).
+        use std::sync::atomic::AtomicBool;
+        use std::sync::Arc;
+        use std::time::Duration;
+
+        let t = default_threads();
+        if t < 3 {
+            // needs ≥2 pool workers for participation to be observable
+            return;
+        }
+
+        // X: pin the submitter and every worker on a spin gate (t
+        // chunks of size 1, one per participant)
+        let x_gate = Arc::new(AtomicBool::new(false));
+        let x_claimed = Arc::new(AtomicUsize::new(0));
+        let (xg, xc) = (Arc::clone(&x_gate), Arc::clone(&x_claimed));
+        let s_x = std::thread::spawn(move || {
+            parallel_ranges(t, t, |r| {
+                for _ in r {
+                    xc.fetch_add(1, Ordering::SeqCst);
+                    while !xg.load(Ordering::SeqCst) {
+                        std::thread::yield_now();
+                    }
+                }
+            });
+        });
+        while x_claimed.load(Ordering::SeqCst) < t {
+            std::thread::yield_now();
+        }
+
+        // A: submitted while no worker is free; its chunks take long
+        // enough that released workers can join mid-flight
+        let non_submitter_hits = Arc::new(AtomicUsize::new(0));
+        let nsh = Arc::clone(&non_submitter_hits);
+        let (tx, rx) = std::sync::mpsc::channel();
+        let s_a = std::thread::spawn(move || {
+            let me = std::thread::current().id();
+            tx.send(()).unwrap();
+            parallel_ranges(16, 4, |r| {
+                for _ in r {
+                    if std::thread::current().id() != me {
+                        nsh.fetch_add(1, Ordering::SeqCst);
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+            });
+        });
+        rx.recv().unwrap();
+        std::thread::sleep(Duration::from_millis(20));
+
+        // B: a newer job — with the single slot this evicted A
+        parallel_ranges(4, 2, |_r| {});
+
+        // release the pinned workers; they must find A in the queue
+        x_gate.store(true, Ordering::SeqCst);
+        s_x.join().unwrap();
+        s_a.join().unwrap();
+        assert!(
+            non_submitter_hits.load(Ordering::SeqCst) > 0,
+            "no pool worker ever joined the queued job"
+        );
     }
 }

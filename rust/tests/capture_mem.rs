@@ -1,0 +1,92 @@
+//! Regression test for the capture-path probs scatter: a counting
+//! global allocator bounds the peak transient footprint of a capture
+//! forward.  Before the fix, every (batch, head) t×t probability block
+//! was staged in `head_outs` and then copied into the flat capture
+//! buffer, transiently doubling the probs footprint (peak ≳ 2× the
+//! flat buffer); after the fix each task writes its disjoint slice of
+//! `probs_flat` directly, so the peak stays ≈ 1× plus panel overhead.
+//!
+//! This file is its own test binary (see Cargo.toml) so the allocator
+//! instrumentation cannot race with unrelated tests.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use watersic::model::transformer::{forward, ForwardOpts};
+use watersic::model::weights::Weights;
+use watersic::model::ModelConfig;
+
+struct CountingAlloc;
+
+static LIVE: AtomicUsize = AtomicUsize::new(0);
+static PEAK: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            let live = LIVE.fetch_add(layout.size(), Ordering::SeqCst) + layout.size();
+            PEAK.fetch_max(live, Ordering::SeqCst);
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout);
+        LIVE.fetch_sub(layout.size(), Ordering::SeqCst);
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+#[test]
+fn capture_does_not_double_buffer_probs() {
+    // small model, long context: the (b, h) t×t prob blocks dominate
+    // every other allocation by an order of magnitude
+    let cfg = ModelConfig {
+        vocab: 16,
+        d_model: 8,
+        n_heads: 2,
+        d_ff: 16,
+        ctx: 384,
+        ..ModelConfig::tiny_test()
+    };
+    let b = 1;
+    let w = Weights::random(&cfg, 3);
+    let tokens: Vec<i32> = (0..b * cfg.ctx)
+        .map(|i| (i % cfg.vocab) as i32)
+        .collect();
+
+    // warm up: spawns the thread pool and any lazily allocated state so
+    // the measured run only pays for the forward itself
+    let _ = forward(&cfg, &w, &tokens, b, cfg.ctx, &ForwardOpts::default());
+
+    let flat_bytes = b * cfg.n_heads * cfg.ctx * cfg.ctx * 8;
+    let base = LIVE.load(Ordering::SeqCst);
+    PEAK.store(base, Ordering::SeqCst);
+    let out = forward(
+        &cfg,
+        &w,
+        &tokens,
+        b,
+        cfg.ctx,
+        &ForwardOpts {
+            capture: true,
+            tape: false,
+            ..ForwardOpts::default()
+        },
+    );
+    let peak = PEAK.load(Ordering::SeqCst).saturating_sub(base);
+    let cap = out.capture.expect("capture requested");
+    assert_eq!(cap.attn_probs[0].len(), b * cfg.n_heads * cfg.ctx * cfg.ctx);
+
+    // 1.8× leaves generous room for activation panels and captures on
+    // top of the flat buffer, but is far below the ≥2.3× the staged
+    // double-buffering needed
+    assert!(
+        peak < flat_bytes * 9 / 5,
+        "capture forward peaked at {peak} B vs {flat_bytes} B of prob \
+         blocks — transient double-buffering is back?"
+    );
+}
