@@ -8,8 +8,13 @@
 //! everything to `BENCH_linalg.json` so the perf trajectory is tracked
 //! from this PR onward.  Acceptance targets: ≥2× GFLOP/s on
 //! `matmul 512³` and ≥4× on `gram 2048x256` versus the seed kernels,
-//! and ≥1.5× for the f32 path over the packed f64 kernel on
-//! `matmul 512³`.  The ratios are recorded as `speedup <shape>` /
+//! ≥1.5× for the f32 path over the packed f64 kernel on `matmul 512³`,
+//! and ≥3× for the blocked pool-parallel Cholesky on `chol 1024`
+//! versus the seed serial factorization (`trsm <a>x<n>` rows track the
+//! blocked triangular solve the same way, and a derived
+//! `prepare-once factorizations` entry pins the factorization-cached
+//! rate search at two factorizations per layer).
+//! The ratios are recorded as `speedup <shape>` /
 //! `speedup f32 <shape>` JSON entries; `dispatch`-tagged rows measure
 //! the forced-scalar rung so `speedup dispatch <shape>` isolates the
 //! SIMD micro-kernel win from the element-width win.  Set
@@ -19,7 +24,10 @@
 
 use std::time::Duration;
 
-use watersic::linalg::chol::{cholesky, solve_xlt_eq_b};
+use watersic::linalg::chol::{
+    cholesky, cholesky_unblocked, factorization_count, solve_xlt_eq_b,
+    solve_xlt_eq_b_rowwise,
+};
 use watersic::linalg::gemm::{
     gram, gram_prec, matmul, matmul_f32, matmul_f32_with, matmul_nt,
     simd_backend, Precision, SimdBackend,
@@ -233,6 +241,81 @@ fn main() {
         log.record(&s, Some(256.0 * (n * n) as f64), "packed");
     }
 
+    // ---- blocked factorization layer vs the seed kernels: the secant
+    // front-end at Llama-ish widths (analytic AR(1) SPD so setup cost
+    // stays off the clock)
+    println!("\n== factorization front-end (blocked vs seed) ==");
+    for n in [256usize, 512, 1024] {
+        let mut spd = watersic::quant::waterfilling::ar1_sigma(n, 0.9);
+        spd.add_diag(0.05);
+        let flops = (n * n * n) as f64 / 3.0;
+
+        let s = Bench::new(&format!("chol {n}"))
+            .with_budget(5, Duration::from_secs(2))
+            .run(|| {
+                std::hint::black_box(cholesky(&spd).unwrap());
+            });
+        report(&s, Some((flops, "FLOP")));
+        log.record(&s, Some(flops), "packed");
+        packed_medians.push((s.name.clone(), s.median.as_secs_f64()));
+
+        let s = Bench::new(&format!("chol {n} [seed]"))
+            .with_budget(3, Duration::from_secs(2))
+            .run(|| {
+                std::hint::black_box(cholesky_unblocked(&spd).unwrap());
+            });
+        report(&s, Some((flops, "FLOP")));
+        log.record(&s, Some(flops), "seed");
+        seed_medians.push((format!("chol {n}"), s.median.as_secs_f64()));
+    }
+    for (a, n) in [(256usize, 512usize), (512, 1024)] {
+        let mut spd = watersic::quant::waterfilling::ar1_sigma(n, 0.9);
+        spd.add_diag(0.05);
+        let l = cholesky(&spd).unwrap();
+        let rhs = Mat::from_fn(a, n, |_, _| rng.gaussian());
+        let flops = (a * n * n) as f64;
+
+        let s = Bench::new(&format!("trsm {a}x{n}"))
+            .with_budget(5, Duration::from_secs(2))
+            .run(|| {
+                std::hint::black_box(solve_xlt_eq_b(&l, &rhs));
+            });
+        report(&s, Some((flops, "FLOP")));
+        log.record(&s, Some(flops), "packed");
+        packed_medians.push((s.name.clone(), s.median.as_secs_f64()));
+
+        let s = Bench::new(&format!("trsm {a}x{n} [seed]"))
+            .with_budget(3, Duration::from_secs(2))
+            .run(|| {
+                std::hint::black_box(solve_xlt_eq_b_rowwise(&l, &rhs));
+            });
+        report(&s, Some((flops, "FLOP")));
+        log.record(&s, Some(flops), "seed");
+        seed_medians.push((format!("trsm {a}x{n}"), s.median.as_secs_f64()));
+    }
+
+    // ---- prepare-once pipeline counter: a rate-targeted layer must
+    // factor exactly twice (subsample system + full system), however
+    // many secant probes run — the PreparedLayer front-end cache
+    {
+        use watersic::quant::{watersic::watersic_at_rate, LayerStats, QuantOpts};
+        let a = 128usize;
+        let n = 96usize;
+        let mut sigma = watersic::quant::waterfilling::ar1_sigma(n, 0.9);
+        sigma.add_diag(0.05);
+        let w = Mat::from_fn(a, n, |_, _| rng.gaussian());
+        let stats = LayerStats::from_sigma(sigma);
+        let opts = QuantOpts {
+            rescalers: false, // the Γ-step's own factorizations are not front-end
+            ..QuantOpts::default()
+        };
+        let before = factorization_count();
+        watersic_at_rate(&w, &stats, 2.5, &opts, None, 64).unwrap();
+        let per_layer = (factorization_count() - before) as f64;
+        println!("\nprepare-once factorizations per rate-targeted layer: {per_layer}");
+        log.note("prepare-once factorizations", per_layer);
+    }
+
     // ---- derived speedups (seed median / packed median per shape)
     println!("\n-- speedups vs seed kernels --");
     let mut speedups: Vec<(String, f64)> = Vec::new();
@@ -284,7 +367,12 @@ fn main() {
 
     // opt-in hard gates (see module docs)
     if std::env::var("WATERSIC_BENCH_ENFORCE").as_deref() == Ok("1") {
-        let gates = [("matmul 512³", 2.0), ("gram 2048x256", 4.0)];
+        let gates = [
+            ("matmul 512³", 2.0),
+            ("gram 2048x256", 4.0),
+            // blocked pool-parallel Cholesky vs the seed serial kernel
+            ("chol 1024", 3.0),
+        ];
         let mut failed = false;
         for (shape, min) in gates {
             let got = speedups

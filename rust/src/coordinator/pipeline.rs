@@ -19,7 +19,9 @@ use crate::quant::gptq::gptq_at_rate;
 use crate::quant::mixing::{mix_attention, mix_drift, optimize_mixing};
 use crate::quant::rate_control::RateBudget;
 use crate::quant::rtn::{rtn_absmax, rtn_grid_at_rate};
-use crate::quant::watersic::watersic_at_rate;
+use crate::quant::watersic::{
+    prepare_at_rate, watersic_at_rate, watersic_at_rate_prepared, PreparedLayer,
+};
 use crate::quant::{LayerQuant, LayerStats, QuantOpts};
 use crate::runtime::{Engine, Precision};
 
@@ -142,12 +144,17 @@ pub struct QuantizedModel {
     pub report: PipelineReport,
 }
 
+/// One matrix through the configured algorithm.  For WaterSIC the
+/// coordinator may hand in `prepared` front-ends (built in parallel
+/// over the pool — see `quantize_model`); without them the rate search
+/// prepares its own.
 fn quantize_matrix(
     w: &Mat,
     stats: &LayerStats,
     rate: f64,
     opts: &PipelineOpts,
     engine: Option<&Engine>,
+    prepared: Option<(PreparedLayer, Option<PreparedLayer>)>,
 ) -> Result<(LayerQuant, bool)> {
     let via_artifact;
     match opts.algo {
@@ -177,8 +184,22 @@ fn quantize_matrix(
                 }
             });
             ARTIFACT_HIT.with(|f| f.set(false));
-            let q = match &exec {
-                Some(f) => watersic_at_rate(
+            let q = match (&exec, prepared) {
+                (Some(f), Some((full, sub))) => watersic_at_rate_prepared(
+                    sub.as_ref().unwrap_or(&full),
+                    &full,
+                    rate,
+                    &opts.quant,
+                    Some(f),
+                ),
+                (None, Some((full, sub))) => watersic_at_rate_prepared(
+                    sub.as_ref().unwrap_or(&full),
+                    &full,
+                    rate,
+                    &opts.quant,
+                    None,
+                ),
+                (Some(f), None) => watersic_at_rate(
                     w,
                     stats,
                     rate,
@@ -186,7 +207,7 @@ fn quantize_matrix(
                     Some(f),
                     opts.subsample_rows,
                 )?,
-                None => watersic_at_rate(
+                (None, None) => watersic_at_rate(
                     w,
                     stats,
                     rate,
@@ -326,7 +347,34 @@ pub fn quantize_model(
             stats_threads,
             |name| cs.stats_for(cfg, &name, &scaps, stats_opts),
         );
-        for (name, precomputed) in order.into_iter().zip(stats_list) {
+        // WaterSIC's expensive front-end (dead-feature erasure + damped
+        // Cholesky + target solve, on both the row subsample and the
+        // full matrix) is rate-independent, so the 7 matrices of the
+        // layer are prepared in parallel over the pool here.  Only the
+        // budgeted rate assignment below stays sequential — each
+        // layer's achieved bits feed the next assignment — which keeps
+        // assigned rates, and therefore every output bit, identical to
+        // the strictly-in-order pipeline.  (Adaptive mixing rewrites
+        // the QKV statistics mid-loop, so that path prepares inline.)
+        type PreparedPair = (PreparedLayer, Option<PreparedLayer>);
+        let prepared: Vec<Option<Result<PreparedPair>>> =
+            if opts.algo == Algo::WaterSic && !opts.mixing {
+                crate::util::threadpool::parallel_map(
+                    (0..order.len()).collect(),
+                    stats_threads,
+                    |i| {
+                        Some(prepare_at_rate(
+                            teacher.get(&order[i]),
+                            &stats_list[i],
+                            &opts.quant,
+                            opts.subsample_rows,
+                        ))
+                    },
+                )
+            } else {
+                (0..order.len()).map(|_| None).collect()
+            };
+        for ((name, precomputed), prep) in order.into_iter().zip(stats_list).zip(prepared) {
             let w = teacher.get(&name).clone();
             let is_qkv = name.contains("attn.w") && !name.ends_with("wo");
             let mut stats = precomputed;
@@ -348,7 +396,8 @@ pub fn quantize_model(
             }
             let params = w.rows * w.cols;
             let rate = budget.assign(params);
-            let (q, via_artifact) = quantize_matrix(&w, &stats, rate, opts, engine)?;
+            let (q, via_artifact) =
+                quantize_matrix(&w, &stats, rate, opts, engine, prep.transpose()?)?;
             // entropy-coded methods report/charge entropy (paper's
             // convention); log-cardinality methods charge their width
             let charged = match opts.algo {

@@ -1,14 +1,183 @@
 //! Cholesky decomposition and triangular solves — the backbone of ZSIC
 //! (Σ = LLᵀ) and of the drift-corrected target ŷ = (WΣ_{X,X̂}+Σ_Δ)(L̂ᵀ)⁻¹.
+//!
+//! Both entry points are **blocked** and routed through the packed gemm
+//! driver (PR 1/2), because at Llama-scale widths the factorization
+//! front-end — not ZSIC itself — dominates a rate-targeted layer:
+//!
+//! * [`cholesky`] is a right-looking blocked factorization: a serial
+//!   `CHOL_BLOCK`-wide panel factorization, a pool-parallel row-wise
+//!   panel TRSM, and a trailing-matrix update `C −= P·Pᵀ` fanned over
+//!   the worker pool as a fixed grid of lower-triangle blocks
+//!   (`gemm::syrk_lower_acc_ptr`), each computed by the serial packed
+//!   driver;
+//! * [`solve_xlt_eq_b`] is a blocked TRSM: an in-place diagonal-block
+//!   forward substitution with rows distributed over the pool (no
+//!   per-row allocation), then one packed rank-B panel update
+//!   `X[:, right] −= X_blk · L[right, blk]ᵀ` per block
+//!   (`gemm::gemm_nt_acc_ptr`).
+//!
+//! Determinism: every decomposition (panel edges, the trailing block
+//! grid, the packed driver's K order) depends only on the problem
+//! shape, never on scheduling — results are bit-for-bit identical
+//! across thread counts (tested).  For n ≤ `CHOL_BLOCK` the blocked
+//! paths degenerate to the single-block substitutions and are
+//! bit-identical to the seed implementations
+//! ([`cholesky_unblocked`] / [`solve_xlt_eq_b_rowwise`], kept as
+//! references for tests and benches).
+//!
+//! [`SpdFactor`] carries a factorization across solves so hot callers
+//! (the Alg. 4 Γ-step, the `PreparedLayer` front-end cache) factor
+//! once and reuse; a thread-local factorization counter makes "how
+//! many times did we factor" test-visible.
+
+use std::sync::atomic::{AtomicPtr, Ordering};
 
 use anyhow::{bail, Result};
 
 use super::Mat;
+use crate::util::threadpool::parallel_ranges;
+
+/// Panel width of the blocked factorization and the blocked TRSM
+/// (matches the packed driver's symmetric block edge).
+pub const CHOL_BLOCK: usize = 64;
+
+thread_local! {
+    /// Factorizations *initiated* by this thread (the blocked body may
+    /// fan chunks to the pool, but the entry call runs here).
+    /// Thread-local so concurrently running tests never race each
+    /// other's deltas; the prepare-once regression tests and the bench
+    /// counter read it immediately around a call.
+    static FACTORIZATIONS: std::cell::Cell<usize> = const { std::cell::Cell::new(0) };
+}
+
+/// Number of Cholesky factorizations initiated by the calling thread
+/// since it started (test/bench visibility for the prepare-once cache).
+pub fn factorization_count() -> usize {
+    FACTORIZATIONS.with(|c| c.get())
+}
+
+fn chol_threads(n: usize) -> usize {
+    crate::linalg::gemm::threads_for(n * n * n / 3)
+}
+
+fn trsm_threads(rows: usize, n: usize) -> usize {
+    crate::linalg::gemm::threads_for(rows * n * n)
+}
 
 /// Lower-triangular Cholesky factor of a PSD matrix: A = L·Lᵀ.
 /// Fails if a pivot goes non-positive (caller should damp / erase dead
 /// features first — exactly the paper's workflow).
 pub fn cholesky(a: &Mat) -> Result<Mat> {
+    cholesky_with_threads(a, chol_threads(a.rows))
+}
+
+/// [`cholesky`] with an explicit thread count — bit-for-bit identical
+/// across thread counts (see module docs); exposed for determinism
+/// tests and tuning.
+pub fn cholesky_with_threads(a: &Mat, threads: usize) -> Result<Mat> {
+    let n = a.assert_square()?;
+    FACTORIZATIONS.with(|c| c.set(c.get() + 1));
+    let mut l = a.clone();
+    let mut panel: Vec<f64> = Vec::new();
+    let mut k0 = 0;
+    while k0 < n {
+        let k1 = (k0 + CHOL_BLOCK).min(n);
+        factor_diag_block(&mut l, k0, k1)?;
+        if k1 < n {
+            trsm_chol_panel(&mut l, k0, k1, threads);
+            // trailing update l[k1.., k1..] −= P·Pᵀ with
+            // P = l[k1.., k0..k1], copied into a contiguous scratch so
+            // the packed driver never aliases its own output
+            let bw = k1 - k0;
+            let mt = n - k1;
+            panel.resize(mt * bw, 0.0);
+            for (r, i) in (k1..n).enumerate() {
+                panel[r * bw..(r + 1) * bw].copy_from_slice(&l.data[i * n + k0..i * n + k1]);
+            }
+            // SAFETY: l.data is exclusively borrowed; the trailing
+            // square starts at (k1, k1) and fits inside it.
+            unsafe {
+                crate::linalg::gemm::syrk_lower_acc_ptr(
+                    mt,
+                    bw,
+                    &panel,
+                    bw,
+                    l.data.as_mut_ptr().add(k1 * n + k1),
+                    n,
+                    -1.0,
+                    threads,
+                );
+            }
+        }
+        k0 = k1;
+    }
+    // the factorization only ever writes the lower triangle; clear the
+    // strict upper (input copies + diagonal-block scratch)
+    for i in 0..n {
+        for j in i + 1..n {
+            l[(i, j)] = 0.0;
+        }
+    }
+    Ok(l)
+}
+
+/// In-place factorization of the diagonal block [k0, k1): by the time
+/// this runs, the trailing updates of all previous panels have been
+/// applied, so only within-block terms remain.
+fn factor_diag_block(l: &mut Mat, k0: usize, k1: usize) -> Result<()> {
+    for i in k0..k1 {
+        for j in k0..=i {
+            let mut s = l[(i, j)];
+            for t in k0..j {
+                s -= l[(i, t)] * l[(j, t)];
+            }
+            if i == j {
+                if s <= 0.0 || !s.is_finite() {
+                    bail!(
+                        "cholesky pivot {i} non-positive ({s:.3e}); \
+                         damp or erase dead features"
+                    );
+                }
+                l[(i, j)] = s.sqrt();
+            } else {
+                l[(i, j)] = s / l[(j, j)];
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Panel TRSM of the blocked factorization: rows k1..n of columns
+/// [k0, k1) solve against the freshly factored diagonal block, one row
+/// per task over the pool (row-serial arithmetic ⇒ deterministic).
+fn trsm_chol_panel(l: &mut Mat, k0: usize, k1: usize, threads: usize) {
+    let n = l.cols;
+    let rows = n - k1;
+    let ptr = AtomicPtr::new(l.data.as_mut_ptr());
+    parallel_ranges(rows, threads, |range| {
+        let base = ptr.load(Ordering::Relaxed);
+        for off in range {
+            let i = k1 + off;
+            // SAFETY: row i is owned by this task; rows k0..k1 (the
+            // factored diagonal block) are read-only during this phase
+            // and disjoint from every written row (j < k1 ≤ i).
+            let row = unsafe { std::slice::from_raw_parts_mut(base.add(i * n), k1) };
+            for j in k0..k1 {
+                let lj = unsafe { std::slice::from_raw_parts(base.add(j * n), j + 1) };
+                let mut s = row[j];
+                for t in k0..j {
+                    s -= row[t] * lj[t];
+                }
+                row[j] = s / lj[j];
+            }
+        }
+    });
+}
+
+/// Seed single-level factorization, kept verbatim as the reference the
+/// blocked path is tested (and benchmarked) against.
+pub fn cholesky_unblocked(a: &Mat) -> Result<Mat> {
     let n = a.assert_square()?;
     let mut l = Mat::zeros(n, n);
     for i in 0..n {
@@ -68,7 +237,84 @@ pub fn solve_lower_t(l: &Mat, b: &[f64]) -> Vec<f64> {
 /// operation in eq. (17)/(18): ŷ = (…)·(L̂ᵀ)⁻¹.
 /// Row i of X satisfies Lᵀ xᵢᵀ = … — equivalently for each row b of B we
 /// solve  x L^T = b  ⇔  L x^T = b^T  (forward substitution per row).
+///
+/// Blocked: per `CHOL_BLOCK` column panel, an in-place diagonal-block
+/// substitution (rows over the pool, no per-row allocation) followed by
+/// one packed rank-B update of everything right of the panel.
 pub fn solve_xlt_eq_b(l: &Mat, b: &Mat) -> Mat {
+    solve_xlt_eq_b_with_threads(l, b, trsm_threads(b.rows, l.rows))
+}
+
+/// [`solve_xlt_eq_b`] with an explicit thread count — bit-for-bit
+/// identical across thread counts; exposed for determinism tests and
+/// tuning.
+pub fn solve_xlt_eq_b_with_threads(l: &Mat, b: &Mat, threads: usize) -> Mat {
+    let n = l.rows;
+    assert_eq!(b.cols, n);
+    let rows = b.rows;
+    let mut x = b.clone();
+    if rows == 0 || n == 0 {
+        return x;
+    }
+    let mut scratch: Vec<f64> = Vec::new();
+    let mut k0 = 0;
+    while k0 < n {
+        let k1 = (k0 + CHOL_BLOCK).min(n);
+        let bw = k1 - k0;
+        // ---- diagonal-block forward substitution, in place
+        {
+            let ptr = AtomicPtr::new(x.data.as_mut_ptr());
+            parallel_ranges(rows, threads, |range| {
+                let base = ptr.load(Ordering::Relaxed);
+                for r in range {
+                    // SAFETY: disjoint row slices per task.
+                    let row = unsafe { std::slice::from_raw_parts_mut(base.add(r * n), n) };
+                    for i in k0..k1 {
+                        let li = l.row(i);
+                        let mut s = row[i];
+                        for t in k0..i {
+                            s -= li[t] * row[t];
+                        }
+                        row[i] = s / li[i];
+                    }
+                }
+            });
+        }
+        // ---- deferred rank-bw update of the columns right of the
+        // block: X[:, k1..] −= X[:, k0..k1] · L[k1.., k0..k1]ᵀ
+        if k1 < n {
+            scratch.resize(rows * bw, 0.0);
+            for r in 0..rows {
+                scratch[r * bw..(r + 1) * bw].copy_from_slice(&x.data[r * n + k0..r * n + k1]);
+            }
+            // SAFETY: x.data is exclusively borrowed; the updated
+            // region (all rows, cols k1..n at stride n) fits inside it
+            // and the solved block is read from the scratch copy.
+            unsafe {
+                crate::linalg::gemm::gemm_nt_acc_ptr(
+                    rows,
+                    bw,
+                    n - k1,
+                    &scratch,
+                    bw,
+                    &l.data[k1 * n + k0..],
+                    n,
+                    x.data.as_mut_ptr().add(k1),
+                    n,
+                    -1.0,
+                    threads,
+                );
+            }
+        }
+        k0 = k1;
+    }
+    x
+}
+
+/// Seed per-row reference for [`solve_xlt_eq_b`] (one forward
+/// substitution + one `Vec` per row), kept verbatim for tests and the
+/// seed-vs-blocked bench.
+pub fn solve_xlt_eq_b_rowwise(l: &Mat, b: &Mat) -> Mat {
     let n = l.rows;
     assert_eq!(b.cols, n);
     let mut x = Mat::zeros(b.rows, n);
@@ -79,18 +325,46 @@ pub fn solve_xlt_eq_b(l: &Mat, b: &Mat) -> Mat {
     x
 }
 
+/// A cached Cholesky factorization of an SPD matrix: factor once, then
+/// run any number of paired (forward, back) solves against it.  The
+/// Alg. 4 Γ-step and the quantizer's `PreparedLayer` front-end hold one
+/// of these instead of refactorizing per solve.
+pub struct SpdFactor {
+    l: Mat,
+}
+
+impl SpdFactor {
+    pub fn new(a: &Mat) -> Result<SpdFactor> {
+        Ok(SpdFactor { l: cholesky(a)? })
+    }
+
+    /// The lower-triangular factor L.
+    pub fn l(&self) -> &Mat {
+        &self.l
+    }
+
+    /// Solve A·x = b through the factor's paired triangular solves
+    /// (L·y = b, then Lᵀ·x = y).
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        let y = solve_lower(&self.l, b);
+        solve_lower_t(&self.l, &y)
+    }
+
+    /// log-determinant of A: 2·Σ log ℓ_ii.
+    pub fn logdet(&self) -> f64 {
+        2.0 * self.l.diag().iter().map(|x| x.ln()).sum::<f64>()
+    }
+}
+
 /// Inverse of an SPD matrix via Cholesky (used by the Γ-step of Alg. 4:
 /// γ = (G + λI)⁻¹ d, solved rather than inverted when possible).
 pub fn spd_solve(a: &Mat, b: &[f64]) -> Result<Vec<f64>> {
-    let l = cholesky(a)?;
-    let y = solve_lower(&l, b);
-    Ok(solve_lower_t(&l, &y))
+    Ok(SpdFactor::new(a)?.solve(b))
 }
 
 /// log-determinant of an SPD matrix: 2·Σ log ℓ_ii.
 pub fn spd_logdet(a: &Mat) -> Result<f64> {
-    let l = cholesky(a)?;
-    Ok(2.0 * l.diag().iter().map(|x| x.ln()).sum::<f64>())
+    Ok(SpdFactor::new(a)?.logdet())
 }
 
 #[cfg(test)]
@@ -128,6 +402,71 @@ mod tests {
     fn cholesky_rejects_indefinite() {
         let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // eig −1, 3
         assert!(cholesky(&a).is_err());
+        assert!(cholesky_unblocked(&a).is_err());
+    }
+
+    #[test]
+    fn blocked_matches_unblocked_on_block_edge_shapes() {
+        // shapes straddling every panel edge of CHOL_BLOCK = 64, plus
+        // the acceptance-scale n = 512
+        let mut rng = Rng::new(16);
+        for n in [1usize, 63, 64, 65, 197, 512] {
+            let a = spd(n, &mut rng);
+            let l = cholesky_with_threads(&a, 4).unwrap();
+            let l0 = cholesky_unblocked(&a).unwrap();
+            assert!(
+                l.sub(&l0).max_abs() < 1e-9,
+                "n={n}: blocked drifted from the reference"
+            );
+            // lower-triangular with positive diagonal
+            for i in 0..n {
+                assert!(l[(i, i)] > 0.0, "n={n} pivot {i}");
+                for j in i + 1..n {
+                    assert_eq!(l[(i, j)], 0.0, "n={n} upper ({i},{j})");
+                }
+            }
+            // and it reconstructs
+            let re = matmul(&l, &l.transpose());
+            assert!(re.sub(&a).max_abs() < 1e-8, "n={n}");
+        }
+    }
+
+    #[test]
+    fn blocked_cholesky_thread_count_bitwise() {
+        // fixed panel/block decomposition ⇒ bit-for-bit equality, not
+        // just tolerance, regardless of thread count
+        let mut rng = Rng::new(17);
+        let a = spd(200, &mut rng);
+        let l1 = cholesky_with_threads(&a, 1).unwrap();
+        let l8 = cholesky_with_threads(&a, 8).unwrap();
+        assert_eq!(l1.data, l8.data, "blocked cholesky must be deterministic");
+    }
+
+    #[test]
+    fn blocked_trsm_matches_rowwise_on_block_edge_shapes() {
+        let mut rng = Rng::new(18);
+        for n in [63usize, 64, 65, 197] {
+            let a = spd(n, &mut rng);
+            let l = cholesky(&a).unwrap();
+            let b = Mat::from_fn(20, n, |_, _| rng.gaussian());
+            let x = solve_xlt_eq_b_with_threads(&l, &b, 4);
+            let x0 = solve_xlt_eq_b_rowwise(&l, &b);
+            assert!(x.sub(&x0).max_abs() < 1e-9, "n={n}");
+            // X·Lᵀ = B
+            let re = matmul(&x, &l.transpose());
+            assert!(re.sub(&b).max_abs() < 1e-8, "n={n}");
+        }
+    }
+
+    #[test]
+    fn blocked_trsm_thread_count_bitwise() {
+        let mut rng = Rng::new(19);
+        let a = spd(200, &mut rng);
+        let l = cholesky(&a).unwrap();
+        let b = Mat::from_fn(40, 200, |_, _| rng.gaussian());
+        let x1 = solve_xlt_eq_b_with_threads(&l, &b, 1);
+        let x8 = solve_xlt_eq_b_with_threads(&l, &b, 8);
+        assert_eq!(x1.data, x8.data, "blocked trsm must be deterministic");
     }
 
     #[test]
@@ -162,6 +501,36 @@ mod tests {
     }
 
     #[test]
+    fn spd_factor_reuses_across_solves() {
+        let mut rng = Rng::new(20);
+        let a = spd(12, &mut rng);
+        let before = factorization_count();
+        let f = SpdFactor::new(&a).unwrap();
+        for _ in 0..5 {
+            let b: Vec<f64> = (0..12).map(|_| rng.gaussian()).collect();
+            let x = f.solve(&b);
+            let ax = crate::linalg::gemm::matvec(&a, &x);
+            for i in 0..12 {
+                assert!((ax[i] - b[i]).abs() < 1e-8);
+            }
+        }
+        // one factorization served all five solve pairs
+        assert_eq!(factorization_count() - before, 1);
+    }
+
+    #[test]
+    fn factorization_counter_increments_per_call() {
+        let mut rng = Rng::new(21);
+        let a = spd(10, &mut rng);
+        let b: Vec<f64> = (0..10).map(|_| rng.gaussian()).collect();
+        let before = factorization_count();
+        let _ = cholesky(&a).unwrap();
+        let _ = spd_solve(&a, &b).unwrap();
+        let _ = spd_logdet(&a).unwrap();
+        assert_eq!(factorization_count() - before, 3);
+    }
+
+    #[test]
     fn xlt_solve_matches() {
         let mut rng = Rng::new(14);
         let a = spd(6, &mut rng);
@@ -170,6 +539,8 @@ mod tests {
         let x = solve_xlt_eq_b(&l, &b);
         let re = matmul(&x, &l.transpose());
         assert!(re.sub(&b).max_abs() < 1e-9);
+        // single-block shapes are bit-identical to the seed per-row path
+        assert_eq!(x.data, solve_xlt_eq_b_rowwise(&l, &b).data);
     }
 
     #[test]

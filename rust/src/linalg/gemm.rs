@@ -782,7 +782,10 @@ unsafe fn gemm_driver_prec(
     }
 }
 
-fn threads_for(work: usize) -> usize {
+/// Work-size parallelism policy shared by every dense kernel layer
+/// (gemm wrappers here, the blocked Cholesky/TRSM in `chol`): fan out
+/// only past the point where pool handoff costs less than the flops.
+pub(crate) fn threads_for(work: usize) -> usize {
     if work > 1 << 18 {
         default_threads()
     } else {
@@ -1167,6 +1170,124 @@ pub(crate) fn gemm_acc_strided(
     }
 }
 
+/// C += α · A·Bᵀ over raw strided views, with C behind a bare pointer:
+/// A is m×k at row stride `a_ld`, B is n×k at row stride `b_ld` (the
+/// operand is its transpose), C is m×n at row stride `c_ld`.  This is
+/// the rank-B panel update of the blocked TRSM (`solve_xlt_eq_b`):
+/// X[:, right] −= X_blk · L[right, blk]ᵀ.  Always f64 — the
+/// factorization layer is pinned like the rest of the quantizer core.
+///
+/// # Safety
+/// `c` must be valid for `(m-1)*c_ld + n` elements with exclusive
+/// access for the duration of the call; A/B slice extents are
+/// debug-checked.
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn gemm_nt_acc_ptr(
+    m: usize,
+    k: usize,
+    n: usize,
+    a_data: &[f64],
+    a_ld: usize,
+    b_data: &[f64],
+    b_ld: usize,
+    c: *mut f64,
+    c_ld: usize,
+    alpha: f64,
+    threads: usize,
+) {
+    if m == 0 || k == 0 || n == 0 {
+        return;
+    }
+    debug_assert!(a_data.len() >= (m - 1) * a_ld + k);
+    debug_assert!(b_data.len() >= (n - 1) * b_ld + k);
+    let ap = Panel {
+        data: a_data,
+        rows: m,
+        cols: k,
+        ld: a_ld,
+        trans: false,
+    };
+    let bp = Panel {
+        data: b_data,
+        rows: k,
+        cols: n,
+        ld: b_ld,
+        trans: true,
+    };
+    gemm_driver::<f64>(ap, bp, c, c_ld, true, alpha, threads, simd_backend());
+}
+
+/// C += α · P·Pᵀ restricted to the lower triangle — the trailing-matrix
+/// update of the right-looking blocked Cholesky.  P is m×k at row
+/// stride `p_ld` (a contiguous scratch copy, so it never aliases C);
+/// C is m×m at row stride `c_ld` behind a bare pointer.
+///
+/// The update is decomposed into a fixed GB×GB block grid over the
+/// lower triangle (diagonal blocks computed in full — their strict
+/// upper corner is scratch for the Cholesky caller and is documented
+/// as clobbered).  Blocks are fanned over the worker pool with the
+/// serial packed driver inside, so the set of per-element reduction
+/// orders depends only on the shape — results are bit-for-bit
+/// identical across thread counts.
+///
+/// # Safety
+/// `c` must be valid for `(m-1)*c_ld + m` elements with exclusive
+/// access for the duration of the call.
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn syrk_lower_acc_ptr(
+    m: usize,
+    k: usize,
+    p_data: &[f64],
+    p_ld: usize,
+    c: *mut f64,
+    c_ld: usize,
+    alpha: f64,
+    threads: usize,
+) {
+    if m == 0 || k == 0 {
+        return;
+    }
+    debug_assert!(p_data.len() >= (m - 1) * p_ld + k);
+    const GB: usize = 64;
+    let nb = m.div_ceil(GB);
+    let pairs: Vec<(usize, usize)> = (0..nb)
+        .flat_map(|bi| (0..=bi).map(move |bj| (bi, bj)))
+        .collect();
+    let cptr = AtomicPtr::new(c);
+    let backend = simd_backend();
+    parallel_ranges(pairs.len(), threads, |range| {
+        let base = cptr.load(Ordering::Relaxed);
+        for t in range {
+            let (bi, bj) = pairs[t];
+            let i0 = bi * GB;
+            let i1 = ((bi + 1) * GB).min(m);
+            let j0 = bj * GB;
+            let j1 = ((bj + 1) * GB).min(m);
+            let ap = Panel {
+                data: &p_data[i0 * p_ld..],
+                rows: i1 - i0,
+                cols: k,
+                ld: p_ld,
+                trans: false,
+            };
+            let bp = Panel {
+                data: &p_data[j0 * p_ld..],
+                rows: k,
+                cols: j1 - j0,
+                ld: p_ld,
+                trans: true,
+            };
+            // SAFETY: block (bi, bj) owns the disjoint C region
+            // [i0..i1)×[j0..j1) (bj ≤ bi, each pair appears once);
+            // serial inner driver (threads = 1).
+            unsafe {
+                let ctile = base.add(i0 * c_ld + j0);
+                gemm_driver::<f64>(ap, bp, ctile, c_ld, true, alpha, 1, backend);
+            }
+        }
+    });
+}
+
 /// y = M · x
 pub fn matvec(m: &Mat, x: &[f64]) -> Vec<f64> {
     assert_eq!(m.cols, x.len());
@@ -1505,6 +1626,74 @@ mod tests {
             a, bw, blo, &s.data, ld, &l.data, blo, &mut c.data, blo, -1.0, 2,
         );
         assert!(c.sub(&c_ref).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn nt_acc_ptr_matches_axpy_reference() {
+        // the blocked-TRSM panel update: C -= A · Bᵀ on strided views
+        let mut rng = Rng::new(60);
+        let (m, k, n, b_ld) = (37, 16, 90, 40); // B is n×k inside a wider stride
+        let a = randm(m, k, &mut rng);
+        let bfull = randm(n, b_ld, &mut rng);
+        let mut c = randm(m, n, &mut rng);
+        let mut c_ref = c.clone();
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for t in 0..k {
+                    s += a[(i, t)] * bfull[(j, t)];
+                }
+                c_ref[(i, j)] -= s;
+            }
+        }
+        // SAFETY: c.data is exactly m×n and exclusively borrowed.
+        unsafe {
+            gemm_nt_acc_ptr(
+                m,
+                k,
+                n,
+                &a.data,
+                k,
+                &bfull.data,
+                b_ld,
+                c.data.as_mut_ptr(),
+                n,
+                -1.0,
+                2,
+            );
+        }
+        assert!(c.sub(&c_ref).max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn syrk_lower_acc_ptr_matches_reference_and_is_deterministic() {
+        // trailing-update shape: lower-triangle C -= P·Pᵀ across the
+        // GB=64 block edge, upper-of-diagonal-block clobber tolerated
+        let mut rng = Rng::new(61);
+        let (m, k) = (150, 48);
+        let p = randm(m, k, &mut rng);
+        let c0 = randm(m, m, &mut rng);
+        let run = |threads: usize| {
+            let mut c = c0.clone();
+            // SAFETY: c.data is exactly m×m and exclusively borrowed.
+            unsafe {
+                syrk_lower_acc_ptr(m, k, &p.data, k, c.data.as_mut_ptr(), m, -1.0, threads);
+            }
+            c
+        };
+        let c = run(4);
+        let ppt = naive(&p, &p.transpose());
+        for i in 0..m {
+            for j in 0..=i {
+                let expect = c0[(i, j)] - ppt[(i, j)];
+                assert!((c[(i, j)] - expect).abs() < 1e-9, "({i},{j})");
+            }
+        }
+        // strictly-upper elements outside diagonal blocks untouched
+        assert_eq!(c[(0, 100)], c0[(0, 100)]);
+        assert_eq!(c[(10, 140)], c0[(10, 140)]);
+        // bit-for-bit across thread counts
+        assert_eq!(run(1).data, run(8).data);
     }
 
     #[test]

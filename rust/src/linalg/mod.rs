@@ -1,12 +1,16 @@
 //! Dense linear-algebra substrate (f64, row-major).  No BLAS/LAPACK is
 //! available offline, so everything the pipeline needs is implemented
-//! here: blocked gemm, Cholesky, triangular solves, a Jacobi symmetric
-//! eigensolver (for the waterfilling bound), and streaming statistics.
+//! here: packed blocked gemm, a blocked pool-parallel Cholesky and
+//! TRSM (both routed through the packed driver and bit-for-bit
+//! thread-count deterministic), a Jacobi symmetric eigensolver (for
+//! the waterfilling bound), and streaming statistics.
 
 pub mod chol;
 pub mod eig;
 pub mod gemm;
 pub mod stats;
+
+pub use chol::SpdFactor;
 
 use anyhow::{bail, Result};
 

@@ -32,6 +32,55 @@ pub fn gptq_layer(
     )
 }
 
+/// The α-independent GPTQ front-end — damped Cholesky of Σ_X̂ and the
+/// drift-corrected target solve — prepared once per layer and reused
+/// across every probe of the secant rate search (the uniform spacing
+/// A = αI never touches the factorization).  Mirror of
+/// `watersic::PreparedLayer` for the uniform-spacing baseline.
+pub struct PreparedGptq {
+    a: usize,
+    n: usize,
+    l: Mat,
+    y: Mat,
+}
+
+impl PreparedGptq {
+    pub fn new(w: &Mat, stats: &LayerStats, damping: f64) -> Result<PreparedGptq> {
+        let (a, n) = (w.rows, w.cols);
+        let mut h = stats.sigma_xhat.clone();
+        let mean_diag = h.trace() / n as f64;
+        h.add_diag(damping * mean_diag.max(1e-300));
+        let l = cholesky(&h).context("cholesky of damped Σ (GPTQ)")?;
+        let target = effective_target(w, stats);
+        let y = solve_xlt_eq_b(&l, &target);
+        Ok(PreparedGptq { a, n, l, y })
+    }
+
+    /// ZSIC + rate accounting at uniform spacing `alpha` — no
+    /// factorization in here.
+    pub fn quantize(&self, alpha: f64, lmmse: bool, clamp: Option<i32>) -> LayerQuant {
+        let (a, n) = (self.a, self.n);
+        let alphas = gptq_alphas(n, alpha);
+        let out = zsic(&self.y, &self.l, &alphas, lmmse, clamp);
+        let entropy = crate::entropy::column_coded_rate(&out.z, a, n);
+        let rate = match clamp {
+            Some(c) => ((2 * c + 1) as f64).log2() + 16.0 / n as f64,
+            None => entropy + 16.0 / a as f64 + 16.0 / n as f64,
+        };
+        LayerQuant {
+            a,
+            n,
+            z: out.z,
+            alphas,
+            gammas: out.gammas,
+            t: vec![1.0; a],
+            entropy_bits: entropy,
+            rate_bits: rate,
+            dead_cols: vec![],
+        }
+    }
+}
+
 /// GPTQ with drift-aware statistics (the "quantized activation
 /// statistics X̂" variant labeled Huffman-GPTQ in Appendix D) and
 /// explicit damping δ (relative).
@@ -43,34 +92,11 @@ pub fn gptq_layer_stats(
     clamp: Option<i32>,
     damping: f64,
 ) -> Result<LayerQuant> {
-    let (a, n) = (w.rows, w.cols);
-    let mut h = stats.sigma_xhat.clone();
-    let mean_diag = h.trace() / n as f64;
-    h.add_diag(damping * mean_diag.max(1e-300));
-    let l = cholesky(&h).context("cholesky of damped Σ (GPTQ)")?;
-    let target = effective_target(w, stats);
-    let y = solve_xlt_eq_b(&l, &target);
-    let alphas = gptq_alphas(n, alpha);
-    let out = zsic(&y, &l, &alphas, lmmse, clamp);
-    let entropy = crate::entropy::column_coded_rate(&out.z, a, n);
-    let rate = match clamp {
-        Some(c) => ((2 * c + 1) as f64).log2() + 16.0 / n as f64,
-        None => entropy + 16.0 / a as f64 + 16.0 / n as f64,
-    };
-    Ok(LayerQuant {
-        a,
-        n,
-        z: out.z,
-        alphas,
-        gammas: out.gammas,
-        t: vec![1.0; a],
-        entropy_bits: entropy,
-        rate_bits: rate,
-        dead_cols: vec![],
-    })
+    Ok(PreparedGptq::new(w, stats, damping)?.quantize(alpha, lmmse, clamp))
 }
 
-/// Huffman-GPTQ at a target entropy rate: secant on α.
+/// Huffman-GPTQ at a target entropy rate: secant on α, probing only
+/// ZSIC + entropy against the once-prepared front-end.
 pub fn gptq_at_rate(
     w: &Mat,
     stats: &LayerStats,
@@ -78,6 +104,7 @@ pub fn gptq_at_rate(
     lmmse: bool,
     damping: f64,
 ) -> Result<LayerQuant> {
+    let prep = PreparedGptq::new(w, stats, damping)?;
     let sigma_w = {
         let m = w.data.iter().sum::<f64>() / w.data.len() as f64;
         (w.data
@@ -87,17 +114,13 @@ pub fn gptq_at_rate(
             / w.data.len() as f64)
             .sqrt()
     };
-    let rate_of = |alpha: f64| -> f64 {
-        gptq_layer_stats(w, stats, alpha, lmmse, None, damping)
-            .map(|q| q.entropy_bits)
-            .unwrap_or(f64::NAN)
-    };
+    let rate_of = |alpha: f64| -> f64 { prep.quantize(alpha, lmmse, None).entropy_bits };
     let target_entropy = target_bits.max(0.05); // entropy-reported rates
     let a0 = (sigma_w * (2.0 * std::f64::consts::PI * std::f64::consts::E).sqrt()
         / 2f64.powf(target_entropy))
     .max(1e-9);
     let alpha = super::rate_control::secant_scale(rate_of, a0, target_entropy, 0.005, 10);
-    gptq_layer_stats(w, stats, alpha, lmmse, None, damping)
+    Ok(prep.quantize(alpha, lmmse, None))
 }
 
 #[cfg(test)]
@@ -148,6 +171,54 @@ mod tests {
             (q.entropy_bits - 2.5).abs() < 0.06,
             "got entropy {}",
             q.entropy_bits
+        );
+    }
+
+    #[test]
+    fn at_rate_matches_precache_reference() {
+        // pre-cache gptq_at_rate: every secant probe refactorized
+        // through gptq_layer_stats — the prepared path must be
+        // bit-identical
+        let (w, sigma) = problem(96, 24, 4);
+        let stats = LayerStats::from_sigma(sigma);
+        let sigma_w = {
+            let m = w.data.iter().sum::<f64>() / w.data.len() as f64;
+            (w.data
+                .iter()
+                .map(|x| (x - m) * (x - m))
+                .sum::<f64>()
+                / w.data.len() as f64)
+                .sqrt()
+        };
+        let rate_of = |alpha: f64| -> f64 {
+            gptq_layer_stats(&w, &stats, alpha, false, None, 0.1)
+                .map(|q| q.entropy_bits)
+                .unwrap_or(f64::NAN)
+        };
+        let target = 2.5f64;
+        let a0 = (sigma_w * (2.0 * std::f64::consts::PI * std::f64::consts::E).sqrt()
+            / 2f64.powf(target))
+        .max(1e-9);
+        let alpha = crate::quant::rate_control::secant_scale(rate_of, a0, target, 0.005, 10);
+        let q_ref = gptq_layer_stats(&w, &stats, alpha, false, None, 0.1).unwrap();
+        let q = gptq_at_rate(&w, &stats, target, false, 0.1).unwrap();
+        assert_eq!(q.z, q_ref.z, "codes must be bit-identical");
+        assert_eq!(q.alphas, q_ref.alphas);
+        assert_eq!(q.gammas, q_ref.gammas);
+        assert_eq!(q.entropy_bits, q_ref.entropy_bits);
+        assert_eq!(q.rate_bits, q_ref.rate_bits);
+    }
+
+    #[test]
+    fn at_rate_factorizes_once() {
+        let (w, sigma) = problem(64, 20, 5);
+        let stats = LayerStats::from_sigma(sigma);
+        let before = crate::linalg::chol::factorization_count();
+        let _ = gptq_at_rate(&w, &stats, 2.0, false, 0.1).unwrap();
+        assert_eq!(
+            crate::linalg::chol::factorization_count() - before,
+            1,
+            "the secant must reuse the prepared factorization"
         );
     }
 }

@@ -11,6 +11,9 @@ pub mod watersic;
 pub mod waterfilling;
 pub mod zsic;
 
+pub use gptq::PreparedGptq;
+pub use watersic::PreparedLayer;
+
 use crate::linalg::{gemm, Mat};
 
 /// Result of quantizing one linear layer W (a × n).

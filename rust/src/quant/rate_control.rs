@@ -7,6 +7,12 @@
 /// Generic secant search: find `scale` such that `rate_of(scale) ≈
 /// target`, exploiting rate ≈ K − log₂(scale).  Returns the best scale
 /// found.  `rate_of` must be monotone decreasing in scale.
+///
+/// A non-finite evaluation (a probe whose factorization failed and was
+/// reported as NaN) aborts the search immediately: the iteration falls
+/// back to the best finite probe seen so far — `scale0` when none —
+/// instead of feeding NaN through the secant update and burning the
+/// remaining iterations on NaN arithmetic.
 pub fn secant_scale(
     rate_of: impl Fn(f64) -> f64,
     scale0: f64,
@@ -17,6 +23,9 @@ pub fn secant_scale(
     // work in u = log2(scale); model rate(u) ≈ K − u
     let mut u0 = scale0.log2();
     let mut r0 = rate_of(scale0);
+    if !r0.is_finite() {
+        return scale0;
+    }
     if (r0 - target).abs() < tol_bits {
         return scale0;
     }
@@ -25,6 +34,9 @@ pub fn secant_scale(
     let mut best = (r0, u0);
     for _ in 0..max_iter {
         let r1 = rate_of(2f64.powf(u1));
+        if !r1.is_finite() {
+            return 2f64.powf(best.1);
+        }
         if (r1 - target).abs() < (best.0 - target).abs() {
             best = (r1, u1);
         }
@@ -104,6 +116,47 @@ mod tests {
         let rate = |c: f64| 4.0 - 0.8 * c.log2() + 0.05 * c.log2().sin();
         let c = secant_scale(rate, 0.5, 2.5, 0.005, 20);
         assert!((rate(c) - 2.5).abs() < 0.005);
+    }
+
+    #[test]
+    fn secant_bails_out_on_first_non_finite_evaluation() {
+        // regression: rate_of swallowing a factorization error into NaN
+        // used to let the secant iterate on NaN for all max_iter steps;
+        // it must now stop at the first non-finite probe and fall back
+        use std::cell::Cell;
+        // every evaluation is NaN → exactly one probe, returns scale0
+        let evals = Cell::new(0usize);
+        let c = secant_scale(
+            |_| {
+                evals.set(evals.get() + 1);
+                f64::NAN
+            },
+            0.75,
+            2.0,
+            0.005,
+            10,
+        );
+        assert_eq!(c, 0.75, "must fall back to the initial scale");
+        assert_eq!(evals.get(), 1, "must not keep probing on NaN");
+        // finite first probe, NaN after → two probes, best-so-far (= c0)
+        let evals = Cell::new(0usize);
+        let c = secant_scale(
+            |s| {
+                evals.set(evals.get() + 1);
+                if evals.get() == 1 {
+                    5.0 - s.log2()
+                } else {
+                    f64::NAN
+                }
+            },
+            1.0,
+            2.0,
+            0.005,
+            10,
+        );
+        assert_eq!(c, 1.0);
+        assert_eq!(evals.get(), 2);
+        assert!(c.is_finite());
     }
 
     #[test]

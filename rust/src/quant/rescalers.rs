@@ -6,7 +6,7 @@
 //!
 //! with the normalization ‖t‖₁ = a after every alternation.
 
-use crate::linalg::chol::spd_solve;
+use crate::linalg::chol::SpdFactor;
 use crate::linalg::gemm::{diag_of_product, matmul};
 use crate::linalg::Mat;
 
@@ -78,27 +78,40 @@ pub fn find_optimal_rescalers(
     let target = effective_target(w, stats);
     let mut trace = vec![objective(w0, w, stats, &t, &gamma)];
 
+    // the Γ-step matrix G = Σ_X̂ ∘ (Ŵ₀ᵀT²Ŵ₀) + λI depends only on t
+    // (Ŵ₀ and Σ_X̂ are fixed): factor it once per iteration through the
+    // blocked Cholesky and reuse the factor for the paired forward/back
+    // solves; when t is unchanged between alternations (the update has
+    // reached a fixed point) the cached factor is reused outright and
+    // the redundant refactorization is dropped.
+    let mut g_factor: Option<(Vec<f64>, SpdFactor)> = None;
     for _ in 0..max_iters {
         // ---- Γ-step: γ = (Σ_X̂ ∘ (Ŵ₀ᵀT²Ŵ₀) + λI)⁻¹ diag(Ŵ₀ᵀT·target)
-        let mut w0t2 = w0.clone(); // rows scaled by t_i²
-        for i in 0..a {
-            let ti2 = t[i] * t[i];
-            w0t2.row_mut(i).iter_mut().for_each(|x| *x *= ti2);
+        let stale = g_factor.as_ref().map_or(true, |(t_used, _)| t_used != &t);
+        if stale {
+            let mut w0t2 = w0.clone(); // rows scaled by t_i²
+            for i in 0..a {
+                let ti2 = t[i] * t[i];
+                w0t2.row_mut(i).iter_mut().for_each(|x| *x *= ti2);
+            }
+            let f = matmul(&w0.transpose(), &w0t2); // n×n
+            let mut g = stats.sigma_xhat.hadamard(&f);
+            // adaptive ridge: scale-relative so it is meaningful for any Σ
+            let lam = ridge * (g.trace() / n as f64).max(1e-300);
+            g.add_diag(lam);
+            g_factor = match SpdFactor::new(&g) {
+                Ok(fac) => Some((t.clone(), fac)),
+                Err(_) => None, // keep previous γ if G is numerically singular
+            };
         }
-        let f = matmul(&w0.transpose(), &w0t2); // n×n
-        let mut g = stats.sigma_xhat.hadamard(&f);
-        // adaptive ridge: scale-relative so it is meaningful for any Σ
-        let lam = ridge * (g.trace() / n as f64).max(1e-300);
-        g.add_diag(lam);
         let mut w0t = w0.clone();
         for i in 0..a {
             let ti = t[i];
             w0t.row_mut(i).iter_mut().for_each(|x| *x *= ti);
         }
         let d = diag_of_product(&w0t.transpose(), &target);
-        match spd_solve(&g, &d) {
-            Ok(sol) => gamma = sol,
-            Err(_) => { /* keep previous γ if G is numerically singular */ }
+        if let Some((_, fac)) = &g_factor {
+            gamma = fac.solve(&d);
         }
 
         // ---- T-step: t_i = p_i / (q_i + λ)
@@ -204,6 +217,77 @@ mod tests {
         let out = find_optimal_rescalers(&w0, &w, &stats, &g0, 10, 1e-10, 0.0);
         let l1: f64 = out.t.iter().map(|x| x.abs()).sum::<f64>() / 16.0;
         assert!((l1 - 1.0).abs() < 1e-9, "‖t‖₁/a = {l1}");
+    }
+
+    #[test]
+    fn factor_cached_gamma_step_matches_spd_solve_reference() {
+        // transcription of the pre-cache alternation: a fresh
+        // spd_solve (fresh Cholesky) every iteration — the cached
+        // SpdFactor path must be bit-identical
+        fn reference(
+            w0: &Mat,
+            w: &Mat,
+            stats: &LayerStats,
+            gamma_init: &[f64],
+            max_iters: usize,
+            ridge: f64,
+            tol: f64,
+        ) -> (Vec<f64>, Vec<f64>) {
+            let (a, n) = (w.rows, w.cols);
+            let mut t = vec![1.0f64; a];
+            let mut gamma = gamma_init.to_vec();
+            super::normalize(&mut t, &mut gamma);
+            let target = effective_target(w, stats);
+            let mut prev = objective(w0, w, stats, &t, &gamma);
+            for _ in 0..max_iters {
+                let mut w0t2 = w0.clone();
+                for i in 0..a {
+                    let ti2 = t[i] * t[i];
+                    w0t2.row_mut(i).iter_mut().for_each(|x| *x *= ti2);
+                }
+                let f = crate::linalg::gemm::matmul(&w0.transpose(), &w0t2);
+                let mut g = stats.sigma_xhat.hadamard(&f);
+                let lam = ridge * (g.trace() / n as f64).max(1e-300);
+                g.add_diag(lam);
+                let mut w0t = w0.clone();
+                for i in 0..a {
+                    let ti = t[i];
+                    w0t.row_mut(i).iter_mut().for_each(|x| *x *= ti);
+                }
+                let d = diag_of_product(&w0t.transpose(), &target);
+                if let Ok(sol) = crate::linalg::chol::spd_solve(&g, &d) {
+                    gamma = sol;
+                }
+                let mut w0g = w0.clone();
+                for i in 0..a {
+                    let row = w0g.row_mut(i);
+                    for j in 0..n {
+                        row[j] *= gamma[j];
+                    }
+                }
+                let p = diag_of_product(&target, &w0g.transpose());
+                let s = crate::linalg::gemm::matmul(&w0g, &stats.sigma_xhat);
+                let q = diag_of_product(&s, &w0g.transpose());
+                let lam_t = ridge * (q.iter().sum::<f64>() / a as f64).max(1e-300);
+                for i in 0..a {
+                    let denom = q[i] + lam_t;
+                    t[i] = if denom > 0.0 { p[i] / denom } else { 1.0 };
+                }
+                super::normalize(&mut t, &mut gamma);
+                let loss = objective(w0, w, stats, &t, &gamma);
+                if (loss - prev).abs() / (prev.abs() + 1e-12) < tol {
+                    break;
+                }
+                prev = loss;
+            }
+            (t, gamma)
+        }
+
+        let (w0, w, stats, g0, _) = setup(24, 16, 0.8, 13);
+        let out = find_optimal_rescalers(&w0, &w, &stats, &g0, 15, 1e-10, 0.0);
+        let (t_ref, g_ref) = reference(&w0, &w, &stats, &g0, 15, 1e-10, 0.0);
+        assert_eq!(out.t, t_ref, "factor cache changed the T iterates");
+        assert_eq!(out.gamma, g_ref, "factor cache changed the Γ iterates");
     }
 
     #[test]

@@ -3,6 +3,18 @@
 //! drift/residual-corrected target → ZSIC with the waterfilling spacing
 //! rule α_i = c/ℓ_ii and LMMSE shrinkage → rate computation → Alg. 4
 //! rescaler optimization → expansion back to the full coordinate system.
+//!
+//! The phases split cleanly by what they depend on: damping, dead-
+//! feature erasure, the Cholesky factor L, and the drift-corrected
+//! target ŷ are all independent of the spacing constant c, while ZSIC,
+//! the entropy, and the rescalers are per-c.  [`PreparedLayer`]
+//! captures the c-independent front-end **once per layer**, so the
+//! secant rate search in [`watersic_at_rate`] re-runs only
+//! ZSIC + entropy coding per probe instead of refactorizing the
+//! Hessian ~11 times — one factorization for the row-subsample system,
+//! one for the full system (test-pinned through
+//! `linalg::chol::factorization_count`), with output bit-identical to
+//! the factor-per-probe implementation.
 
 use anyhow::{Context, Result};
 
@@ -11,13 +23,207 @@ use crate::linalg::stats::median;
 use crate::linalg::Mat;
 
 use super::rescalers::{effective_target, find_optimal_rescalers};
-use super::zsic::{watersic_alphas, zsic, ZsicOut};
+use super::zsic::{watersic_alphas_from_diag, zsic, ZsicOut};
 use super::{LayerQuant, LayerStats, QuantOpts};
 
 /// Pluggable ZSIC executor: the coordinator may route fixed shapes to
 /// the PJRT artifact (Pallas kernel); everything else uses the native
 /// implementation.  Signature matches `zsic::zsic` minus the clamp.
 pub type ZsicFn<'a> = dyn Fn(&Mat, &Mat, &[f64], bool) -> ZsicOut + 'a;
+
+/// The c-independent front-end of Algorithm 3, computed once per layer
+/// (per system: row subsample and full matrix each get one): dead-
+/// feature erasure, the damped Cholesky factor L of Σ_X̂, the drift-
+/// corrected target ŷ = (WΣ_{X,X̂}+Σ_Δ)(Lᵀ)⁻¹, and the α-direction
+/// (the diagonal ℓ_ii the spacing rule divides c by).  `quantize` /
+/// `entropy_at` then evaluate any spacing constant without touching
+/// the factorization again.
+pub struct PreparedLayer {
+    a: usize,
+    n: usize,
+    live: Vec<usize>,
+    dead: Vec<usize>,
+    /// W restricted to live columns (rescaler optimization target)
+    w_l: Mat,
+    /// statistics restricted to live columns
+    stats_l: LayerStats,
+    /// Cholesky factor of the damped Σ_X̂ (live system)
+    l: Mat,
+    /// ℓ_ii — the α-direction: α_i(c) = c / ℓ_ii
+    chol_diag: Vec<f64>,
+    /// drift-corrected target ŷ
+    y: Mat,
+    /// std of the source W (c₀ seed of the rate search)
+    src_sigma_w: f64,
+    /// geometric mean of √diag(Σ_X̂) on the *unreduced* system (c₀ seed)
+    src_gm: f64,
+}
+
+impl PreparedLayer {
+    /// Run the front-end once: erasure, damping, factorization, target.
+    pub fn new(w: &Mat, stats: &LayerStats, opts: &QuantOpts) -> Result<PreparedLayer> {
+        let (a, n) = (w.rows, w.cols);
+        assert_eq!(stats.n(), n, "stats dimension mismatch");
+
+        // c₀ ingredients for the rate search, computed on the original
+        // system exactly as the pre-cache search did (bit-compatible)
+        let src_sigma_w = {
+            let m = w.data.iter().sum::<f64>() / w.data.len() as f64;
+            (w.data
+                .iter()
+                .map(|x| (x - m) * (x - m))
+                .sum::<f64>()
+                / w.data.len() as f64)
+                .sqrt()
+        };
+        let src_gm = {
+            // geometric mean of damped chol diag — estimated from Σ_X̂ diag
+            let d = stats.sigma_xhat.diag();
+            (d.iter().map(|x| 0.5 * x.max(1e-12).ln()).sum::<f64>() / d.len() as f64).exp()
+        };
+
+        // ---- dead-feature erasure (§4): dimensions with near-zero
+        // teacher variance are removed from the system and re-inserted
+        // as zeros.
+        let diag_x = stats.sigma_x.diag();
+        let med = median(&diag_x).max(1e-300);
+        let live: Vec<usize> = (0..n)
+            .filter(|&j| diag_x[j] >= opts.dead_tau * med)
+            .collect();
+        let dead: Vec<usize> = (0..n)
+            .filter(|&j| diag_x[j] < opts.dead_tau * med)
+            .collect();
+        let nl = live.len();
+        anyhow::ensure!(nl > 0, "all features dead");
+
+        let w_l = w.submatrix(&(0..a).collect::<Vec<_>>(), &live);
+        let stats_l = LayerStats {
+            sigma_x: stats.sigma_x.submatrix(&live, &live),
+            sigma_xhat: stats.sigma_xhat.submatrix(&live, &live),
+            sigma_x_xhat: stats.sigma_x_xhat.submatrix(&live, &live),
+            sigma_d_xhat: stats
+                .sigma_d_xhat
+                .as_ref()
+                .map(|d| d.submatrix(&(0..a).collect::<Vec<_>>(), &live)),
+        };
+
+        // ---- Phase 1: damped Hessian and Cholesky
+        let mut h = stats_l.sigma_xhat.clone();
+        let mean_diag = h.trace() / nl as f64;
+        h.add_diag(opts.damping * mean_diag.max(1e-300));
+        let l = cholesky(&h).context("cholesky of damped Σ_X̂")?;
+
+        // drift/residual-corrected target ŷ = (WΣ_{X,X̂}+Σ_Δ)(Lᵀ)⁻¹ (17)/(18)
+        let target = effective_target(&w_l, &stats_l);
+        let y = solve_xlt_eq_b(&l, &target);
+        let chol_diag = l.diag();
+
+        Ok(PreparedLayer {
+            a,
+            n,
+            live,
+            dead,
+            w_l,
+            stats_l,
+            l,
+            chol_diag,
+            y,
+            src_sigma_w,
+            src_gm,
+        })
+    }
+
+    /// Columns zeroed by dead-feature erasure (original indices).
+    pub fn dead_cols(&self) -> &[usize] {
+        &self.dead
+    }
+
+    /// Cheap secant probe: ZSIC + entropy coding only (the rescalers
+    /// never change the codes, so they cannot change the entropy).
+    /// Bit-identical to `quantize(c, …).entropy_bits`.
+    pub fn entropy_at(&self, c: f64, opts: &QuantOpts) -> f64 {
+        let nl = self.live.len();
+        let alphas = watersic_alphas_from_diag(&self.chol_diag, c);
+        let out = zsic(&self.y, &self.l, &alphas, opts.lmmse, None);
+        let entropy = crate::entropy::column_coded_rate(&out.z, self.a, nl);
+        entropy * (nl as f64 / self.n as f64)
+    }
+
+    /// Phases 2–4 of Algorithm 3 at spacing constant `c`: ZSIC, rate
+    /// accounting, optional rescaler optimization, and expansion back
+    /// to the original coordinate system.
+    pub fn quantize(&self, c: f64, opts: &QuantOpts, zsic_exec: Option<&ZsicFn>) -> LayerQuant {
+        let (a, n) = (self.a, self.n);
+        let nl = self.live.len();
+
+        // ---- Phase 2: ZSIC with the waterfilling spacing rule
+        let alphas = watersic_alphas_from_diag(&self.chol_diag, c);
+        let out = match zsic_exec {
+            Some(f) => f(&self.y, &self.l, &alphas, opts.lmmse),
+            None => zsic(&self.y, &self.l, &alphas, opts.lmmse, None),
+        };
+
+        // ---- Phase 3: rate computation (joint entropy + side-info overhead)
+        let entropy = crate::entropy::column_coded_rate(&out.z, a, nl);
+        // per-weight entropy averages over the full width n (dead columns
+        // cost ~0 coded bits), but the BF16 side info — one row rescaler
+        // per row, one column scale per column — is stored for the full
+        // matrix and must NOT shrink with dead columns
+        let entropy_bits = entropy * (nl as f64 / n as f64);
+        let rate_bits = entropy_bits + 16.0 / a as f64 + 16.0 / n as f64;
+
+        // ---- Phase 4: diagonal rescaler optimization
+        let mut gamma = out.gammas.clone();
+        let mut t = vec![1.0; a];
+        if opts.rescalers {
+            let mut w0 = Mat::zeros(a, nl);
+            for i in 0..a {
+                for j in 0..nl {
+                    w0[(i, j)] = out.z[i * nl + j] as f64 * alphas[j];
+                }
+            }
+            let r = find_optimal_rescalers(
+                &w0,
+                &self.w_l,
+                &self.stats_l,
+                &out.gammas,
+                opts.rescaler_iters,
+                opts.rescaler_ridge,
+                1e-7,
+            );
+            t = r.t;
+            gamma = r.gamma;
+        }
+
+        // ---- expand the reduced system back to the original width
+        let mut z_full = vec![0i32; a * n];
+        let mut alphas_full = vec![1.0f64; n];
+        let mut gamma_full = vec![1.0f64; n];
+        for (jl, &j) in self.live.iter().enumerate() {
+            alphas_full[j] = alphas[jl];
+            gamma_full[j] = gamma[jl];
+            for i in 0..a {
+                z_full[i * n + j] = out.z[i * nl + jl];
+            }
+        }
+        // dead columns stay exactly zero (z = 0, scales neutral)
+        for &j in &self.dead {
+            gamma_full[j] = 0.0;
+        }
+
+        LayerQuant {
+            a,
+            n,
+            z: z_full,
+            alphas: alphas_full,
+            gammas: gamma_full,
+            t,
+            entropy_bits,
+            rate_bits,
+            dead_cols: self.dead.clone(),
+        }
+    }
+}
 
 /// Quantize one layer with the full WaterSIC pipeline at spacing
 /// constant `c` (rate targeting wraps this; see `watersic_at_rate`).
@@ -28,109 +234,7 @@ pub fn watersic_layer(
     opts: &QuantOpts,
     zsic_exec: Option<&ZsicFn>,
 ) -> Result<LayerQuant> {
-    let (a, n) = (w.rows, w.cols);
-    assert_eq!(stats.n(), n, "stats dimension mismatch");
-
-    // ---- dead-feature erasure (§4): dimensions with near-zero teacher
-    // variance are removed from the system and re-inserted as zeros.
-    let diag_x = stats.sigma_x.diag();
-    let med = median(&diag_x).max(1e-300);
-    let live: Vec<usize> = (0..n)
-        .filter(|&j| diag_x[j] >= opts.dead_tau * med)
-        .collect();
-    let dead: Vec<usize> = (0..n)
-        .filter(|&j| diag_x[j] < opts.dead_tau * med)
-        .collect();
-    let nl = live.len();
-    anyhow::ensure!(nl > 0, "all features dead");
-
-    let w_l = w.submatrix(&(0..a).collect::<Vec<_>>(), &live);
-    let stats_l = LayerStats {
-        sigma_x: stats.sigma_x.submatrix(&live, &live),
-        sigma_xhat: stats.sigma_xhat.submatrix(&live, &live),
-        sigma_x_xhat: stats.sigma_x_xhat.submatrix(&live, &live),
-        sigma_d_xhat: stats
-            .sigma_d_xhat
-            .as_ref()
-            .map(|d| d.submatrix(&(0..a).collect::<Vec<_>>(), &live)),
-    };
-
-    // ---- Phase 1: damped Hessian and Cholesky
-    let mut h = stats_l.sigma_xhat.clone();
-    let mean_diag = h.trace() / nl as f64;
-    h.add_diag(opts.damping * mean_diag.max(1e-300));
-    let l = cholesky(&h).context("cholesky of damped Σ_X̂")?;
-
-    // drift/residual-corrected target ŷ = (WΣ_{X,X̂}+Σ_Δ)(Lᵀ)⁻¹ (17)/(18)
-    let target = effective_target(&w_l, &stats_l);
-    let y = solve_xlt_eq_b(&l, &target);
-
-    // ---- Phase 2: ZSIC with the waterfilling spacing rule
-    let alphas = watersic_alphas(&l, c);
-    let out = match zsic_exec {
-        Some(f) => f(&y, &l, &alphas, opts.lmmse),
-        None => zsic(&y, &l, &alphas, opts.lmmse, None),
-    };
-
-    // ---- Phase 3: rate computation (joint entropy + side-info overhead)
-    let entropy = crate::entropy::column_coded_rate(&out.z, a, nl);
-    // per-weight entropy averages over the full width n (dead columns
-    // cost ~0 coded bits), but the BF16 side info — one row rescaler
-    // per row, one column scale per column — is stored for the full
-    // matrix and must NOT shrink with dead columns
-    let entropy_bits = entropy * (nl as f64 / n as f64);
-    let rate_bits = entropy_bits + 16.0 / a as f64 + 16.0 / n as f64;
-
-    // ---- Phase 4: diagonal rescaler optimization
-    let mut gamma = out.gammas.clone();
-    let mut t = vec![1.0; a];
-    if opts.rescalers {
-        let mut w0 = Mat::zeros(a, nl);
-        for i in 0..a {
-            for j in 0..nl {
-                w0[(i, j)] = out.z[i * nl + j] as f64 * alphas[j];
-            }
-        }
-        let r = find_optimal_rescalers(
-            &w0,
-            &w_l,
-            &stats_l,
-            &out.gammas,
-            opts.rescaler_iters,
-            opts.rescaler_ridge,
-            1e-7,
-        );
-        t = r.t;
-        gamma = r.gamma;
-    }
-
-    // ---- expand the reduced system back to the original width
-    let mut z_full = vec![0i32; a * n];
-    let mut alphas_full = vec![1.0f64; n];
-    let mut gamma_full = vec![1.0f64; n];
-    for (jl, &j) in live.iter().enumerate() {
-        alphas_full[j] = alphas[jl];
-        gamma_full[j] = gamma[jl];
-        for i in 0..a {
-            z_full[i * n + j] = out.z[i * nl + jl];
-        }
-    }
-    // dead columns stay exactly zero (z = 0, scales neutral)
-    for &j in &dead {
-        gamma_full[j] = 0.0;
-    }
-
-    Ok(LayerQuant {
-        a,
-        n,
-        z: z_full,
-        alphas: alphas_full,
-        gammas: gamma_full,
-        t,
-        entropy_bits,
-        rate_bits,
-        dead_cols: dead,
-    })
+    Ok(PreparedLayer::new(w, stats, opts)?.quantize(c, opts, zsic_exec))
 }
 
 /// PlainWaterSIC (Algorithm 2): no drift stats, no rescalers, no dead
@@ -152,8 +256,69 @@ pub fn plain_watersic(
     watersic_layer(w, &LayerStats::from_sigma(sigma.clone()), c, &opts, None)
 }
 
+/// Run the rate-independent front-end for [`watersic_at_rate`]: one
+/// [`PreparedLayer`] for the full matrix and, when a strict row
+/// subsample is in effect, one for the subsample the secant probes.
+/// The coordinator fans these over the worker pool (they are the
+/// expensive, budget-independent part of a layer) and feeds them to
+/// [`watersic_at_rate_prepared`] inside the sequential budget loop.
+pub fn prepare_at_rate(
+    w: &Mat,
+    stats: &LayerStats,
+    opts: &QuantOpts,
+    subsample_rows: usize,
+) -> Result<(PreparedLayer, Option<PreparedLayer>)> {
+    let a = w.rows;
+    // at least 8 rows for a stable entropy estimate, capped at the
+    // matrix height (max-then-min rather than `clamp(8, a)`, which
+    // asserts min ≤ max and would panic on layers under 8 rows)
+    let sub = subsample_rows.max(8).min(a);
+    let full = PreparedLayer::new(w, stats, opts)?;
+    let subp = if sub < a {
+        let mut rng = crate::util::rng::Rng::new(0xC0FFEE ^ a as u64);
+        let rows = rng.sample_indices(a, sub);
+        let w_sub = w.submatrix(&rows, &(0..w.cols).collect::<Vec<_>>());
+        Some(PreparedLayer::new(&w_sub, stats, opts)?)
+    } else {
+        None
+    };
+    Ok((full, subp))
+}
+
+/// Rate targeting over pre-built front-ends: the secant on c evaluates
+/// only ZSIC + entropy on `prep_sub`, then the final full-matrix run
+/// reuses `prep_full` — no factorization happens in here at all.
+pub fn watersic_at_rate_prepared(
+    prep_sub: &PreparedLayer,
+    prep_full: &PreparedLayer,
+    target_bits: f64,
+    opts: &QuantOpts,
+    zsic_exec: Option<&ZsicFn>,
+) -> LayerQuant {
+    // cheap evaluations on the subsample (native ZSIC — artifact shapes
+    // are fixed to the full matrix)
+    let rate_of = |c: f64| prep_sub.entropy_at(c, opts);
+    // initial guess: for Y≈N(0,σ²) per column after whitening, entropy
+    // ≈ ½log₂(2πe σ_W²/c²·|L|^{2/n}) ⇒ c ≈ σ_W·|L|^{1/n}·√(2πe)·2^{−R}
+    //
+    // rates are reported as entropy, matching the paper's convention for
+    // entropy-coded methods ("WaterSIC and Huffman-GPTQ use entropy to
+    // report rates"); the 16/a+16/n side info is tracked separately in
+    // rate_bits and the container size.
+    let target_entropy = target_bits.max(0.05);
+    let c0 = (prep_full.src_sigma_w
+        * prep_full.src_gm
+        * (2.0 * std::f64::consts::PI * std::f64::consts::E).sqrt()
+        / 2f64.powf(target_entropy))
+    .max(1e-9);
+    let c = super::rate_control::secant_scale(rate_of, c0, target_entropy, 0.005, 10);
+    prep_full.quantize(c, opts, zsic_exec)
+}
+
 /// Rate-targeted WaterSIC (§4 "Rate assignment"): secant on c using a
-/// row subsample for the search, then one full-matrix run.
+/// row subsample for the search, then one full-matrix run.  The
+/// front-end (erasure + Cholesky + target solve) runs exactly once per
+/// system — see [`PreparedLayer`].
 pub fn watersic_at_rate(
     w: &Mat,
     stats: &LayerStats,
@@ -162,48 +327,14 @@ pub fn watersic_at_rate(
     zsic_exec: Option<&ZsicFn>,
     subsample_rows: usize,
 ) -> Result<LayerQuant> {
-    let a = w.rows;
-    let sub = subsample_rows.clamp(8, a);
-    let w_sub = if sub < a {
-        let mut rng = crate::util::rng::Rng::new(0xC0FFEE ^ a as u64);
-        let rows = rng.sample_indices(a, sub);
-        w.submatrix(&rows, &(0..w.cols).collect::<Vec<_>>())
-    } else {
-        w.clone()
-    };
-    // cheap evaluations on the subsample (native ZSIC — artifact shapes
-    // are fixed to the full matrix)
-    let rate_of = |c: f64| -> f64 {
-        watersic_layer(&w_sub, stats, c, opts, None)
-            .map(|q| q.entropy_bits)
-            .unwrap_or(f64::NAN)
-    };
-    // initial guess: for Y≈N(0,σ²) per column after whitening, entropy
-    // ≈ ½log₂(2πe σ_W²/c²·|L|^{2/n}) ⇒ c ≈ σ_W·|L|^{1/n}·√(2πe)·2^{−R}
-    let sigma_w = {
-        let m = w.data.iter().sum::<f64>() / w.data.len() as f64;
-        (w.data
-            .iter()
-            .map(|x| (x - m) * (x - m))
-            .sum::<f64>()
-            / w.data.len() as f64)
-            .sqrt()
-    };
-    let gm = {
-        // geometric mean of damped chol diag — estimated from Σ_X̂ diag
-        let d = stats.sigma_xhat.diag();
-        (d.iter().map(|x| 0.5 * x.max(1e-12).ln()).sum::<f64>() / d.len() as f64).exp()
-    };
-    // rates are reported as entropy, matching the paper's convention for
-    // entropy-coded methods ("WaterSIC and Huffman-GPTQ use entropy to
-    // report rates"); the 16/a+16/n side info is tracked separately in
-    // rate_bits and the container size.
-    let target_entropy = target_bits.max(0.05);
-    let c0 = (sigma_w * gm * (2.0 * std::f64::consts::PI * std::f64::consts::E).sqrt()
-        / 2f64.powf(target_entropy))
-    .max(1e-9);
-    let c = super::rate_control::secant_scale(rate_of, c0, target_entropy, 0.005, 10);
-    watersic_layer(w, stats, c, opts, zsic_exec)
+    let (full, sub) = prepare_at_rate(w, stats, opts, subsample_rows)?;
+    Ok(watersic_at_rate_prepared(
+        sub.as_ref().unwrap_or(&full),
+        &full,
+        target_bits,
+        opts,
+        zsic_exec,
+    ))
 }
 
 #[cfg(test)]
@@ -262,6 +393,129 @@ mod tests {
                 q.entropy_bits
             );
         }
+    }
+
+    #[test]
+    fn prepared_layer_quantize_matches_watersic_layer() {
+        // the cache is pure factoring-out: same inputs, same bits
+        let (w, sigma) = problem(48, 32, 9);
+        let stats = LayerStats::from_sigma(sigma);
+        let opts = QuantOpts::default();
+        let prep = PreparedLayer::new(&w, &stats, &opts).unwrap();
+        for c in [0.2, 0.5, 1.0] {
+            let q0 = watersic_layer(&w, &stats, c, &opts, None).unwrap();
+            let q1 = prep.quantize(c, &opts, None);
+            assert_eq!(q0.z, q1.z);
+            assert_eq!(q0.alphas, q1.alphas);
+            assert_eq!(q0.gammas, q1.gammas);
+            assert_eq!(q0.t, q1.t);
+            assert_eq!(q0.entropy_bits, q1.entropy_bits);
+            assert_eq!(q0.rate_bits, q1.rate_bits);
+            // the probe shortcut reports the same entropy the full
+            // quantize does (rescalers never change the codes)
+            assert_eq!(prep.entropy_at(c, &opts), q1.entropy_bits);
+        }
+    }
+
+    #[test]
+    fn at_rate_matches_precache_reference() {
+        // literal transcription of the pre-cache watersic_at_rate:
+        // every secant probe re-runs the whole front-end (erasure +
+        // Cholesky + target solve) through watersic_layer
+        fn precache(
+            w: &Mat,
+            stats: &LayerStats,
+            target_bits: f64,
+            opts: &QuantOpts,
+            subsample_rows: usize,
+        ) -> LayerQuant {
+            let a = w.rows;
+            let sub = subsample_rows.clamp(8, a);
+            let w_sub = if sub < a {
+                let mut rng = Rng::new(0xC0FFEE ^ a as u64);
+                let rows = rng.sample_indices(a, sub);
+                w.submatrix(&rows, &(0..w.cols).collect::<Vec<_>>())
+            } else {
+                w.clone()
+            };
+            let rate_of = |c: f64| -> f64 {
+                watersic_layer(&w_sub, stats, c, opts, None)
+                    .map(|q| q.entropy_bits)
+                    .unwrap_or(f64::NAN)
+            };
+            let sigma_w = {
+                let m = w.data.iter().sum::<f64>() / w.data.len() as f64;
+                (w.data
+                    .iter()
+                    .map(|x| (x - m) * (x - m))
+                    .sum::<f64>()
+                    / w.data.len() as f64)
+                    .sqrt()
+            };
+            let gm = {
+                let d = stats.sigma_xhat.diag();
+                (d.iter().map(|x| 0.5 * x.max(1e-12).ln()).sum::<f64>() / d.len() as f64).exp()
+            };
+            let target_entropy = target_bits.max(0.05);
+            let c0 = (sigma_w
+                * gm
+                * (2.0 * std::f64::consts::PI * std::f64::consts::E).sqrt()
+                / 2f64.powf(target_entropy))
+            .max(1e-9);
+            let c = crate::quant::rate_control::secant_scale(
+                rate_of,
+                c0,
+                target_entropy,
+                0.005,
+                10,
+            );
+            watersic_layer(w, stats, c, opts, None).unwrap()
+        }
+
+        let (w, sigma) = problem(128, 32, 6);
+        let stats = LayerStats::from_sigma(sigma);
+        let opts = QuantOpts::default();
+        for target in [1.5, 3.0] {
+            let q_ref = precache(&w, &stats, target, &opts, 64);
+            let q = watersic_at_rate(&w, &stats, target, &opts, None, 64).unwrap();
+            assert_eq!(q.z, q_ref.z, "codes must be bit-identical");
+            assert_eq!(q.alphas, q_ref.alphas);
+            assert_eq!(q.gammas, q_ref.gammas);
+            assert_eq!(q.t, q_ref.t);
+            assert_eq!(q.entropy_bits, q_ref.entropy_bits);
+            assert_eq!(q.rate_bits, q_ref.rate_bits);
+        }
+    }
+
+    #[test]
+    fn at_rate_factorizes_once_per_system() {
+        let (w, sigma) = problem(96, 24, 8);
+        let stats = LayerStats::from_sigma(sigma);
+        let opts = QuantOpts {
+            rescalers: false, // the Γ-step has its own factorizations
+            ..QuantOpts::default()
+        };
+        // subsampled search: one factorization for the subsample
+        // system + one for the full system, no matter how many secant
+        // probes run (the pre-cache path paid one per probe)
+        let before = crate::linalg::chol::factorization_count();
+        let _ = watersic_at_rate(&w, &stats, 2.0, &opts, None, 32).unwrap();
+        assert_eq!(crate::linalg::chol::factorization_count() - before, 2);
+        // no subsampling: the search shares the full preparation
+        let before = crate::linalg::chol::factorization_count();
+        let _ = watersic_at_rate(&w, &stats, 2.0, &opts, None, 96).unwrap();
+        assert_eq!(crate::linalg::chol::factorization_count() - before, 1);
+    }
+
+    #[test]
+    fn at_rate_handles_fewer_than_eight_rows() {
+        // regression: `subsample_rows.clamp(8, a)` asserted min ≤ max
+        // and panicked whenever a layer had fewer than 8 rows
+        let (w, sigma) = problem(4, 12, 10);
+        let stats = LayerStats::from_sigma(sigma);
+        let q = watersic_at_rate(&w, &stats, 2.0, &QuantOpts::default(), None, 64).unwrap();
+        assert!(q.entropy_bits.is_finite());
+        assert_eq!((q.a, q.n), (4, 12));
     }
 
     #[test]

@@ -151,7 +151,15 @@ pub fn zsic(y: &Mat, l: &Mat, alphas: &[f64], lmmse: bool, clamp: Option<i32>) -
 /// WaterSIC spacing rule (eq. 12) with |A|^{1/n} = αⁿ normalization:
 /// α_i = c/ℓ_ii with c = α·|L|^{1/n}.
 pub fn watersic_alphas(l: &Mat, c: f64) -> Vec<f64> {
-    l.diag().iter().map(|&d| c / d.abs()).collect()
+    watersic_alphas_from_diag(&l.diag(), c)
+}
+
+/// [`watersic_alphas`] from a pre-extracted Cholesky diagonal — the
+/// `PreparedLayer` cache stores ℓ_ii once (the α-direction) and
+/// re-derives the spacings per secant probe through the exact same
+/// `c / ℓ_ii` arithmetic, so cached and uncached runs are bit-identical.
+pub fn watersic_alphas_from_diag(diag: &[f64], c: f64) -> Vec<f64> {
+    diag.iter().map(|&d| c / d.abs()).collect()
 }
 
 /// GPTQ spacing rule: A = αI.
