@@ -13,7 +13,8 @@
 //! versus the seed serial factorization (`trsm <a>x<n>` rows track the
 //! blocked triangular solve the same way, and a derived
 //! `prepare-once factorizations` entry pins the factorization-cached
-//! rate search at two factorizations per layer).
+//! rate search at ONE factorization per layer — the shared
+//! `PreparedStats` serves the subsample and the full system alike).
 //! The ratios are recorded as `speedup <shape>` /
 //! `speedup f32 <shape>` JSON entries; `dispatch`-tagged rows measure
 //! the forced-scalar rung so `speedup dispatch <shape>` isolates the
@@ -295,8 +296,9 @@ fn main() {
     }
 
     // ---- prepare-once pipeline counter: a rate-targeted layer must
-    // factor exactly twice (subsample system + full system), however
-    // many secant probes run — the PreparedLayer front-end cache
+    // factor exactly once — the shared PreparedStats serves both the
+    // subsample system and the full system — however many secant
+    // probes run
     {
         use watersic::quant::{watersic::watersic_at_rate, LayerStats, QuantOpts};
         let a = 128usize;
@@ -310,7 +312,7 @@ fn main() {
             ..QuantOpts::default()
         };
         let before = factorization_count();
-        watersic_at_rate(&w, &stats, 2.5, &opts, None, 64).unwrap();
+        watersic_at_rate(&w, &stats, 2.5, &opts, None, 64, 0).unwrap();
         let per_layer = (factorization_count() - before) as f64;
         println!("\nprepare-once factorizations per rate-targeted layer: {per_layer}");
         log.note("prepare-once factorizations", per_layer);

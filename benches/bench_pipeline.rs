@@ -1,19 +1,58 @@
 //! End-to-end coordinator latency: full-model quantization wall time per
 //! algorithm (the paper's practical-cost axis), on the real trained
 //! picollama_s with artifacts when available.  Emits
-//! `BENCH_pipeline.json` alongside the console table.
+//! `BENCH_pipeline.json` alongside the console table, including the
+//! streaming-prepare telemetry — `prepare peak pairs` (high-water mark
+//! of simultaneously-alive prepared front-ends, ≤ the
+//! `WATERSIC_PREPARE_LOOKAHEAD` window) and per-layer `factorizations`
+//! (1 with the shared-stats `PreparedStats`) — measured on a synthetic
+//! model so the entries exist even where no artifacts do (CI smoke).
 
 use std::time::Duration;
 
-use watersic::coordinator::{quantize_model, Algo};
+use watersic::calib::corpus::Corpus;
+use watersic::coordinator::{quantize_model, Algo, PipelineOpts};
 use watersic::experiments::{llm::pipeline_opts, Ctx};
+use watersic::linalg::chol::factorization_count_global;
+use watersic::model::weights::Weights;
+use watersic::model::ModelConfig;
 use watersic::util::bench::{report, Bench, BenchLog};
 use watersic::util::json::Json;
+
+/// Streaming-prepare telemetry on a synthetic tiny model: always
+/// available, deterministic, and cheap enough for the CI smoke run.
+fn prepare_telemetry(log: &mut BenchLog) -> anyhow::Result<()> {
+    let cfg = ModelConfig::tiny_test();
+    let teacher = Weights::random(&cfg, 21);
+    let text: String = (0..400)
+        .map(|i| format!("alpha beta {} gamma. ", i % 37))
+        .collect();
+    let corpus = Corpus::from_bytes("bench", text.into_bytes());
+    let mut opts = PipelineOpts::watersic(3.0);
+    opts.calib_windows = 4;
+    opts.calib_batch = 2;
+    opts.use_engine = false;
+    opts.subsample_rows = 16;
+    // only front-end factorizations count (the Γ-step has its own)
+    opts.quant.rescalers = false;
+    let before = factorization_count_global();
+    let qm = quantize_model(&cfg, &teacher, &corpus, &opts, None)?;
+    let per_layer = (factorization_count_global() - before) as f64
+        / qm.report.matrices.len() as f64;
+    println!(
+        "prepare peak pairs: {} (window {})   factorizations/layer: {per_layer}",
+        qm.report.prepare_peak_pairs, opts.prepare_lookahead
+    );
+    log.note("prepare peak pairs", qm.report.prepare_peak_pairs as f64);
+    log.note("factorizations", per_layer);
+    Ok(())
+}
 
 fn main() -> anyhow::Result<()> {
     println!("== bench_pipeline: full-model quantization latency ==");
     let mut log = BenchLog::new("BENCH_pipeline.json");
     log.meta("bench", Json::Str("pipeline".to_string()));
+    prepare_telemetry(&mut log)?;
     let ctx = Ctx::new(true, true)?;
     let Ok((cfg, teacher)) = ctx.load_model("picollama_s") else {
         println!("skipped: run `make artifacts` first");

@@ -4,10 +4,25 @@
 //! set to refresh the drift statistics, each matrix is quantized at the
 //! rate assigned by the running global budget, and the student weights
 //! are updated in place so later layers see the accumulated error.
+//!
+//! The expensive per-matrix front-end (drift-stat assembly + the
+//! WaterSIC [`PreparedLayer`] build) is rate-independent, so it is
+//! **streamed**: a producer thread builds front-ends ahead of the
+//! inherently sequential budget loop — one matrix at a time, each
+//! build internally parallel over the worker pool — with the bounded
+//! window W ([`PipelineOpts::prepare_lookahead`],
+//! `WATERSIC_PREPARE_LOOKAHEAD`, default 2) capping how many prepared
+//! front-ends are alive at once.  W is a *buffer* bound, not a build
+//! concurrency: W = 2 already overlaps preparing matrix k+1 with
+//! consuming matrix k, and larger windows only let the producer run
+//! further ahead.  Assigned rates and every output bit are identical
+//! to the strictly in-order pipeline, at a bounded fraction of the
+//! all-at-once transient footprint.
 
 use std::collections::BTreeMap;
+use std::sync::{mpsc, Condvar, Mutex};
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::calib::corpus::Corpus;
 use crate::calib::drift::{panel_rel_mse, student_panels, CalibSet, StatsOpts};
@@ -20,10 +35,16 @@ use crate::quant::mixing::{mix_attention, mix_drift, optimize_mixing};
 use crate::quant::rate_control::RateBudget;
 use crate::quant::rtn::{rtn_absmax, rtn_grid_at_rate};
 use crate::quant::watersic::{
-    prepare_at_rate, watersic_at_rate, watersic_at_rate_prepared, PreparedLayer,
+    layer_seed_from_name, prepare_at_rate, watersic_at_rate, watersic_at_rate_prepared,
+    PreparedLayer,
 };
 use crate::quant::{LayerQuant, LayerStats, QuantOpts};
 use crate::runtime::{Engine, Precision};
+
+/// The two front-ends a rate-targeted WaterSIC matrix needs: the full
+/// system and (when subsampling is in effect) the secant's row
+/// subsample, sharing one `PreparedStats`.
+type PreparedPair = (PreparedLayer, Option<PreparedLayer>);
 
 /// Which algorithm the pipeline runs — the rows of Tables 1/2.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -69,6 +90,13 @@ pub struct PipelineOpts {
     pub quant: QuantOpts,
     /// rows used during secant rate search
     pub subsample_rows: usize,
+    /// how many prepared layer front-ends the streaming prepare may
+    /// hold alive at once (the one being drained + the buffered
+    /// lookahead); min 1 = fully serial.  A memory bound, not a build
+    /// concurrency — builds run one at a time (each pool-parallel
+    /// internally), so values above 2 only deepen the buffer.
+    /// Defaults to the `WATERSIC_PREPARE_LOOKAHEAD` engine option (2).
+    pub prepare_lookahead: usize,
     /// kernel precision for calibration forwards and covariance
     /// streaming (the quantizer core stays f64 regardless); defaults
     /// to the `WATERSIC_PRECISION` engine option
@@ -94,6 +122,7 @@ impl PipelineOpts {
             mixing_iters: 5,
             quant: QuantOpts::default(),
             subsample_rows: 64,
+            prepare_lookahead: crate::runtime::prepare_lookahead_from_env(),
             precision: Precision::from_env(),
             use_engine: true,
             finetune: None,
@@ -136,6 +165,10 @@ pub struct PipelineReport {
     pub avg_rate: f64,
     pub ft_loss_trace: Vec<f64>,
     pub wall_secs: f64,
+    /// high-water mark of simultaneously-alive prepared front-ends in
+    /// the streaming prepare (≤ `PipelineOpts::prepare_lookahead`; 0
+    /// when the streaming path did not run)
+    pub prepare_peak_pairs: usize,
 }
 
 pub struct QuantizedModel {
@@ -145,18 +178,23 @@ pub struct QuantizedModel {
 }
 
 /// One matrix through the configured algorithm.  For WaterSIC the
-/// coordinator may hand in `prepared` front-ends (built in parallel
-/// over the pool — see `quantize_model`); without them the rate search
-/// prepares its own.
+/// coordinator may hand in `prepared` front-ends (streamed over the
+/// worker pool — see `quantize_model`); without them the rate search
+/// prepares its own, salting the subsample RNG with `layer_seed`.
+/// `stats` is required by every path except prepared WaterSIC (the
+/// pair already holds everything the quantizer reads — the streaming
+/// consumer exploits this to drop the covariances right after prepare).
 fn quantize_matrix(
     w: &Mat,
-    stats: &LayerStats,
+    stats: Option<&LayerStats>,
     rate: f64,
     opts: &PipelineOpts,
     engine: Option<&Engine>,
-    prepared: Option<(PreparedLayer, Option<PreparedLayer>)>,
+    prepared: Option<PreparedPair>,
+    layer_seed: u64,
 ) -> Result<(LayerQuant, bool)> {
     let via_artifact;
+    let need_stats = || stats.context("this quantization path needs layer stats");
     match opts.algo {
         Algo::Rtn { bits } => Ok((rtn_absmax(w, bits), false)),
         Algo::HuffRtn => Ok((rtn_grid_at_rate(w, rate), false)),
@@ -166,12 +204,17 @@ fn quantize_matrix(
             let alpha = absmax / maxq as f64;
             Ok((
                 crate::quant::gptq::gptq_layer_stats(
-                    w, stats, alpha, false, Some(maxq), 0.1,
+                    w,
+                    need_stats()?,
+                    alpha,
+                    false,
+                    Some(maxq),
+                    0.1,
                 )?,
                 false,
             ))
         }
-        Algo::HuffGptq => Ok((gptq_at_rate(w, stats, rate, false, 0.1)?, false)),
+        Algo::HuffGptq => Ok((gptq_at_rate(w, need_stats()?, rate, false, 0.1)?, false)),
         Algo::WaterSic => {
             let exec = engine.filter(|_| opts.use_engine).map(|e| {
                 move |y: &Mat, l: &Mat, alphas: &[f64], lmmse: bool| {
@@ -201,19 +244,21 @@ fn quantize_matrix(
                 ),
                 (Some(f), None) => watersic_at_rate(
                     w,
-                    stats,
+                    need_stats()?,
                     rate,
                     &opts.quant,
                     Some(f),
                     opts.subsample_rows,
+                    layer_seed,
                 )?,
                 (None, None) => watersic_at_rate(
                     w,
-                    stats,
+                    need_stats()?,
                     rate,
                     &opts.quant,
                     None,
                     opts.subsample_rows,
+                    layer_seed,
                 )?,
             };
             via_artifact = ARTIFACT_HIT.with(|f| f.get());
@@ -224,6 +269,131 @@ fn quantize_matrix(
 
 thread_local! {
     static ARTIFACT_HIT: std::cell::Cell<bool> = const { std::cell::Cell::new(false) };
+}
+
+/// Counting semaphore bounding how many prepared layer front-ends
+/// (drift stats + [`PreparedPair`]) are alive at once in the streaming
+/// prepare: the producer acquires a slot *before* it starts building a
+/// pair and the budget loop releases the slot only after the pair has
+/// been consumed and dropped — so at any instant at most `window`
+/// pairs exist, including the one being drained.  Tracks a high-water
+/// mark for the report/bench telemetry.
+struct PrepareWindow {
+    state: Mutex<WindowState>,
+    cv: Condvar,
+}
+
+struct WindowState {
+    available: usize,
+    in_use: usize,
+    peak: usize,
+    closed: bool,
+}
+
+impl PrepareWindow {
+    fn new(window: usize) -> PrepareWindow {
+        PrepareWindow {
+            state: Mutex::new(WindowState {
+                available: window.max(1),
+                in_use: 0,
+                peak: 0,
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Block until a slot frees up; `false` once the window is closed
+    /// (the consumer bailed out — stop producing).
+    fn acquire(&self) -> bool {
+        let mut st = self.state.lock().unwrap();
+        while st.available == 0 && !st.closed {
+            st = self.cv.wait(st).unwrap();
+        }
+        if st.closed {
+            return false;
+        }
+        st.available -= 1;
+        st.in_use += 1;
+        st.peak = st.peak.max(st.in_use);
+        true
+    }
+
+    fn release(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.available += 1;
+        st.in_use -= 1;
+        self.cv.notify_all();
+    }
+
+    /// Wake and dismiss a producer blocked in `acquire` — called via
+    /// [`CloseOnDrop`] on every consumer exit (return, error, panic);
+    /// without it the scoped join would deadlock.
+    fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    fn peak(&self) -> usize {
+        self.state.lock().unwrap().peak
+    }
+}
+
+/// Closes the window when dropped — `thread::scope` joins the producer
+/// before propagating a consumer panic, so without this a panicking
+/// budget loop would leave the producer parked in `acquire()` forever.
+struct CloseOnDrop<'a>(&'a PrepareWindow);
+
+impl Drop for CloseOnDrop<'_> {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
+/// Drain one matrix through the budgeted quantization step: assign a
+/// rate from the running budget, quantize, charge the *achieved* bits
+/// back, record the report row, and install the quantized weights in
+/// the student.  Inherently sequential — each matrix's achieved bits
+/// feed the next assignment, which is exactly why only the prepare is
+/// streamed.
+#[allow(clippy::too_many_arguments)]
+fn consume_matrix(
+    name: &str,
+    w: &Mat,
+    sigma_x: &Mat,
+    stats: Option<&LayerStats>,
+    prep: Option<PreparedPair>,
+    opts: &PipelineOpts,
+    engine: Option<&Engine>,
+    budget: &mut RateBudget,
+    report: &mut PipelineReport,
+    student: &mut Weights,
+    quants: &mut BTreeMap<String, LayerQuant>,
+) -> Result<()> {
+    let params = w.rows * w.cols;
+    let rate = budget.assign(params);
+    let (q, via_artifact) =
+        quantize_matrix(w, stats, rate, opts, engine, prep, layer_seed_from_name(name))?;
+    // entropy-coded methods report/charge entropy (paper's
+    // convention); log-cardinality methods charge their width
+    let charged = match opts.algo {
+        Algo::Rtn { .. } | Algo::Gptq { .. } => q.rate_bits,
+        _ => q.entropy_bits,
+    };
+    budget.charge(params, charged);
+    let w_hat = q.dequant();
+    report.matrices.push(MatrixReport {
+        name: name.to_string(),
+        assigned_rate: rate,
+        entropy_bits: q.entropy_bits,
+        rate_bits: q.rate_bits,
+        rel_mse_weights: crate::quant::relative_distortion(w, &w_hat, sigma_x),
+        dead_cols: q.dead_cols.len(),
+        via_artifact,
+    });
+    student.set(name, w_hat);
+    quants.insert(name.to_string(), q);
+    Ok(())
 }
 
 /// Run the full pipeline.
@@ -309,6 +479,7 @@ pub fn quantize_model(
                         &opts.quant,
                         None,
                         opts.subsample_rows.min(32),
+                        layer_seed_from_name(name),
                     ) {
                         Ok(q) => ws.push(q.dequant()),
                         Err(_) => return f64::INFINITY,
@@ -337,90 +508,124 @@ pub fn quantize_model(
                 format!("{p}ffn.w2"),
             ])
             .collect();
-        // the drift statistics depend only on the per-layer captures,
-        // not on the running quantization — assemble all 7 in parallel
-        // before the (inherently sequential) budgeted quantization loop
-        let stats_threads =
-            crate::util::threadpool::default_threads().min(order.len());
-        let stats_list: Vec<LayerStats> = crate::util::threadpool::parallel_map(
-            order.clone(),
-            stats_threads,
-            |name| cs.stats_for(cfg, &name, &scaps, stats_opts),
-        );
-        // WaterSIC's expensive front-end (dead-feature erasure + damped
-        // Cholesky + target solve, on both the row subsample and the
-        // full matrix) is rate-independent, so the 7 matrices of the
-        // layer are prepared in parallel over the pool here.  Only the
-        // budgeted rate assignment below stays sequential — each
-        // layer's achieved bits feed the next assignment — which keeps
-        // assigned rates, and therefore every output bit, identical to
-        // the strictly-in-order pipeline.  (Adaptive mixing rewrites
-        // the QKV statistics mid-loop, so that path prepares inline.)
-        type PreparedPair = (PreparedLayer, Option<PreparedLayer>);
-        let prepared: Vec<Option<Result<PreparedPair>>> =
-            if opts.algo == Algo::WaterSic && !opts.mixing {
-                crate::util::threadpool::parallel_map(
-                    (0..order.len()).collect(),
-                    stats_threads,
-                    |i| {
-                        Some(prepare_at_rate(
-                            teacher.get(&order[i]),
-                            &stats_list[i],
+        if opts.algo == Algo::WaterSic && !opts.mixing {
+            // WaterSIC's expensive front-end (drift-stat assembly +
+            // dead-feature erasure + damped Cholesky + target solve) is
+            // rate-independent, so it is streamed: a producer thread
+            // builds front-ends ahead of the budget loop, one matrix at
+            // a time with each build pool-parallel inside.  Slots are
+            // acquired *before* a build starts and released only after
+            // the pair is consumed, so at most `prepare_lookahead`
+            // prepared front-ends are ever alive — and the inherently
+            // sequential rate assignment keeps assigned rates, and
+            // therefore every output bit, identical to the strictly
+            // in-order pipeline.  (Adaptive mixing rewrites the QKV
+            // statistics mid-loop, so that path prepares inline below.)
+            let gate = PrepareWindow::new(opts.prepare_lookahead);
+            let scope_res: Result<()> = std::thread::scope(|scope| {
+                let (tx, rx) = mpsc::channel::<(Mat, Result<PreparedPair>)>();
+                let _close_guard = CloseOnDrop(&gate);
+                let gate_ref = &gate;
+                let order_ref = &order;
+                let scaps_ref = &scaps;
+                let cs_ref = &cs;
+                let _producer = scope.spawn(move || {
+                    for name in order_ref {
+                        if !gate_ref.acquire() {
+                            return; // consumer bailed out
+                        }
+                        let stats = cs_ref.stats_for(cfg, name, scaps_ref, stats_opts);
+                        let pair = prepare_at_rate(
+                            teacher.get(name),
+                            &stats,
                             &opts.quant,
                             opts.subsample_rows,
-                        ))
-                    },
-                )
-            } else {
-                (0..order.len()).map(|_| None).collect()
-            };
-        for ((name, precomputed), prep) in order.into_iter().zip(stats_list).zip(prepared) {
-            let w = teacher.get(&name).clone();
-            let is_qkv = name.contains("attn.w") && !name.ends_with("wo");
-            let mut stats = precomputed;
-            if opts.mixing && opts.algo == Algo::WaterSic && is_qkv {
-                let uniform = cs.stats_for(
-                    cfg,
-                    &name,
-                    &scaps,
-                    StatsOpts {
-                        attn_weighted: false,
-                        ..stats_opts
-                    },
-                );
-                stats = mix_attention(
-                    &mix_drift(&stats, eps_qr),
-                    &mix_drift(&uniform, eps_qr),
-                    eps_aw,
-                );
-            }
-            let params = w.rows * w.cols;
-            let rate = budget.assign(params);
-            let (q, via_artifact) =
-                quantize_matrix(&w, &stats, rate, opts, engine, prep.transpose()?)?;
-            // entropy-coded methods report/charge entropy (paper's
-            // convention); log-cardinality methods charge their width
-            let charged = match opts.algo {
-                Algo::Rtn { .. } | Algo::Gptq { .. } => q.rate_bits,
-                _ => q.entropy_bits,
-            };
-            budget.charge(params, charged);
-            let w_hat = q.dequant();
-            report.matrices.push(MatrixReport {
-                name: name.clone(),
-                assigned_rate: rate,
-                entropy_bits: q.entropy_bits,
-                rate_bits: q.rate_bits,
-                rel_mse_weights: crate::quant::relative_distortion(
-                    &w,
-                    &w_hat,
-                    &stats.sigma_x,
-                ),
-                dead_cols: q.dead_cols.len(),
-                via_artifact,
+                            layer_seed_from_name(name),
+                        );
+                        // only Σ_X survives past prepare (the report's
+                        // rel-MSE weighting); dropping the other n×n
+                        // covariances and the drift term here keeps the
+                        // buffered slots as lean as the pairs they gate
+                        let LayerStats { sigma_x, .. } = stats;
+                        if tx.send((sigma_x, pair)).is_err() {
+                            return; // consumer bailed out
+                        }
+                    }
+                });
+                // every exit below — return, bail, panic — drops
+                // _close_guard, which closes the window and unparks a
+                // waiting producer before the scope joins it
+                for name in &order {
+                    let Ok((sigma_x, pair)) = rx.recv() else {
+                        anyhow::bail!("prepare producer exited early");
+                    };
+                    let step = pair.and_then(|p| {
+                        consume_matrix(
+                            name,
+                            teacher.get(name),
+                            &sigma_x,
+                            None,
+                            Some(p),
+                            opts,
+                            engine,
+                            &mut budget,
+                            &mut report,
+                            &mut student,
+                            &mut quants,
+                        )
+                    });
+                    gate.release();
+                    step?;
+                }
+                Ok(())
             });
-            student.set(&name, w_hat);
-            quants.insert(name, q);
+            scope_res?;
+            report.prepare_peak_pairs = report.prepare_peak_pairs.max(gate.peak());
+        } else {
+            // baselines and the mixing path: the drift statistics
+            // depend only on the per-layer captures, not on the running
+            // quantization — assemble all 7 in parallel before the
+            // sequential budgeted quantization loop
+            let stats_threads =
+                crate::util::threadpool::default_threads().min(order.len());
+            let stats_list: Vec<LayerStats> = crate::util::threadpool::parallel_map(
+                order.clone(),
+                stats_threads,
+                |name| cs.stats_for(cfg, &name, &scaps, stats_opts),
+            );
+            for (name, precomputed) in order.iter().zip(stats_list) {
+                let is_qkv = name.contains("attn.w") && !name.ends_with("wo");
+                let mut stats = precomputed;
+                if opts.mixing && opts.algo == Algo::WaterSic && is_qkv {
+                    let uniform = cs.stats_for(
+                        cfg,
+                        name,
+                        &scaps,
+                        StatsOpts {
+                            attn_weighted: false,
+                            ..stats_opts
+                        },
+                    );
+                    stats = mix_attention(
+                        &mix_drift(&stats, eps_qr),
+                        &mix_drift(&uniform, eps_qr),
+                        eps_aw,
+                    );
+                }
+                consume_matrix(
+                    name,
+                    teacher.get(name),
+                    &stats.sigma_x,
+                    Some(&stats),
+                    None,
+                    opts,
+                    engine,
+                    &mut budget,
+                    &mut report,
+                    &mut student,
+                    &mut quants,
+                )?;
+            }
         }
     }
     report.avg_rate = budget.spent_average(cfg.quantizable_params());
@@ -498,6 +703,9 @@ mod tests {
         o.calib_batch = 2;
         o.use_engine = false;
         o.subsample_rows = 16;
+        // env-independent: tests must not race a WATERSIC_PREPARE_LOOKAHEAD
+        // set in the environment
+        o.prepare_lookahead = 2;
         o
     }
 
@@ -522,6 +730,46 @@ mod tests {
         let toks: Vec<i32> = (0..cfg.ctx).map(|i| (i % 60) as i32).collect();
         let out = forward(&cfg, &qm.student, &toks, 1, cfg.ctx, &ForwardOpts::default());
         assert!(out.logits.is_finite());
+    }
+
+    #[test]
+    fn streaming_prepare_is_window_invariant() {
+        // the lookahead window size is a memory knob, never a numerics
+        // knob: every window must produce the identical assigned rates,
+        // codes and scales, and the peak never exceeds the window
+        let (cfg, teacher, corpus) = setup();
+        let mut base = small_opts(Algo::WaterSic, 3.0);
+        base.prepare_lookahead = 1; // fully serial reference
+        let q1 = quantize_model(&cfg, &teacher, &corpus, &base, None).unwrap();
+        assert_eq!(q1.report.prepare_peak_pairs, 1);
+        for window in [2usize, 9] {
+            let mut o = base.clone();
+            o.prepare_lookahead = window;
+            let qw = quantize_model(&cfg, &teacher, &corpus, &o, None).unwrap();
+            assert!(
+                (1..=window).contains(&qw.report.prepare_peak_pairs),
+                "window {window}: peak {} pairs",
+                qw.report.prepare_peak_pairs
+            );
+            assert_eq!(q1.report.matrices.len(), qw.report.matrices.len());
+            for (m1, mw) in q1.report.matrices.iter().zip(&qw.report.matrices) {
+                assert_eq!(m1.name, mw.name);
+                assert_eq!(
+                    m1.assigned_rate, mw.assigned_rate,
+                    "{}: assigned rate must be window-invariant",
+                    m1.name
+                );
+                assert_eq!(m1.entropy_bits, mw.entropy_bits);
+                assert_eq!(m1.rate_bits, mw.rate_bits);
+            }
+            for (name, q) in &q1.quants {
+                let qq = &qw.quants[name];
+                assert_eq!(q.z, qq.z, "{name}: codes must be window-invariant");
+                assert_eq!(q.alphas, qq.alphas);
+                assert_eq!(q.gammas, qq.gammas);
+                assert_eq!(q.t, qq.t);
+            }
+        }
     }
 
     #[test]

@@ -192,6 +192,7 @@ mod tests {
                 },
                 None,
                 64,
+                0,
             )
             .unwrap();
             student.set(&name, q.dequant());

@@ -51,10 +51,24 @@ thread_local! {
     static FACTORIZATIONS: std::cell::Cell<usize> = const { std::cell::Cell::new(0) };
 }
 
+/// Factorizations initiated by *any* thread since process start.  The
+/// streaming pipeline prepares layers on a producer thread, so its
+/// prepare-once accounting is invisible to the thread-local counter;
+/// this one is for single-test binaries and benches only — inside
+/// `cargo test`'s threaded harness concurrent tests race its deltas.
+static FACTORIZATIONS_GLOBAL: std::sync::atomic::AtomicUsize =
+    std::sync::atomic::AtomicUsize::new(0);
+
 /// Number of Cholesky factorizations initiated by the calling thread
 /// since it started (test/bench visibility for the prepare-once cache).
 pub fn factorization_count() -> usize {
     FACTORIZATIONS.with(|c| c.get())
+}
+
+/// Process-wide factorization count (see [`factorization_count`] for
+/// the thread-local variant and the caveat on when each is safe).
+pub fn factorization_count_global() -> usize {
+    FACTORIZATIONS_GLOBAL.load(Ordering::Relaxed)
 }
 
 fn chol_threads(n: usize) -> usize {
@@ -78,6 +92,7 @@ pub fn cholesky(a: &Mat) -> Result<Mat> {
 pub fn cholesky_with_threads(a: &Mat, threads: usize) -> Result<Mat> {
     let n = a.assert_square()?;
     FACTORIZATIONS.with(|c| c.set(c.get() + 1));
+    FACTORIZATIONS_GLOBAL.fetch_add(1, Ordering::Relaxed);
     let mut l = a.clone();
     let mut panel: Vec<f64> = Vec::new();
     let mut k0 = 0;

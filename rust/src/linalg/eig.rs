@@ -21,12 +21,22 @@ pub fn eigh(a: &Mat) -> (Vec<f64>, Mat) {
     }
     let mut v = Mat::eye(n);
     let max_sweeps = 64;
+    let mut poisoned = false;
     for _sweep in 0..max_sweeps {
         let mut off = 0.0;
         for i in 0..n {
             for j in i + 1..n {
                 off += m[(i, j)] * m[(i, j)];
             }
+        }
+        // a non-finite off-diagonal mass (NaN-poisoned input) can never
+        // converge — stop sweeping instead of burning max_sweeps O(n³)
+        // passes of NaN arithmetic, and poison the whole spectrum below
+        // so the caller sees NaN rather than the untouched (finite but
+        // meaningless) diagonal
+        if !off.is_finite() {
+            poisoned = true;
+            break;
         }
         if off.sqrt() < 1e-12 * (1.0 + m.frob_norm()) {
             break;
@@ -65,9 +75,14 @@ pub fn eigh(a: &Mat) -> (Vec<f64>, Mat) {
             }
         }
     }
-    let mut pairs: Vec<(f64, usize)> =
-        (0..n).map(|i| (m[(i, i)], i)).collect();
-    pairs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+    let mut pairs: Vec<(f64, usize)> = (0..n)
+        .map(|i| (if poisoned { f64::NAN } else { m[(i, i)] }, i))
+        .collect();
+    // total_cmp: `partial_cmp().unwrap()` panicked on any non-finite
+    // diagonal (e.g. a NaN-poisoned covariance reaching the
+    // waterfilling bound); the IEEE total order sorts NaN after every
+    // finite value instead
+    pairs.sort_by(|a, b| b.0.total_cmp(&a.0));
     let vals: Vec<f64> = pairs.iter().map(|p| p.0).collect();
     let mut vv = Mat::zeros(n, n);
     for (new_j, (_, old_j)) in pairs.iter().enumerate() {
@@ -117,6 +132,45 @@ mod tests {
                 assert!(w[0] >= w[1] - 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn nan_input_returns_without_panicking() {
+        // regression: the eigenpair sort used partial_cmp().unwrap(),
+        // which panicked the moment a NaN reached the diagonal — a
+        // NaN-poisoned covariance hitting the waterfilling bound took
+        // the whole experiment down instead of reporting a NaN rate
+        let mut a = Mat::from_fn(4, 4, |i, j| ((i + j) as f64).cos());
+        // symmetrize, then poison one entry
+        for i in 0..4 {
+            for j in 0..i {
+                let avg = 0.5 * (a[(i, j)] + a[(j, i)]);
+                a[(i, j)] = avg;
+                a[(j, i)] = avg;
+            }
+        }
+        a[(1, 2)] = f64::NAN;
+        a[(2, 1)] = f64::NAN;
+        a[(2, 2)] = f64::NAN;
+        let vals = eigvals(&a);
+        assert_eq!(vals.len(), 4, "must return a full spectrum");
+        // the poison propagates as NaN values, not as a panic
+        assert!(vals.iter().any(|v| v.is_nan()));
+        let (_, v) = eigh(&a);
+        assert_eq!((v.rows, v.cols), (4, 4));
+
+        // NaN only OFF the diagonal: the sweep bail-out must poison
+        // the spectrum, not report the untouched finite diagonal as
+        // plausible eigenvalues
+        let mut b = Mat::diag_from(&[3.0, 2.0, 1.0]);
+        b[(0, 2)] = f64::NAN;
+        b[(2, 0)] = f64::NAN;
+        let vals = eigvals(&b);
+        assert_eq!(vals.len(), 3);
+        assert!(
+            vals.iter().all(|v| v.is_nan()),
+            "off-diagonal poison must not yield a finite spectrum: {vals:?}"
+        );
     }
 
     #[test]

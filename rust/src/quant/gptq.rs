@@ -4,9 +4,11 @@
 //! codes to a finite alphabet and reports log-cardinality rates, the
 //! Huffman variant entropy-codes the unbounded codes (HPTQ).
 
+use std::sync::Arc;
+
 use anyhow::{Context, Result};
 
-use crate::linalg::chol::{cholesky, solve_xlt_eq_b};
+use crate::linalg::chol::{solve_xlt_eq_b, SpdFactor};
 use crate::linalg::Mat;
 
 use super::rescalers::effective_target;
@@ -32,28 +34,67 @@ pub fn gptq_layer(
     )
 }
 
-/// The α-independent GPTQ front-end — damped Cholesky of Σ_X̂ and the
-/// drift-corrected target solve — prepared once per layer and reused
-/// across every probe of the secant rate search (the uniform spacing
-/// A = αI never touches the factorization).  Mirror of
-/// `watersic::PreparedLayer` for the uniform-spacing baseline.
+/// The stats-only half of the GPTQ front-end: the damped Cholesky
+/// factor of Σ_X̂, which depends only on the layer statistics — never
+/// on W — and can therefore be shared (via `Arc`) by every system
+/// built on the same stats.  Mirror of `watersic::PreparedStats` for
+/// the uniform-spacing baseline.
+pub struct PreparedGptqStats {
+    n: usize,
+    fac: SpdFactor,
+}
+
+impl PreparedGptqStats {
+    pub fn new(stats: &LayerStats, damping: f64) -> Result<PreparedGptqStats> {
+        let n = stats.n();
+        let mut h = stats.sigma_xhat.clone();
+        let mean_diag = h.trace() / n as f64;
+        h.add_diag(damping * mean_diag.max(1e-300));
+        let fac = SpdFactor::new(&h).context("cholesky of damped Σ (GPTQ)")?;
+        Ok(PreparedGptqStats { n, fac })
+    }
+
+    /// The damped Cholesky factor L.
+    pub fn l(&self) -> &Mat {
+        self.fac.l()
+    }
+}
+
+/// The α-independent GPTQ front-end — shared damped Cholesky of Σ_X̂
+/// ([`PreparedGptqStats`]) plus the per-W drift-corrected target solve
+/// — prepared once per layer and reused across every probe of the
+/// secant rate search (the uniform spacing A = αI never touches the
+/// factorization).  Mirror of `watersic::PreparedLayer` for the
+/// uniform-spacing baseline.
 pub struct PreparedGptq {
     a: usize,
     n: usize,
-    l: Mat,
+    stats: Arc<PreparedGptqStats>,
     y: Mat,
 }
 
 impl PreparedGptq {
     pub fn new(w: &Mat, stats: &LayerStats, damping: f64) -> Result<PreparedGptq> {
+        Self::with_stats(w, stats, Arc::new(PreparedGptqStats::new(stats, damping)?))
+    }
+
+    /// Build only the W-dependent target solve on top of an existing
+    /// (shared) factorization — no factorization happens in here.
+    pub fn with_stats(
+        w: &Mat,
+        stats: &LayerStats,
+        shared: Arc<PreparedGptqStats>,
+    ) -> Result<PreparedGptq> {
         let (a, n) = (w.rows, w.cols);
-        let mut h = stats.sigma_xhat.clone();
-        let mean_diag = h.trace() / n as f64;
-        h.add_diag(damping * mean_diag.max(1e-300));
-        let l = cholesky(&h).context("cholesky of damped Σ (GPTQ)")?;
-        let target = effective_target(w, stats);
-        let y = solve_xlt_eq_b(&l, &target);
-        Ok(PreparedGptq { a, n, l, y })
+        anyhow::ensure!(n == shared.n, "stats dimension mismatch");
+        let target = effective_target(w, stats.view());
+        let y = solve_xlt_eq_b(shared.fac.l(), &target);
+        Ok(PreparedGptq {
+            a,
+            n,
+            stats: shared,
+            y,
+        })
     }
 
     /// ZSIC + rate accounting at uniform spacing `alpha` — no
@@ -61,7 +102,7 @@ impl PreparedGptq {
     pub fn quantize(&self, alpha: f64, lmmse: bool, clamp: Option<i32>) -> LayerQuant {
         let (a, n) = (self.a, self.n);
         let alphas = gptq_alphas(n, alpha);
-        let out = zsic(&self.y, &self.l, &alphas, lmmse, clamp);
+        let out = zsic(&self.y, self.stats.fac.l(), &alphas, lmmse, clamp);
         let entropy = crate::entropy::column_coded_rate(&out.z, a, n);
         let rate = match clamp {
             Some(c) => ((2 * c + 1) as f64).log2() + 16.0 / n as f64,
@@ -105,15 +146,7 @@ pub fn gptq_at_rate(
     damping: f64,
 ) -> Result<LayerQuant> {
     let prep = PreparedGptq::new(w, stats, damping)?;
-    let sigma_w = {
-        let m = w.data.iter().sum::<f64>() / w.data.len() as f64;
-        (w.data
-            .iter()
-            .map(|x| (x - m) * (x - m))
-            .sum::<f64>()
-            / w.data.len() as f64)
-            .sqrt()
-    };
+    let sigma_w = crate::linalg::stats::variance(&w.data).sqrt();
     let rate_of = |alpha: f64| -> f64 { prep.quantize(alpha, lmmse, None).entropy_bits };
     let target_entropy = target_bits.max(0.05); // entropy-reported rates
     let a0 = (sigma_w * (2.0 * std::f64::consts::PI * std::f64::consts::E).sqrt()
@@ -207,6 +240,34 @@ mod tests {
         assert_eq!(q.gammas, q_ref.gammas);
         assert_eq!(q.entropy_bits, q_ref.entropy_bits);
         assert_eq!(q.rate_bits, q_ref.rate_bits);
+    }
+
+    #[test]
+    fn shared_stats_seam_factors_once_and_is_bit_identical() {
+        // two systems on one Arc<PreparedGptqStats>: one factorization,
+        // same bits as the factor-per-system constructor
+        let (w, sigma) = problem(48, 16, 6);
+        let stats = LayerStats::from_sigma(sigma);
+        let before = crate::linalg::chol::factorization_count();
+        let shared = Arc::new(PreparedGptqStats::new(&stats, 0.1).unwrap());
+        let p_full = PreparedGptq::with_stats(&w, &stats, Arc::clone(&shared)).unwrap();
+        let w_sub =
+            w.submatrix(&(0..24).collect::<Vec<_>>(), &(0..16).collect::<Vec<_>>());
+        let p_sub = PreparedGptq::with_stats(&w_sub, &stats, shared).unwrap();
+        assert_eq!(
+            crate::linalg::chol::factorization_count() - before,
+            1,
+            "one shared factorization must serve both systems"
+        );
+        let q = p_full.quantize(0.5, false, None);
+        let q_ref = gptq_layer_stats(&w, &stats, 0.5, false, None, 0.1).unwrap();
+        assert_eq!(q.z, q_ref.z);
+        assert_eq!(q.alphas, q_ref.alphas);
+        assert_eq!(q.gammas, q_ref.gammas);
+        assert_eq!(q.entropy_bits, q_ref.entropy_bits);
+        let q_sub = p_sub.quantize(0.5, false, None);
+        let q_sub_ref = gptq_layer_stats(&w_sub, &stats, 0.5, false, None, 0.1).unwrap();
+        assert_eq!(q_sub.z, q_sub_ref.z);
     }
 
     #[test]

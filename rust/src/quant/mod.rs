@@ -11,8 +11,8 @@ pub mod watersic;
 pub mod waterfilling;
 pub mod zsic;
 
-pub use gptq::PreparedGptq;
-pub use watersic::PreparedLayer;
+pub use gptq::{PreparedGptq, PreparedGptqStats};
+pub use watersic::{PreparedLayer, PreparedStats};
 
 use crate::linalg::{gemm, Mat};
 
@@ -107,6 +107,30 @@ impl LayerStats {
     pub fn n(&self) -> usize {
         self.sigma_x.rows
     }
+
+    /// Borrow every field as a [`StatsView`].
+    pub fn view(&self) -> StatsView<'_> {
+        StatsView {
+            sigma_x: &self.sigma_x,
+            sigma_xhat: &self.sigma_xhat,
+            sigma_x_xhat: &self.sigma_x_xhat,
+            sigma_d_xhat: self.sigma_d_xhat.as_ref(),
+        }
+    }
+}
+
+/// Borrowed view of [`LayerStats`].  The shared-stats front-end
+/// ([`watersic::PreparedStats`]) lends its live-restricted covariances
+/// to the target solve and the Alg. 4 rescaler optimization through
+/// this view instead of cloning them per system — the drift term can
+/// point at a per-system row slice while the n×n covariances stay
+/// shared.
+#[derive(Clone, Copy)]
+pub struct StatsView<'a> {
+    pub sigma_x: &'a Mat,
+    pub sigma_xhat: &'a Mat,
+    pub sigma_x_xhat: &'a Mat,
+    pub sigma_d_xhat: Option<&'a Mat>,
 }
 
 /// Common tuning knobs of the practical pipeline (defaults follow

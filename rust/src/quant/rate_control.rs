@@ -77,9 +77,29 @@ impl RateBudget {
         }
     }
 
+    /// Floor of any assignment (entropy-coded layers can always land
+    /// this low) and ceiling (nothing needs more than an f32 per
+    /// weight) — `assign` clamps into this range so a params-count
+    /// mismatch can never leak `inf`/`NaN` into the secant target.
+    pub const MIN_RATE: f64 = 0.05;
+    pub const MAX_RATE: f64 = 32.0;
+
     /// Rate to assign to the next layer of `params` parameters.
+    ///
+    /// Once the charged params reach (or exceed) `total_params` the
+    /// denominator is 0 or negative — dividing yields ±inf, or NaN when
+    /// the budget is simultaneously exhausted — so any further
+    /// assignment falls back to the floor instead.
     pub fn assign(&self, _params: usize) -> f64 {
-        ((self.total_bits - self.spent_bits) / self.remaining_params).max(0.05)
+        if self.remaining_params <= 0.0 {
+            return Self::MIN_RATE;
+        }
+        let rate = (self.total_bits - self.spent_bits) / self.remaining_params;
+        if rate.is_finite() {
+            rate.clamp(Self::MIN_RATE, Self::MAX_RATE)
+        } else {
+            Self::MIN_RATE
+        }
     }
 
     /// Charge the achieved rate of a finished layer.
@@ -177,5 +197,28 @@ mod tests {
         let mut b = RateBudget::new(1.0, 100);
         b.charge(50, 10.0); // overspend
         assert!(b.assign(10) >= 0.05);
+    }
+
+    #[test]
+    fn assign_is_finite_when_charged_past_total_params() {
+        // regression: a params-count mismatch (charging more params
+        // than the budget was built for) drove remaining_params to 0
+        // and then negative — assign returned inf (or a spuriously huge
+        // negative-over-negative rate) and fed it to the secant
+        let mut b = RateBudget::new(2.0, 100);
+        b.charge(100, 1.0); // budget exactly exhausted: remaining = 0
+        let r = b.assign(10);
+        assert!(r.is_finite(), "assign must stay finite at 0 remaining: {r}");
+        assert_eq!(r, RateBudget::MIN_RATE);
+        b.charge(50, 1.0); // past total_params: remaining < 0
+        let r = b.assign(10);
+        assert!(r.is_finite(), "assign must stay finite past total: {r}");
+        assert_eq!(r, RateBudget::MIN_RATE);
+        // an under-spent budget over few remaining params is capped
+        let mut b = RateBudget::new(8.0, 1000);
+        b.charge(990, 0.05);
+        let r = b.assign(10);
+        assert!(r <= RateBudget::MAX_RATE, "assignment must be capped: {r}");
+        assert!(r >= RateBudget::MIN_RATE);
     }
 }

@@ -10,7 +10,7 @@ use crate::linalg::chol::SpdFactor;
 use crate::linalg::gemm::{diag_of_product, matmul};
 use crate::linalg::Mat;
 
-use super::LayerStats;
+use super::StatsView;
 
 pub struct RescalerOut {
     pub t: Vec<f64>,
@@ -23,7 +23,7 @@ pub struct RescalerOut {
 pub fn objective(
     w0: &Mat,
     w: &Mat,
-    stats: &LayerStats,
+    stats: StatsView<'_>,
     t: &[f64],
     gamma: &[f64],
 ) -> f64 {
@@ -38,12 +38,12 @@ pub fn objective(
     }
     let target = effective_target(w, stats); // WΣ_{X,X̂}+Σ_Δ  (a×n)
     let t1: f64 = {
-        let ws = matmul(w, &stats.sigma_x);
+        let ws = matmul(w, stats.sigma_x);
         diag_of_product(&ws, &w.transpose()).iter().sum()
     };
     let t2: f64 = diag_of_product(&target, &twg.transpose()).iter().sum();
     let t3: f64 = {
-        let s = matmul(&twg, &stats.sigma_xhat);
+        let s = matmul(&twg, stats.sigma_xhat);
         diag_of_product(&s, &twg.transpose()).iter().sum()
     };
     (t1 - 2.0 * t2 + t3) / (a * n) as f64
@@ -51,9 +51,9 @@ pub fn objective(
 
 /// (WΣ_{X,X̂} + Σ_{Δ,X̂}) — the drift/residual-corrected regression
 /// target appearing in both Alg. 3 and Alg. 4.
-pub fn effective_target(w: &Mat, stats: &LayerStats) -> Mat {
-    let mut tgt = matmul(w, &stats.sigma_x_xhat);
-    if let Some(d) = &stats.sigma_d_xhat {
+pub fn effective_target(w: &Mat, stats: StatsView<'_>) -> Mat {
+    let mut tgt = matmul(w, stats.sigma_x_xhat);
+    if let Some(d) = stats.sigma_d_xhat {
         tgt = tgt.add(d);
     }
     tgt
@@ -64,7 +64,7 @@ pub fn effective_target(w: &Mat, stats: &LayerStats) -> Mat {
 pub fn find_optimal_rescalers(
     w0: &Mat,
     w: &Mat,
-    stats: &LayerStats,
+    stats: StatsView<'_>,
     gamma_init: &[f64],
     max_iters: usize,
     ridge: f64,
@@ -123,7 +123,7 @@ pub fn find_optimal_rescalers(
             }
         }
         let p = diag_of_product(&target, &w0g.transpose());
-        let s = matmul(&w0g, &stats.sigma_xhat);
+        let s = matmul(&w0g, stats.sigma_xhat);
         let q = diag_of_product(&s, &w0g.transpose());
         let lam_t = ridge * (q.iter().sum::<f64>() / a as f64).max(1e-300);
         for i in 0..a {
@@ -166,6 +166,7 @@ mod tests {
     use crate::linalg::chol::cholesky;
     use crate::linalg::gemm::gram;
     use crate::quant::zsic::{watersic_alphas, zsic};
+    use crate::quant::LayerStats;
     use crate::util::rng::Rng;
 
     fn setup(a: usize, n: usize, c: f64, seed: u64) -> (Mat, Mat, LayerStats, Vec<f64>, Vec<f64>) {
@@ -191,7 +192,7 @@ mod tests {
     #[test]
     fn loss_non_increasing() {
         let (w0, w, stats, g0, _) = setup(24, 16, 0.8, 3);
-        let out = find_optimal_rescalers(&w0, &w, &stats, &g0, 20, 1e-10, 0.0);
+        let out = find_optimal_rescalers(&w0, &w, stats.view(), &g0, 20, 1e-10, 0.0);
         for win in out.loss_trace.windows(2) {
             assert!(
                 win[1] <= win[0] + 1e-9 * win[0].abs().max(1.0),
@@ -205,16 +206,16 @@ mod tests {
     fn improves_over_lmmse_initialization() {
         let (w0, w, stats, g0, _) = setup(32, 24, 1.0, 7);
         let t0 = vec![1.0; 32];
-        let before = objective(&w0, &w, &stats, &t0, &g0);
-        let out = find_optimal_rescalers(&w0, &w, &stats, &g0, 25, 1e-10, 1e-9);
-        let after = objective(&w0, &w, &stats, &out.t, &out.gamma);
+        let before = objective(&w0, &w, stats.view(), &t0, &g0);
+        let out = find_optimal_rescalers(&w0, &w, stats.view(), &g0, 25, 1e-10, 1e-9);
+        let after = objective(&w0, &w, stats.view(), &out.t, &out.gamma);
         assert!(after <= before + 1e-12, "{after} vs {before}");
     }
 
     #[test]
     fn normalization_holds() {
         let (w0, w, stats, g0, _) = setup(16, 12, 0.6, 9);
-        let out = find_optimal_rescalers(&w0, &w, &stats, &g0, 10, 1e-10, 0.0);
+        let out = find_optimal_rescalers(&w0, &w, stats.view(), &g0, 10, 1e-10, 0.0);
         let l1: f64 = out.t.iter().map(|x| x.abs()).sum::<f64>() / 16.0;
         assert!((l1 - 1.0).abs() < 1e-9, "‖t‖₁/a = {l1}");
     }
@@ -237,8 +238,8 @@ mod tests {
             let mut t = vec![1.0f64; a];
             let mut gamma = gamma_init.to_vec();
             super::normalize(&mut t, &mut gamma);
-            let target = effective_target(w, stats);
-            let mut prev = objective(w0, w, stats, &t, &gamma);
+            let target = effective_target(w, stats.view());
+            let mut prev = objective(w0, w, stats.view(), &t, &gamma);
             for _ in 0..max_iters {
                 let mut w0t2 = w0.clone();
                 for i in 0..a {
@@ -274,7 +275,7 @@ mod tests {
                     t[i] = if denom > 0.0 { p[i] / denom } else { 1.0 };
                 }
                 super::normalize(&mut t, &mut gamma);
-                let loss = objective(w0, w, stats, &t, &gamma);
+                let loss = objective(w0, w, stats.view(), &t, &gamma);
                 if (loss - prev).abs() / (prev.abs() + 1e-12) < tol {
                     break;
                 }
@@ -284,7 +285,7 @@ mod tests {
         }
 
         let (w0, w, stats, g0, _) = setup(24, 16, 0.8, 13);
-        let out = find_optimal_rescalers(&w0, &w, &stats, &g0, 15, 1e-10, 0.0);
+        let out = find_optimal_rescalers(&w0, &w, stats.view(), &g0, 15, 1e-10, 0.0);
         let (t_ref, g_ref) = reference(&w0, &w, &stats, &g0, 15, 1e-10, 0.0);
         assert_eq!(out.t, t_ref, "factor cache changed the T iterates");
         assert_eq!(out.gamma, g_ref, "factor cache changed the Γ iterates");
@@ -305,8 +306,8 @@ mod tests {
         let mut sigma = gram(&Mat::from_fn(32, 8, |_, _| rng.gaussian())).scale(1.0 / 32.0);
         sigma.add_diag(0.1);
         let stats = LayerStats::from_sigma(sigma);
-        let out = find_optimal_rescalers(&w0, &w, &stats, &vec![1.0; 8], 30, 1e-12, 1e-12);
-        let loss = objective(&w0, &w, &stats, &out.t, &out.gamma);
+        let out = find_optimal_rescalers(&w0, &w, stats.view(), &vec![1.0; 8], 30, 1e-12, 1e-12);
+        let loss = objective(&w0, &w, stats.view(), &out.t, &out.gamma);
         assert!(loss < 1e-8, "should reach ~exact fit, J = {loss}");
         for j in 0..8 {
             assert!((out.gamma[j] - s[j]).abs() < 1e-4, "γ_{j} = {}", out.gamma[j]);

@@ -4,78 +4,78 @@
 //! rule α_i = c/ℓ_ii and LMMSE shrinkage → rate computation → Alg. 4
 //! rescaler optimization → expansion back to the full coordinate system.
 //!
-//! The phases split cleanly by what they depend on: damping, dead-
-//! feature erasure, the Cholesky factor L, and the drift-corrected
-//! target ŷ are all independent of the spacing constant c, while ZSIC,
-//! the entropy, and the rescalers are per-c.  [`PreparedLayer`]
-//! captures the c-independent front-end **once per layer**, so the
-//! secant rate search in [`watersic_at_rate`] re-runs only
-//! ZSIC + entropy coding per probe instead of refactorizing the
-//! Hessian ~11 times — one factorization for the row-subsample system,
-//! one for the full system (test-pinned through
-//! `linalg::chol::factorization_count`), with output bit-identical to
-//! the factor-per-probe implementation.
+//! The phases split cleanly along **two** axes of dependence:
+//!
+//! * what depends on the spacing constant c: damping, dead-feature
+//!   erasure, the Cholesky factor L, and the drift-corrected target ŷ
+//!   are all c-independent, while ZSIC, the entropy, and the rescalers
+//!   are per-c;
+//! * what depends on the weights W: the erasure, the damped factor L of
+//!   Σ_X̂, and the α-direction ℓ_ii are pure functions of the layer
+//!   *statistics* — the same for the full matrix and for any row
+//!   subsample of it — while W only enters through the target
+//!   ŷ = (WΣ_{X,X̂}+Σ_Δ)(Lᵀ)⁻¹ and the rescaler objective.
+//!
+//! [`PreparedStats`] captures the stats-only front-end **once per
+//! layer** and is shared via `Arc` between the full system and the row
+//! subsample the secant rate search probes; [`PreparedLayer`] adds the
+//! per-system W-dependent state (`w_l`, ŷ, the c₀ seed σ_W) on top.
+//! The secant in [`watersic_at_rate`] therefore re-runs only
+//! ZSIC + entropy coding per probe, and the whole rate-targeted layer
+//! costs **one** Hessian factorization (test-pinned through
+//! `linalg::chol::factorization_count`) — down from two in the
+//! prepare-per-system layout and from ~11 in the factor-per-probe one.
+//! The sharing itself changes no bits: at `layer_seed = 0` outputs are
+//! pinned bit-identical to both earlier layouts.  (Two deliberate
+//! behavior changes ride along for subsampled systems: the per-matrix
+//! seed salt decorrelates same-height row draws, and the drift term is
+//! sliced by the *sampled* rows instead of the first rows whenever
+//! Σ_{Δ,X̂} is present.)
+
+use std::sync::Arc;
 
 use anyhow::{Context, Result};
 
-use crate::linalg::chol::{cholesky, solve_xlt_eq_b};
-use crate::linalg::stats::median;
+use crate::linalg::chol::{solve_xlt_eq_b, SpdFactor};
+use crate::linalg::stats::{median, variance};
 use crate::linalg::Mat;
 
 use super::rescalers::{effective_target, find_optimal_rescalers};
 use super::zsic::{watersic_alphas_from_diag, zsic, ZsicOut};
-use super::{LayerQuant, LayerStats, QuantOpts};
+use super::{LayerQuant, LayerStats, QuantOpts, StatsView};
 
 /// Pluggable ZSIC executor: the coordinator may route fixed shapes to
 /// the PJRT artifact (Pallas kernel); everything else uses the native
 /// implementation.  Signature matches `zsic::zsic` minus the clamp.
 pub type ZsicFn<'a> = dyn Fn(&Mat, &Mat, &[f64], bool) -> ZsicOut + 'a;
 
-/// The c-independent front-end of Algorithm 3, computed once per layer
-/// (per system: row subsample and full matrix each get one): dead-
-/// feature erasure, the damped Cholesky factor L of Σ_X̂, the drift-
-/// corrected target ŷ = (WΣ_{X,X̂}+Σ_Δ)(Lᵀ)⁻¹, and the α-direction
-/// (the diagonal ℓ_ii the spacing rule divides c by).  `quantize` /
-/// `entropy_at` then evaluate any spacing constant without touching
-/// the factorization again.
-pub struct PreparedLayer {
-    a: usize,
+/// The stats-only front-end of Algorithm 3, computed **once per layer**
+/// and shared (via `Arc`) by every system built on the same activation
+/// statistics — the full matrix and the row subsample of the rate
+/// search: dead-feature erasure, the live-restricted covariances, the
+/// damped Cholesky factor L of Σ_X̂ (held as an [`SpdFactor`] — the
+/// PJRT/artifact Cholesky hook), and the α-direction ℓ_ii the spacing
+/// rule divides c by.  None of it depends on W.
+pub struct PreparedStats {
     n: usize,
     live: Vec<usize>,
     dead: Vec<usize>,
-    /// W restricted to live columns (rescaler optimization target)
-    w_l: Mat,
-    /// statistics restricted to live columns
+    /// statistics restricted to live columns; `sigma_d_xhat` is kept at
+    /// the layer's full height — per-system views slice its rows
     stats_l: LayerStats,
-    /// Cholesky factor of the damped Σ_X̂ (live system)
-    l: Mat,
+    /// factorization of the damped Σ_X̂ (live system)
+    fac: SpdFactor,
     /// ℓ_ii — the α-direction: α_i(c) = c / ℓ_ii
     chol_diag: Vec<f64>,
-    /// drift-corrected target ŷ
-    y: Mat,
-    /// std of the source W (c₀ seed of the rate search)
-    src_sigma_w: f64,
     /// geometric mean of √diag(Σ_X̂) on the *unreduced* system (c₀ seed)
     src_gm: f64,
 }
 
-impl PreparedLayer {
-    /// Run the front-end once: erasure, damping, factorization, target.
-    pub fn new(w: &Mat, stats: &LayerStats, opts: &QuantOpts) -> Result<PreparedLayer> {
-        let (a, n) = (w.rows, w.cols);
-        assert_eq!(stats.n(), n, "stats dimension mismatch");
-
-        // c₀ ingredients for the rate search, computed on the original
-        // system exactly as the pre-cache search did (bit-compatible)
-        let src_sigma_w = {
-            let m = w.data.iter().sum::<f64>() / w.data.len() as f64;
-            (w.data
-                .iter()
-                .map(|x| (x - m) * (x - m))
-                .sum::<f64>()
-                / w.data.len() as f64)
-                .sqrt()
-        };
+impl PreparedStats {
+    /// Run the stats-only front-end once: erasure, damping,
+    /// factorization.
+    pub fn new(stats: &LayerStats, opts: &QuantOpts) -> Result<PreparedStats> {
+        let n = stats.n();
         let src_gm = {
             // geometric mean of damped chol diag — estimated from Σ_X̂ diag
             let d = stats.sigma_xhat.diag();
@@ -96,7 +96,6 @@ impl PreparedLayer {
         let nl = live.len();
         anyhow::ensure!(nl > 0, "all features dead");
 
-        let w_l = w.submatrix(&(0..a).collect::<Vec<_>>(), &live);
         let stats_l = LayerStats {
             sigma_x: stats.sigma_x.submatrix(&live, &live),
             sigma_xhat: stats.sigma_xhat.submatrix(&live, &live),
@@ -104,31 +103,23 @@ impl PreparedLayer {
             sigma_d_xhat: stats
                 .sigma_d_xhat
                 .as_ref()
-                .map(|d| d.submatrix(&(0..a).collect::<Vec<_>>(), &live)),
+                .map(|d| d.submatrix(&(0..d.rows).collect::<Vec<_>>(), &live)),
         };
 
         // ---- Phase 1: damped Hessian and Cholesky
         let mut h = stats_l.sigma_xhat.clone();
         let mean_diag = h.trace() / nl as f64;
         h.add_diag(opts.damping * mean_diag.max(1e-300));
-        let l = cholesky(&h).context("cholesky of damped Σ_X̂")?;
+        let fac = SpdFactor::new(&h).context("cholesky of damped Σ_X̂")?;
+        let chol_diag = fac.l().diag();
 
-        // drift/residual-corrected target ŷ = (WΣ_{X,X̂}+Σ_Δ)(Lᵀ)⁻¹ (17)/(18)
-        let target = effective_target(&w_l, &stats_l);
-        let y = solve_xlt_eq_b(&l, &target);
-        let chol_diag = l.diag();
-
-        Ok(PreparedLayer {
-            a,
+        Ok(PreparedStats {
             n,
             live,
             dead,
-            w_l,
             stats_l,
-            l,
+            fac,
             chol_diag,
-            y,
-            src_sigma_w,
             src_gm,
         })
     }
@@ -138,29 +129,146 @@ impl PreparedLayer {
         &self.dead
     }
 
+    /// The damped Cholesky factor L (live system).
+    pub fn l(&self) -> &Mat {
+        self.fac.l()
+    }
+}
+
+/// A system's view of the shared statistics: the shared live-restricted
+/// covariances, with the drift term replaced by the system's own row
+/// slice when one was materialized.  Single point of truth for the
+/// drift fallback — the target solve and the rescaler optimization
+/// must never disagree on which Σ_{Δ,X̂} rows a system sees.
+fn view_of<'a>(stats: &'a PreparedStats, drift: Option<&'a Mat>) -> StatsView<'a> {
+    StatsView {
+        sigma_x: &stats.stats_l.sigma_x,
+        sigma_xhat: &stats.stats_l.sigma_xhat,
+        sigma_x_xhat: &stats.stats_l.sigma_x_xhat,
+        sigma_d_xhat: drift.or(stats.stats_l.sigma_d_xhat.as_ref()),
+    }
+}
+
+/// One quantizable system (the full matrix, or the row subsample the
+/// secant probes) on top of a shared [`PreparedStats`]: only the
+/// W-dependent state lives here — W restricted to live columns, the
+/// drift-corrected target ŷ = (WΣ_{X,X̂}+Σ_Δ)(Lᵀ)⁻¹, and σ_W (the c₀
+/// seed of the rate search).  `quantize` / `entropy_at` then evaluate
+/// any spacing constant without touching the factorization again.
+pub struct PreparedLayer {
+    a: usize,
+    stats: Arc<PreparedStats>,
+    /// W restricted to live columns (rescaler optimization target)
+    w_l: Mat,
+    /// per-system drift slice — the sampled rows of the shared
+    /// Σ_{Δ,X̂}, materialized only for a strict row subsample (`None`
+    /// ⇒ this system is full-height and borrows the shared matrix)
+    drift_l: Option<Mat>,
+    /// drift-corrected target ŷ
+    y: Mat,
+    /// std of the source W (c₀ seed of the rate search)
+    src_sigma_w: f64,
+}
+
+impl PreparedLayer {
+    /// Run the whole front-end for a single system: build a private
+    /// [`PreparedStats`] and the W-dependent state on top of it.
+    pub fn new(w: &Mat, stats: &LayerStats, opts: &QuantOpts) -> Result<PreparedLayer> {
+        Self::with_stats(w, Arc::new(PreparedStats::new(stats, opts)?))
+    }
+
+    /// Build only the W-dependent state on top of an existing (shared)
+    /// [`PreparedStats`] — no factorization happens in here.
+    pub fn with_stats(w: &Mat, stats: Arc<PreparedStats>) -> Result<PreparedLayer> {
+        Self::with_stats_rows(w, stats, None)
+    }
+
+    /// [`with_stats`](Self::with_stats) for a system built from an
+    /// explicit row subsample of the layer: `rows` are the original
+    /// row indices of `w`, used to slice the shared drift term so each
+    /// sampled weight row stays paired with *its own* Σ_{Δ,X̂} row.
+    /// `None` falls back to rows 0..a (the full system, or a prefix
+    /// slice when the caller did not say which rows it sampled).
+    pub fn with_stats_rows(
+        w: &Mat,
+        stats: Arc<PreparedStats>,
+        rows: Option<&[usize]>,
+    ) -> Result<PreparedLayer> {
+        let (a, n) = (w.rows, w.cols);
+        anyhow::ensure!(n == stats.n, "stats dimension mismatch");
+
+        // c₀ ingredient for the rate search, computed on the original
+        // system exactly as the pre-cache search did (bit-compatible:
+        // `variance` is the same two-pass population estimator)
+        let src_sigma_w = variance(&w.data).sqrt();
+
+        let w_l = w.submatrix(&(0..a).collect::<Vec<_>>(), &stats.live);
+        let drift_l = match (&stats.stats_l.sigma_d_xhat, rows) {
+            (Some(d), Some(r)) => {
+                anyhow::ensure!(r.len() == a, "row-set length mismatch");
+                Some(d.submatrix(r, &(0..d.cols).collect::<Vec<_>>()))
+            }
+            (Some(d), None) if a < d.rows => Some(d.submatrix(
+                &(0..a).collect::<Vec<_>>(),
+                &(0..d.cols).collect::<Vec<_>>(),
+            )),
+            _ => None,
+        };
+
+        // drift/residual-corrected target ŷ = (WΣ_{X,X̂}+Σ_Δ)(Lᵀ)⁻¹ (17)/(18)
+        let target = effective_target(&w_l, view_of(&stats, drift_l.as_ref()));
+        let y = solve_xlt_eq_b(stats.fac.l(), &target);
+
+        Ok(PreparedLayer {
+            a,
+            stats,
+            w_l,
+            drift_l,
+            y,
+            src_sigma_w,
+        })
+    }
+
+    /// The shared stats-only front-end this system is built on.
+    pub fn shared_stats(&self) -> &Arc<PreparedStats> {
+        &self.stats
+    }
+
+    /// Live-restricted statistics of *this* system (the drift term
+    /// sliced to this system's rows).
+    fn stats_view(&self) -> StatsView<'_> {
+        view_of(&self.stats, self.drift_l.as_ref())
+    }
+
+    /// Columns zeroed by dead-feature erasure (original indices).
+    pub fn dead_cols(&self) -> &[usize] {
+        &self.stats.dead
+    }
+
     /// Cheap secant probe: ZSIC + entropy coding only (the rescalers
     /// never change the codes, so they cannot change the entropy).
     /// Bit-identical to `quantize(c, …).entropy_bits`.
     pub fn entropy_at(&self, c: f64, opts: &QuantOpts) -> f64 {
-        let nl = self.live.len();
-        let alphas = watersic_alphas_from_diag(&self.chol_diag, c);
-        let out = zsic(&self.y, &self.l, &alphas, opts.lmmse, None);
+        let nl = self.stats.live.len();
+        let alphas = watersic_alphas_from_diag(&self.stats.chol_diag, c);
+        let out = zsic(&self.y, self.stats.fac.l(), &alphas, opts.lmmse, None);
         let entropy = crate::entropy::column_coded_rate(&out.z, self.a, nl);
-        entropy * (nl as f64 / self.n as f64)
+        entropy * (nl as f64 / self.stats.n as f64)
     }
 
     /// Phases 2–4 of Algorithm 3 at spacing constant `c`: ZSIC, rate
     /// accounting, optional rescaler optimization, and expansion back
     /// to the original coordinate system.
     pub fn quantize(&self, c: f64, opts: &QuantOpts, zsic_exec: Option<&ZsicFn>) -> LayerQuant {
-        let (a, n) = (self.a, self.n);
-        let nl = self.live.len();
+        let (a, n) = (self.a, self.stats.n);
+        let nl = self.stats.live.len();
 
         // ---- Phase 2: ZSIC with the waterfilling spacing rule
-        let alphas = watersic_alphas_from_diag(&self.chol_diag, c);
+        let alphas = watersic_alphas_from_diag(&self.stats.chol_diag, c);
+        let l = self.stats.fac.l();
         let out = match zsic_exec {
-            Some(f) => f(&self.y, &self.l, &alphas, opts.lmmse),
-            None => zsic(&self.y, &self.l, &alphas, opts.lmmse, None),
+            Some(f) => f(&self.y, l, &alphas, opts.lmmse),
+            None => zsic(&self.y, l, &alphas, opts.lmmse, None),
         };
 
         // ---- Phase 3: rate computation (joint entropy + side-info overhead)
@@ -185,7 +293,7 @@ impl PreparedLayer {
             let r = find_optimal_rescalers(
                 &w0,
                 &self.w_l,
-                &self.stats_l,
+                self.stats_view(),
                 &out.gammas,
                 opts.rescaler_iters,
                 opts.rescaler_ridge,
@@ -199,7 +307,7 @@ impl PreparedLayer {
         let mut z_full = vec![0i32; a * n];
         let mut alphas_full = vec![1.0f64; n];
         let mut gamma_full = vec![1.0f64; n];
-        for (jl, &j) in self.live.iter().enumerate() {
+        for (jl, &j) in self.stats.live.iter().enumerate() {
             alphas_full[j] = alphas[jl];
             gamma_full[j] = gamma[jl];
             for i in 0..a {
@@ -207,7 +315,7 @@ impl PreparedLayer {
             }
         }
         // dead columns stay exactly zero (z = 0, scales neutral)
-        for &j in &self.dead {
+        for &j in &self.stats.dead {
             gamma_full[j] = 0.0;
         }
 
@@ -220,7 +328,7 @@ impl PreparedLayer {
             t,
             entropy_bits,
             rate_bits,
-            dead_cols: self.dead.clone(),
+            dead_cols: self.stats.dead.clone(),
         }
     }
 }
@@ -256,10 +364,35 @@ pub fn plain_watersic(
     watersic_layer(w, &LayerStats::from_sigma(sigma.clone()), c, &opts, None)
 }
 
+/// A decorrelating per-matrix seed for the subsample RNG, derived from
+/// the matrix name (FNV-1a).  The pipeline threads this into
+/// [`prepare_at_rate`] so same-height layers — i.e. *all* the layers of
+/// a model — stop drawing the same subsample rows.  0 is the legacy
+/// "no per-layer salt" value (bit-compatible with the pre-fix draws).
+pub fn layer_seed_from_name(name: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// The row set the secant's subsample system is built on: `k` distinct
+/// rows out of `a`, drawn from a seed that mixes the matrix height with
+/// the per-matrix `layer_seed` salt.  `layer_seed == 0` reproduces the
+/// legacy height-only seed.
+pub fn subsample_row_set(a: usize, k: usize, layer_seed: u64) -> Vec<usize> {
+    let mut rng = crate::util::rng::Rng::new(0xC0FFEE ^ a as u64 ^ layer_seed);
+    rng.sample_indices(a, k)
+}
+
 /// Run the rate-independent front-end for [`watersic_at_rate`]: one
-/// [`PreparedLayer`] for the full matrix and, when a strict row
-/// subsample is in effect, one for the subsample the secant probes.
-/// The coordinator fans these over the worker pool (they are the
+/// shared [`PreparedStats`] for the layer, one [`PreparedLayer`] for
+/// the full matrix and, when a strict row subsample is in effect, one
+/// for the subsample the secant probes — a single factorization serves
+/// both systems, since L and the erasure never depend on W.  The
+/// coordinator streams these over the worker pool (they are the
 /// expensive, budget-independent part of a layer) and feeds them to
 /// [`watersic_at_rate_prepared`] inside the sequential budget loop.
 pub fn prepare_at_rate(
@@ -267,18 +400,19 @@ pub fn prepare_at_rate(
     stats: &LayerStats,
     opts: &QuantOpts,
     subsample_rows: usize,
+    layer_seed: u64,
 ) -> Result<(PreparedLayer, Option<PreparedLayer>)> {
     let a = w.rows;
     // at least 8 rows for a stable entropy estimate, capped at the
     // matrix height (max-then-min rather than `clamp(8, a)`, which
     // asserts min ≤ max and would panic on layers under 8 rows)
     let sub = subsample_rows.max(8).min(a);
-    let full = PreparedLayer::new(w, stats, opts)?;
+    let shared = Arc::new(PreparedStats::new(stats, opts)?);
+    let full = PreparedLayer::with_stats(w, Arc::clone(&shared))?;
     let subp = if sub < a {
-        let mut rng = crate::util::rng::Rng::new(0xC0FFEE ^ a as u64);
-        let rows = rng.sample_indices(a, sub);
+        let rows = subsample_row_set(a, sub, layer_seed);
         let w_sub = w.submatrix(&rows, &(0..w.cols).collect::<Vec<_>>());
-        Some(PreparedLayer::new(&w_sub, stats, opts)?)
+        Some(PreparedLayer::with_stats_rows(&w_sub, shared, Some(&rows))?)
     } else {
         None
     };
@@ -307,7 +441,7 @@ pub fn watersic_at_rate_prepared(
     // rate_bits and the container size.
     let target_entropy = target_bits.max(0.05);
     let c0 = (prep_full.src_sigma_w
-        * prep_full.src_gm
+        * prep_full.stats.src_gm
         * (2.0 * std::f64::consts::PI * std::f64::consts::E).sqrt()
         / 2f64.powf(target_entropy))
     .max(1e-9);
@@ -317,8 +451,8 @@ pub fn watersic_at_rate_prepared(
 
 /// Rate-targeted WaterSIC (§4 "Rate assignment"): secant on c using a
 /// row subsample for the search, then one full-matrix run.  The
-/// front-end (erasure + Cholesky + target solve) runs exactly once per
-/// system — see [`PreparedLayer`].
+/// stats-only front-end (erasure + Cholesky) runs exactly once per
+/// layer and is shared by both systems — see [`PreparedStats`].
 pub fn watersic_at_rate(
     w: &Mat,
     stats: &LayerStats,
@@ -326,8 +460,9 @@ pub fn watersic_at_rate(
     opts: &QuantOpts,
     zsic_exec: Option<&ZsicFn>,
     subsample_rows: usize,
+    layer_seed: u64,
 ) -> Result<LayerQuant> {
-    let (full, sub) = prepare_at_rate(w, stats, opts, subsample_rows)?;
+    let (full, sub) = prepare_at_rate(w, stats, opts, subsample_rows, layer_seed)?;
     Ok(watersic_at_rate_prepared(
         sub.as_ref().unwrap_or(&full),
         &full,
@@ -386,7 +521,7 @@ mod tests {
         let stats = LayerStats::from_sigma(sigma);
         let opts = QuantOpts::default();
         for target in [1.5, 2.5, 3.5] {
-            let q = watersic_at_rate(&w, &stats, target, &opts, None, 64).unwrap();
+            let q = watersic_at_rate(&w, &stats, target, &opts, None, 64, 0).unwrap();
             assert!(
                 (q.entropy_bits - target).abs() < 0.12,
                 "target {target}: got entropy {}",
@@ -414,6 +549,78 @@ mod tests {
             // the probe shortcut reports the same entropy the full
             // quantize does (rescalers never change the codes)
             assert_eq!(prep.entropy_at(c, &opts), q1.entropy_bits);
+        }
+    }
+
+    #[test]
+    fn shared_stats_subsample_matches_independent_prepare() {
+        // the PR 3 layout factored the same statistics twice — once per
+        // system; the shared PreparedStats must reproduce both systems
+        // bit-for-bit (L and the erasure never depended on W)
+        let (w, sigma) = problem(96, 24, 12);
+        let stats = LayerStats::from_sigma(sigma);
+        let opts = QuantOpts::default();
+
+        let (full, sub) = prepare_at_rate(&w, &stats, &opts, 32, 0).unwrap();
+        let sub = sub.expect("96 rows > 32 must subsample");
+        // independent per-system preparation (its own factorization)
+        let full_ind = PreparedLayer::new(&w, &stats, &opts).unwrap();
+        let rows = subsample_row_set(96, 32, 0);
+        let w_sub = w.submatrix(&rows, &(0..w.cols).collect::<Vec<_>>());
+        let sub_ind = PreparedLayer::new(&w_sub, &stats, &opts).unwrap();
+
+        for c in [0.3, 0.9] {
+            let q0 = full_ind.quantize(c, &opts, None);
+            let q1 = full.quantize(c, &opts, None);
+            assert_eq!(q0.z, q1.z);
+            assert_eq!(q0.alphas, q1.alphas);
+            assert_eq!(q0.gammas, q1.gammas);
+            assert_eq!(q0.t, q1.t);
+            assert_eq!(
+                sub_ind.entropy_at(c, &opts),
+                sub.entropy_at(c, &opts),
+                "subsample probes must be bit-identical at c={c}"
+            );
+        }
+    }
+
+    #[test]
+    fn subsample_drift_rows_follow_sampled_rows() {
+        // regression: the subsample system used to slice the FIRST
+        // `sub` rows of Σ_{Δ,X̂} while W_sub held randomly sampled
+        // rows, pairing each sampled weight row with another row's
+        // drift correction and biasing the secant's target
+        let (w, sigma) = problem(96, 24, 14);
+        let mut rng = Rng::new(15);
+        let drift = Mat::from_fn(96, 24, |_, _| rng.gaussian());
+        let stats = LayerStats {
+            sigma_d_xhat: Some(drift.clone()),
+            ..LayerStats::from_sigma(sigma)
+        };
+        let opts = QuantOpts::default();
+        let (_, sub) = prepare_at_rate(&w, &stats, &opts, 32, 0).unwrap();
+        let sub = sub.expect("96 rows > 32 must subsample");
+        // reference: an independent prepare of the sampled system with
+        // the drift term sliced by the same row set
+        let rows = subsample_row_set(96, 32, 0);
+        assert_ne!(
+            rows,
+            (0..32).collect::<Vec<_>>(),
+            "draw must not be the prefix, or this test shows nothing"
+        );
+        let all_cols: Vec<usize> = (0..24).collect();
+        let w_sub = w.submatrix(&rows, &all_cols);
+        let stats_sub = LayerStats {
+            sigma_d_xhat: Some(drift.submatrix(&rows, &all_cols)),
+            ..LayerStats::from_sigma(stats.sigma_x.clone())
+        };
+        let sub_ref = PreparedLayer::new(&w_sub, &stats_sub, &opts).unwrap();
+        for c in [0.3, 0.8] {
+            assert_eq!(
+                sub.entropy_at(c, &opts),
+                sub_ref.entropy_at(c, &opts),
+                "subsampled drift rows must follow the sampled row set at c={c}"
+            );
         }
     }
 
@@ -477,7 +684,8 @@ mod tests {
         let opts = QuantOpts::default();
         for target in [1.5, 3.0] {
             let q_ref = precache(&w, &stats, target, &opts, 64);
-            let q = watersic_at_rate(&w, &stats, target, &opts, None, 64).unwrap();
+            // layer_seed = 0 pins the legacy subsample row draw
+            let q = watersic_at_rate(&w, &stats, target, &opts, None, 64, 0).unwrap();
             assert_eq!(q.z, q_ref.z, "codes must be bit-identical");
             assert_eq!(q.alphas, q_ref.alphas);
             assert_eq!(q.gammas, q_ref.gammas);
@@ -488,23 +696,46 @@ mod tests {
     }
 
     #[test]
-    fn at_rate_factorizes_once_per_system() {
+    fn at_rate_factorizes_once_per_layer() {
         let (w, sigma) = problem(96, 24, 8);
         let stats = LayerStats::from_sigma(sigma);
         let opts = QuantOpts {
             rescalers: false, // the Γ-step has its own factorizations
             ..QuantOpts::default()
         };
-        // subsampled search: one factorization for the subsample
-        // system + one for the full system, no matter how many secant
-        // probes run (the pre-cache path paid one per probe)
+        // subsampled search: ONE factorization serves both the
+        // subsample system and the full system (the damped factor L
+        // depends only on the shared statistics), no matter how many
+        // secant probes run — the PR 3 layout paid two, the pre-cache
+        // path one per probe
         let before = crate::linalg::chol::factorization_count();
-        let _ = watersic_at_rate(&w, &stats, 2.0, &opts, None, 32).unwrap();
-        assert_eq!(crate::linalg::chol::factorization_count() - before, 2);
-        // no subsampling: the search shares the full preparation
-        let before = crate::linalg::chol::factorization_count();
-        let _ = watersic_at_rate(&w, &stats, 2.0, &opts, None, 96).unwrap();
+        let _ = watersic_at_rate(&w, &stats, 2.0, &opts, None, 32, 0).unwrap();
         assert_eq!(crate::linalg::chol::factorization_count() - before, 1);
+        // no subsampling: still one
+        let before = crate::linalg::chol::factorization_count();
+        let _ = watersic_at_rate(&w, &stats, 2.0, &opts, None, 96, 0).unwrap();
+        assert_eq!(crate::linalg::chol::factorization_count() - before, 1);
+    }
+
+    #[test]
+    fn equal_height_layers_draw_distinct_subsample_rows() {
+        // regression: the subsample seed mixed in only the matrix
+        // height, so every same-height layer of a model — i.e. all of
+        // them — probed the secant on the same rows, biasing the
+        // entropy estimate model-wide
+        let s1 = layer_seed_from_name("layers.0.attn.wq");
+        let s2 = layer_seed_from_name("layers.1.attn.wq");
+        assert_ne!(s1, s2);
+        assert_ne!(
+            subsample_row_set(4096, 64, s1),
+            subsample_row_set(4096, 64, s2),
+            "same-height layers must draw different row sets"
+        );
+        // deterministic per (height, seed)
+        assert_eq!(subsample_row_set(4096, 64, s1), subsample_row_set(4096, 64, s1));
+        // layer_seed = 0 pins the legacy height-only draw
+        let mut rng = Rng::new(0xC0FFEE ^ 4096);
+        assert_eq!(subsample_row_set(4096, 64, 0), rng.sample_indices(4096, 64));
     }
 
     #[test]
@@ -513,7 +744,7 @@ mod tests {
         // and panicked whenever a layer had fewer than 8 rows
         let (w, sigma) = problem(4, 12, 10);
         let stats = LayerStats::from_sigma(sigma);
-        let q = watersic_at_rate(&w, &stats, 2.0, &QuantOpts::default(), None, 64).unwrap();
+        let q = watersic_at_rate(&w, &stats, 2.0, &QuantOpts::default(), None, 64, 0).unwrap();
         assert!(q.entropy_bits.is_finite());
         assert_eq!((q.a, q.n), (4, 12));
     }

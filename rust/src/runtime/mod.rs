@@ -9,3 +9,19 @@ pub use engine::{Engine, ZsicArtifact};
 // The native-path kernel options are part of the engine surface: the
 // coordinator reads them from here rather than reaching into linalg.
 pub use crate::linalg::gemm::{simd_backend, Precision, SimdBackend};
+
+/// The `WATERSIC_PREPARE_LOOKAHEAD` engine option: how many prepared
+/// layer front-ends (stats + [`crate::quant::PreparedLayer`] pairs) the
+/// coordinator's streaming prepare may hold alive at once — the one
+/// the budget loop is draining plus the buffered lookahead built ahead
+/// of it.  A memory bound, not a build concurrency (builds run one at
+/// a time, each internally pool-parallel).  Default 2 (prepare one
+/// ahead), minimum 1 (fully serial, lowest memory).
+/// `PipelineOpts::prepare_lookahead` can override per run.
+pub fn prepare_lookahead_from_env() -> usize {
+    std::env::var("WATERSIC_PREPARE_LOOKAHEAD")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .map(|n| n.max(1))
+        .unwrap_or(2)
+}

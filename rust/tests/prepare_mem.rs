@@ -1,0 +1,170 @@
+//! Regression test for the streaming bounded prepare: a counting
+//! global allocator bounds the peak transient footprint of the
+//! pipeline's quantization front-end.  Before the fix, the coordinator
+//! materialized all 7 `PreparedLayer` pairs of a transformer layer in
+//! parallel before the sequential budget loop drained them (~7× the
+//! front-end footprint, with every pair also holding its own copy of
+//! the live-restricted covariances and Cholesky factor); after it, a
+//! producer/consumer with a bounded lookahead window holds at most
+//! `prepare_lookahead` prepared front-ends alive, each sharing one
+//! `PreparedStats` between its full and subsample systems.
+//!
+//! The same single-test binary also pins the one-factorization-per-
+//! layer invariant through the *process-global* counter — the
+//! streaming producer factors on its own thread, which the
+//! thread-local counter cannot see.  (Own test binary — see
+//! Cargo.toml — so the allocator instrumentation and the global
+//! counter cannot race unrelated tests.)
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use watersic::calib::corpus::{batch_windows, Corpus};
+use watersic::calib::drift::CalibSet;
+use watersic::coordinator::{quantize_model, PipelineOpts};
+use watersic::linalg::chol::factorization_count_global;
+use watersic::model::weights::Weights;
+use watersic::model::ModelConfig;
+use watersic::quant::watersic::{layer_seed_from_name, prepare_at_rate};
+use watersic::quant::LayerStats;
+
+struct CountingAlloc;
+
+static LIVE: AtomicUsize = AtomicUsize::new(0);
+static PEAK: AtomicUsize = AtomicUsize::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            let live = LIVE.fetch_add(layout.size(), Ordering::SeqCst) + layout.size();
+            PEAK.fetch_max(live, Ordering::SeqCst);
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout);
+        LIVE.fetch_sub(layout.size(), Ordering::SeqCst);
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn setup() -> (ModelConfig, Weights, Corpus, PipelineOpts) {
+    // wide enough that the n×n covariances and a×n targets of the
+    // prepared front-ends dominate every other allocation; short
+    // context so the calibration forwards stay negligible
+    // vocab must cover raw corpus bytes (the tokenizer is byte-level)
+    let cfg = ModelConfig {
+        vocab: 128,
+        d_model: 96,
+        n_heads: 2,
+        d_ff: 192,
+        ctx: 16,
+        ..ModelConfig::tiny_test()
+    };
+    let teacher = Weights::random(&cfg, 11);
+    let text: String = (0..400)
+        .map(|i| format!("alpha beta {} gamma. ", i % 37))
+        .collect();
+    let corpus = Corpus::from_bytes("prepare-mem", text.into_bytes());
+    let mut opts = PipelineOpts::watersic(3.0);
+    opts.calib_windows = 2;
+    opts.calib_batch = 1;
+    opts.use_engine = false;
+    opts.subsample_rows = 24;
+    // the Γ-step's transient mats and factorizations are not front-end
+    opts.quant.rescalers = false;
+    (cfg, teacher, corpus, opts)
+}
+
+#[test]
+fn streaming_prepare_stays_below_all_at_once_footprint() {
+    let (cfg, teacher, corpus, mut opts) = setup();
+
+    // warm up: thread pool, lazily allocated engine state
+    opts.prepare_lookahead = 2;
+    let _ = quantize_model(&cfg, &teacher, &corpus, &opts, None).unwrap();
+
+    // ---- reference: the all-at-once flow (the pre-streaming
+    // coordinator), holding every matrix's drift stats and prepared
+    // pair alive simultaneously before the budget loop would drain them
+    let windows = corpus.calib_windows(opts.calib_windows, cfg.ctx, opts.seed);
+    let batches: Vec<Vec<i32>> = batch_windows(&windows, opts.calib_batch)
+        .into_iter()
+        .map(|(t, _)| t)
+        .collect();
+    let cs = CalibSet::build_prec(&cfg, &teacher, batches, opts.calib_batch, opts.precision);
+    let scaps = cs.student_pass(&cfg, &teacher);
+    let order: Vec<String> = cfg.quantizable.clone();
+
+    let base = LIVE.load(Ordering::SeqCst);
+    PEAK.store(base, Ordering::SeqCst);
+    let fac_before = factorization_count_global();
+    {
+        let stats: Vec<LayerStats> = order
+            .iter()
+            .map(|name| {
+                cs.stats_for(
+                    &cfg,
+                    name,
+                    &scaps,
+                    watersic::calib::drift::StatsOpts {
+                        drift: opts.drift,
+                        residual: opts.residual,
+                        attn_weighted: opts.attn_weighted,
+                    },
+                )
+            })
+            .collect();
+        let pairs: Vec<_> = order
+            .iter()
+            .zip(&stats)
+            .map(|(name, st)| {
+                prepare_at_rate(
+                    teacher.get(name),
+                    st,
+                    &opts.quant,
+                    opts.subsample_rows,
+                    layer_seed_from_name(name),
+                )
+                .unwrap()
+            })
+            .collect();
+        assert_eq!(pairs.len(), 7);
+        assert_eq!(
+            factorization_count_global() - fac_before,
+            7,
+            "shared PreparedStats must factor exactly once per matrix"
+        );
+    }
+    let all_at_once_peak = PEAK.load(Ordering::SeqCst).saturating_sub(base);
+    drop(scaps);
+    drop(cs);
+
+    // ---- streaming pipeline at the tightest window
+    opts.prepare_lookahead = 1;
+    let base = LIVE.load(Ordering::SeqCst);
+    PEAK.store(base, Ordering::SeqCst);
+    let fac_before = factorization_count_global();
+    let qm = quantize_model(&cfg, &teacher, &corpus, &opts, None).unwrap();
+    let streaming_peak = PEAK.load(Ordering::SeqCst).saturating_sub(base);
+
+    assert_eq!(qm.report.matrices.len(), 7);
+    assert_eq!(qm.report.prepare_peak_pairs, 1);
+    assert_eq!(
+        factorization_count_global() - fac_before,
+        7,
+        "the streaming pipeline must still factor exactly once per matrix"
+    );
+
+    // the full pipeline run — weights, codes, calibration and all —
+    // must peak below the bare front-end of the all-at-once flow
+    assert!(
+        streaming_peak * 10 < all_at_once_peak * 9,
+        "streaming prepare peaked at {streaming_peak} B vs {all_at_once_peak} B \
+         for the all-at-once flow — is the bounded window gone?"
+    );
+}
