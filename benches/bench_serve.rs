@@ -1,0 +1,138 @@
+//! Serving-engine performance: prepack-vs-repack GEMM speedup plus
+//! end-to-end micro-batched serving throughput/latency on the
+//! quantized synthetic tiny model.  Emits `BENCH_serve.json` — the CI
+//! serve-smoke job greps the `speedup prepack <shape>` entry and the
+//! `serve throughput tok/s` / `serve p50|p90|p99 ms` percentiles.
+//!
+//! The prepack rows measure exactly what the server removes from the
+//! hot path: `repack`-tagged rows run the public pack-per-call driver
+//! (`matmul_nt_prec`, B re-packed every call), `prepack` rows run
+//! [`matmul_prepacked`] over panels packed once up front.  Skinny
+//! activation panels (few tokens per weight matrix — the serving
+//! regime) amortize the pack worst, so the m=16 shape is the headline.
+//! `WATERSIC_BENCH_ENFORCE=1` turns a modest ≥1.05× gate on the m=16
+//! shape into a hard failure (off by default: shared runners are too
+//! noisy to fail builds on).
+//!
+//! Load-test knobs: `WATERSIC_SERVE_CLIENTS` (default 8; the CI gate
+//! needs ≥8 concurrent) and `WATERSIC_SERVE_REQUESTS` per client
+//! (default 8), on top of the engine's `WATERSIC_SERVE_BATCH` /
+//! `WATERSIC_SERVE_FLUSH_US` / `WATERSIC_PRECISION` options.
+
+use std::time::Duration;
+
+use watersic::coordinator::container::Container;
+use watersic::coordinator::quantize_model;
+use watersic::experiments::{synthetic_tiny_opts, synthetic_tiny_setup};
+use watersic::linalg::gemm::{matmul_nt_prec, matmul_prepacked, Precision, PrepackedB};
+use watersic::linalg::Mat;
+use watersic::runtime::server::{load_test, serve_batch_from_env, Server};
+use watersic::runtime::ServeOpts;
+use watersic::util::bench::{report, Bench, BenchLog};
+use watersic::util::json::Json;
+use watersic::util::rng::Rng;
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key)
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(default)
+        .max(1)
+}
+
+fn main() -> anyhow::Result<()> {
+    println!("== bench_serve: prepacked-weight serving engine ==");
+    let prec = Precision::from_env();
+    let mut log = BenchLog::new("BENCH_serve.json");
+    log.meta("bench", Json::Str("serve".to_string()));
+    log.meta("precision", Json::Str(prec.name().to_string()));
+
+    // ---- prepack vs repack: projection GEMMs at serving shapes
+    // (m tokens through an a×n weight, C = X·Wᵀ)
+    let mut rng = Rng::new(31);
+    let mut prepack_speedups: Vec<(String, f64)> = Vec::new();
+    for (m, a, n) in [(16usize, 512usize, 512usize), (128, 512, 512), (16, 2048, 512)] {
+        let x = Mat::from_fn(m, n, |_, _| rng.gaussian());
+        let w = Mat::from_fn(a, n, |_, _| rng.gaussian());
+        let name = format!("{m}x{n}x{a}");
+        let flops = (2 * m * n * a) as f64;
+
+        let s_repack = Bench::new(&format!("nt repack {name}"))
+            .with_budget(8, Duration::from_secs(3))
+            .run(|| {
+                std::hint::black_box(matmul_nt_prec(&x, &w, prec));
+            });
+        report(&s_repack, Some((flops, "flop")));
+        log.record(&s_repack, Some(flops), "repack");
+
+        let pb = PrepackedB::pack_nt(&w, prec);
+        let s_prepack = Bench::new(&format!("nt prepack {name}"))
+            .with_budget(8, Duration::from_secs(3))
+            .run(|| {
+                std::hint::black_box(matmul_prepacked(&x, &pb));
+            });
+        report(&s_prepack, Some((flops, "flop")));
+        log.record(&s_prepack, Some(flops), "prepack");
+
+        let speedup = s_repack.median.as_secs_f64() / s_prepack.median.as_secs_f64();
+        println!("speedup prepack {name}: {speedup:.2}×");
+        log.note(&format!("speedup prepack {name}"), speedup);
+        prepack_speedups.push((name, speedup));
+    }
+
+    // ---- end-to-end: quantize the synthetic tiny model, serve it,
+    // drive it with concurrent clients
+    let (cfg, teacher, corpus) = synthetic_tiny_setup();
+    let opts = synthetic_tiny_opts(3.0);
+    let qm = quantize_model(&cfg, &teacher, &corpus, &opts, None)?;
+    let container = Container::new(&cfg.name, qm.quants.clone());
+    println!(
+        "quantized synthetic tiny model: {:.1} KiB container",
+        container.size_bytes() as f64 / 1024.0
+    );
+    let server = Server::from_container(
+        &cfg,
+        &teacher,
+        &container,
+        prec,
+        ServeOpts::default(),
+    )?;
+    let clients = env_usize("WATERSIC_SERVE_CLIENTS", 8);
+    let per_client = env_usize("WATERSIC_SERVE_REQUESTS", 8);
+    let rep = load_test(&server, clients, per_client, 99)?;
+    rep.print();
+    log.meta("serve clients", Json::Num(clients as f64));
+    log.meta("serve batch max", Json::Num(serve_batch_from_env() as f64));
+    log.note("serve throughput tok/s", rep.throughput_tok_s);
+    log.note("serve p50 ms", rep.p50_ms);
+    log.note("serve p90 ms", rep.p90_ms);
+    log.note("serve p99 ms", rep.p99_ms);
+    log.note("serve mean batch", rep.mean_batch);
+    log.note("serve max batch", rep.max_batch as f64);
+    let stats = server.shutdown();
+    println!(
+        "served {} requests in {} batches ({} tokens)",
+        stats.requests, stats.batches, stats.tokens
+    );
+
+    match log.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("failed to write bench log: {e}"),
+    }
+
+    // opt-in hard gate (see module docs)
+    if std::env::var("WATERSIC_BENCH_ENFORCE").as_deref() == Ok("1") {
+        let (shape, min) = ("16x512x512", 1.05);
+        let got = prepack_speedups
+            .iter()
+            .find(|(n, _)| n == shape)
+            .map(|(_, s)| *s)
+            .unwrap_or(0.0);
+        if got < min {
+            eprintln!("GATE FAILED: prepack {shape} speedup {got:.2}× < {min}×");
+            std::process::exit(1);
+        }
+        println!("gate ok: prepack {shape} {got:.2}× ≥ {min}×");
+    }
+    Ok(())
+}

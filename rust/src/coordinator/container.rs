@@ -26,6 +26,13 @@ use crate::quant::LayerQuant;
 
 const MAGIC: &[u8] = b"WSIC";
 const VERSION: u8 = 1;
+/// Upper bound on a single matrix's code count (2²⁸ ≈ 268M weights —
+/// far above any layer this system serves).  A degenerate rANS table
+/// can legitimately encode astronomically many symbols in a handful of
+/// stream bytes, so the stream length cannot bound the decode count; a
+/// corrupted a×n past this cap must bail before the decode loop
+/// materializes it.
+const MAX_MATRIX_CODES: usize = 1 << 28;
 
 pub struct Container {
     pub model_name: String,
@@ -37,12 +44,23 @@ fn put_str(out: &mut Vec<u8>, s: &str) {
     out.extend_from_slice(s.as_bytes());
 }
 
+/// Read `len` bytes at `*pos`, guarding the offset arithmetic: a
+/// corrupted varint length must come back as an error, never as an
+/// overflow panic (debug) or a wrapped-range read (release).
+fn get_bytes<'a>(bytes: &'a [u8], pos: &mut usize, len: usize, what: &str) -> Result<&'a [u8]> {
+    let end = pos
+        .checked_add(len)
+        .with_context(|| format!("{what} length overflows"))?;
+    let s = bytes
+        .get(*pos..end)
+        .with_context(|| format!("truncated {what}"))?;
+    *pos = end;
+    Ok(s)
+}
+
 fn get_str(bytes: &[u8], pos: &mut usize) -> Result<String> {
     let len = get_varint(bytes, pos)? as usize;
-    let s = bytes
-        .get(*pos..*pos + len)
-        .context("truncated string")?;
-    *pos += len;
+    let s = get_bytes(bytes, pos, len, "string")?;
     Ok(String::from_utf8(s.to_vec())?)
 }
 
@@ -98,27 +116,44 @@ impl Container {
             let name = get_str(bytes, &mut pos)?;
             let a = get_varint(bytes, &mut pos)? as usize;
             let n = get_varint(bytes, &mut pos)? as usize;
+            // plausibility bounds before any allocation: each scale/t
+            // entry needs 4 bytes, each dead index ≥ 1 byte — a huge
+            // header count on a short buffer is corruption, and must
+            // not drive a giant Vec reservation
+            let left = bytes.len() - pos;
+            if n > left / 4 {
+                bail!("corrupt header: {n} column scales in {left} bytes");
+            }
             let mut col_scale = Vec::with_capacity(n);
             for _ in 0..n {
-                let b = bytes.get(pos..pos + 4).context("truncated scales")?;
+                let b = get_bytes(bytes, &mut pos, 4, "scales")?;
                 col_scale.push(f32::from_le_bytes(b.try_into().unwrap()) as f64);
-                pos += 4;
+            }
+            if a > (bytes.len() - pos) / 4 {
+                bail!("corrupt header: {a} row rescalers in {} bytes", bytes.len() - pos);
             }
             let mut t = Vec::with_capacity(a);
             for _ in 0..a {
-                let b = bytes.get(pos..pos + 4).context("truncated t")?;
+                let b = get_bytes(bytes, &mut pos, 4, "t")?;
                 t.push(f32::from_le_bytes(b.try_into().unwrap()) as f64);
-                pos += 4;
             }
             let ndead = get_varint(bytes, &mut pos)? as usize;
+            if ndead > bytes.len() - pos {
+                bail!("corrupt header: {ndead} dead columns in {} bytes", bytes.len() - pos);
+            }
             let mut dead_cols = Vec::with_capacity(ndead);
             for _ in 0..ndead {
                 dead_cols.push(get_varint(bytes, &mut pos)? as usize);
             }
             let slen = get_varint(bytes, &mut pos)? as usize;
-            let stream = bytes.get(pos..pos + slen).context("truncated stream")?;
-            pos += slen;
-            let z = Rans.decode(stream, a * n)?;
+            let stream = get_bytes(bytes, &mut pos, slen, "stream")?;
+            let codes = a
+                .checked_mul(n)
+                .filter(|&c| c <= MAX_MATRIX_CODES)
+                .with_context(|| {
+                    format!("corrupt header: {a}x{n} matrix is implausibly large")
+                })?;
+            let z = Rans.decode(stream, codes)?;
             quants.insert(
                 name,
                 LayerQuant {
@@ -224,5 +259,77 @@ mod tests {
         let mut bytes = Container::new("x", quants).to_bytes();
         bytes[4] = 99; // bad version
         assert!(Container::from_bytes(&bytes).is_err());
+    }
+
+    /// Start of a malicious header: magic + version, next read is the
+    /// model-name varint.
+    fn header_prefix() -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(MAGIC);
+        b.push(VERSION);
+        b
+    }
+
+    #[test]
+    fn overflowing_string_length_errors_not_panics() {
+        // a u64::MAX name length must fail the checked offset add, not
+        // overflow-panic (debug) or wrap into a bogus range (release)
+        let mut bytes = header_prefix();
+        put_varint(&mut bytes, u64::MAX);
+        assert!(Container::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn overflowing_stream_length_errors_not_panics() {
+        // a valid header up to the rANS stream, whose varint length is
+        // u64::MAX with no bytes behind it
+        let mut bytes = header_prefix();
+        put_varint(&mut bytes, 1); // model name "x"
+        bytes.push(b'x');
+        put_varint(&mut bytes, 1); // one matrix
+        put_varint(&mut bytes, 1); // name "m"
+        bytes.push(b'm');
+        put_varint(&mut bytes, 1); // a
+        put_varint(&mut bytes, 1); // n
+        bytes.extend_from_slice(&1.0f32.to_le_bytes()); // col scale
+        bytes.extend_from_slice(&1.0f32.to_le_bytes()); // t
+        put_varint(&mut bytes, 0); // no dead cols
+        put_varint(&mut bytes, u64::MAX); // stream length
+        assert!(Container::from_bytes(&bytes).is_err());
+    }
+
+    #[test]
+    fn giant_header_counts_error_before_allocating() {
+        // a×n dimensions far past the buffer (and past usize multiply
+        // range) must bail on the plausibility guards / checked_mul
+        // instead of reserving giant Vecs or panicking
+        for (a, n) in [
+            (u64::MAX, 2u64),
+            (2, u64::MAX),
+            (1 << 40, 1 << 40),
+            (1 << 20, 1),
+        ] {
+            let mut bytes = header_prefix();
+            put_varint(&mut bytes, 1);
+            bytes.push(b'x');
+            put_varint(&mut bytes, 1);
+            put_varint(&mut bytes, 1);
+            bytes.push(b'm');
+            put_varint(&mut bytes, a);
+            put_varint(&mut bytes, n);
+            assert!(Container::from_bytes(&bytes).is_err(), "a={a} n={n}");
+        }
+    }
+
+    #[test]
+    fn truncated_tail_errors_everywhere() {
+        // chop a valid container at every byte boundary: each prefix
+        // must error cleanly (never panic)
+        let mut quants = BTreeMap::new();
+        quants.insert("m".to_string(), fake_quant(6, 5, 11));
+        let bytes = Container::new("x", quants).to_bytes();
+        for cut in 0..bytes.len() {
+            assert!(Container::from_bytes(&bytes[..cut]).is_err(), "cut={cut}");
+        }
     }
 }

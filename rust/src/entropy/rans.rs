@@ -132,15 +132,31 @@ impl Codec for Rans {
             return Ok(Vec::new());
         }
         let k = get_varint(bytes, &mut pos)? as usize;
+        // the encoder asserts alphabet ≤ PROB_SCALE; a bigger k in the
+        // header is corruption and must not drive a giant reservation
+        if k == 0 || k > PROB_SCALE as usize {
+            bail!("corrupt rANS header: alphabet size {k}");
+        }
         let mut syms = Vec::with_capacity(k);
         let mut freq = Vec::with_capacity(k);
         for _ in 0..k {
             syms.push(get_varint(bytes, &mut pos)? as u32);
-            freq.push(get_varint(bytes, &mut pos)? as u32);
+            let f = get_varint(bytes, &mut pos)?;
+            if f > PROB_SCALE as u64 {
+                bail!("corrupt rANS frequency {f}");
+            }
+            freq.push(f as u32);
         }
         let mut cum = vec![0u32; k + 1];
         for i in 0..k {
-            cum[i + 1] = cum[i] + freq[i];
+            // freqs are individually ≤ PROB_SCALE and k ≤ PROB_SCALE,
+            // so the u64 sum cannot overflow; bail as soon as the
+            // running total leaves the legal range
+            let c = cum[i] as u64 + freq[i] as u64;
+            if c > PROB_SCALE as u64 {
+                bail!("corrupt rANS frequency table");
+            }
+            cum[i + 1] = c as u32;
         }
         if cum[k] != PROB_SCALE {
             bail!("corrupt rANS frequency table");
@@ -155,12 +171,19 @@ impl Codec for Rans {
         let mut state = get_varint(bytes, &mut pos)? as u32;
         let nwords = get_varint(bytes, &mut pos)? as usize;
         let words_start = pos;
-        if bytes.len() < words_start + 2 * nwords {
-            bail!("truncated rANS stream");
+        let words_end = nwords
+            .checked_mul(2)
+            .and_then(|b| words_start.checked_add(b));
+        match words_end {
+            Some(end) if end <= bytes.len() => {}
+            _ => bail!("truncated rANS stream"),
         }
         let mut widx = nwords; // pop from the end
 
-        let mut out = Vec::with_capacity(n);
+        // capacity is a hint: cap the up-front reservation so a huge
+        // (but header-consistent) n cannot reserve memory the stream
+        // never backs
+        let mut out = Vec::with_capacity(n.min(1 << 20));
         for _ in 0..n {
             let slot = state & (PROB_SCALE - 1);
             let i = slot2sym[slot as usize] as usize;
@@ -202,6 +225,38 @@ mod tests {
             .map(|_| (rng.gaussian() * 2.0).round_ties_even() as i32)
             .collect();
         roundtrip(&z);
+    }
+
+    #[test]
+    fn corrupt_headers_error_not_panic() {
+        // a crafted header with a giant alphabet size (or frequency)
+        // must error instead of reserving giant Vecs / overflowing
+        // alphabet size u64::MAX
+        let mut b = Vec::new();
+        put_varint(&mut b, 4); // n
+        put_varint(&mut b, u64::MAX); // k
+        assert!(Rans.decode(&b, 4).is_err());
+        // plausible k but overflowing frequencies
+        let mut b = Vec::new();
+        put_varint(&mut b, 4);
+        put_varint(&mut b, 1); // one symbol
+        put_varint(&mut b, 0); // sym
+        put_varint(&mut b, u64::MAX); // freq
+        assert!(Rans.decode(&b, 4).is_err());
+        // giant word count on a short buffer
+        let mut b = Vec::new();
+        put_varint(&mut b, 4);
+        put_varint(&mut b, 1);
+        put_varint(&mut b, 0);
+        put_varint(&mut b, 1 << PROB_BITS); // freq = full scale
+        put_varint(&mut b, RANS_L as u64); // state
+        put_varint(&mut b, u64::MAX); // nwords
+        assert!(Rans.decode(&b, 4).is_err());
+        // truncating a valid stream anywhere must error too
+        let enc = Rans.encode(&[1, -2, 3, -4, 5, 5, 5]);
+        for cut in 0..enc.len() {
+            assert!(Rans.decode(&enc[..cut], 7).is_err(), "cut={cut}");
+        }
     }
 
     #[test]

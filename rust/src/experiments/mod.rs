@@ -81,6 +81,34 @@ impl Ctx {
     }
 }
 
+/// Deterministic synthetic tiny-model setup (config, teacher weights,
+/// calibration corpus): the zero-artifact path shared by the serving
+/// CLI (`--model tiny`), the serve bench, the serve parity tests, and
+/// CI's end-to-end determinism gate.  Every seed is pinned, so two
+/// quantization runs of this setup must produce byte-identical `.wsic`
+/// containers (across thread counts too — the kernel layer is
+/// bit-deterministic).
+pub fn synthetic_tiny_setup() -> (ModelConfig, Weights, Corpus) {
+    let cfg = ModelConfig::tiny_test();
+    let teacher = Weights::random(&cfg, 21);
+    let text: String = (0..400)
+        .map(|i| format!("alpha beta {} gamma. ", i % 37))
+        .collect();
+    let corpus = Corpus::from_bytes("synthetic", text.into_bytes());
+    (cfg, teacher, corpus)
+}
+
+/// The matching cheap pipeline options (small calibration, no engine —
+/// nothing artifact-dependent).
+pub fn synthetic_tiny_opts(rate: f64) -> crate::coordinator::PipelineOpts {
+    let mut opts = crate::coordinator::PipelineOpts::watersic(rate);
+    opts.calib_windows = 4;
+    opts.calib_batch = 2;
+    opts.subsample_rows = 16;
+    opts.use_engine = false;
+    opts
+}
+
 /// Dispatch by experiment id (the `repro <id>` CLI).
 pub fn run(id: &str, ctx: &Ctx) -> Result<()> {
     match id {

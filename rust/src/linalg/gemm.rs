@@ -664,7 +664,6 @@ unsafe fn gemm_driver<T: Element>(
     }
 
     let cshared = AtomicPtr::new(c);
-    let nblocks = m.div_ceil(MC);
     // one B-pack buffer reused across every (jc, pc) pass — the pack
     // loops overwrite every slot they use (padding written explicitly)
     let mut bpack = vec![T::ZERO; (NC.min(n).div_ceil(T::NR) * T::NR) * KC.min(k)];
@@ -674,86 +673,142 @@ unsafe fn gemm_driver<T: Element>(
         for pc0 in (0..k).step_by(KC) {
             let kc_eff = KC.min(k - pc0);
             let store = pc0 == 0 && !accumulate;
+            pack_b_panel::<T>(b, jc0, nc_eff, pc0, kc_eff, &mut bpack[..ncr * kc_eff]);
+            gemm_pass::<T>(
+                a,
+                &bpack[..ncr * kc_eff],
+                &cshared,
+                ldc,
+                jc0,
+                nc_eff,
+                pc0,
+                kc_eff,
+                store,
+                alpha,
+                threads,
+                backend,
+            );
+        }
+    }
+}
 
-            // ---- pack B: ncr/NR panels of NR interleaved columns
-            {
-                let bp = &mut bpack[..ncr * kc_eff];
-                for q in 0..ncr / T::NR {
-                    let joff = jc0 + q * T::NR;
-                    let dst0 = q * T::NR * kc_eff;
-                    for kk in 0..kc_eff {
-                        let dst = dst0 + kk * T::NR;
-                        for cc in 0..T::NR {
-                            let j = joff + cc;
-                            bp[dst + cc] = if j < jc0 + nc_eff {
-                                T::from_f64(b.at(pc0 + kk, j))
-                            } else {
-                                T::ZERO
-                            };
-                        }
+/// Pack one KC×NC panel of B into `dst` as ncr/NR sub-panels of NR
+/// interleaved columns — exactly the layout the micro-kernel consumes.
+/// Shared by the per-call driver and [`PrepackedB`] (whose panels must
+/// be byte-identical to the on-the-fly pack for the bit-identity
+/// guarantee).
+fn pack_b_panel<T: Element>(
+    b: Panel,
+    jc0: usize,
+    nc_eff: usize,
+    pc0: usize,
+    kc_eff: usize,
+    dst: &mut [T],
+) {
+    let ncr = nc_eff.div_ceil(T::NR) * T::NR;
+    debug_assert_eq!(dst.len(), ncr * kc_eff, "B panel buffer size");
+    for q in 0..ncr / T::NR {
+        let joff = jc0 + q * T::NR;
+        let dst0 = q * T::NR * kc_eff;
+        for kk in 0..kc_eff {
+            let d = dst0 + kk * T::NR;
+            for cc in 0..T::NR {
+                let j = joff + cc;
+                dst[d + cc] = if j < jc0 + nc_eff {
+                    T::from_f64(b.at(pc0 + kk, j))
+                } else {
+                    T::ZERO
+                };
+            }
+        }
+    }
+}
+
+/// One (jc, pc) pass of the blocked driver against an already-packed B
+/// panel: pack MC-row A blocks and sweep the micro-tiles, with the row
+/// blocks fanned over the pool.  Shared by [`gemm_driver`] (per-call
+/// pack) and [`gemm_driver_prepacked`] (panels packed once at load
+/// time), so the two paths run literally the same tile sweep and are
+/// bit-for-bit identical.
+///
+/// # Safety
+/// `cshared` must point to a C buffer valid for `(m-1)*ldc + jc0 +
+/// nc_eff` elements with exclusive access; `bpack_ref` must hold the
+/// `ncr * kc_eff` panel for this (jc, pc) pass.
+#[allow(clippy::too_many_arguments)]
+unsafe fn gemm_pass<T: Element>(
+    a: Panel,
+    bpack_ref: &[T],
+    cshared: &AtomicPtr<f64>,
+    ldc: usize,
+    jc0: usize,
+    nc_eff: usize,
+    pc0: usize,
+    kc_eff: usize,
+    store: bool,
+    alpha: f64,
+    threads: usize,
+    backend: SimdBackend,
+) {
+    let m = a.rows;
+    let nblocks = m.div_ceil(MC);
+    let ncr = nc_eff.div_ceil(T::NR) * T::NR;
+    parallel_ranges(nblocks, threads, |range| {
+        let cbase = cshared.load(Ordering::Relaxed);
+        let mut apack = vec![T::ZERO; MC * kc_eff];
+        for blk in range {
+            let ic0 = blk * MC;
+            let mc_eff = MC.min(m - ic0);
+            let mcr = mc_eff.div_ceil(T::MR) * T::MR;
+
+            // ---- pack A block: mcr/MR panels of MR rows
+            for p in 0..mcr / T::MR {
+                let ioff = ic0 + p * T::MR;
+                let dst0 = p * T::MR * kc_eff;
+                for kk in 0..kc_eff {
+                    let dst = dst0 + kk * T::MR;
+                    for r in 0..T::MR {
+                        let i = ioff + r;
+                        apack[dst + r] = if i < ic0 + mc_eff {
+                            T::from_f64(a.at(i, pc0 + kk))
+                        } else {
+                            T::ZERO
+                        };
                     }
                 }
             }
 
-            let bpack_ref = &bpack[..ncr * kc_eff];
-            parallel_ranges(nblocks, threads, |range| {
-                let cbase = cshared.load(Ordering::Relaxed);
-                let mut apack = vec![T::ZERO; MC * kc_eff];
-                for blk in range {
-                    let ic0 = blk * MC;
-                    let mc_eff = MC.min(m - ic0);
-                    let mcr = mc_eff.div_ceil(T::MR) * T::MR;
-
-                    // ---- pack A block: mcr/MR panels of MR rows
-                    for p in 0..mcr / T::MR {
-                        let ioff = ic0 + p * T::MR;
-                        let dst0 = p * T::MR * kc_eff;
-                        for kk in 0..kc_eff {
-                            let dst = dst0 + kk * T::MR;
-                            for r in 0..T::MR {
-                                let i = ioff + r;
-                                apack[dst + r] = if i < ic0 + mc_eff {
-                                    T::from_f64(a.at(i, pc0 + kk))
-                                } else {
-                                    T::ZERO
-                                };
-                            }
-                        }
-                    }
-
-                    // ---- micro-tile sweep
-                    for q in 0..ncr / T::NR {
-                        let j0 = q * T::NR;
-                        let nr_eff = T::NR.min(nc_eff - j0);
-                        for p in 0..mcr / T::MR {
-                            let i0 = p * T::MR;
-                            let mr_eff = T::MR.min(mc_eff - i0);
-                            // SAFETY: pack offsets are in range by
-                            // construction; C tiles of distinct blocks
-                            // are disjoint row ranges.
-                            unsafe {
-                                let ap = apack.as_ptr().add(p * T::MR * kc_eff);
-                                let bp = bpack_ref.as_ptr().add(q * T::NR * kc_eff);
-                                let ctile = cbase.add((ic0 + i0) * ldc + jc0 + j0);
-                                T::microkernel(
-                                    backend,
-                                    kc_eff,
-                                    ap,
-                                    bp,
-                                    ctile,
-                                    ldc,
-                                    mr_eff,
-                                    nr_eff,
-                                    store,
-                                    alpha,
-                                );
-                            }
-                        }
+            // ---- micro-tile sweep
+            for q in 0..ncr / T::NR {
+                let j0 = q * T::NR;
+                let nr_eff = T::NR.min(nc_eff - j0);
+                for p in 0..mcr / T::MR {
+                    let i0 = p * T::MR;
+                    let mr_eff = T::MR.min(mc_eff - i0);
+                    // SAFETY: pack offsets are in range by
+                    // construction; C tiles of distinct blocks
+                    // are disjoint row ranges.
+                    unsafe {
+                        let ap = apack.as_ptr().add(p * T::MR * kc_eff);
+                        let bp = bpack_ref.as_ptr().add(q * T::NR * kc_eff);
+                        let ctile = cbase.add((ic0 + i0) * ldc + jc0 + j0);
+                        T::microkernel(
+                            backend,
+                            kc_eff,
+                            ap,
+                            bp,
+                            ctile,
+                            ldc,
+                            mr_eff,
+                            nr_eff,
+                            store,
+                            alpha,
+                        );
                     }
                 }
-            });
+            }
         }
-    }
+    });
 }
 
 /// Invoke the packed driver at the requested precision.
@@ -780,6 +835,256 @@ unsafe fn gemm_driver_prec(
             gemm_driver::<f32>(a, b, c, ldc, accumulate, alpha, threads, backend)
         }
     }
+}
+
+// ---------------------------------------------------------------------
+// prepacked static operands (the serving path)
+
+/// All (jc, pc) panel buffers of one k×n operand, packed once through
+/// [`pack_b_panel`] — byte-identical to what the per-call driver packs,
+/// stored in the same (jc outer, pc inner) traversal order.
+struct PrepackedPanels<T> {
+    /// operator rows (the GEMM inner dimension k)
+    k: usize,
+    /// operator cols
+    n: usize,
+    data: Vec<T>,
+    /// start offset of each (jc, pc) panel in `data`
+    offsets: Vec<usize>,
+}
+
+impl<T: Element> PrepackedPanels<T> {
+    fn build(b: Panel) -> PrepackedPanels<T> {
+        let (k, n) = (b.rows, b.cols);
+        let mut offsets = Vec::new();
+        let mut total = 0usize;
+        for jc0 in (0..n).step_by(NC) {
+            let ncr = NC.min(n - jc0).div_ceil(T::NR) * T::NR;
+            for pc0 in (0..k).step_by(KC) {
+                offsets.push(total);
+                total += ncr * KC.min(k - pc0);
+            }
+        }
+        let mut data = vec![T::ZERO; total];
+        let mut idx = 0;
+        for jc0 in (0..n).step_by(NC) {
+            let nc_eff = NC.min(n - jc0);
+            let ncr = nc_eff.div_ceil(T::NR) * T::NR;
+            for pc0 in (0..k).step_by(KC) {
+                let kc_eff = KC.min(k - pc0);
+                let off = offsets[idx];
+                idx += 1;
+                pack_b_panel::<T>(
+                    b,
+                    jc0,
+                    nc_eff,
+                    pc0,
+                    kc_eff,
+                    &mut data[off..off + ncr * kc_eff],
+                );
+            }
+        }
+        PrepackedPanels {
+            k,
+            n,
+            data,
+            offsets,
+        }
+    }
+}
+
+enum PrepackedData {
+    F64(PrepackedPanels<f64>),
+    F32(PrepackedPanels<f32>),
+}
+
+/// A static GEMM operand packed **once** into NR-column panels — the
+/// serving path's weight representation.  The model forward re-packs
+/// every weight matrix on every projection call even though the
+/// weights never change; packing them once at load time removes that
+/// per-call pack bandwidth entirely.
+///
+/// Two guarantees the serving engine builds on:
+///
+/// * **Bit-identity with the pack-per-call driver.**  Panels are
+///   produced by the same [`pack_b_panel`] the driver calls, and
+///   [`matmul_prepacked`] runs the same [`gemm_pass`] tile sweep, so a
+///   prepacked product equals the on-the-fly packed product bit for
+///   bit — across dispatch rungs, thread counts, and both precisions.
+/// * **Row independence.**  The prepacked entries always take the
+///   blocked driver (there is no per-call B-pack for a small-product
+///   fallback to save), and each C row's reduction order is fixed by
+///   the KC grid alone — so row i of the output depends only on row i
+///   of A.  The micro-batching server relies on this: a request's
+///   logits are bit-identical no matter which batch it rides in.
+///
+/// The orientation is baked in at pack time: [`PrepackedB::pack`]
+/// packs B for C = A·B, [`PrepackedB::pack_nt`] packs the transpose
+/// view for C = A·Bᵀ (the projection-GEMM orientation) without
+/// materializing it.
+pub struct PrepackedB {
+    data: PrepackedData,
+}
+
+impl PrepackedB {
+    /// Pack B (k×n storage) as the operand of C = A·B.
+    pub fn pack(b: &Mat, prec: Precision) -> PrepackedB {
+        Self::from_panel(Panel::normal(b), prec)
+    }
+
+    /// Pack B (n×k storage) as the transposed operand of C = A·Bᵀ —
+    /// the layout of every projection weight in the model forward.
+    pub fn pack_nt(b: &Mat, prec: Precision) -> PrepackedB {
+        Self::from_panel(Panel::transposed(b), prec)
+    }
+
+    fn from_panel(p: Panel, prec: Precision) -> PrepackedB {
+        let data = match prec {
+            Precision::F64 => PrepackedData::F64(PrepackedPanels::build(p)),
+            Precision::F32 => PrepackedData::F32(PrepackedPanels::build(p)),
+        };
+        PrepackedB { data }
+    }
+
+    /// Operator rows after any transpose (the GEMM inner dimension).
+    pub fn op_rows(&self) -> usize {
+        match &self.data {
+            PrepackedData::F64(p) => p.k,
+            PrepackedData::F32(p) => p.k,
+        }
+    }
+
+    /// Operator cols after any transpose (the output width).
+    pub fn op_cols(&self) -> usize {
+        match &self.data {
+            PrepackedData::F64(p) => p.n,
+            PrepackedData::F32(p) => p.n,
+        }
+    }
+
+    pub fn precision(&self) -> Precision {
+        match &self.data {
+            PrepackedData::F64(_) => Precision::F64,
+            PrepackedData::F32(_) => Precision::F32,
+        }
+    }
+
+    /// Bytes held by the packed panels (telemetry; f32 mode halves it).
+    pub fn bytes(&self) -> usize {
+        match &self.data {
+            PrepackedData::F64(p) => p.data.len() * std::mem::size_of::<f64>(),
+            PrepackedData::F32(p) => p.data.len() * std::mem::size_of::<f32>(),
+        }
+    }
+}
+
+/// Blocked GEMM against prepacked panels: identical to [`gemm_driver`]
+/// with the per-pass B-pack replaced by an offset lookup.
+///
+/// # Safety
+/// Same contract as [`gemm_driver`].
+#[allow(clippy::too_many_arguments)]
+unsafe fn gemm_driver_prepacked<T: Element>(
+    a: Panel,
+    pb: &PrepackedPanels<T>,
+    c: *mut f64,
+    ldc: usize,
+    accumulate: bool,
+    alpha: f64,
+    threads: usize,
+    backend: SimdBackend,
+) {
+    let (m, k) = (a.rows, a.cols);
+    let n = pb.n;
+    debug_assert_eq!(pb.k, k, "prepacked gemm inner-dim mismatch");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        if !accumulate {
+            for i in 0..m {
+                std::slice::from_raw_parts_mut(c.add(i * ldc), n).fill(0.0);
+            }
+        }
+        return;
+    }
+    let cshared = AtomicPtr::new(c);
+    let mut panel_idx = 0;
+    for jc0 in (0..n).step_by(NC) {
+        let nc_eff = NC.min(n - jc0);
+        let ncr = nc_eff.div_ceil(T::NR) * T::NR;
+        for pc0 in (0..k).step_by(KC) {
+            let kc_eff = KC.min(k - pc0);
+            let store = pc0 == 0 && !accumulate;
+            let off = pb.offsets[panel_idx];
+            panel_idx += 1;
+            gemm_pass::<T>(
+                a,
+                &pb.data[off..off + ncr * kc_eff],
+                &cshared,
+                ldc,
+                jc0,
+                nc_eff,
+                pc0,
+                kc_eff,
+                store,
+                alpha,
+                threads,
+                backend,
+            );
+        }
+    }
+}
+
+/// C = A · B (or A · Bᵀ — the orientation was baked in at pack time)
+/// against a [`PrepackedB`], skipping the per-call B-pack.
+pub fn matmul_prepacked(a: &Mat, pb: &PrepackedB) -> Mat {
+    matmul_prepacked_with(
+        a,
+        pb,
+        threads_for(a.rows * pb.op_cols() * a.cols),
+        simd_backend(),
+    )
+}
+
+/// [`matmul_prepacked`] with an explicit thread count and kernel
+/// backend — exposed for the bit-identity tests and the benches.
+pub fn matmul_prepacked_with(
+    a: &Mat,
+    pb: &PrepackedB,
+    threads: usize,
+    backend: SimdBackend,
+) -> Mat {
+    assert_eq!(a.cols, pb.op_rows(), "prepacked gemm shape mismatch");
+    let mut c = Mat::zeros(a.rows, pb.op_cols());
+    let ldc = c.cols;
+    // SAFETY: c.data is exactly rows×cols and exclusively borrowed.
+    unsafe {
+        match &pb.data {
+            PrepackedData::F64(p) => gemm_driver_prepacked::<f64>(
+                Panel::normal(a),
+                p,
+                c.data.as_mut_ptr(),
+                ldc,
+                false,
+                1.0,
+                threads,
+                backend,
+            ),
+            PrepackedData::F32(p) => gemm_driver_prepacked::<f32>(
+                Panel::normal(a),
+                p,
+                c.data.as_mut_ptr(),
+                ldc,
+                false,
+                1.0,
+                threads,
+                backend,
+            ),
+        }
+    }
+    debug_check_overflow(&c);
+    c
 }
 
 /// Work-size parallelism policy shared by every dense kernel layer
@@ -1521,6 +1826,111 @@ mod tests {
             c_scalar.data,
             "f64 dispatch must be bit-identical (backend {auto:?})"
         );
+    }
+
+    #[test]
+    fn prepacked_matches_pack_per_call_driver_bitwise() {
+        // the prepacked panels are byte-identical to the per-call pack
+        // and run the same tile sweep, so the product must match the
+        // on-the-fly driver bit for bit — across tile-straddling
+        // shapes, thread counts, dispatch rungs, and both precisions
+        let mut rng = Rng::new(70);
+        for (m, k, n) in [
+            (5, 70, 9),
+            (63, 65, 67),
+            (129, 257, 33),
+            (66, 40, 1030),
+            (16, 512, 96),
+        ] {
+            let a = randm(m, k, &mut rng);
+            let b = randm(k, n, &mut rng);
+            let auto = simd_backend();
+            for prec in [Precision::F64, Precision::F32] {
+                let mut c_ref = Mat::zeros(m, n);
+                // SAFETY: c_ref.data is exactly m×n, exclusively borrowed.
+                unsafe {
+                    gemm_driver_prec(
+                        prec,
+                        Panel::normal(&a),
+                        Panel::normal(&b),
+                        c_ref.data.as_mut_ptr(),
+                        n,
+                        false,
+                        1.0,
+                        3,
+                        auto,
+                    );
+                }
+                let pb = PrepackedB::pack(&b, prec);
+                assert_eq!((pb.op_rows(), pb.op_cols()), (k, n));
+                assert_eq!(pb.precision(), prec);
+                let c1 = matmul_prepacked_with(&a, &pb, 1, auto);
+                let c8 = matmul_prepacked_with(&a, &pb, 8, auto);
+                let cs = matmul_prepacked_with(&a, &pb, 4, SimdBackend::Scalar);
+                assert_eq!(
+                    c_ref.data,
+                    c1.data,
+                    "{m}x{k}x{n} {} prepack vs on-the-fly",
+                    prec.name()
+                );
+                assert_eq!(c1.data, c8.data, "{m}x{k}x{n} threads");
+                assert_eq!(c1.data, cs.data, "{m}x{k}x{n} scalar rung");
+            }
+        }
+    }
+
+    #[test]
+    fn prepacked_nt_matches_public_path() {
+        // above the packed threshold matmul_nt routes through the
+        // driver, so the prepacked transpose view must be bit-identical
+        // to the public entry end to end
+        let mut rng = Rng::new(71);
+        let a = randm(70, 90, &mut rng);
+        let w = randm(110, 90, &mut rng);
+        let pb = PrepackedB::pack_nt(&w, Precision::F64);
+        assert_eq!((pb.op_rows(), pb.op_cols()), (90, 110));
+        assert_eq!(matmul_prepacked(&a, &pb).data, matmul_nt(&a, &w).data);
+        let pb32 = PrepackedB::pack_nt(&w, Precision::F32);
+        assert_eq!(
+            matmul_prepacked(&a, &pb32).data,
+            matmul_nt_prec(&a, &w, Precision::F32).data
+        );
+        assert!(pb32.bytes() < pb.bytes());
+    }
+
+    #[test]
+    fn prepacked_rows_independent_of_batch() {
+        // the serving batcher invariant: row i of C depends only on
+        // row i of A, so embedding the same rows in a bigger batch
+        // must reproduce them bit for bit
+        let mut rng = Rng::new(72);
+        let w = randm(40, 64, &mut rng);
+        let pb = PrepackedB::pack_nt(&w, Precision::F64);
+        let small = randm(3, 64, &mut rng);
+        let mut big = randm(100, 64, &mut rng);
+        for r in 0..3 {
+            big.row_mut(10 + r).copy_from_slice(small.row(r));
+        }
+        let c_small = matmul_prepacked(&small, &pb);
+        let c_big = matmul_prepacked(&big, &pb);
+        for r in 0..3 {
+            assert_eq!(c_small.row(r), c_big.row(10 + r), "row {r}");
+        }
+    }
+
+    #[test]
+    fn prepacked_degenerate_shapes() {
+        let mut rng = Rng::new(73);
+        // empty inner dimension → exact zeros
+        let pb = PrepackedB::pack(&Mat::zeros(0, 4), Precision::F64);
+        let c = matmul_prepacked(&Mat::zeros(3, 0), &pb);
+        assert_eq!((c.rows, c.cols), (3, 4));
+        assert!(c.data.iter().all(|&x| x == 0.0));
+        // empty output rows
+        let b = randm(7, 5, &mut rng);
+        let pb = PrepackedB::pack(&b, Precision::F64);
+        let c = matmul_prepacked(&Mat::zeros(0, 7), &pb);
+        assert_eq!((c.rows, c.cols), (0, 5));
     }
 
     #[test]

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   quantize   quantize a picollama model to a .wsic container
 //!   eval       evaluate a container (PPL / BPB / KL / probes)
+//!   serve      serve a .wsic container (micro-batched inference)
 //!   repro      regenerate a paper table/figure (see DESIGN.md §4)
 //!   selftest   cross-validate PJRT artifacts against the native oracle
 //!   info       print artifact/model inventory
@@ -12,6 +13,9 @@ use anyhow::{bail, Context, Result};
 use watersic::coordinator::container::Container;
 use watersic::coordinator::{quantize_model, Algo};
 use watersic::experiments::{self, Ctx};
+use watersic::model::weights::PackedWeights;
+use watersic::runtime::server as serve;
+use watersic::runtime::{Precision, ServeOpts, Server};
 use watersic::util::cli::Args;
 
 const USAGE: &str = "\
@@ -21,11 +25,31 @@ USAGE:
   watersic quantize  [--model picollama_s] [--rate 2.0] [--algo watersic|hgptq|hrtn|rtn|gptq]
                      [--ft] [--mixing] [--out model.wsic] [--fast] [--no-engine]
   watersic eval      --container model.wsic [--model picollama_s] [--corpus wiki|web]
+  watersic serve     --container model.wsic [--model picollama_s] [--addr 127.0.0.1:7878]
+                     [--batch 8] [--flush-us 500] [--loadtest N [--requests M]]
   watersic repro     <id> [--fast] [--no-engine]
                      ids: theory fig1 table1|fig2 table2|fig3 fig4 fig5 table6
                           ablate fig11 fig12 mixing table7 table15 tasks all
   watersic selftest  [--no-engine]
   watersic info
+
+SERVING:
+  `serve` dequantizes the container once, prepacks every projection
+  matrix into NR-column GEMM panels (no per-call weight packing), and
+  micro-batches concurrent requests into shared forwards.  The TCP
+  front door speaks line-delimited JSON:
+      {\"tokens\": [1, 2, 3]}             -> {\"len\", \"next\", \"nll\", \"batched_with\"}
+      {\"prompt\": [1, 2], \"steps\": 8}    -> {\"tokens\": [..]}
+  `--loadtest N` skips the socket and drives the server in-process
+  with N concurrent clients (M requests each), printing throughput and
+  latency percentiles.  `--model tiny` serves the synthetic tiny model
+  (zero artifacts needed; same weights `quantize --model tiny` uses).
+
+ENGINE OPTIONS (env):
+  WATERSIC_PRECISION={f64,f32}   kernel/pack precision (default f64)
+  WATERSIC_THREADS=N             worker-pool width (outputs bit-identical across N)
+  WATERSIC_SERVE_BATCH=N         max requests per batched forward (default 8)
+  WATERSIC_SERVE_FLUSH_US=N      partial-batch flush deadline in us (default 500)
 ";
 
 fn main() {
@@ -83,6 +107,7 @@ fn dispatch(args: &Args) -> Result<()> {
     match cmd {
         "quantize" => cmd_quantize(args),
         "eval" => cmd_eval(args),
+        "serve" => cmd_serve(args),
         "repro" => {
             let id = args
                 .positional
@@ -102,23 +127,49 @@ fn dispatch(args: &Args) -> Result<()> {
     }
 }
 
+/// The zero-artifact synthetic model names (`experiments::
+/// synthetic_tiny_setup`) accepted by `quantize` and `serve`.
+fn is_synthetic_model(name: &str) -> bool {
+    matches!(name, "tiny" | "tiny_test" | "synthetic")
+}
+
 fn cmd_quantize(args: &Args) -> Result<()> {
-    let ctx = Ctx::new(args.bool("fast"), !args.bool("no-engine"))?;
     let model = args.str_or("model", "picollama_s");
     let rate = args.f64_or("rate", 2.0)?;
     let algo = parse_algo(&args.str_or("algo", "watersic"))?;
     let out = args.str_or("out", "model.wsic");
-    let (cfg, teacher) = ctx.load_model(&model)?;
-    let corpus = ctx.load_corpus(&args.str_or("calib", "wiki"))?;
-    let mut opts = experiments::llm::pipeline_opts(&ctx, algo, rate, args.bool("ft"));
-    opts.mixing = args.bool("mixing");
+    let (cfg, teacher, corpus, opts, engine) = if is_synthetic_model(&model) {
+        // fully deterministic, artifact-free path — CI's end-to-end
+        // determinism gate quantizes this twice and byte-compares
+        if !matches!(algo, Algo::WaterSic) {
+            bail!("the synthetic tiny model supports --algo watersic only");
+        }
+        if args.bool("ft") {
+            bail!("the synthetic tiny model does not support --ft");
+        }
+        if args.str_opt("calib").is_some() {
+            bail!("the synthetic tiny model uses its built-in corpus (drop --calib)");
+        }
+        let (cfg, teacher, corpus) = experiments::synthetic_tiny_setup();
+        let mut opts = experiments::synthetic_tiny_opts(rate);
+        opts.mixing = args.bool("mixing");
+        (cfg, teacher, corpus, opts, None)
+    } else {
+        let ctx = Ctx::new(args.bool("fast"), !args.bool("no-engine"))?;
+        let (cfg, teacher) = ctx.load_model(&model)?;
+        let corpus = ctx.load_corpus(&args.str_or("calib", "wiki"))?;
+        let mut opts =
+            experiments::llm::pipeline_opts(&ctx, algo, rate, args.bool("ft"));
+        opts.mixing = args.bool("mixing");
+        (cfg, teacher, corpus, opts, ctx.engine)
+    };
     println!(
         "quantizing {model} with {} @ {rate} bits (calib: {}, engine: {})…",
         algo.name(),
         corpus.name,
-        ctx.engine.is_some()
+        engine.is_some()
     );
-    let qm = quantize_model(&cfg, &teacher, &corpus, &opts, ctx.engine.as_ref())?;
+    let qm = quantize_model(&cfg, &teacher, &corpus, &opts, engine.as_ref())?;
     println!(
         "avg rate {:.3} bits/weight  ({} matrices, {:.1}s)",
         qm.report.avg_rate,
@@ -190,6 +241,134 @@ fn cmd_eval(args: &Args) -> Result<()> {
         "probes    : top1 {:.4}  digits {:.4}  word-start {:.4}  ws {:.4}",
         probes.top1, probes.digits, probes.word_start, probes.whitespace
     );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model = args.str_or("model", "tiny");
+    let prec = Precision::from_env();
+    let (cfg, base) = if is_synthetic_model(&model) {
+        let (cfg, w, _) = experiments::synthetic_tiny_setup();
+        (cfg, w)
+    } else {
+        let ctx = Ctx::new(true, false)?;
+        ctx.load_model(&model)?
+    };
+    let opts = ServeOpts {
+        batch_max: args.usize_or("batch", serve::serve_batch_from_env())?.max(1),
+        flush: std::time::Duration::from_micros(
+            args.usize_or("flush-us", serve::serve_flush_us_from_env() as usize)? as u64,
+        ),
+    };
+    println!(
+        "engine    : batch_max {}, flush {:?}, precision {}",
+        opts.batch_max,
+        opts.flush,
+        prec.name()
+    );
+    let server = match args.str_opt("container") {
+        Some(path) => {
+            let container = Container::load(std::path::Path::new(path))?;
+            println!(
+                "container : {path} ({:.1} KiB, model {})",
+                container.size_bytes() as f64 / 1024.0,
+                container.model_name
+            );
+            let server = Server::from_container(&cfg, &base, &container, prec, opts)?;
+            // the server holds the dequantized+prepacked student; the
+            // raw base weights must not stay resident for its lifetime
+            drop(base);
+            server
+        }
+        None => {
+            println!("no --container: serving the unquantized {model} weights");
+            let packed = PackedWeights::new(&cfg, base, prec);
+            Server::start(cfg, packed, opts)
+        }
+    };
+    println!(
+        "prepacked : {:.1} KiB of weight panels (packed once, never re-packed)",
+        server.packed_bytes() as f64 / 1024.0
+    );
+
+    let clients = args.usize_or("loadtest", 0)?;
+    if clients > 0 {
+        let per_client = args.usize_or("requests", 4)?;
+        let rep = serve::load_test(&server, clients, per_client, 7)?;
+        rep.print();
+        let stats = server.shutdown();
+        println!(
+            "served {} requests in {} batches ({} tokens)",
+            stats.requests, stats.batches, stats.tokens
+        );
+        return Ok(());
+    }
+    serve_tcp(server, &args.str_or("addr", "127.0.0.1:7878"))
+}
+
+/// A request line longer than this is rejected and the connection
+/// closed — an unbounded `read_line` would let one client grow a
+/// String until the server OOMs.
+const MAX_REQUEST_LINE: u64 = 1 << 20;
+
+fn serve_tcp(server: Server, addr: &str) -> Result<()> {
+    use std::io::{BufRead, Read, Write};
+    let listener = std::net::TcpListener::bind(addr)
+        .with_context(|| format!("binding {addr}"))?;
+    println!("listening on {addr} (line-delimited JSON; ^C to stop)");
+    let server = std::sync::Arc::new(server);
+    for stream in listener.incoming() {
+        let stream = match stream {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("[serve] accept failed: {e}");
+                continue;
+            }
+        };
+        let srv = server.clone();
+        std::thread::spawn(move || {
+            let mut writer = match stream.try_clone() {
+                Ok(w) => w,
+                Err(e) => {
+                    eprintln!("[serve] connection clone failed: {e}");
+                    return;
+                }
+            };
+            let mut reader = std::io::BufReader::new(stream);
+            let mut buf = Vec::new();
+            loop {
+                buf.clear();
+                // re-armed per line: bounds each request, not the session
+                let n = match (&mut reader)
+                    .take(MAX_REQUEST_LINE)
+                    .read_until(b'\n', &mut buf)
+                {
+                    Ok(0) => break, // clean EOF
+                    Ok(n) => n,
+                    Err(_) => break,
+                };
+                if n as u64 >= MAX_REQUEST_LINE && buf.last() != Some(&b'\n') {
+                    let _ = writer.write_all(b"{\"error\": \"request line too long\"}\n");
+                    break;
+                }
+                let Ok(line) = std::str::from_utf8(&buf) else {
+                    let _ = writer.write_all(b"{\"error\": \"request not utf-8\"}\n");
+                    break;
+                };
+                if line.trim().is_empty() {
+                    continue;
+                }
+                let resp = serve::handle_request_line(&srv, line.trim_end());
+                if writer
+                    .write_all(resp.as_bytes())
+                    .and_then(|()| writer.write_all(b"\n"))
+                    .is_err()
+                {
+                    break;
+                }
+            }
+        });
+    }
     Ok(())
 }
 

@@ -8,7 +8,7 @@ use std::sync::atomic::{AtomicPtr, Ordering};
 use crate::linalg::gemm::{matmul_nt, matmul_nt_prec, Precision};
 use crate::linalg::Mat;
 
-use super::weights::Weights;
+use super::weights::{PackedWeights, Weights};
 use super::ModelConfig;
 
 /// Calibration capture produced by `forward`.
@@ -171,6 +171,34 @@ pub struct ForwardOut {
     pub tape: Option<Tape>,
 }
 
+/// Where the forward's projection GEMMs read their weights from: the
+/// plain per-call-packing path, or the serving path's prepacked panels.
+enum WeightSource<'a> {
+    Plain(&'a Weights),
+    Packed(&'a PackedWeights),
+}
+
+impl<'a> WeightSource<'a> {
+    fn weights(&self) -> &Weights {
+        match self {
+            WeightSource::Plain(w) => w,
+            WeightSource::Packed(pw) => &pw.weights,
+        }
+    }
+
+    /// x · Wᵀ for the named projection matrix.  The packed arm always
+    /// takes the blocked driver at the pack-time precision (`prec` is
+    /// the plain path's knob), which makes every output row's bits
+    /// independent of the batch it rides in — the micro-batching
+    /// server's parity invariant.
+    fn project(&self, x: &Mat, name: &str, prec: Precision) -> Mat {
+        match self {
+            WeightSource::Plain(w) => matmul_nt_prec(x, w.get(name), prec),
+            WeightSource::Packed(pw) => pw.project(x, name),
+        }
+    }
+}
+
 /// Run the model on `tokens` = B windows of length T (flattened row-major).
 pub fn forward(
     cfg: &ModelConfig,
@@ -180,6 +208,37 @@ pub fn forward(
     t: usize,
     opts: &ForwardOpts,
 ) -> ForwardOut {
+    forward_src(cfg, &WeightSource::Plain(w), tokens, b, t, opts)
+}
+
+/// [`forward`] through prepacked projection panels — the serving path.
+/// Outputs are bit-identical to [`forward`] on the same (b, t) batch
+/// whenever the pack-time precision matches the GEMM path `forward`
+/// would take, and — unlike the plain path — bit-identical across
+/// *different* batch shapes too (see [`PackedWeights`]).  Taping is
+/// not supported here: WaterSIC-FT differentiates against the plain
+/// f64 oracle.
+pub fn forward_packed(
+    cfg: &ModelConfig,
+    pw: &PackedWeights,
+    tokens: &[i32],
+    b: usize,
+    t: usize,
+    opts: &ForwardOpts,
+) -> ForwardOut {
+    assert!(!opts.tape, "the packed forward does not tape (serving path)");
+    forward_src(cfg, &WeightSource::Packed(pw), tokens, b, t, opts)
+}
+
+fn forward_src(
+    cfg: &ModelConfig,
+    src: &WeightSource,
+    tokens: &[i32],
+    b: usize,
+    t: usize,
+    opts: &ForwardOpts,
+) -> ForwardOut {
+    let w = src.weights();
     assert_eq!(tokens.len(), b * t);
     let (d, nh) = (cfg.d_model, cfg.n_heads);
     let hd = cfg.head_dim();
@@ -218,9 +277,9 @@ pub fn forward(
         if opts.capture {
             cap.inputs.insert(format!("{p}attn.qkv"), h1.clone());
         }
-        let qf = matmul_nt_prec(&h1, w.get(&format!("{p}attn.wq")), prec);
-        let kf = matmul_nt_prec(&h1, w.get(&format!("{p}attn.wk")), prec);
-        let vf = matmul_nt_prec(&h1, w.get(&format!("{p}attn.wv")), prec);
+        let qf = src.project(&h1, &format!("{p}attn.wq"), prec);
+        let kf = src.project(&h1, &format!("{p}attn.wk"), prec);
+        let vf = src.project(&h1, &format!("{p}attn.wv"), prec);
 
         // split heads: per head (rows × hd)
         let split = |m: &Mat, h: usize| -> Mat {
@@ -338,7 +397,7 @@ pub fn forward(
             cap.inputs.insert(format!("{p}attn.wo"), ctxcat.clone());
             cap.residuals.insert(format!("{p}attn.wo"), x.clone());
         }
-        let attn_out = matmul_nt_prec(&ctxcat, w.get(&format!("{p}attn.wo")), prec);
+        let attn_out = src.project(&ctxcat, &format!("{p}attn.wo"), prec);
         let mut x_mid = x.clone();
         for i in 0..rows * d {
             x_mid.data[i] += attn_out.data[i];
@@ -349,8 +408,8 @@ pub fn forward(
         if opts.capture {
             cap.inputs.insert(format!("{p}ffn.in"), h2.clone());
         }
-        let pre1 = matmul_nt_prec(&h2, w.get(&format!("{p}ffn.w1")), prec);
-        let up = matmul_nt_prec(&h2, w.get(&format!("{p}ffn.w3")), prec);
+        let pre1 = src.project(&h2, &format!("{p}ffn.w1"), prec);
+        let up = src.project(&h2, &format!("{p}ffn.w3"), prec);
         let mut gate = pre1.clone();
         gate.data.iter_mut().for_each(|v| *v = silu(*v));
         let m = gate.hadamard(&up);
@@ -358,7 +417,7 @@ pub fn forward(
             cap.inputs.insert(format!("{p}ffn.w2"), m.clone());
             cap.residuals.insert(format!("{p}ffn.w2"), x_mid.clone());
         }
-        let ffn_out = matmul_nt_prec(&m, w.get(&format!("{p}ffn.w2")), prec);
+        let ffn_out = src.project(&m, &format!("{p}ffn.w2"), prec);
         let mut x_out = x_mid.clone();
         for i in 0..rows * d {
             x_out.data[i] += ffn_out.data[i];
@@ -386,7 +445,7 @@ pub fn forward(
 
     let x_final_in = if opts.tape { x.clone() } else { Mat::zeros(0, 0) };
     let xf = rms_norm(&x, w.get_vec("final_norm"), cfg.norm_eps);
-    let logits = matmul_nt_prec(&xf, w.get("head"), prec);
+    let logits = src.project(&xf, "head", prec);
 
     ForwardOut {
         capture: if opts.capture { Some(cap) } else { None },
@@ -723,6 +782,32 @@ mod tests {
             / o64.logits.frob_norm().max(1e-30);
         assert!(rel > 0.0, "f32 path did not engage");
         assert!(rel < 1e-4, "f32 forward drifted: {rel}");
+    }
+
+    #[test]
+    fn packed_forward_bit_identical_to_plain_f64() {
+        // tiny-model projections either sit below the packed threshold
+        // (k ≤ KC ⇒ the serial dot reduces in the same order as the
+        // single-KC-block packed tile) or route through the very same
+        // driver — so plain and packed forwards must agree bit for bit
+        let (cfg, w, tokens) = setup();
+        let plain = forward(&cfg, &w, &tokens, 2, cfg.ctx, &ForwardOpts::default());
+        let pw = PackedWeights::new(&cfg, w.clone(), Precision::F64);
+        let packed =
+            forward_packed(&cfg, &pw, &tokens, 2, cfg.ctx, &ForwardOpts::default());
+        assert_eq!(plain.logits.data, packed.logits.data);
+    }
+
+    #[test]
+    fn packed_forward_f32_close_to_f64() {
+        let (cfg, w, tokens) = setup();
+        let plain = forward(&cfg, &w, &tokens, 2, cfg.ctx, &ForwardOpts::default());
+        let pw32 = PackedWeights::new(&cfg, w.clone(), Precision::F32);
+        let packed =
+            forward_packed(&cfg, &pw32, &tokens, 2, cfg.ctx, &ForwardOpts::default());
+        let rel = packed.logits.sub(&plain.logits).frob_norm()
+            / plain.logits.frob_norm().max(1e-30);
+        assert!(rel < 1e-4, "f32 packed forward drifted: {rel}");
     }
 
     #[test]

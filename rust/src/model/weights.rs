@@ -7,6 +7,8 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::coordinator::container::Container;
+use crate::linalg::gemm::{matmul_prepacked, Precision, PrepackedB};
 use crate::linalg::Mat;
 use crate::util::npy::{Npy, NpyData};
 
@@ -138,6 +140,104 @@ impl Weights {
     }
 }
 
+/// Weights plus per-matrix prepacked projection panels — the serving
+/// path's model representation.  Every matrix the forward routes
+/// through a projection GEMM (per-layer QKV/wo/FFN and the LM head) is
+/// packed **once** at load time via [`PrepackedB::pack_nt`]; batched
+/// forwards then skip the per-call B-pack entirely.  The raw f64
+/// storage of a packed matrix is dropped right after packing (the
+/// packed forward never reads it), so serving holds one copy of each
+/// weight, not two; only the embedding table (a row lookup) and the
+/// norm gains remain in [`Weights`].
+///
+/// The pack precision is fixed at build time (normally the
+/// `WATERSIC_PRECISION` engine option); a packed forward always runs
+/// the blocked driver at that precision, so its outputs are
+/// bit-identical across thread counts, batch compositions, and
+/// dispatch rungs (see [`PrepackedB`]).
+pub struct PackedWeights {
+    /// embed + norm gains (+ anything never routed through a
+    /// projection); packed matrices are removed from `mats`
+    pub weights: Weights,
+    pub packed: BTreeMap<String, PrepackedB>,
+    pub precision: Precision,
+}
+
+impl PackedWeights {
+    /// Prepack every projection matrix of `weights` for the given
+    /// model architecture.
+    pub fn new(
+        cfg: &ModelConfig,
+        mut weights: Weights,
+        prec: Precision,
+    ) -> PackedWeights {
+        let mut names = vec!["head".to_string()];
+        for i in 0..cfg.n_layers {
+            let p = format!("layers.{i}.");
+            for s in [
+                "attn.wq", "attn.wk", "attn.wv", "attn.wo", "ffn.w1", "ffn.w3",
+                "ffn.w2",
+            ] {
+                names.push(format!("{p}{s}"));
+            }
+        }
+        let mut packed = BTreeMap::new();
+        for name in names {
+            let pb = PrepackedB::pack_nt(weights.get(&name), prec);
+            weights.mats.remove(&name);
+            packed.insert(name, pb);
+        }
+        PackedWeights {
+            weights,
+            packed,
+            precision: prec,
+        }
+    }
+
+    /// Dequantize a `.wsic` container over the base weights (embed /
+    /// norms / head come from `base`; quantized matrices are
+    /// reconstructed), then prepack — the container-to-serving load
+    /// path.  Quantized matrices are dequantized straight into the
+    /// student (the base copies they replace are never cloned), so the
+    /// load peak stays near one model's worth of weights.
+    pub fn from_container(
+        cfg: &ModelConfig,
+        base: &Weights,
+        container: &Container,
+        prec: Precision,
+    ) -> Result<PackedWeights> {
+        for name in container.quants.keys() {
+            if !base.mats.contains_key(name) {
+                bail!("container matrix {name} unknown to the base weights");
+            }
+        }
+        let mut student = Weights {
+            mats: BTreeMap::new(),
+            vecs: base.vecs.clone(),
+        };
+        for (name, m) in &base.mats {
+            let rebuilt = match container.quants.get(name) {
+                Some(q) => q.dequant(),
+                None => m.clone(),
+            };
+            student.mats.insert(name.clone(), rebuilt);
+        }
+        student.validate(cfg)?;
+        Ok(Self::new(cfg, student, prec))
+    }
+
+    /// Projection through the prepacked panels: x · Wᵀ for the named
+    /// matrix, bit-identical to the pack-per-call driver.
+    pub fn project(&self, x: &Mat, name: &str) -> Mat {
+        matmul_prepacked(x, &self.packed[name])
+    }
+
+    /// Total bytes held by the packed panels (load-time telemetry).
+    pub fn packed_bytes(&self) -> usize {
+        self.packed.values().map(|p| p.bytes()).sum()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -173,6 +273,23 @@ mod tests {
         let a = w.get("layers.0.attn.wq");
         let b = w2.get("layers.0.attn.wq");
         assert!(a.sub(b).max_abs() < 1e-6); // f32 roundtrip tolerance
+    }
+
+    #[test]
+    fn packed_weights_project_matches_plain() {
+        let cfg = ModelConfig::tiny_test();
+        let w = Weights::random(&cfg, 11);
+        let pw = PackedWeights::new(&cfg, w.clone(), Precision::F64);
+        assert_eq!(pw.packed.len(), 7 * cfg.n_layers + 1);
+        assert!(pw.packed_bytes() > 0);
+        let mut rng = crate::util::rng::Rng::new(3);
+        let x = Mat::from_fn(10, cfg.d_model, |_, _| rng.gaussian());
+        let y = pw.project(&x, "layers.0.attn.wq");
+        // k = d_model ≤ KC and f64 ⇒ the serial dot of the plain small
+        // path reduces in the same order as the single-KC-block packed
+        // tile: bitwise equality, not just tolerance
+        let y_ref = crate::linalg::gemm::matmul_nt(&x, w.get("layers.0.attn.wq"));
+        assert_eq!(y.data, y_ref.data);
     }
 
     #[test]

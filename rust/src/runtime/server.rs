@@ -1,0 +1,645 @@
+//! Micro-batching inference server over a prepacked `.wsic` model —
+//! the serving path of the reproduction (continuous-batching designs à
+//! la Orca/vLLM, scaled to this repo's CPU substrate).
+//!
+//! Concurrent scoring/generation requests land in a queue; a batcher
+//! thread coalesces them — up to `WATERSIC_SERVE_BATCH` requests per
+//! forward, with a deadline-based flush (`WATERSIC_SERVE_FLUSH_US`) so
+//! a lone request never waits for a full batch — pads them to a
+//! uniform window length, runs **one** batched [`forward_packed`] over
+//! the persistent worker pool, and fans the responses back out.
+//!
+//! Why padding is sound: attention is causal within each window, RoPE
+//! positions are window-relative, and the prepacked GEMM entries fix
+//! every output row's reduction order independently of the batch row
+//! count (see [`crate::linalg::gemm::PrepackedB`]).  A request's
+//! response is therefore **bit-identical** no matter which micro-batch
+//! it rides in, how many co-batched requests surround it, or how many
+//! worker threads run the kernels — the serve parity tests pin this.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context as _, Result};
+
+use crate::coordinator::container::Container;
+use crate::linalg::gemm::Precision;
+use crate::linalg::Mat;
+use crate::model::transformer::{forward_packed, ForwardOpts};
+use crate::model::weights::{PackedWeights, Weights};
+use crate::model::ModelConfig;
+use crate::util::json::{obj, Json};
+
+/// The `WATERSIC_SERVE_BATCH` engine option: max requests coalesced
+/// into one batched forward.  Default 8, minimum 1 (no batching).
+pub fn serve_batch_from_env() -> usize {
+    std::env::var("WATERSIC_SERVE_BATCH")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .map(|n| n.max(1))
+        .unwrap_or(8)
+}
+
+/// The `WATERSIC_SERVE_FLUSH_US` engine option: how long (µs) the
+/// batcher holds a partial batch open for co-arriving requests before
+/// flushing it.  Default 500µs; 0 flushes immediately.
+pub fn serve_flush_us_from_env() -> u64 {
+    std::env::var("WATERSIC_SERVE_FLUSH_US")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .unwrap_or(500)
+}
+
+#[derive(Clone, Debug)]
+pub struct ServeOpts {
+    /// max requests per batched forward
+    pub batch_max: usize,
+    /// deadline a partial batch is held open for
+    pub flush: Duration,
+}
+
+impl Default for ServeOpts {
+    fn default() -> ServeOpts {
+        ServeOpts {
+            batch_max: serve_batch_from_env(),
+            flush: Duration::from_micros(serve_flush_us_from_env()),
+        }
+    }
+}
+
+/// Response to one scoring request.
+#[derive(Clone, Debug)]
+pub struct ScoreOut {
+    /// logits at the last real token of the window (vocab-sized) —
+    /// enough for greedy/sampled continuation and parity checks
+    pub logits_last: Vec<f64>,
+    /// mean next-token NLL over the window, nats (0.0 when len < 2)
+    pub nll: f64,
+    /// real (unpadded) window length
+    pub len: usize,
+    /// how many requests rode in the same micro-batch (telemetry)
+    pub batched_with: usize,
+}
+
+impl ScoreOut {
+    /// Greedy next token (ties keep the last index, matching
+    /// [`crate::model::transformer::greedy_continuation`]).
+    pub fn argmax(&self) -> usize {
+        let mut best = 0;
+        for (i, &v) in self.logits_last.iter().enumerate() {
+            if v >= self.logits_last[best] {
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+struct Pending {
+    tokens: Vec<i32>,
+    resp: mpsc::Sender<ScoreOut>,
+}
+
+struct Queue {
+    q: VecDeque<Pending>,
+    shutdown: bool,
+}
+
+/// Cumulative server counters (monotone; snapshot-diff around a run to
+/// measure it in isolation).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ServeStats {
+    pub requests: usize,
+    pub batches: usize,
+    /// real (unpadded) tokens forwarded
+    pub tokens: usize,
+    pub max_batch: usize,
+}
+
+struct Inner {
+    cfg: ModelConfig,
+    model: PackedWeights,
+    opts: ServeOpts,
+    queue: Mutex<Queue>,
+    cv: Condvar,
+    requests: AtomicUsize,
+    batches: AtomicUsize,
+    tokens: AtomicUsize,
+    max_batch: AtomicUsize,
+}
+
+/// In-flight request handle; [`ScoreHandle::wait`] blocks for the
+/// batched response.
+pub struct ScoreHandle {
+    rx: mpsc::Receiver<ScoreOut>,
+}
+
+impl ScoreHandle {
+    pub fn wait(self) -> Result<ScoreOut> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow!("serve request dropped before completion"))
+    }
+}
+
+/// The serving engine: owns the prepacked model and the batcher
+/// thread.  Cheap to share behind an `Arc` (all methods take `&self`);
+/// dropping it drains the queue and joins the batcher.
+pub struct Server {
+    inner: Arc<Inner>,
+    batcher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start serving a prepacked model.
+    pub fn start(cfg: ModelConfig, model: PackedWeights, opts: ServeOpts) -> Server {
+        let inner = Arc::new(Inner {
+            cfg,
+            model,
+            opts,
+            queue: Mutex::new(Queue {
+                q: VecDeque::new(),
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+            requests: AtomicUsize::new(0),
+            batches: AtomicUsize::new(0),
+            tokens: AtomicUsize::new(0),
+            max_batch: AtomicUsize::new(0),
+        });
+        let worker = inner.clone();
+        let batcher = std::thread::Builder::new()
+            .name("watersic-serve-batcher".to_string())
+            .spawn(move || batcher_loop(&worker))
+            .expect("spawning serve batcher");
+        Server {
+            inner,
+            batcher: Some(batcher),
+        }
+    }
+
+    /// Load path: dequantize a `.wsic` container over the base weights,
+    /// prepack at the given precision, start serving.
+    pub fn from_container(
+        cfg: &ModelConfig,
+        base: &Weights,
+        container: &Container,
+        prec: Precision,
+        opts: ServeOpts,
+    ) -> Result<Server> {
+        let packed = PackedWeights::from_container(cfg, base, container, prec)?;
+        Ok(Server::start(cfg.clone(), packed, opts))
+    }
+
+    /// Enqueue a scoring request (returns immediately).
+    pub fn submit(&self, tokens: Vec<i32>) -> Result<ScoreHandle> {
+        ensure!(!tokens.is_empty(), "empty token window");
+        ensure!(
+            tokens.len() <= self.inner.cfg.ctx,
+            "window of {} exceeds ctx {}",
+            tokens.len(),
+            self.inner.cfg.ctx
+        );
+        for &t in &tokens {
+            ensure!(
+                t >= 0 && (t as usize) < self.inner.cfg.vocab,
+                "token {t} outside vocab {}",
+                self.inner.cfg.vocab
+            );
+        }
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut g = self.inner.queue.lock().unwrap();
+            if g.shutdown {
+                bail!("server is shutting down");
+            }
+            g.q.push_back(Pending { tokens, resp: tx });
+        }
+        self.inner.requests.fetch_add(1, Ordering::Relaxed);
+        self.inner.cv.notify_all();
+        Ok(ScoreHandle { rx })
+    }
+
+    /// Score a window, blocking for the batched response.
+    pub fn score(&self, tokens: Vec<i32>) -> Result<ScoreOut> {
+        self.submit(tokens)?.wait()
+    }
+
+    /// Greedy continuation driven through the batched score path —
+    /// each step rides whatever micro-batch is in flight alongside
+    /// other clients' requests.
+    pub fn generate(&self, prompt: &[i32], steps: usize) -> Result<Vec<i32>> {
+        ensure!(!prompt.is_empty(), "empty prompt");
+        let mut toks = prompt.to_vec();
+        for _ in 0..steps {
+            let start = toks.len() - toks.len().min(self.inner.cfg.ctx);
+            let out = self.score(toks[start..].to_vec())?;
+            toks.push(out.argmax() as i32);
+        }
+        Ok(toks)
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        ServeStats {
+            requests: self.inner.requests.load(Ordering::Relaxed),
+            batches: self.inner.batches.load(Ordering::Relaxed),
+            tokens: self.inner.tokens.load(Ordering::Relaxed),
+            max_batch: self.inner.max_batch.load(Ordering::Relaxed),
+        }
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.inner.cfg
+    }
+
+    /// Bytes held by the prepacked panels (load-time telemetry).
+    pub fn packed_bytes(&self) -> usize {
+        self.inner.model.packed_bytes()
+    }
+
+    /// Drain the queue, stop the batcher, and return the final
+    /// counters.  Also runs on drop (without the counters).
+    pub fn shutdown(mut self) -> ServeStats {
+        self.stop();
+        self.stats()
+    }
+
+    fn stop(&mut self) {
+        {
+            let mut g = self.inner.queue.lock().unwrap();
+            g.shutdown = true;
+        }
+        self.inner.cv.notify_all();
+        if let Some(h) = self.batcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn batcher_loop(inner: &Inner) {
+    loop {
+        let batch: Vec<Pending> = {
+            let mut g = inner.queue.lock().unwrap();
+            loop {
+                if !g.q.is_empty() {
+                    break;
+                }
+                if g.shutdown {
+                    return;
+                }
+                g = inner.cv.wait(g).unwrap();
+            }
+            // deadline-based coalescing: hold the partial batch open a
+            // short window for co-arriving requests
+            let deadline = Instant::now() + inner.opts.flush;
+            while g.q.len() < inner.opts.batch_max && !g.shutdown {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (ng, _) = inner.cv.wait_timeout(g, deadline - now).unwrap();
+                g = ng;
+            }
+            let take = g.q.len().min(inner.opts.batch_max);
+            g.q.drain(..take).collect()
+        };
+        // a panicking forward must not kill the batcher: the moved-in
+        // senders drop on unwind, so the affected clients see an error
+        // while later requests keep being served
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_batch(inner, batch)
+        }));
+        if res.is_err() {
+            log::warn!("serve batch panicked; affected requests dropped");
+        }
+    }
+}
+
+fn run_batch(inner: &Inner, batch: Vec<Pending>) {
+    let b = batch.len();
+    if b == 0 {
+        return;
+    }
+    let t_max = batch.iter().map(|p| p.tokens.len()).max().unwrap();
+    // pad each window to the batch max with token 0: causal attention
+    // and window-relative RoPE keep every row before the pad
+    // bit-identical to the unpadded forward (module docs)
+    let mut toks = Vec::with_capacity(b * t_max);
+    let mut real_tokens = 0;
+    for p in &batch {
+        real_tokens += p.tokens.len();
+        toks.extend_from_slice(&p.tokens);
+        toks.resize(toks.len() + (t_max - p.tokens.len()), 0);
+    }
+    let out = forward_packed(
+        &inner.cfg,
+        &inner.model,
+        &toks,
+        b,
+        t_max,
+        &ForwardOpts::default(),
+    );
+    inner.batches.fetch_add(1, Ordering::Relaxed);
+    inner.tokens.fetch_add(real_tokens, Ordering::Relaxed);
+    inner.max_batch.fetch_max(b, Ordering::Relaxed);
+    for (i, p) in batch.into_iter().enumerate() {
+        let base = i * t_max;
+        let len = p.tokens.len();
+        let score = ScoreOut {
+            logits_last: out.logits.row(base + len - 1).to_vec(),
+            nll: window_nll(&out.logits, base, &p.tokens),
+            len,
+            batched_with: b,
+        };
+        // a client that gave up (dropped its handle) is not an error
+        let _ = p.resp.send(score);
+    }
+}
+
+/// Mean next-token NLL (nats) of one window whose rows start at `base`
+/// in the batched logits; 0.0 for single-token windows.
+fn window_nll(logits: &Mat, base: usize, tokens: &[i32]) -> f64 {
+    if tokens.len() < 2 {
+        return 0.0;
+    }
+    let mut total = 0.0;
+    for pos in 0..tokens.len() - 1 {
+        let row = logits.row(base + pos);
+        let mx = row.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let lse = mx + row.iter().map(|v| (v - mx).exp()).sum::<f64>().ln();
+        total += lse - row[tokens[pos + 1] as usize];
+    }
+    total / (tokens.len() - 1) as f64
+}
+
+// ---------------------------------------------------------------------
+// self-driving load test (the CI serve-smoke driver)
+
+/// Result of one [`load_test`] run.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    pub clients: usize,
+    pub requests: usize,
+    pub total_tokens: usize,
+    pub wall_secs: f64,
+    /// real tokens scored per second across all clients
+    pub throughput_tok_s: f64,
+    pub p50_ms: f64,
+    pub p90_ms: f64,
+    pub p99_ms: f64,
+    pub batches: usize,
+    pub mean_batch: f64,
+    pub max_batch: usize,
+}
+
+impl LoadReport {
+    pub fn print(&self) {
+        println!(
+            "load test: {} clients x {} requests  ({} tokens, {:.2}s wall)",
+            self.clients,
+            self.requests / self.clients.max(1),
+            self.total_tokens,
+            self.wall_secs
+        );
+        println!("  throughput : {:.0} tok/s", self.throughput_tok_s);
+        println!(
+            "  latency    : p50 {:.2} ms  p90 {:.2} ms  p99 {:.2} ms",
+            self.p50_ms, self.p90_ms, self.p99_ms
+        );
+        println!(
+            "  batching   : {} batches (mean {:.2}, max {})",
+            self.batches, self.mean_batch, self.max_batch
+        );
+    }
+}
+
+/// Drive the server with `clients` concurrent threads, each submitting
+/// `per_client` scoring requests over deterministic token windows of
+/// varying length, and measure per-request wall latency plus end-to-end
+/// token throughput.
+pub fn load_test(
+    server: &Server,
+    clients: usize,
+    per_client: usize,
+    seed: u64,
+) -> Result<LoadReport> {
+    ensure!(clients >= 1 && per_client >= 1, "empty load test");
+    let cfg = server.config();
+    let (vocab, ctx) = (cfg.vocab, cfg.ctx);
+    let before = server.stats();
+    let t0 = Instant::now();
+    let lat_tok: Vec<(f64, usize, usize)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..clients)
+            .map(|c| {
+                scope.spawn(move || -> Result<Vec<(f64, usize, usize)>> {
+                    let mut rng = crate::util::rng::Rng::new(
+                        seed ^ (c as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+                    );
+                    let mut out = Vec::with_capacity(per_client);
+                    for _ in 0..per_client {
+                        let len = 4 + rng.below(ctx.saturating_sub(3).max(1));
+                        let len = len.min(ctx);
+                        let tokens: Vec<i32> =
+                            (0..len).map(|_| rng.below(vocab) as i32).collect();
+                        let t = Instant::now();
+                        let score = server.score(tokens)?;
+                        out.push((
+                            t.elapsed().as_secs_f64() * 1e3,
+                            score.len,
+                            score.batched_with,
+                        ));
+                    }
+                    Ok(out)
+                })
+            })
+            .collect();
+        let mut all = Vec::new();
+        let mut err = None;
+        for h in handles {
+            match h.join().expect("load-test client panicked") {
+                Ok(v) => all.extend(v),
+                Err(e) => err = Some(e),
+            }
+        }
+        match err {
+            Some(e) => Err(e),
+            None => Ok(all),
+        }
+    })?;
+    let wall_secs = t0.elapsed().as_secs_f64();
+    let after = server.stats();
+    let total_tokens: usize = lat_tok.iter().map(|&(_, n, _)| n).sum();
+    // run-local, like batches/requests: derived from this run's own
+    // responses, not the server-lifetime high-water mark
+    let max_batch = lat_tok.iter().map(|&(_, _, b)| b).max().unwrap_or(0);
+    let mut lats: Vec<f64> = lat_tok.iter().map(|&(l, _, _)| l).collect();
+    lats.sort_by(f64::total_cmp);
+    let pick = |q: f64| lats[((lats.len() - 1) as f64 * q) as usize];
+    let batches = after.batches - before.batches;
+    Ok(LoadReport {
+        clients,
+        requests: lats.len(),
+        total_tokens,
+        wall_secs,
+        throughput_tok_s: total_tokens as f64 / wall_secs.max(1e-9),
+        p50_ms: pick(0.5),
+        p90_ms: pick(0.9),
+        p99_ms: pick(0.99),
+        batches,
+        mean_batch: lats.len() as f64 / batches.max(1) as f64,
+        max_batch,
+    })
+}
+
+// ---------------------------------------------------------------------
+// line-JSON front door (the TCP protocol body, kept here so the lib
+// tests cover it; main.rs only wires the sockets)
+
+/// Handle one line of the serve protocol and serialize the response.
+/// Requests:
+///   `{"tokens": [..]}`               → `{"len", "next", "nll", "batched_with"}`
+///   `{"prompt": [..], "steps": N}`   → `{"tokens": [..]}`
+/// Errors come back as `{"error": "..."}` lines — a malformed request
+/// never kills the connection.
+pub fn handle_request_line(server: &Server, line: &str) -> String {
+    match handle_request_inner(server, line) {
+        Ok(j) => j.to_string_compact(),
+        Err(e) => obj(vec![("error", Json::Str(format!("{e:#}")))]).to_string_compact(),
+    }
+}
+
+fn parse_tokens(j: &Json) -> Result<Vec<i32>> {
+    j.as_arr()?
+        .iter()
+        .map(|v| {
+            let x = v.as_f64()?;
+            ensure!(
+                x.fract() == 0.0 && (0.0..2_147_483_648.0).contains(&x),
+                "bad token {x}"
+            );
+            Ok(x as i32)
+        })
+        .collect()
+}
+
+fn handle_request_inner(server: &Server, line: &str) -> Result<Json> {
+    let req = Json::parse(line).context("parsing request")?;
+    if let Some(toks) = req.get("tokens") {
+        let out = server.score(parse_tokens(toks)?)?;
+        return Ok(obj(vec![
+            ("len", Json::Num(out.len as f64)),
+            ("next", Json::Num(out.argmax() as f64)),
+            ("nll", Json::Num(out.nll)),
+            ("batched_with", Json::Num(out.batched_with as f64)),
+        ]));
+    }
+    if let Some(prompt) = req.get("prompt") {
+        let steps = match req.get("steps") {
+            Some(s) => s.as_usize()?,
+            None => 8,
+        };
+        ensure!(steps <= 256, "steps capped at 256");
+        let toks = server.generate(&parse_tokens(prompt)?, steps)?;
+        return Ok(obj(vec![(
+            "tokens",
+            Json::Arr(toks.iter().map(|&t| Json::Num(t as f64)).collect()),
+        )]));
+    }
+    bail!("request needs \"tokens\" or \"prompt\"")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_server(batch_max: usize, flush: Duration) -> Server {
+        let cfg = ModelConfig::tiny_test();
+        let w = Weights::random(&cfg, 21);
+        let pw = PackedWeights::new(&cfg, w, Precision::F64);
+        Server::start(
+            cfg,
+            pw,
+            ServeOpts {
+                batch_max,
+                flush,
+            },
+        )
+    }
+
+    #[test]
+    fn score_returns_vocab_logits_and_counts() {
+        let server = tiny_server(4, Duration::from_micros(200));
+        let out = server.score(vec![1, 2, 3, 4]).unwrap();
+        assert_eq!(out.logits_last.len(), 128);
+        assert_eq!(out.len, 4);
+        assert!(out.batched_with >= 1);
+        assert!(out.nll.is_finite());
+        assert!(out.argmax() < 128);
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 1);
+        assert_eq!(stats.tokens, 4);
+        assert!(stats.batches >= 1);
+    }
+
+    #[test]
+    fn submit_validates_windows() {
+        let server = tiny_server(2, Duration::from_micros(0));
+        assert!(server.submit(vec![]).is_err());
+        assert!(server.submit(vec![0; 13]).is_err()); // ctx = 12
+        assert!(server.submit(vec![-1]).is_err());
+        assert!(server.submit(vec![128]).is_err()); // vocab = 128
+        assert!(server.submit(vec![127; 12]).is_ok());
+    }
+
+    #[test]
+    fn generate_extends_prompt() {
+        let server = tiny_server(4, Duration::from_micros(100));
+        let out = server.generate(&[5, 6, 7], 3).unwrap();
+        assert_eq!(out.len(), 6);
+        assert_eq!(&out[..3], &[5, 6, 7]);
+        assert!(out.iter().all(|&t| (0..128).contains(&t)));
+    }
+
+    #[test]
+    fn protocol_lines_roundtrip() {
+        let server = tiny_server(4, Duration::from_micros(100));
+        let resp = handle_request_line(&server, "{\"tokens\": [1, 2, 3]}");
+        let j = Json::parse(&resp).unwrap();
+        assert_eq!(j.req("len").unwrap().as_usize().unwrap(), 3);
+        assert!(j.req("next").unwrap().as_usize().unwrap() < 128);
+        let resp = handle_request_line(&server, "{\"prompt\": [4, 5], \"steps\": 2}");
+        let j = Json::parse(&resp).unwrap();
+        assert_eq!(j.req("tokens").unwrap().as_arr().unwrap().len(), 4);
+        // malformed requests come back as error lines, not panics
+        for bad in ["nonsense", "{}", "{\"tokens\": [99999]}", "{\"tokens\": []}"] {
+            let resp = handle_request_line(&server, bad);
+            assert!(
+                Json::parse(&resp).unwrap().get("error").is_some(),
+                "{bad} must error"
+            );
+        }
+    }
+
+    #[test]
+    fn load_test_reports_consistent_counters() {
+        let server = tiny_server(4, Duration::from_micros(200));
+        let rep = load_test(&server, 3, 4, 7).unwrap();
+        assert_eq!(rep.requests, 12);
+        assert!(rep.total_tokens >= 12 * 4);
+        assert!(rep.throughput_tok_s > 0.0);
+        assert!(rep.p50_ms <= rep.p90_ms && rep.p90_ms <= rep.p99_ms);
+        assert!(rep.batches >= 3 && rep.batches <= 12);
+        assert!(rep.max_batch <= 4);
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, 12);
+        assert_eq!(stats.tokens, rep.total_tokens);
+    }
+}

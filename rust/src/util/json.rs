@@ -84,6 +84,13 @@ impl Json {
         out
     }
 
+    /// Single-line serialization (the serve front door's line protocol).
+    pub fn to_string_compact(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out, 0, false);
+        out
+    }
+
     fn write(&self, out: &mut String, indent: usize, pretty: bool) {
         let pad = |out: &mut String, lvl: usize| {
             if pretty {
@@ -384,5 +391,16 @@ mod tests {
     fn unicode_string() {
         let v = Json::parse(r#""café naïve""#).unwrap();
         assert_eq!(v.as_str().unwrap(), "café naïve");
+    }
+
+    #[test]
+    fn compact_is_single_line_and_reparses() {
+        let v = obj(vec![
+            ("tokens", Json::Arr(vec![Json::Num(1.0), Json::Num(2.0)])),
+            ("nll", Json::Num(1.25)),
+        ]);
+        let s = v.to_string_compact();
+        assert!(!s.contains('\n'), "compact output must be one line: {s:?}");
+        assert_eq!(Json::parse(&s).unwrap(), v);
     }
 }

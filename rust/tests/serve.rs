@@ -1,0 +1,259 @@
+//! Serve parity: the micro-batching server's outputs must be
+//! **bit-identical** to a sequential per-request dequant-forward
+//! reference — invariant across batch sizes, request arrival orders,
+//! and `WATERSIC_THREADS`.  This binary mutates that env var, so it
+//! lives outside the shared test harness and every test takes
+//! [`env_lock`] for its whole body: `setenv` racing the kernels'
+//! `getenv` reads would be UB, so no two tests here may overlap.
+//!
+//! The synthetic tiny model is quantized once (the same deterministic
+//! setup the CLI `--model tiny` path and CI's determinism gate use)
+//! and the container round-trips through bytes before serving.
+
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Duration;
+
+use watersic::coordinator::container::Container;
+use watersic::coordinator::quantize_model;
+use watersic::experiments::{synthetic_tiny_opts, synthetic_tiny_setup};
+use watersic::linalg::gemm::Precision;
+use watersic::model::transformer::{
+    forward, forward_packed, greedy_continuation, ForwardOpts,
+};
+use watersic::model::weights::{PackedWeights, Weights};
+use watersic::model::ModelConfig;
+use watersic::runtime::server::{ScoreHandle, Server};
+use watersic::runtime::ServeOpts;
+use watersic::util::rng::Rng;
+
+/// Serializes every test in this binary: one of them mutates
+/// `WATERSIC_THREADS` while the kernels read it through `env::var` on
+/// every GEMM call, and a concurrent `setenv`/`getenv` pair is UB on
+/// glibc — so no two tests here may overlap.  (Held across the whole
+/// test body; a panicked holder must not wedge the rest.)
+fn env_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Quantize the synthetic tiny model once per process.
+fn setup() -> &'static (ModelConfig, Weights, Container) {
+    static SETUP: OnceLock<(ModelConfig, Weights, Container)> = OnceLock::new();
+    SETUP.get_or_init(|| {
+        let (cfg, teacher, corpus) = synthetic_tiny_setup();
+        let opts = synthetic_tiny_opts(3.0);
+        let qm = quantize_model(&cfg, &teacher, &corpus, &opts, None).unwrap();
+        let container = Container::new(&cfg.name, qm.quants.clone());
+        // round-trip through the wire format, as the CLI load path does
+        let container = Container::from_bytes(&container.to_bytes()).unwrap();
+        (cfg, teacher, container)
+    })
+}
+
+/// Deterministic request windows with a spread of lengths.
+fn requests(cfg: &ModelConfig, n: usize, seed: u64) -> Vec<Vec<i32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let len = 4 + (i % (cfg.ctx - 3));
+            (0..len).map(|_| rng.below(cfg.vocab) as i32).collect()
+        })
+        .collect()
+}
+
+/// Dequantized student weights (the plain-forward reference model).
+fn student(teacher: &Weights, container: &Container) -> Weights {
+    let mut s = teacher.clone();
+    for (name, q) in &container.quants {
+        s.set(name, q.dequant());
+    }
+    s
+}
+
+#[test]
+fn batched_serve_bit_identical_to_sequential_reference() {
+    let _serial = env_lock();
+    let (cfg, teacher, container) = setup();
+    let prec = Precision::from_env();
+    let pw = PackedWeights::from_container(cfg, teacher, container, prec).unwrap();
+    let reqs = requests(cfg, 16, 2024);
+
+    // sequential per-request dequant-forward reference: a batch of one
+    // through the same prepacked panels
+    let reference: Vec<Vec<f64>> = reqs
+        .iter()
+        .map(|toks| {
+            let out =
+                forward_packed(cfg, &pw, toks, 1, toks.len(), &ForwardOpts::default());
+            out.logits.row(toks.len() - 1).to_vec()
+        })
+        .collect();
+
+    let run_server = |batch_max: usize, flush_ms: u64, order: &[usize]| {
+        let pw =
+            PackedWeights::from_container(cfg, teacher, container, prec).unwrap();
+        let server = Server::start(
+            cfg.clone(),
+            pw,
+            ServeOpts {
+                batch_max,
+                flush: Duration::from_millis(flush_ms),
+            },
+        );
+        let mut handles: Vec<Option<ScoreHandle>> =
+            (0..reqs.len()).map(|_| None).collect();
+        for &i in order {
+            handles[i] = Some(server.submit(reqs[i].clone()).unwrap());
+        }
+        let outs: Vec<Vec<f64>> = handles
+            .into_iter()
+            .map(|h| h.unwrap().wait().unwrap().logits_last)
+            .collect();
+        let stats = server.shutdown();
+        assert_eq!(stats.requests, reqs.len());
+        if batch_max > 1 {
+            assert!(stats.max_batch >= 2, "batching never engaged");
+        }
+        outs
+    };
+
+    let in_order: Vec<usize> = (0..reqs.len()).collect();
+    let reversed: Vec<usize> = (0..reqs.len()).rev().collect();
+    let batched = run_server(4, 100, &in_order);
+    let sequential = run_server(1, 0, &in_order);
+    let other_order = run_server(4, 100, &reversed);
+    for i in 0..reqs.len() {
+        assert_eq!(batched[i], reference[i], "request {i}: batched vs reference");
+        assert_eq!(sequential[i], reference[i], "request {i}: batch_max=1");
+        assert_eq!(other_order[i], reference[i], "request {i}: arrival order");
+    }
+}
+
+#[test]
+fn serve_outputs_invariant_across_worker_threads() {
+    let _serial = env_lock();
+    // the tiny quantized model's GEMMs sit below the threads_for()
+    // cutoff (they run serial at any WATERSIC_THREADS), which would
+    // make this test vacuous — so serve a wider unquantized model
+    // whose batched projections clear both the packed and the
+    // parallel thresholds and genuinely fan out over the pool
+    let cfg = ModelConfig {
+        vocab: 64,
+        d_model: 64,
+        n_heads: 4,
+        d_ff: 128,
+        ctx: 64,
+        ..ModelConfig::tiny_test()
+    };
+    let weights = Weights::random(&cfg, 77);
+    let prec = Precision::from_env();
+    // near-full windows: a 3-request batch drives every projection
+    // past the 2^18 threads_for() cutoff, so WATERSIC_THREADS=4 really
+    // fans the row blocks out
+    let mut rng = Rng::new(7);
+    let reqs: Vec<Vec<i32>> = (0..6)
+        .map(|i| {
+            (0..cfg.ctx - (i % 4))
+                .map(|_| rng.below(cfg.vocab) as i32)
+                .collect()
+        })
+        .collect();
+    let run = || -> Vec<Vec<f64>> {
+        let pw = PackedWeights::new(&cfg, weights.clone(), prec);
+        let server = Server::start(
+            cfg.clone(),
+            pw,
+            ServeOpts {
+                batch_max: 3,
+                flush: Duration::from_millis(50),
+            },
+        );
+        let handles: Vec<ScoreHandle> = reqs
+            .iter()
+            .map(|r| server.submit(r.clone()).unwrap())
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.wait().unwrap().logits_last)
+            .collect()
+    };
+    let old = std::env::var("WATERSIC_THREADS").ok();
+    std::env::set_var("WATERSIC_THREADS", "1");
+    let single = run();
+    std::env::set_var("WATERSIC_THREADS", "4");
+    let multi = run();
+    match old {
+        Some(v) => std::env::set_var("WATERSIC_THREADS", v),
+        None => std::env::remove_var("WATERSIC_THREADS"),
+    }
+    assert_eq!(single, multi, "serve outputs must not depend on threads");
+}
+
+#[test]
+fn serve_matches_plain_dequant_forward() {
+    let _serial = env_lock();
+    let (cfg, teacher, container) = setup();
+    let prec = Precision::from_env();
+    let student = student(teacher, container);
+    let reqs = requests(cfg, 8, 33);
+    let pw = PackedWeights::from_container(cfg, teacher, container, prec).unwrap();
+    let server = Server::start(
+        cfg.clone(),
+        pw,
+        ServeOpts {
+            batch_max: 4,
+            flush: Duration::from_millis(50),
+        },
+    );
+    let handles: Vec<ScoreHandle> = reqs
+        .iter()
+        .map(|r| server.submit(r.clone()).unwrap())
+        .collect();
+    let outs: Vec<Vec<f64>> = handles
+        .into_iter()
+        .map(|h| h.wait().unwrap().logits_last)
+        .collect();
+    for (i, toks) in reqs.iter().enumerate() {
+        let plain =
+            forward(cfg, &student, toks, 1, toks.len(), &ForwardOpts::default());
+        let last = plain.logits.row(toks.len() - 1);
+        if prec == Precision::F64 {
+            // every tiny-model projection either reduces in the same
+            // order as the packed tile (k ≤ KC) or runs the very same
+            // driver, so the comparison is bitwise
+            assert_eq!(outs[i].as_slice(), last, "request {i}");
+        } else {
+            let norm = last.iter().map(|v| v * v).sum::<f64>().sqrt();
+            let diff = outs[i]
+                .iter()
+                .zip(last)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt();
+            assert!(
+                diff / norm.max(1e-30) < 1e-3,
+                "request {i}: f32 serve drifted ({})",
+                diff / norm.max(1e-30)
+            );
+        }
+    }
+}
+
+#[test]
+fn serve_generate_matches_plain_greedy() {
+    let _serial = env_lock();
+    let (cfg, teacher, container) = setup();
+    if Precision::from_env() != Precision::F64 {
+        // an f32 pack can legitimately flip near-tie argmaxes
+        return;
+    }
+    let student = student(teacher, container);
+    let pw =
+        PackedWeights::from_container(cfg, teacher, container, Precision::F64)
+            .unwrap();
+    let server = Server::start(cfg.clone(), pw, ServeOpts::default());
+    let prompt = [3, 1, 4, 1];
+    let toks = server.generate(&prompt, 5).unwrap();
+    let expect = greedy_continuation(cfg, &student, &prompt, 5);
+    assert_eq!(toks, expect, "batched greedy must match the plain oracle");
+}
