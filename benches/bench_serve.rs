@@ -1,8 +1,10 @@
-//! Serving-engine performance: prepack-vs-repack GEMM speedup plus
-//! end-to-end micro-batched serving throughput/latency on the
-//! quantized synthetic tiny model.  Emits `BENCH_serve.json` — the CI
-//! serve-smoke job greps the `speedup prepack <shape>` entry and the
-//! `serve throughput tok/s` / `serve p50|p90|p99 ms` percentiles.
+//! Serving-engine performance: prepack-vs-repack GEMM speedup,
+//! KV-cache decode vs full-window re-score, and end-to-end
+//! continuous-batched serving throughput/latency on the quantized
+//! synthetic tiny model.  Emits `BENCH_serve.json` — the CI
+//! serve-smoke job greps the `speedup prepack <shape>` entry, the
+//! `decode tok/s <window>` / `speedup decode <window>` pair, and the
+//! `serve throughput tok/s` / TTFT / inter-token percentiles.
 //!
 //! The prepack rows measure exactly what the server removes from the
 //! hot path: `repack`-tagged rows run the public pack-per-call driver
@@ -10,23 +12,35 @@
 //! [`matmul_prepacked`] over panels packed once up front.  Skinny
 //! activation panels (few tokens per weight matrix — the serving
 //! regime) amortize the pack worst, so the m=16 shape is the headline.
-//! `WATERSIC_BENCH_ENFORCE=1` turns a modest ≥1.05× gate on the m=16
-//! shape into a hard failure (off by default: shared runners are too
-//! noisy to fail builds on).
+//!
+//! The decode rows measure what the KV cache removes: the `rescore`
+//! baseline is the PR 5 generation loop (every token re-runs the full
+//! window forward — O(t²) attention per token), the `decode` rows run
+//! one-token [`decode_packed`] steps against the cache (O(t) per
+//! token).  `WATERSIC_BENCH_ENFORCE=1` turns the modest ≥1.05× prepack
+//! gate and the ≥10× decode-speedup gate at window 256 into hard
+//! failures (off by default: shared runners are too noisy to fail
+//! builds on).
 //!
 //! Load-test knobs: `WATERSIC_SERVE_CLIENTS` (default 8; the CI gate
 //! needs ≥8 concurrent) and `WATERSIC_SERVE_REQUESTS` per client
 //! (default 8), on top of the engine's `WATERSIC_SERVE_BATCH` /
-//! `WATERSIC_SERVE_FLUSH_US` / `WATERSIC_PRECISION` options.
+//! `WATERSIC_SERVE_FLUSH_US` / `WATERSIC_SERVE_KV_BUDGET` /
+//! `WATERSIC_SERVE_MAX_STEPS` / `WATERSIC_PRECISION` options.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use watersic::coordinator::container::Container;
 use watersic::coordinator::quantize_model;
 use watersic::experiments::{synthetic_tiny_opts, synthetic_tiny_setup};
 use watersic::linalg::gemm::{matmul_nt_prec, matmul_prepacked, Precision, PrepackedB};
 use watersic::linalg::Mat;
-use watersic::runtime::server::{load_test, serve_batch_from_env, Server};
+use watersic::model::transformer::{
+    argmax_last, decode_packed, forward_packed, prefill_packed, ForwardOpts, KvCache,
+};
+use watersic::model::weights::{PackedWeights, Weights};
+use watersic::model::ModelConfig;
+use watersic::runtime::server::{load_test, serve_batch_from_env, LoadMix, Server};
 use watersic::runtime::ServeOpts;
 use watersic::util::bench::{report, Bench, BenchLog};
 use watersic::util::json::Json;
@@ -41,7 +55,7 @@ fn env_usize(key: &str, default: usize) -> usize {
 }
 
 fn main() -> anyhow::Result<()> {
-    println!("== bench_serve: prepacked-weight serving engine ==");
+    println!("== bench_serve: continuous-batching serving engine ==");
     let prec = Precision::from_env();
     let mut log = BenchLog::new("BENCH_serve.json");
     log.meta("bench", Json::Str("serve".to_string()));
@@ -80,6 +94,72 @@ fn main() -> anyhow::Result<()> {
         prepack_speedups.push((name, speedup));
     }
 
+    // ---- KV-cache decode vs full-window re-score at window 256: a
+    // wider-than-tiny model so attention actually costs something,
+    // with ctx headroom so no decode step needs a window reslide
+    let dcfg = ModelConfig {
+        vocab: 256,
+        d_model: 64,
+        n_heads: 4,
+        n_layers: 2,
+        d_ff: 128,
+        ctx: 384,
+        ..ModelConfig::tiny_test()
+    };
+    let window = 256usize;
+    let dw = PackedWeights::new(&dcfg, Weights::random(&dcfg, 17), prec);
+    let mut drng = Rng::new(5);
+    let prompt: Vec<i32> = (0..window)
+        .map(|_| drng.below(dcfg.vocab) as i32)
+        .collect();
+
+    // PR 5 baseline: every generated token re-runs the full window
+    // forward (O(t²) attention per token)
+    let rescore_steps = 8usize;
+    let mut toks = prompt.clone();
+    let t0 = Instant::now();
+    for _ in 0..rescore_steps {
+        let t = toks.len().min(dcfg.ctx);
+        let win = &toks[toks.len() - t..];
+        let out = forward_packed(&dcfg, &dw, win, 1, t, &ForwardOpts::default());
+        toks.push(argmax_last(out.logits.row(t - 1)) as i32);
+    }
+    let rescore_tok_s = rescore_steps as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+
+    // cached path: prefill the prompt once, then one-token decode
+    // steps against the per-sequence KV cache (O(t) per token)
+    let decode_steps = 96usize;
+    let mut cache = KvCache::new(&dcfg, dcfg.ctx);
+    let mut toks = prompt.clone();
+    {
+        let mut kv = [Some((&mut cache, window))];
+        let out = prefill_packed(
+            &dcfg,
+            &dw,
+            &toks,
+            1,
+            window,
+            &mut kv,
+            &ForwardOpts::default(),
+        );
+        toks.push(argmax_last(out.logits.row(window - 1)) as i32);
+    }
+    let t0 = Instant::now();
+    for _ in 0..decode_steps {
+        let last = *toks.last().unwrap();
+        let mut caches = [&mut cache];
+        let logits = decode_packed(&dcfg, &dw, &[last], &mut caches);
+        toks.push(argmax_last(logits.row(0)) as i32);
+    }
+    let decode_tok_s = decode_steps as f64 / t0.elapsed().as_secs_f64().max(1e-9);
+    let decode_speedup = decode_tok_s / rescore_tok_s.max(1e-9);
+    println!(
+        "decode tok/s {window}: {decode_tok_s:.0}  (rescore {rescore_tok_s:.0} tok/s, speedup {decode_speedup:.1}×)"
+    );
+    log.note(&format!("decode tok/s {window}"), decode_tok_s);
+    log.note(&format!("rescore tok/s {window}"), rescore_tok_s);
+    log.note(&format!("speedup decode {window}"), decode_speedup);
+
     // ---- end-to-end: quantize the synthetic tiny model, serve it,
     // drive it with concurrent clients
     let (cfg, teacher, corpus) = synthetic_tiny_setup();
@@ -99,7 +179,7 @@ fn main() -> anyhow::Result<()> {
     )?;
     let clients = env_usize("WATERSIC_SERVE_CLIENTS", 8);
     let per_client = env_usize("WATERSIC_SERVE_REQUESTS", 8);
-    let rep = load_test(&server, clients, per_client, 99)?;
+    let rep = load_test(&server, clients, per_client, 99, &LoadMix::default())?;
     rep.print();
     log.meta("serve clients", Json::Num(clients as f64));
     log.meta("serve batch max", Json::Num(serve_batch_from_env() as f64));
@@ -109,10 +189,28 @@ fn main() -> anyhow::Result<()> {
     log.note("serve p99 ms", rep.p99_ms);
     log.note("serve mean batch", rep.mean_batch);
     log.note("serve max batch", rep.max_batch as f64);
+
+    // generate-heavy mix: half the requests are greedy generations
+    // with heavy-tailed lengths — the workload where TTFT and
+    // inter-token latency (not whole-request p99) are the story
+    let gen_mix = LoadMix {
+        generate_frac: 0.5,
+        heavy_tail: true,
+        max_steps: 32,
+    };
+    let rep_gen = load_test(&server, clients, per_client, 100, &gen_mix)?;
+    rep_gen.print();
+    log.note("serve gen tok/s", rep_gen.gen_tok_s);
+    log.note("serve ttft p50 ms", rep_gen.ttft_p50_ms);
+    log.note("serve ttft p99 ms", rep_gen.ttft_p99_ms);
+    log.note("serve itl p50 ms", rep_gen.itl_p50_ms);
+    log.note("serve itl p99 ms", rep_gen.itl_p99_ms);
+    log.note("serve decode steps", rep_gen.decode_steps as f64);
+
     let stats = server.shutdown();
     println!(
-        "served {} requests in {} batches ({} tokens)",
-        stats.requests, stats.batches, stats.tokens
+        "served {} requests in {} batches ({} tokens, {} decode steps)",
+        stats.requests, stats.batches, stats.tokens, stats.decode_steps
     );
 
     match log.write() {
@@ -120,7 +218,7 @@ fn main() -> anyhow::Result<()> {
         Err(e) => eprintln!("failed to write bench log: {e}"),
     }
 
-    // opt-in hard gate (see module docs)
+    // opt-in hard gates (see module docs)
     if std::env::var("WATERSIC_BENCH_ENFORCE").as_deref() == Ok("1") {
         let (shape, min) = ("16x512x512", 1.05);
         let got = prepack_speedups
@@ -133,6 +231,14 @@ fn main() -> anyhow::Result<()> {
             std::process::exit(1);
         }
         println!("gate ok: prepack {shape} {got:.2}× ≥ {min}×");
+        let min_decode = 10.0;
+        if decode_speedup < min_decode {
+            eprintln!(
+                "GATE FAILED: decode speedup {decode_speedup:.1}× < {min_decode}× at window {window}"
+            );
+            std::process::exit(1);
+        }
+        println!("gate ok: decode {decode_speedup:.1}× ≥ {min_decode}× at window {window}");
     }
     Ok(())
 }

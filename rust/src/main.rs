@@ -26,7 +26,8 @@ USAGE:
                      [--ft] [--mixing] [--out model.wsic] [--fast] [--no-engine]
   watersic eval      --container model.wsic [--model picollama_s] [--corpus wiki|web]
   watersic serve     --container model.wsic [--model picollama_s] [--addr 127.0.0.1:7878]
-                     [--batch 8] [--flush-us 500] [--loadtest N [--requests M]]
+                     [--batch 8] [--flush-us 500] [--loadtest N [--requests M]
+                      [--gen-frac 0.5] [--heavy-tail] [--max-steps 16]]
   watersic repro     <id> [--fast] [--no-engine]
                      ids: theory fig1 table1|fig2 table2|fig3 fig4 fig5 table6
                           ablate fig11 fig12 mixing table7 table15 tasks all
@@ -36,20 +37,28 @@ USAGE:
 SERVING:
   `serve` dequantizes the container once, prepacks every projection
   matrix into NR-column GEMM panels (no per-call weight packing), and
-  micro-batches concurrent requests into shared forwards.  The TCP
-  front door speaks line-delimited JSON:
+  runs iteration-level continuous batching: each scheduler step batches
+  new prefills with one shared KV-cached decode forward over every
+  in-flight generation, and sequences join/leave at step granularity.
+  The TCP front door speaks line-delimited JSON:
       {\"tokens\": [1, 2, 3]}             -> {\"len\", \"next\", \"nll\", \"batched_with\"}
-      {\"prompt\": [1, 2], \"steps\": 8}    -> {\"tokens\": [..]}
-  `--loadtest N` skips the socket and drives the server in-process
-  with N concurrent clients (M requests each), printing throughput and
-  latency percentiles.  `--model tiny` serves the synthetic tiny model
-  (zero artifacts needed; same weights `quantize --model tiny` uses).
+      {\"prompt\": [1, 2], \"steps\": 8}    -> {\"tokens\": [..], \"steps\", \"ttft_ms\"}
+  (`\"max_tokens\"` aliases `\"steps\"`; both are capped per request by
+  WATERSIC_SERVE_MAX_STEPS.)  `--loadtest N` skips the socket and
+  drives the server in-process with N concurrent clients (M requests
+  each), printing throughput, score latency, and TTFT/inter-token
+  percentiles; `--gen-frac F` makes a fraction F of requests greedy
+  generations and `--heavy-tail` draws their lengths Pareto-style.
+  `--model tiny` serves the synthetic tiny model (zero artifacts
+  needed; same weights `quantize --model tiny` uses).
 
 ENGINE OPTIONS (env):
   WATERSIC_PRECISION={f64,f32}   kernel/pack precision (default f64)
   WATERSIC_THREADS=N             worker-pool width (outputs bit-identical across N)
-  WATERSIC_SERVE_BATCH=N         max requests per batched forward (default 8)
+  WATERSIC_SERVE_BATCH=N         max prefill rows / active generations per step (default 8)
   WATERSIC_SERVE_FLUSH_US=N      partial-batch flush deadline in us (default 500)
+  WATERSIC_SERVE_KV_BUDGET=N     KV-cache byte budget across in-flight sequences (default 1 GiB)
+  WATERSIC_SERVE_MAX_STEPS=N     per-request generation-step cap (default 256)
 ";
 
 fn main() {
@@ -259,12 +268,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         flush: std::time::Duration::from_micros(
             args.usize_or("flush-us", serve::serve_flush_us_from_env() as usize)? as u64,
         ),
+        kv_budget: serve::serve_kv_budget_from_env(),
+        max_steps: serve::serve_max_steps_from_env(),
     };
     println!(
-        "engine    : batch_max {}, flush {:?}, precision {}",
+        "engine    : batch_max {}, flush {:?}, precision {}, kv_budget {:.1} MiB, max_steps {}",
         opts.batch_max,
         opts.flush,
-        prec.name()
+        prec.name(),
+        opts.kv_budget as f64 / (1024.0 * 1024.0),
+        opts.max_steps
     );
     let server = match args.str_opt("container") {
         Some(path) => {
@@ -294,12 +307,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let clients = args.usize_or("loadtest", 0)?;
     if clients > 0 {
         let per_client = args.usize_or("requests", 4)?;
-        let rep = serve::load_test(&server, clients, per_client, 7)?;
+        let mix = serve::LoadMix {
+            generate_frac: args.f64_or("gen-frac", 0.0)?.clamp(0.0, 1.0),
+            heavy_tail: args.bool("heavy-tail"),
+            max_steps: args.usize_or("max-steps", 16)?.max(1),
+        };
+        let rep = serve::load_test(&server, clients, per_client, 7, &mix)?;
         rep.print();
         let stats = server.shutdown();
         println!(
-            "served {} requests in {} batches ({} tokens)",
-            stats.requests, stats.batches, stats.tokens
+            "served {} requests in {} batches ({} tokens, {} decode steps)",
+            stats.requests, stats.batches, stats.tokens, stats.decode_steps
         );
         return Ok(());
     }

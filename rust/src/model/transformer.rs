@@ -1,6 +1,32 @@
 //! Native forward pass of `picollama` (f64) with calibration capture —
 //! the oracle twin of the AOT HLO artifact and the data source for the
 //! drift / residual / attention-weighted statistics of §4.
+//!
+//! # Incremental decode
+//!
+//! Generation runs through a per-sequence [`KvCache`]: a prefill
+//! forward ([`prefill`] / [`prefill_packed`]) stashes every layer's
+//! post-RoPE K and V rows, and each subsequent [`decode_step`] /
+//! [`decode_packed`] computes only the new token's projections and
+//! attends against the cached rows — O(t) per token instead of the
+//! O(t²) full re-score.  The cached step is **bit-identical** (f64) to
+//! the last row of a full-window forward, because every piece of the
+//! computation is exactly the suffix of the full pass:
+//!
+//! * RoPE entry (p, i) depends only on the position p — not on the
+//!   table length — so rotating the new token at position `len` matches
+//!   the full forward's rotation of its last row;
+//! * attention row i reduces scores j = 0..=i with a sequential online
+//!   softmax; the decode step reproduces row i = t−1's reduction order
+//!   exactly;
+//! * all other ops (rms_norm, residuals, FFN, head) are row-local, and
+//!   the prepacked GEMM driver's row independence makes a 1-row decode
+//!   projection bit-identical to the same row inside a full window.
+//!
+//! The one case the cache cannot serve is a *slid* window: once a
+//! sequence exceeds `cfg.ctx`, every cached position shifts and the
+//! window must be re-prefilled (matching the windowed re-score
+//! semantics of the old loop bit for bit).
 
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicPtr, Ordering};
@@ -197,6 +223,168 @@ impl<'a> WeightSource<'a> {
             WeightSource::Packed(pw) => pw.project(x, name),
         }
     }
+
+    /// The layer's Q/K/V projections.  The packed arm runs one fused
+    /// GEMM against the `attn.qkv` panels (decode-shaped: one driver
+    /// dispatch instead of three); per-column reduction independence
+    /// keeps each split output bit-identical to the separate products
+    /// the plain arm computes.
+    fn project_qkv(
+        &self,
+        x: &Mat,
+        layer_prefix: &str,
+        prec: Precision,
+    ) -> (Mat, Mat, Mat) {
+        match self {
+            WeightSource::Plain(w) => (
+                matmul_nt_prec(x, w.get(&format!("{layer_prefix}attn.wq")), prec),
+                matmul_nt_prec(x, w.get(&format!("{layer_prefix}attn.wk")), prec),
+                matmul_nt_prec(x, w.get(&format!("{layer_prefix}attn.wv")), prec),
+            ),
+            WeightSource::Packed(pw) => pw.project_qkv(x, layer_prefix),
+        }
+    }
+
+    /// The layer's FFN input projections (w1, w3) — fused on the packed
+    /// arm, separate products on the plain arm.
+    fn project_ffn_in(
+        &self,
+        x: &Mat,
+        layer_prefix: &str,
+        prec: Precision,
+    ) -> (Mat, Mat) {
+        match self {
+            WeightSource::Plain(w) => (
+                matmul_nt_prec(x, w.get(&format!("{layer_prefix}ffn.w1")), prec),
+                matmul_nt_prec(x, w.get(&format!("{layer_prefix}ffn.w3")), prec),
+            ),
+            WeightSource::Packed(pw) => pw.project_ffn_in(x, layer_prefix),
+        }
+    }
+}
+
+/// Per-sequence decode state: every layer's post-RoPE K and V rows for
+/// the positions evaluated so far, plus the RoPE tables for the full
+/// capacity (precomputed once — entry (p, i) is position-local, so the
+/// table is identical to the one a full forward of any window length
+/// ≥ p+1 would build).  Storage is allocated up front at `cap`
+/// positions; [`KvCache::bytes_for`] is the admission-control estimate
+/// the serving engine budgets with.
+pub struct KvCache {
+    /// per (layer, head) — indexed `li * n_heads + h` — each cap × hd
+    k: Vec<Mat>,
+    v: Vec<Mat>,
+    cos: Mat,
+    sin: Mat,
+    len: usize,
+    cap: usize,
+    layers: usize,
+    nh: usize,
+    hd: usize,
+}
+
+impl KvCache {
+    /// Allocate a cache for up to `cap` positions (`cap` may be below
+    /// `cfg.ctx` when the sequence's window can never grow that far —
+    /// the serving engine sizes caches at `min(ctx, window + steps − 1)`).
+    pub fn new(cfg: &ModelConfig, cap: usize) -> KvCache {
+        assert!(cap <= cfg.ctx, "kv capacity {cap} exceeds ctx {}", cfg.ctx);
+        let (nh, hd) = (cfg.n_heads, cfg.head_dim());
+        let slots = cfg.n_layers * nh;
+        let k = (0..slots).map(|_| Mat::zeros(cap, hd)).collect();
+        let v = (0..slots).map(|_| Mat::zeros(cap, hd)).collect();
+        let (cos, sin) = rope_tables(cap, hd, cfg.rope_theta);
+        KvCache {
+            k,
+            v,
+            cos,
+            sin,
+            len: 0,
+            cap,
+            layers: cfg.n_layers,
+            nh,
+            hd,
+        }
+    }
+
+    /// Positions currently cached (the next decode evaluates this
+    /// position).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// A full cache means the window has saturated: the next token
+    /// slides the window, invalidating every cached position — the
+    /// caller must [`KvCache::clear`] and re-prefill the slid window.
+    pub fn is_full(&self) -> bool {
+        self.len == self.cap
+    }
+
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    /// Bytes this cache holds (K/V panels + RoPE tables).
+    pub fn bytes(&self) -> usize {
+        Self::bytes_for_dims(self.layers, self.nh, self.hd, self.cap)
+    }
+
+    /// Bytes a cache of `cap` positions costs for this architecture —
+    /// the serving engine's `WATERSIC_SERVE_KV_BUDGET` admission
+    /// estimate.
+    pub fn bytes_for(cfg: &ModelConfig, cap: usize) -> usize {
+        Self::bytes_for_dims(cfg.n_layers, cfg.n_heads, cfg.head_dim(), cap)
+    }
+
+    fn bytes_for_dims(layers: usize, nh: usize, hd: usize, cap: usize) -> usize {
+        // K + V: layers·nh panels of cap×hd each, twice; RoPE cos+sin:
+        // 2 · cap × hd/2
+        (layers * nh * 2 * cap * hd + cap * hd) * std::mem::size_of::<f64>()
+    }
+
+    fn check(&self, cfg: &ModelConfig) {
+        assert_eq!(
+            (self.layers, self.nh, self.hd),
+            (cfg.n_layers, cfg.n_heads, cfg.head_dim()),
+            "kv cache was built for a different architecture"
+        );
+    }
+}
+
+/// RoPE-rotate one head row at position `p` (the single-row twin of
+/// [`apply_rope`] — identical arithmetic, so identical bits).
+fn rope_rotate_row(row: &mut [f64], cos: &Mat, sin: &Mat, p: usize) {
+    let half = row.len() / 2;
+    for i in 0..half {
+        let (c, s) = (cos[(p, i)], sin[(p, i)]);
+        let x1 = row[i];
+        let x2 = row[half + i];
+        row[i] = x1 * c - x2 * s;
+        row[half + i] = x1 * s + x2 * c;
+    }
+}
+
+/// Index of the maximal logit, ties broken toward the **last** maximum
+/// — the greedy-sampling rule every decode path in the repo shares
+/// (it matches `Iterator::max_by`, which returns the last max).
+pub fn argmax_last(row: &[f64]) -> usize {
+    let mut best = f64::NEG_INFINITY;
+    let mut arg = 0;
+    for (i, &v) in row.iter().enumerate() {
+        if v >= best {
+            best = v;
+            arg = i;
+        }
+    }
+    arg
 }
 
 /// Run the model on `tokens` = B windows of length T (flattened row-major).
@@ -238,8 +426,45 @@ fn forward_src(
     t: usize,
     opts: &ForwardOpts,
 ) -> ForwardOut {
+    forward_src_kv(cfg, src, tokens, b, t, opts, &mut [])
+}
+
+/// [`forward_src`] with optional per-window KV sinks: `kv[bi]`, when
+/// `Some((cache, real_len))`, receives the post-RoPE K/V rows of window
+/// `bi`'s first `real_len` tokens (rows past `real_len` are padding the
+/// batcher added) and has its length set to `real_len` — the prefill
+/// half of the incremental-decode contract.  An empty slice captures
+/// nothing.
+fn forward_src_kv(
+    cfg: &ModelConfig,
+    src: &WeightSource,
+    tokens: &[i32],
+    b: usize,
+    t: usize,
+    opts: &ForwardOpts,
+    kv: &mut [Option<(&mut KvCache, usize)>],
+) -> ForwardOut {
     let w = src.weights();
     assert_eq!(tokens.len(), b * t);
+    assert!(
+        kv.is_empty() || kv.len() == b,
+        "kv sinks: expected one slot per window ({b}), got {}",
+        kv.len()
+    );
+    for slot in kv.iter() {
+        if let Some((cache, real_len)) = slot {
+            cache.check(cfg);
+            assert!(
+                *real_len >= 1 && *real_len <= t,
+                "kv sink real_len {real_len} outside 1..={t}"
+            );
+            assert!(
+                *real_len <= cache.cap,
+                "kv sink real_len {real_len} exceeds cache capacity {}",
+                cache.cap
+            );
+        }
+    }
     let (d, nh) = (cfg.d_model, cfg.n_heads);
     let hd = cfg.head_dim();
     let scale = 1.0 / (hd as f64).sqrt();
@@ -277,9 +502,7 @@ fn forward_src(
         if opts.capture {
             cap.inputs.insert(format!("{p}attn.qkv"), h1.clone());
         }
-        let qf = src.project(&h1, &format!("{p}attn.wq"), prec);
-        let kf = src.project(&h1, &format!("{p}attn.wk"), prec);
-        let vf = src.project(&h1, &format!("{p}attn.wv"), prec);
+        let (qf, kf, vf) = src.project_qkv(&h1, &p, prec);
 
         // split heads: per head (rows × hd)
         let split = |m: &Mat, h: usize| -> Mat {
@@ -301,6 +524,21 @@ fn forward_src(
             qs.push(q);
             ks.push(k);
             vs.push(split(&vf, h));
+        }
+
+        // stash this layer's post-RoPE K/V rows for windows that carry
+        // a decode cache (rows past real_len are batch padding)
+        for (bi, slot) in kv.iter_mut().enumerate() {
+            if let Some((cache, real_len)) = slot {
+                let base = bi * t;
+                for h in 0..nh {
+                    let si = li * nh + h;
+                    for i in 0..*real_len {
+                        cache.k[si].row_mut(i).copy_from_slice(ks[h].row(base + i));
+                        cache.v[si].row_mut(i).copy_from_slice(vs[h].row(base + i));
+                    }
+                }
+            }
         }
 
         // attention per (batch, head) — independent tasks, fanned out
@@ -408,8 +646,7 @@ fn forward_src(
         if opts.capture {
             cap.inputs.insert(format!("{p}ffn.in"), h2.clone());
         }
-        let pre1 = src.project(&h2, &format!("{p}ffn.w1"), prec);
-        let up = src.project(&h2, &format!("{p}ffn.w3"), prec);
+        let (pre1, up) = src.project_ffn_in(&h2, &p, prec);
         let mut gate = pre1.clone();
         gate.data.iter_mut().for_each(|v| *v = silu(*v));
         let m = gate.hadamard(&up);
@@ -443,6 +680,12 @@ fn forward_src(
         x = x_out;
     }
 
+    for slot in kv.iter_mut() {
+        if let Some((cache, real_len)) = slot {
+            cache.len = *real_len;
+        }
+    }
+
     let x_final_in = if opts.tape { x.clone() } else { Mat::zeros(0, 0) };
     let xf = rms_norm(&x, w.get_vec("final_norm"), cfg.norm_eps);
     let logits = src.project(&xf, "head", prec);
@@ -463,6 +706,179 @@ fn forward_src(
         },
         logits,
     }
+}
+
+/// Full forward over `b` windows that also fills each window's
+/// [`KvCache`] — the batched prefill of the serving engine.  Logits
+/// are bit-identical to [`forward_packed`] (the sink writes are pure
+/// copies).  `kv[bi] = Some((cache, real_len))` caches window `bi`'s
+/// first `real_len` rows; `None` skips that window (a score request
+/// riding the same prefill batch).
+pub fn prefill_packed(
+    cfg: &ModelConfig,
+    pw: &PackedWeights,
+    tokens: &[i32],
+    b: usize,
+    t: usize,
+    kv: &mut [Option<(&mut KvCache, usize)>],
+    opts: &ForwardOpts,
+) -> ForwardOut {
+    assert!(!opts.tape, "the packed forward does not tape (serving path)");
+    forward_src_kv(cfg, &WeightSource::Packed(pw), tokens, b, t, opts, kv)
+}
+
+/// Single-window plain-weights prefill (the offline greedy path).
+pub fn prefill(
+    cfg: &ModelConfig,
+    w: &Weights,
+    tokens: &[i32],
+    cache: &mut KvCache,
+) -> ForwardOut {
+    let t = tokens.len();
+    let mut kv = [Some((cache, t))];
+    forward_src_kv(
+        cfg,
+        &WeightSource::Plain(w),
+        tokens,
+        1,
+        t,
+        &ForwardOpts::default(),
+        &mut kv,
+    )
+}
+
+/// One incremental decode step for a batch of sequences: `tokens[s]`
+/// is sequence `s`'s next input token, evaluated at position
+/// `caches[s].len()` against that sequence's cached K/V.  Returns the
+/// (b × vocab) next-token logits and advances every cache by one
+/// position.  Bit-identical (f64) to the last logits row of a full
+/// forward over the sequence's whole window — see the module docs for
+/// the argument.
+fn decode_src(
+    cfg: &ModelConfig,
+    src: &WeightSource,
+    tokens: &[i32],
+    caches: &mut [&mut KvCache],
+    prec: Precision,
+) -> Mat {
+    let b = tokens.len();
+    assert!(b > 0, "empty decode batch");
+    assert_eq!(caches.len(), b, "one kv cache per decoded sequence");
+    let (d, nh) = (cfg.d_model, cfg.n_heads);
+    let hd = cfg.head_dim();
+    let scale = 1.0 / (hd as f64).sqrt();
+    let w = src.weights();
+    for cache in caches.iter() {
+        cache.check(cfg);
+        assert!(
+            cache.len < cache.cap,
+            "kv cache full (cap {}): clear and re-prefill the slid window",
+            cache.cap
+        );
+        assert!(!cache.is_empty(), "decode before prefill");
+    }
+
+    let embed = w.get("embed");
+    let mut x = Mat::zeros(b, d);
+    for (s, &tok) in tokens.iter().enumerate() {
+        x.row_mut(s).copy_from_slice(embed.row(tok as usize));
+    }
+
+    for li in 0..cfg.n_layers {
+        let p = format!("layers.{li}.");
+
+        // ---- attention
+        let h1 = rms_norm(&x, w.get_vec(&format!("{p}norm1")), cfg.norm_eps);
+        let (qf, kf, vf) = src.project_qkv(&h1, &p, prec);
+        let mut ctxcat = Mat::zeros(b, d);
+        // serial over (sequence, head): decode batches are small and
+        // each iteration appends to its own cache
+        for s in 0..b {
+            let cache = &mut *caches[s];
+            let pos = cache.len;
+            for h in 0..nh {
+                let mut q = qf.row(s)[h * hd..(h + 1) * hd].to_vec();
+                let mut k = kf.row(s)[h * hd..(h + 1) * hd].to_vec();
+                rope_rotate_row(&mut q, &cache.cos, &cache.sin, pos);
+                rope_rotate_row(&mut k, &cache.cos, &cache.sin, pos);
+                let si = li * nh + h;
+                cache.k[si].row_mut(pos).copy_from_slice(&k);
+                cache.v[si]
+                    .row_mut(pos)
+                    .copy_from_slice(&vf.row(s)[h * hd..(h + 1) * hd]);
+                // causal scores + online softmax over positions 0..=pos
+                // — exactly row i = pos of the full forward's sweep
+                let kc = &cache.k[si];
+                let vc = &cache.v[si];
+                let mut maxs = f64::NEG_INFINITY;
+                let mut srow = vec![0.0; pos + 1];
+                for j in 0..=pos {
+                    let sc = crate::linalg::dot(&q, kc.row(j)) * scale;
+                    srow[j] = sc;
+                    maxs = maxs.max(sc);
+                }
+                let mut denom = 0.0;
+                for j in 0..=pos {
+                    srow[j] = (srow[j] - maxs).exp();
+                    denom += srow[j];
+                }
+                let crow = &mut ctxcat.row_mut(s)[h * hd..(h + 1) * hd];
+                for j in 0..=pos {
+                    let pj = srow[j] / denom;
+                    let vrow = vc.row(j);
+                    for e in 0..hd {
+                        crow[e] += pj * vrow[e];
+                    }
+                }
+            }
+        }
+        let attn_out = src.project(&ctxcat, &format!("{p}attn.wo"), prec);
+        for i in 0..b * d {
+            x.data[i] += attn_out.data[i];
+        }
+
+        // ---- FFN
+        let h2 = rms_norm(&x, w.get_vec(&format!("{p}norm2")), cfg.norm_eps);
+        let (pre1, up) = src.project_ffn_in(&h2, &p, prec);
+        let mut gate = pre1;
+        gate.data.iter_mut().for_each(|v| *v = silu(*v));
+        let m = gate.hadamard(&up);
+        let ffn_out = src.project(&m, &format!("{p}ffn.w2"), prec);
+        for i in 0..b * d {
+            x.data[i] += ffn_out.data[i];
+        }
+    }
+
+    for cache in caches.iter_mut() {
+        cache.len += 1;
+    }
+
+    let xf = rms_norm(&x, w.get_vec("final_norm"), cfg.norm_eps);
+    src.project(&xf, "head", prec)
+}
+
+/// Batched incremental decode through prepacked panels — the serving
+/// engine's per-iteration step.  Row independence of the prepacked
+/// driver makes each sequence's logits row bit-identical no matter
+/// which decode batch it rides in.
+pub fn decode_packed(
+    cfg: &ModelConfig,
+    pw: &PackedWeights,
+    tokens: &[i32],
+    caches: &mut [&mut KvCache],
+) -> Mat {
+    decode_src(cfg, &WeightSource::Packed(pw), tokens, caches, pw.precision)
+}
+
+/// Plain-weights incremental decode (f64) — the offline greedy path
+/// and the parity oracle's cached half.
+pub fn decode_step(
+    cfg: &ModelConfig,
+    w: &Weights,
+    tokens: &[i32],
+    caches: &mut [&mut KvCache],
+) -> Mat {
+    decode_src(cfg, &WeightSource::Plain(w), tokens, caches, Precision::F64)
 }
 
 /// Row-wise softmax.
@@ -599,7 +1015,49 @@ pub fn attention_block_output(
 }
 
 /// Greedy sample continuation (used by the quickstart example).
+/// Runs through the [`KvCache`]: one prefill of the prompt window,
+/// then one O(t) decode step per token — token-identical to
+/// [`greedy_continuation_rescore`] (the pinned oracle), including past
+/// `cfg.ctx`, where each slide re-prefills the shifted window exactly
+/// as the re-score loop evaluates it.
 pub fn greedy_continuation(
+    cfg: &ModelConfig,
+    w: &Weights,
+    prompt: &[i32],
+    steps: usize,
+) -> Vec<i32> {
+    let mut toks = prompt.to_vec();
+    if steps == 0 {
+        return toks;
+    }
+    let mut cache = KvCache::new(cfg, cfg.ctx);
+    let t0 = toks.len().min(cfg.ctx);
+    let out = prefill(cfg, w, &toks[toks.len() - t0..], &mut cache);
+    let mut last = out.logits.row(t0 - 1).to_vec();
+    for si in 0..steps {
+        toks.push(argmax_last(&last) as i32);
+        if si + 1 == steps {
+            break;
+        }
+        if cache.is_full() {
+            // the window slid: cached positions are stale — re-prefill
+            cache.clear();
+            let t = toks.len().min(cfg.ctx);
+            let out = prefill(cfg, w, &toks[toks.len() - t..], &mut cache);
+            last = out.logits.row(t - 1).to_vec();
+        } else {
+            let tok = [*toks.last().unwrap()];
+            let logits = decode_step(cfg, w, &tok, &mut [&mut cache]);
+            last = logits.row(0).to_vec();
+        }
+    }
+    toks
+}
+
+/// The pre-cache greedy loop: a full windowed re-score per step — the
+/// bit-parity oracle [`greedy_continuation`] is pinned against (and
+/// the serving bench's O(t²)-per-token baseline).
+pub fn greedy_continuation_rescore(
     cfg: &ModelConfig,
     w: &Weights,
     prompt: &[i32],
@@ -618,7 +1076,6 @@ pub fn greedy_continuation(
     }
     toks
 }
-
 
 #[cfg(test)]
 mod tests {
@@ -816,5 +1273,110 @@ mod tests {
         let out = greedy_continuation(&cfg, &w, &tokens[..4], 3);
         assert_eq!(out.len(), 7);
         assert!(out.iter().all(|&t| (t as usize) < cfg.vocab));
+    }
+
+    #[test]
+    fn kv_cache_bytes_accounting() {
+        let cfg = ModelConfig::tiny_test();
+        let cache = KvCache::new(&cfg, 8);
+        assert_eq!(cache.bytes(), KvCache::bytes_for(&cfg, 8));
+        assert!(KvCache::bytes_for(&cfg, 8) > KvCache::bytes_for(&cfg, 4));
+        assert_eq!(cache.capacity(), 8);
+        assert!(cache.is_empty() && !cache.is_full());
+    }
+
+    #[test]
+    fn cached_decode_bit_identical_to_full_rescore() {
+        // feed arbitrary (not greedy) continuations: every decode step's
+        // logits must match the last row of a from-scratch forward over
+        // the grown window, bit for bit
+        let (cfg, w, tokens) = setup();
+        let prompt = &tokens[..6];
+        let mut cache = KvCache::new(&cfg, cfg.ctx);
+        let out = prefill(&cfg, &w, prompt, &mut cache);
+        // the prefill is a full forward plus sink copies
+        let full = forward(&cfg, &w, prompt, 1, 6, &ForwardOpts::default());
+        assert_eq!(out.logits.data, full.logits.data, "prefill != forward");
+        assert_eq!(cache.len(), 6);
+        let mut toks = prompt.to_vec();
+        for step in 0..cfg.ctx - 6 {
+            let next = tokens[6 + step];
+            let logits = decode_step(&cfg, &w, &[next], &mut [&mut cache]);
+            toks.push(next);
+            let full =
+                forward(&cfg, &w, &toks, 1, toks.len(), &ForwardOpts::default());
+            assert_eq!(
+                logits.row(0),
+                full.logits.row(toks.len() - 1),
+                "decode step {step} drifted from the full re-score"
+            );
+        }
+        assert!(cache.is_full());
+    }
+
+    #[test]
+    fn batched_decode_packed_matches_single_and_plain() {
+        // two sequences decoded in one shared batch must produce the
+        // same bits as each decoded alone (row independence), and the
+        // packed path must match the plain f64 oracle
+        let (cfg, w, tokens) = setup();
+        let pw = PackedWeights::new(&cfg, w.clone(), Precision::F64);
+        let pa = &tokens[..5];
+        let pb = &tokens[5..9];
+        let mk = |prompt: &[i32]| -> KvCache {
+            let mut c = KvCache::new(&cfg, cfg.ctx);
+            prefill_packed(
+                &cfg,
+                &pw,
+                prompt,
+                1,
+                prompt.len(),
+                &mut [Some((&mut c, prompt.len()))],
+                &ForwardOpts::default(),
+            );
+            c
+        };
+        let (mut ca, mut cb) = (mk(pa), mk(pb));
+        let (mut ca1, mut cb1) = (mk(pa), mk(pb));
+        let mut cp = mk(pa);
+        for step in 0..3 {
+            let (na, nb) = (tokens[9 + step], tokens[15 + step]);
+            let both =
+                decode_packed(&cfg, &pw, &[na, nb], &mut [&mut ca, &mut cb]);
+            let only_a = decode_packed(&cfg, &pw, &[na], &mut [&mut ca1]);
+            let only_b = decode_packed(&cfg, &pw, &[nb], &mut [&mut cb1]);
+            assert_eq!(both.row(0), only_a.row(0), "step {step}: seq a");
+            assert_eq!(both.row(1), only_b.row(0), "step {step}: seq b");
+            let plain = decode_step(&cfg, &w, &[na], &mut [&mut cp]);
+            assert_eq!(both.row(0), plain.row(0), "step {step}: packed vs plain");
+        }
+    }
+
+    #[test]
+    fn greedy_cached_matches_rescore_past_ctx() {
+        let (cfg, w, tokens) = setup();
+        // 4-token prompt + 14 steps crosses ctx = 12, exercising the
+        // slide/re-prefill path
+        let cached = greedy_continuation(&cfg, &w, &tokens[..4], 14);
+        let rescore = greedy_continuation_rescore(&cfg, &w, &tokens[..4], 14);
+        assert_eq!(cached, rescore, "cached greedy diverged from the oracle");
+        // and a prompt already longer than ctx
+        let long = &tokens[..cfg.ctx + 3];
+        assert_eq!(
+            greedy_continuation(&cfg, &w, long, 5),
+            greedy_continuation_rescore(&cfg, &w, long, 5),
+        );
+    }
+
+    #[test]
+    fn argmax_last_breaks_ties_to_the_right() {
+        assert_eq!(argmax_last(&[1.0, 3.0, 3.0, 2.0]), 2);
+        assert_eq!(argmax_last(&[5.0]), 0);
+        // matches the max_by rule the rescore loop uses
+        let row = [0.25, 0.5, 0.5, 0.1];
+        let via_max_by = (0..row.len())
+            .max_by(|&a, &b| row[a].partial_cmp(&row[b]).unwrap())
+            .unwrap();
+        assert_eq!(argmax_last(&row), via_max_by);
     }
 }

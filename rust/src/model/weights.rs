@@ -165,33 +165,72 @@ pub struct PackedWeights {
 
 impl PackedWeights {
     /// Prepack every projection matrix of `weights` for the given
-    /// model architecture.
+    /// model architecture.  The packs are **decode-shaped**: the three
+    /// QKV matrices fuse into one `attn.qkv` operand ([wq; wk; wv],
+    /// 3d × d) and the two FFN input matrices into one `ffn.w13`
+    /// ([w1; w3], 2f × d), so a forward issues 4 projection GEMMs per
+    /// layer instead of 7 — at decode widths (1–16 rows) the driver
+    /// dispatch and activation re-reads dominate, so fusing is most of
+    /// the win.  Each fused output column's reduction order is fixed by
+    /// the KC grid alone, so the split halves are bit-identical to
+    /// separate per-matrix products.
     pub fn new(
         cfg: &ModelConfig,
         mut weights: Weights,
         prec: Precision,
     ) -> PackedWeights {
-        let mut names = vec!["head".to_string()];
+        let mut packed = BTreeMap::new();
         for i in 0..cfg.n_layers {
             let p = format!("layers.{i}.");
-            for s in [
-                "attn.wq", "attn.wk", "attn.wv", "attn.wo", "ffn.w1", "ffn.w3",
-                "ffn.w2",
-            ] {
-                names.push(format!("{p}{s}"));
+            let fused_groups: [(&str, &[&str]); 2] = [
+                ("attn.qkv", &["attn.wq", "attn.wk", "attn.wv"]),
+                ("ffn.w13", &["ffn.w1", "ffn.w3"]),
+            ];
+            for (fused, parts) in fused_groups {
+                let names: Vec<String> =
+                    parts.iter().map(|s| format!("{p}{s}")).collect();
+                let stacked = Self::stack_rows(&weights, &names);
+                packed.insert(
+                    format!("{p}{fused}"),
+                    PrepackedB::pack_nt(&stacked, prec),
+                );
+                for n in &names {
+                    weights.mats.remove(n);
+                }
+            }
+            for s in ["attn.wo", "ffn.w2"] {
+                let name = format!("{p}{s}");
+                let pb = PrepackedB::pack_nt(weights.get(&name), prec);
+                weights.mats.remove(&name);
+                packed.insert(name, pb);
             }
         }
-        let mut packed = BTreeMap::new();
-        for name in names {
-            let pb = PrepackedB::pack_nt(weights.get(&name), prec);
-            weights.mats.remove(&name);
-            packed.insert(name, pb);
-        }
+        let pb = PrepackedB::pack_nt(weights.get("head"), prec);
+        weights.mats.remove("head");
+        packed.insert("head".to_string(), pb);
         PackedWeights {
             weights,
             packed,
             precision: prec,
         }
+    }
+
+    /// Stack same-width matrices on top of each other — the fused
+    /// projection operand ([wq; wk; wv] etc.).
+    fn stack_rows(w: &Weights, names: &[String]) -> Mat {
+        let cols = w.get(&names[0]).cols;
+        let rows: usize = names.iter().map(|n| w.get(n).rows).sum();
+        let mut out = Mat::zeros(rows, cols);
+        let mut r0 = 0;
+        for n in names {
+            let m = w.get(n);
+            assert_eq!(m.cols, cols, "{n}: fused operands must share width");
+            for r in 0..m.rows {
+                out.row_mut(r0 + r).copy_from_slice(m.row(r));
+            }
+            r0 += m.rows;
+        }
+        out
     }
 
     /// Dequantize a `.wsic` container over the base weights (embed /
@@ -227,9 +266,42 @@ impl PackedWeights {
     }
 
     /// Projection through the prepacked panels: x · Wᵀ for the named
-    /// matrix, bit-identical to the pack-per-call driver.
+    /// matrix, bit-identical to the pack-per-call driver.  QKV and FFN
+    /// input matrices live only in fused form — use
+    /// [`PackedWeights::project_qkv`] / [`PackedWeights::project_ffn_in`].
     pub fn project(&self, x: &Mat, name: &str) -> Mat {
         matmul_prepacked(x, &self.packed[name])
+    }
+
+    /// Fused QKV projection: one GEMM against the `attn.qkv` panels,
+    /// split into (q, k, v).  Bit-identical to three separate
+    /// projections — the driver's per-column independence.
+    pub fn project_qkv(&self, x: &Mat, layer_prefix: &str) -> (Mat, Mat, Mat) {
+        let fused =
+            matmul_prepacked(x, &self.packed[&format!("{layer_prefix}attn.qkv")]);
+        let d = fused.cols / 3;
+        (
+            Self::col_slice(&fused, 0, d),
+            Self::col_slice(&fused, d, d),
+            Self::col_slice(&fused, 2 * d, d),
+        )
+    }
+
+    /// Fused FFN input projection: one GEMM against the `ffn.w13`
+    /// panels, split into (w1·x, w3·x).
+    pub fn project_ffn_in(&self, x: &Mat, layer_prefix: &str) -> (Mat, Mat) {
+        let fused =
+            matmul_prepacked(x, &self.packed[&format!("{layer_prefix}ffn.w13")]);
+        let f = fused.cols / 2;
+        (Self::col_slice(&fused, 0, f), Self::col_slice(&fused, f, f))
+    }
+
+    fn col_slice(m: &Mat, j0: usize, w: usize) -> Mat {
+        let mut out = Mat::zeros(m.rows, w);
+        for r in 0..m.rows {
+            out.row_mut(r).copy_from_slice(&m.row(r)[j0..j0 + w]);
+        }
+        out
     }
 
     /// Total bytes held by the packed panels (load-time telemetry).
@@ -280,16 +352,47 @@ mod tests {
         let cfg = ModelConfig::tiny_test();
         let w = Weights::random(&cfg, 11);
         let pw = PackedWeights::new(&cfg, w.clone(), Precision::F64);
-        assert_eq!(pw.packed.len(), 7 * cfg.n_layers + 1);
+        // decode-shaped: qkv + w13 + wo + w2 per layer, plus the head
+        assert_eq!(pw.packed.len(), 4 * cfg.n_layers + 1);
         assert!(pw.packed_bytes() > 0);
         let mut rng = crate::util::rng::Rng::new(3);
         let x = Mat::from_fn(10, cfg.d_model, |_, _| rng.gaussian());
-        let y = pw.project(&x, "layers.0.attn.wq");
+        let y = pw.project(&x, "layers.0.attn.wo");
         // k = d_model ≤ KC and f64 ⇒ the serial dot of the plain small
         // path reduces in the same order as the single-KC-block packed
         // tile: bitwise equality, not just tolerance
-        let y_ref = crate::linalg::gemm::matmul_nt(&x, w.get("layers.0.attn.wq"));
+        let y_ref = crate::linalg::gemm::matmul_nt(&x, w.get("layers.0.attn.wo"));
         assert_eq!(y.data, y_ref.data);
+    }
+
+    #[test]
+    fn fused_projections_bit_identical_to_separate() {
+        let cfg = ModelConfig::tiny_test();
+        let w = Weights::random(&cfg, 21);
+        let pw = PackedWeights::new(&cfg, w.clone(), Precision::F64);
+        let mut rng = crate::util::rng::Rng::new(5);
+        // decode-width (1 row) and batch-width activations
+        for rows in [1usize, 9] {
+            let x = Mat::from_fn(rows, cfg.d_model, |_, _| rng.gaussian());
+            let (q, k, v) = pw.project_qkv(&x, "layers.0.");
+            for (got, name) in
+                [(&q, "attn.wq"), (&k, "attn.wk"), (&v, "attn.wv")]
+            {
+                let want = crate::linalg::gemm::matmul_nt(
+                    &x,
+                    w.get(&format!("layers.0.{name}")),
+                );
+                assert_eq!(got.data, want.data, "{name} ({rows} rows)");
+            }
+            let (g1, g3) = pw.project_ffn_in(&x, "layers.0.");
+            for (got, name) in [(&g1, "ffn.w1"), (&g3, "ffn.w3")] {
+                let want = crate::linalg::gemm::matmul_nt(
+                    &x,
+                    w.get(&format!("layers.0.{name}")),
+                );
+                assert_eq!(got.data, want.data, "{name} ({rows} rows)");
+            }
+        }
     }
 
     #[test]

@@ -7,7 +7,7 @@ pub mod engine;
 pub mod server;
 
 pub use engine::{Engine, ZsicArtifact};
-pub use server::{LoadReport, Server, ServeOpts, ServeStats};
+pub use server::{GenOut, LoadMix, LoadReport, Server, ServeOpts, ServeStats};
 // The native-path kernel options are part of the engine surface: the
 // coordinator reads them from here rather than reaching into linalg.
 pub use crate::linalg::gemm::{simd_backend, Precision, SimdBackend};

@@ -1,21 +1,46 @@
-//! Micro-batching inference server over a prepacked `.wsic` model —
-//! the serving path of the reproduction (continuous-batching designs à
+//! Continuous-batching inference server over a prepacked `.wsic` model
+//! — the serving path of the reproduction (iteration-level scheduling à
 //! la Orca/vLLM, scaled to this repo's CPU substrate).
 //!
-//! Concurrent scoring/generation requests land in a queue; a batcher
-//! thread coalesces them — up to `WATERSIC_SERVE_BATCH` requests per
-//! forward, with a deadline-based flush (`WATERSIC_SERVE_FLUSH_US`) so
-//! a lone request never waits for a full batch — pads them to a
-//! uniform window length, runs **one** batched [`forward_packed`] over
-//! the persistent worker pool, and fans the responses back out.
+//! # Decode-path architecture
 //!
-//! Why padding is sound: attention is causal within each window, RoPE
-//! positions are window-relative, and the prepacked GEMM entries fix
-//! every output row's reduction order independently of the batch row
-//! count (see [`crate::linalg::gemm::PrepackedB`]).  A request's
-//! response is therefore **bit-identical** no matter which micro-batch
-//! it rides in, how many co-batched requests surround it, or how many
-//! worker threads run the kernels — the serve parity tests pin this.
+//! The batcher thread maintains a set of **in-flight sequences**, each
+//! owning a [`KvCache`], and runs a scheduling iteration in a loop:
+//!
+//! 1. **Admit** — pop queued requests FIFO while the iteration has
+//!    prefill rows free (up to `WATERSIC_SERVE_BATCH` rows, shared with
+//!    re-prefills of slid windows), generation slots free, and KV-cache
+//!    budget left (`WATERSIC_SERVE_KV_BUDGET` bytes across all
+//!    in-flight sequences; a request whose cache could never fit is
+//!    rejected with a clean error instead of risking OOM).
+//! 2. **Prefill** — one batched [`prefill_packed`] over the admitted
+//!    score windows, new generations' prompt windows, and any in-flight
+//!    sequence whose window slid past `ctx` (its cached positions are
+//!    stale, so it re-prefills — the O(t²) fallback the old re-score
+//!    loop paid on every step).  Scores are answered from this forward;
+//!    generations take their first token from it.
+//! 3. **Decode** — one shared batched [`decode_packed`] step over every
+//!    other active sequence: only the new token's projections run, and
+//!    attention reads the cached K/V — O(t) per token instead of the
+//!    re-score loop's O(t²).
+//! 4. **Complete** — sequences that produced their last token send
+//!    their [`GenOut`] and free their slot and KV bytes *immediately*;
+//!    the next iteration's admission sees the freed capacity.
+//!
+//! Sequences therefore join and leave at **step** granularity: a score
+//! request rides the next iteration's prefill even while long
+//! generations are mid-flight, and every active sequence advances
+//! exactly one token per iteration (the tests pin both).
+//!
+//! Why co-batching preserves bits: attention is causal within each
+//! window, RoPE positions are window-relative, and the prepacked GEMM
+//! entries fix every output row's reduction order independently of the
+//! batch row count (see [`crate::linalg::gemm::PrepackedB`]).  A
+//! request's response — and every decode step of a generation — is
+//! therefore **bit-identical** no matter which batch it rides in, how
+//! many co-batched requests surround it, or how many worker threads run
+//! the kernels; the serve parity tests pin this against the full
+//! re-score oracle.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -27,13 +52,16 @@ use anyhow::{anyhow, bail, ensure, Context as _, Result};
 use crate::coordinator::container::Container;
 use crate::linalg::gemm::Precision;
 use crate::linalg::Mat;
-use crate::model::transformer::{forward_packed, ForwardOpts};
+use crate::model::transformer::{
+    argmax_last, decode_packed, prefill_packed, ForwardOpts, KvCache,
+};
 use crate::model::weights::{PackedWeights, Weights};
 use crate::model::ModelConfig;
 use crate::util::json::{obj, Json};
 
-/// The `WATERSIC_SERVE_BATCH` engine option: max requests coalesced
-/// into one batched forward.  Default 8, minimum 1 (no batching).
+/// The `WATERSIC_SERVE_BATCH` engine option: max prefill rows per
+/// batched forward and max concurrently active generations.  Default 8,
+/// minimum 1 (no batching).
 pub fn serve_batch_from_env() -> usize {
     std::env::var("WATERSIC_SERVE_BATCH")
         .ok()
@@ -44,7 +72,8 @@ pub fn serve_batch_from_env() -> usize {
 
 /// The `WATERSIC_SERVE_FLUSH_US` engine option: how long (µs) the
 /// batcher holds a partial batch open for co-arriving requests before
-/// flushing it.  Default 500µs; 0 flushes immediately.
+/// flushing it (only while no sequence is in flight — once decoding,
+/// iterations run back to back).  Default 500µs; 0 flushes immediately.
 pub fn serve_flush_us_from_env() -> u64 {
     std::env::var("WATERSIC_SERVE_FLUSH_US")
         .ok()
@@ -52,12 +81,40 @@ pub fn serve_flush_us_from_env() -> u64 {
         .unwrap_or(500)
 }
 
+/// The `WATERSIC_SERVE_KV_BUDGET` engine option: total bytes of KV
+/// cache the scheduler may hold across all in-flight generations
+/// (admission control — over-budget requests wait in the queue, and a
+/// request that could never fit is rejected outright).  Default 1 GiB.
+pub fn serve_kv_budget_from_env() -> usize {
+    std::env::var("WATERSIC_SERVE_KV_BUDGET")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .map(|n| n.max(1))
+        .unwrap_or(1 << 30)
+}
+
+/// The `WATERSIC_SERVE_MAX_STEPS` engine option: per-request cap on
+/// generation steps — an unbounded generate request would otherwise
+/// hold a batcher slot (and its KV bytes) forever.  Default 256.
+pub fn serve_max_steps_from_env() -> usize {
+    std::env::var("WATERSIC_SERVE_MAX_STEPS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .map(|n| n.max(1))
+        .unwrap_or(256)
+}
+
 #[derive(Clone, Debug)]
 pub struct ServeOpts {
-    /// max requests per batched forward
+    /// max prefill rows per batched forward, and max concurrently
+    /// active generations
     pub batch_max: usize,
-    /// deadline a partial batch is held open for
+    /// deadline a partial batch is held open for (idle server only)
     pub flush: Duration,
+    /// KV-cache byte budget across all in-flight generations
+    pub kv_budget: usize,
+    /// per-request generation-step cap
+    pub max_steps: usize,
 }
 
 impl Default for ServeOpts {
@@ -65,6 +122,8 @@ impl Default for ServeOpts {
         ServeOpts {
             batch_max: serve_batch_from_env(),
             flush: Duration::from_micros(serve_flush_us_from_env()),
+            kv_budget: serve_kv_budget_from_env(),
+            max_steps: serve_max_steps_from_env(),
         }
     }
 }
@@ -79,27 +138,56 @@ pub struct ScoreOut {
     pub nll: f64,
     /// real (unpadded) window length
     pub len: usize,
-    /// how many requests rode in the same micro-batch (telemetry)
+    /// how many rows rode in the same prefill batch (telemetry)
     pub batched_with: usize,
+    /// scheduler iteration that served this request — the
+    /// step-granularity tests compare it against a co-batched
+    /// generation's [`GenOut::start_iteration`]/`done_iteration` span
+    pub iteration: usize,
 }
 
 impl ScoreOut {
     /// Greedy next token (ties keep the last index, matching
     /// [`crate::model::transformer::greedy_continuation`]).
     pub fn argmax(&self) -> usize {
-        let mut best = 0;
-        for (i, &v) in self.logits_last.iter().enumerate() {
-            if v >= self.logits_last[best] {
-                best = i;
-            }
-        }
-        best
+        argmax_last(&self.logits_last)
     }
 }
 
-struct Pending {
-    tokens: Vec<i32>,
-    resp: mpsc::Sender<ScoreOut>,
+/// Response to one generation request.
+#[derive(Clone, Debug)]
+pub struct GenOut {
+    /// prompt followed by the generated continuation
+    pub tokens: Vec<i32>,
+    pub prompt_len: usize,
+    /// ms from submit to the first generated token (queueing + prefill)
+    pub ttft_ms: f64,
+    /// inter-token gaps (ms) for every token after the first
+    pub itl_ms: Vec<f64>,
+    /// scheduler iteration that prefilled this sequence
+    pub start_iteration: usize,
+    /// scheduler iteration that produced the final token
+    pub done_iteration: usize,
+}
+
+impl GenOut {
+    /// Generated (non-prompt) tokens.
+    pub fn steps(&self) -> usize {
+        self.tokens.len() - self.prompt_len
+    }
+}
+
+enum Pending {
+    Score {
+        tokens: Vec<i32>,
+        resp: mpsc::Sender<ScoreOut>,
+    },
+    Gen {
+        prompt: Vec<i32>,
+        steps: usize,
+        resp: mpsc::Sender<Result<GenOut>>,
+        submitted: Instant,
+    },
 }
 
 struct Queue {
@@ -107,15 +195,53 @@ struct Queue {
     shutdown: bool,
 }
 
+/// One in-flight generation: its token history, remaining steps, and
+/// its KV cache (taken out while a slid window re-prefills).
+struct Active {
+    toks: Vec<i32>,
+    prompt_len: usize,
+    steps_left: usize,
+    /// `None` only for single-step generations (they never decode, so
+    /// they skip cache allocation and KV accounting entirely)
+    cache: Option<KvCache>,
+    kv_bytes: usize,
+    resp: mpsc::Sender<Result<GenOut>>,
+    submitted: Instant,
+    last_tok: Instant,
+    ttft_ms: f64,
+    itl_ms: Vec<f64>,
+    start_iteration: usize,
+    /// iteration at which this sequence last advanced a token (0 =
+    /// never) — each iteration advances every active exactly once
+    advanced_iter: usize,
+}
+
+impl Active {
+    fn needs_reslide(&self) -> bool {
+        self.cache.as_ref().is_some_and(|c| c.is_full())
+    }
+}
+
 /// Cumulative server counters (monotone; snapshot-diff around a run to
 /// measure it in isolation).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct ServeStats {
     pub requests: usize,
+    /// batched forwards issued (prefill + decode)
     pub batches: usize,
     /// real (unpadded) tokens forwarded
     pub tokens: usize,
     pub max_batch: usize,
+    /// rows that went through prefill forwards
+    pub prefill_rows: usize,
+    /// shared batched decode forwards issued
+    pub decode_steps: usize,
+    /// tokens produced by decode forwards
+    pub decode_tokens: usize,
+    /// generation requests completed
+    pub gen_completed: usize,
+    /// high-water mark of in-flight KV cache bytes
+    pub kv_peak_bytes: usize,
 }
 
 struct Inner {
@@ -128,6 +254,11 @@ struct Inner {
     batches: AtomicUsize,
     tokens: AtomicUsize,
     max_batch: AtomicUsize,
+    prefill_rows: AtomicUsize,
+    decode_steps: AtomicUsize,
+    decode_tokens: AtomicUsize,
+    gen_completed: AtomicUsize,
+    kv_peak_bytes: AtomicUsize,
 }
 
 /// In-flight request handle; [`ScoreHandle::wait`] blocks for the
@@ -141,6 +272,20 @@ impl ScoreHandle {
         self.rx
             .recv()
             .map_err(|_| anyhow!("serve request dropped before completion"))
+    }
+}
+
+/// In-flight generation handle; [`GenHandle::wait`] blocks until the
+/// sequence completes (or is rejected by admission control).
+pub struct GenHandle {
+    rx: mpsc::Receiver<Result<GenOut>>,
+}
+
+impl GenHandle {
+    pub fn wait(self) -> Result<GenOut> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow!("generate request dropped before completion"))?
     }
 }
 
@@ -168,6 +313,11 @@ impl Server {
             batches: AtomicUsize::new(0),
             tokens: AtomicUsize::new(0),
             max_batch: AtomicUsize::new(0),
+            prefill_rows: AtomicUsize::new(0),
+            decode_steps: AtomicUsize::new(0),
+            decode_tokens: AtomicUsize::new(0),
+            gen_completed: AtomicUsize::new(0),
+            kv_peak_bytes: AtomicUsize::new(0),
         });
         let worker = inner.clone();
         let batcher = std::thread::Builder::new()
@@ -193,6 +343,17 @@ impl Server {
         Ok(Server::start(cfg.clone(), packed, opts))
     }
 
+    fn validate_tokens(&self, tokens: &[i32]) -> Result<()> {
+        for &t in tokens {
+            ensure!(
+                t >= 0 && (t as usize) < self.inner.cfg.vocab,
+                "token {t} outside vocab {}",
+                self.inner.cfg.vocab
+            );
+        }
+        Ok(())
+    }
+
     /// Enqueue a scoring request (returns immediately).
     pub fn submit(&self, tokens: Vec<i32>) -> Result<ScoreHandle> {
         ensure!(!tokens.is_empty(), "empty token window");
@@ -202,20 +363,14 @@ impl Server {
             tokens.len(),
             self.inner.cfg.ctx
         );
-        for &t in &tokens {
-            ensure!(
-                t >= 0 && (t as usize) < self.inner.cfg.vocab,
-                "token {t} outside vocab {}",
-                self.inner.cfg.vocab
-            );
-        }
+        self.validate_tokens(&tokens)?;
         let (tx, rx) = mpsc::channel();
         {
             let mut g = self.inner.queue.lock().unwrap();
             if g.shutdown {
                 bail!("server is shutting down");
             }
-            g.q.push_back(Pending { tokens, resp: tx });
+            g.q.push_back(Pending::Score { tokens, resp: tx });
         }
         self.inner.requests.fetch_add(1, Ordering::Relaxed);
         self.inner.cv.notify_all();
@@ -227,18 +382,58 @@ impl Server {
         self.submit(tokens)?.wait()
     }
 
-    /// Greedy continuation driven through the batched score path —
-    /// each step rides whatever micro-batch is in flight alongside
-    /// other clients' requests.
-    pub fn generate(&self, prompt: &[i32], steps: usize) -> Result<Vec<i32>> {
+    /// Enqueue a greedy generation (returns immediately).  The sequence
+    /// joins the scheduler at the next iteration, decodes one token per
+    /// iteration through its KV cache, and leaves the instant it
+    /// finishes.  `steps` is capped at `ServeOpts::max_steps`
+    /// (`WATERSIC_SERVE_MAX_STEPS`) so a runaway request cannot hold a
+    /// slot forever.
+    pub fn submit_generate(
+        &self,
+        prompt: Vec<i32>,
+        steps: usize,
+    ) -> Result<GenHandle> {
         ensure!(!prompt.is_empty(), "empty prompt");
-        let mut toks = prompt.to_vec();
-        for _ in 0..steps {
-            let start = toks.len() - toks.len().min(self.inner.cfg.ctx);
-            let out = self.score(toks[start..].to_vec())?;
-            toks.push(out.argmax() as i32);
+        ensure!(steps >= 1, "generate needs at least one step");
+        ensure!(
+            steps <= self.inner.opts.max_steps,
+            "steps {} exceeds the per-request cap {} (WATERSIC_SERVE_MAX_STEPS)",
+            steps,
+            self.inner.opts.max_steps
+        );
+        self.validate_tokens(&prompt)?;
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut g = self.inner.queue.lock().unwrap();
+            if g.shutdown {
+                bail!("server is shutting down");
+            }
+            g.q.push_back(Pending::Gen {
+                prompt,
+                steps,
+                resp: tx,
+                submitted: Instant::now(),
+            });
         }
-        Ok(toks)
+        self.inner.requests.fetch_add(1, Ordering::Relaxed);
+        self.inner.cv.notify_all();
+        Ok(GenHandle { rx })
+    }
+
+    /// Greedy continuation, blocking for the full sequence with decode
+    /// telemetry (TTFT, inter-token gaps, scheduler iteration span).
+    pub fn generate_timed(&self, prompt: &[i32], steps: usize) -> Result<GenOut> {
+        self.submit_generate(prompt.to_vec(), steps)?.wait()
+    }
+
+    /// Greedy continuation, blocking for the tokens.
+    pub fn generate(&self, prompt: &[i32], steps: usize) -> Result<Vec<i32>> {
+        if steps == 0 {
+            ensure!(!prompt.is_empty(), "empty prompt");
+            self.validate_tokens(prompt)?;
+            return Ok(prompt.to_vec());
+        }
+        Ok(self.generate_timed(prompt, steps)?.tokens)
     }
 
     pub fn stats(&self) -> ServeStats {
@@ -247,11 +442,20 @@ impl Server {
             batches: self.inner.batches.load(Ordering::Relaxed),
             tokens: self.inner.tokens.load(Ordering::Relaxed),
             max_batch: self.inner.max_batch.load(Ordering::Relaxed),
+            prefill_rows: self.inner.prefill_rows.load(Ordering::Relaxed),
+            decode_steps: self.inner.decode_steps.load(Ordering::Relaxed),
+            decode_tokens: self.inner.decode_tokens.load(Ordering::Relaxed),
+            gen_completed: self.inner.gen_completed.load(Ordering::Relaxed),
+            kv_peak_bytes: self.inner.kv_peak_bytes.load(Ordering::Relaxed),
         }
     }
 
     pub fn config(&self) -> &ModelConfig {
         &self.inner.cfg
+    }
+
+    pub fn opts(&self) -> &ServeOpts {
+        &self.inner.opts
     }
 
     /// Bytes held by the prepacked panels (load-time telemetry).
@@ -284,83 +488,360 @@ impl Drop for Server {
     }
 }
 
+/// Admission decision for the request at the head of the queue.
+enum Admit {
+    Score,
+    Gen { need: usize },
+    Reject { need: usize },
+    Stop,
+}
+
 fn batcher_loop(inner: &Inner) {
+    let mut active: Vec<Active> = Vec::new();
+    let mut kv_in_flight: usize = 0;
+    let mut iteration: usize = 0;
     loop {
-        let batch: Vec<Pending> = {
+        iteration += 1;
+        // slid windows must re-prefill this iteration; they occupy
+        // prefill rows before any new admission
+        let reslide_rows = active.iter().filter(|a| a.needs_reslide()).count();
+        let free_rows = inner.opts.batch_max.saturating_sub(reslide_rows);
+        let mut picked: Vec<Pending> = Vec::new();
+        {
             let mut g = inner.queue.lock().unwrap();
+            if active.is_empty() {
+                loop {
+                    if !g.q.is_empty() {
+                        break;
+                    }
+                    if g.shutdown {
+                        return;
+                    }
+                    g = inner.cv.wait(g).unwrap();
+                }
+                // deadline-based coalescing: hold the partial batch
+                // open a short window for co-arriving requests (only
+                // while idle — an active scheduler never waits)
+                let deadline = Instant::now() + inner.opts.flush;
+                while g.q.len() < inner.opts.batch_max && !g.shutdown {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        break;
+                    }
+                    let (ng, _) = inner.cv.wait_timeout(g, deadline - now).unwrap();
+                    g = ng;
+                }
+            }
+            // strict-FIFO admission at step granularity
+            let mut rows = 0usize;
+            let mut slots = active.len();
             loop {
-                if !g.q.is_empty() {
-                    break;
+                let decision = match g.q.front() {
+                    None => Admit::Stop,
+                    Some(Pending::Score { .. }) => {
+                        if rows < free_rows {
+                            Admit::Score
+                        } else {
+                            Admit::Stop
+                        }
+                    }
+                    Some(Pending::Gen { prompt, steps, .. }) => {
+                        let w0 = prompt.len().min(inner.cfg.ctx);
+                        let cap = inner.cfg.ctx.min(w0 + steps - 1);
+                        let need = if *steps > 1 {
+                            KvCache::bytes_for(&inner.cfg, cap)
+                        } else {
+                            0
+                        };
+                        if need > inner.opts.kv_budget {
+                            Admit::Reject { need }
+                        } else if rows < free_rows
+                            && slots < inner.opts.batch_max
+                            && kv_in_flight + need <= inner.opts.kv_budget
+                        {
+                            Admit::Gen { need }
+                        } else {
+                            // out of rows/slots/KV budget this iteration;
+                            // in-flight sequences finishing will free them
+                            Admit::Stop
+                        }
+                    }
+                };
+                match decision {
+                    Admit::Stop => break,
+                    Admit::Score => {
+                        rows += 1;
+                        picked.push(g.q.pop_front().unwrap());
+                    }
+                    Admit::Gen { need } => {
+                        rows += 1;
+                        slots += 1;
+                        kv_in_flight += need;
+                        picked.push(g.q.pop_front().unwrap());
+                    }
+                    Admit::Reject { need } => {
+                        // could never run under this budget: clean
+                        // error instead of OOM or a wedged queue
+                        if let Some(Pending::Gen { resp, .. }) = g.q.pop_front() {
+                            let _ = resp.send(Err(anyhow!(
+                                "generation needs a {need}-byte KV cache, over \
+                                 the WATERSIC_SERVE_KV_BUDGET of {} bytes",
+                                inner.opts.kv_budget
+                            )));
+                        }
+                    }
                 }
-                if g.shutdown {
-                    return;
-                }
-                g = inner.cv.wait(g).unwrap();
             }
-            // deadline-based coalescing: hold the partial batch open a
-            // short window for co-arriving requests
-            let deadline = Instant::now() + inner.opts.flush;
-            while g.q.len() < inner.opts.batch_max && !g.shutdown {
-                let now = Instant::now();
-                if now >= deadline {
-                    break;
-                }
-                let (ng, _) = inner.cv.wait_timeout(g, deadline - now).unwrap();
-                g = ng;
-            }
-            let take = g.q.len().min(inner.opts.batch_max);
-            g.q.drain(..take).collect()
-        };
-        // a panicking forward must not kill the batcher: the moved-in
-        // senders drop on unwind, so the affected clients see an error
-        // while later requests keep being served
+        }
+        if picked.is_empty() && active.is_empty() {
+            // woken with nothing admissible (e.g. every queued request
+            // was rejected); re-enter the idle wait
+            continue;
+        }
+        // a panicking forward must not kill the batcher; the in-flight
+        // state may be mid-mutation, so drop every affected sequence
+        // (their senders close, clients see an error) and start clean
         let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            run_batch(inner, batch)
+            run_iteration(inner, &mut active, &mut kv_in_flight, iteration, picked)
         }));
         if res.is_err() {
-            log::warn!("serve batch panicked; affected requests dropped");
+            log::warn!(
+                "serve iteration panicked; {} in-flight sequences dropped",
+                active.len()
+            );
+            active.clear();
+            kv_in_flight = 0;
         }
+        inner.kv_peak_bytes.fetch_max(kv_in_flight, Ordering::Relaxed);
     }
 }
 
-fn run_batch(inner: &Inner, batch: Vec<Pending>) {
-    let b = batch.len();
-    if b == 0 {
-        return;
+/// Record one generated token on an active sequence.
+fn advance(a: &mut Active, next: i32, iteration: usize, now: Instant) {
+    if a.toks.len() == a.prompt_len {
+        a.ttft_ms = now.duration_since(a.submitted).as_secs_f64() * 1e3;
+    } else {
+        a.itl_ms
+            .push(now.duration_since(a.last_tok).as_secs_f64() * 1e3);
     }
-    let t_max = batch.iter().map(|p| p.tokens.len()).max().unwrap();
-    // pad each window to the batch max with token 0: causal attention
-    // and window-relative RoPE keep every row before the pad
-    // bit-identical to the unpadded forward (module docs)
-    let mut toks = Vec::with_capacity(b * t_max);
-    let mut real_tokens = 0;
-    for p in &batch {
-        real_tokens += p.tokens.len();
-        toks.extend_from_slice(&p.tokens);
-        toks.resize(toks.len() + (t_max - p.tokens.len()), 0);
+    a.last_tok = now;
+    a.toks.push(next);
+    a.steps_left -= 1;
+    a.advanced_iter = iteration;
+}
+
+/// One scheduling iteration: batched prefill (admitted requests + slid
+/// windows), shared batched decode over everything else, completion
+/// sweep.
+fn run_iteration(
+    inner: &Inner,
+    active: &mut Vec<Active>,
+    kv_in_flight: &mut usize,
+    iteration: usize,
+    picked: Vec<Pending>,
+) {
+    let cfg = &inner.cfg;
+
+    // ---- prefill batch
+    enum Row {
+        Score {
+            tokens: Vec<i32>,
+            resp: mpsc::Sender<ScoreOut>,
+        },
+        NewGen {
+            act: Active,
+            window: Vec<i32>,
+        },
+        Reslide {
+            idx: usize,
+            cache: KvCache,
+            window: Vec<i32>,
+        },
     }
-    let out = forward_packed(
-        &inner.cfg,
-        &inner.model,
-        &toks,
-        b,
-        t_max,
-        &ForwardOpts::default(),
-    );
-    inner.batches.fetch_add(1, Ordering::Relaxed);
-    inner.tokens.fetch_add(real_tokens, Ordering::Relaxed);
-    inner.max_batch.fetch_max(b, Ordering::Relaxed);
-    for (i, p) in batch.into_iter().enumerate() {
-        let base = i * t_max;
-        let len = p.tokens.len();
-        let score = ScoreOut {
-            logits_last: out.logits.row(base + len - 1).to_vec(),
-            nll: window_nll(&out.logits, base, &p.tokens),
-            len,
-            batched_with: b,
-        };
-        // a client that gave up (dropped its handle) is not an error
-        let _ = p.resp.send(score);
+    let mut rows: Vec<Row> = Vec::new();
+    for (idx, a) in active.iter_mut().enumerate() {
+        if a.needs_reslide() {
+            let cache = a.cache.take().unwrap();
+            let t = cfg.ctx.min(a.toks.len());
+            let window = a.toks[a.toks.len() - t..].to_vec();
+            rows.push(Row::Reslide { idx, cache, window });
+        }
+    }
+    for p in picked {
+        match p {
+            Pending::Score { tokens, resp } => rows.push(Row::Score { tokens, resp }),
+            Pending::Gen {
+                prompt,
+                steps,
+                resp,
+                submitted,
+            } => {
+                let t = cfg.ctx.min(prompt.len());
+                let window = prompt[prompt.len() - t..].to_vec();
+                let (cache, kv_bytes) = if steps > 1 {
+                    let cap = cfg.ctx.min(t + steps - 1);
+                    (
+                        Some(KvCache::new(cfg, cap)),
+                        KvCache::bytes_for(cfg, cap),
+                    )
+                } else {
+                    (None, 0)
+                };
+                let now = Instant::now();
+                let act = Active {
+                    prompt_len: prompt.len(),
+                    toks: prompt,
+                    steps_left: steps,
+                    cache,
+                    kv_bytes,
+                    resp,
+                    submitted,
+                    last_tok: now,
+                    ttft_ms: 0.0,
+                    itl_ms: Vec::new(),
+                    start_iteration: iteration,
+                    advanced_iter: 0,
+                };
+                rows.push(Row::NewGen { act, window });
+            }
+        }
+    }
+    if !rows.is_empty() {
+        let b = rows.len();
+        let t_max = rows
+            .iter()
+            .map(|r| match r {
+                Row::Score { tokens, .. } => tokens.len(),
+                Row::NewGen { window, .. } | Row::Reslide { window, .. } => {
+                    window.len()
+                }
+            })
+            .max()
+            .unwrap();
+        // pad each window to the batch max with token 0: causal
+        // attention and window-relative RoPE keep every row before the
+        // pad bit-identical to the unpadded forward (module docs)
+        let mut toks = Vec::with_capacity(b * t_max);
+        let mut real_tokens = 0;
+        for r in &rows {
+            let w: &[i32] = match r {
+                Row::Score { tokens, .. } => tokens,
+                Row::NewGen { window, .. } | Row::Reslide { window, .. } => window,
+            };
+            real_tokens += w.len();
+            toks.extend_from_slice(w);
+            toks.resize(toks.len() + (t_max - w.len()), 0);
+        }
+        let mut kv: Vec<Option<(&mut KvCache, usize)>> = Vec::with_capacity(b);
+        for r in rows.iter_mut() {
+            kv.push(match r {
+                Row::Score { .. } => None,
+                Row::NewGen { act, window } => {
+                    let wl = window.len();
+                    act.cache.as_mut().map(|c| (c, wl))
+                }
+                Row::Reslide { cache, window, .. } => {
+                    cache.clear();
+                    Some((cache, window.len()))
+                }
+            });
+        }
+        let out = prefill_packed(
+            cfg,
+            &inner.model,
+            &toks,
+            b,
+            t_max,
+            &mut kv,
+            &ForwardOpts::default(),
+        );
+        drop(kv);
+        inner.batches.fetch_add(1, Ordering::Relaxed);
+        inner.tokens.fetch_add(real_tokens, Ordering::Relaxed);
+        inner.max_batch.fetch_max(b, Ordering::Relaxed);
+        inner.prefill_rows.fetch_add(b, Ordering::Relaxed);
+        let now = Instant::now();
+        for (i, row) in rows.into_iter().enumerate() {
+            let base = i * t_max;
+            match row {
+                Row::Score { tokens, resp } => {
+                    let len = tokens.len();
+                    let score = ScoreOut {
+                        logits_last: out.logits.row(base + len - 1).to_vec(),
+                        nll: window_nll(&out.logits, base, &tokens),
+                        len,
+                        batched_with: b,
+                        iteration,
+                    };
+                    // a client that gave up (dropped its handle) is not
+                    // an error
+                    let _ = resp.send(score);
+                }
+                Row::NewGen { mut act, window } => {
+                    let next =
+                        argmax_last(out.logits.row(base + window.len() - 1));
+                    advance(&mut act, next as i32, iteration, now);
+                    active.push(act);
+                }
+                Row::Reslide { idx, cache, window } => {
+                    let a = &mut active[idx];
+                    a.cache = Some(cache);
+                    let next =
+                        argmax_last(out.logits.row(base + window.len() - 1));
+                    advance(a, next as i32, iteration, now);
+                }
+            }
+        }
+    }
+
+    // ---- shared batched decode over every sequence that didn't
+    // advance via this iteration's prefill
+    let mut dec_idx: Vec<usize> = Vec::new();
+    let mut dec_toks: Vec<i32> = Vec::new();
+    let mut dec_caches: Vec<&mut KvCache> = Vec::new();
+    for (i, a) in active.iter_mut().enumerate() {
+        if a.advanced_iter != iteration && a.steps_left > 0 {
+            dec_idx.push(i);
+            dec_toks.push(*a.toks.last().unwrap());
+            dec_caches
+                .push(a.cache.as_mut().expect("multi-step sequence without cache"));
+        }
+    }
+    if !dec_caches.is_empty() {
+        let width = dec_caches.len();
+        let logits = decode_packed(cfg, &inner.model, &dec_toks, &mut dec_caches);
+        drop(dec_caches);
+        inner.batches.fetch_add(1, Ordering::Relaxed);
+        inner.tokens.fetch_add(width, Ordering::Relaxed);
+        inner.max_batch.fetch_max(width, Ordering::Relaxed);
+        inner.decode_steps.fetch_add(1, Ordering::Relaxed);
+        inner.decode_tokens.fetch_add(width, Ordering::Relaxed);
+        let now = Instant::now();
+        for (row, &i) in dec_idx.iter().enumerate() {
+            let next = argmax_last(logits.row(row));
+            advance(&mut active[i], next as i32, iteration, now);
+        }
+    }
+
+    // ---- completion sweep: finished sequences free their slot and KV
+    // bytes before the next iteration's admission runs
+    let mut i = 0;
+    while i < active.len() {
+        if active[i].steps_left == 0 {
+            let act = active.swap_remove(i);
+            *kv_in_flight -= act.kv_bytes;
+            inner.gen_completed.fetch_add(1, Ordering::Relaxed);
+            let _ = act.resp.send(Ok(GenOut {
+                tokens: act.toks,
+                prompt_len: act.prompt_len,
+                ttft_ms: act.ttft_ms,
+                itl_ms: act.itl_ms,
+                start_iteration: act.start_iteration,
+                done_iteration: iteration,
+            }));
+        } else {
+            i += 1;
+        }
     }
 }
 
@@ -383,21 +864,66 @@ fn window_nll(logits: &Mat, base: usize, tokens: &[i32]) -> f64 {
 // ---------------------------------------------------------------------
 // self-driving load test (the CI serve-smoke driver)
 
-/// Result of one [`load_test`] run.
+/// Workload shape for [`load_test`].
+#[derive(Clone, Debug)]
+pub struct LoadMix {
+    /// fraction of requests that are generations (the rest score)
+    pub generate_frac: f64,
+    /// draw generation lengths from a heavy-tailed (Pareto-like)
+    /// distribution — most requests short, a few near `max_steps` —
+    /// instead of uniform
+    pub heavy_tail: bool,
+    /// longest generation a client asks for
+    pub max_steps: usize,
+}
+
+impl Default for LoadMix {
+    fn default() -> LoadMix {
+        LoadMix {
+            generate_frac: 0.0,
+            heavy_tail: false,
+            max_steps: 16,
+        }
+    }
+}
+
+/// Result of one [`load_test`] run.  Whole-request latency percentiles
+/// cover score requests; generations report TTFT and inter-token
+/// latency separately (a decode-dominated workload is invisible in
+/// whole-request p99 — one 256-step generation is hundreds of fast
+/// tokens, not one slow request).
 #[derive(Clone, Debug)]
 pub struct LoadReport {
     pub clients: usize,
     pub requests: usize,
+    pub score_requests: usize,
+    pub gen_requests: usize,
+    /// scored window tokens + generated tokens (client-visible work)
     pub total_tokens: usize,
+    /// generated (non-prompt) tokens
+    pub gen_tokens: usize,
     pub wall_secs: f64,
-    /// real tokens scored per second across all clients
+    /// client-visible tokens per second across all clients
     pub throughput_tok_s: f64,
+    /// generated tokens per second
+    pub gen_tok_s: f64,
+    /// whole-request score latency percentiles (ms)
     pub p50_ms: f64,
     pub p90_ms: f64,
     pub p99_ms: f64,
+    /// time-to-first-token percentiles over generations (ms)
+    pub ttft_p50_ms: f64,
+    pub ttft_p90_ms: f64,
+    pub ttft_p99_ms: f64,
+    /// inter-token latency percentiles over all generated gaps (ms)
+    pub itl_p50_ms: f64,
+    pub itl_p90_ms: f64,
+    pub itl_p99_ms: f64,
     pub batches: usize,
     pub mean_batch: f64,
     pub max_batch: usize,
+    /// shared batched decode forwards this run issued
+    pub decode_steps: usize,
 }
 
 impl LoadReport {
@@ -411,9 +937,23 @@ impl LoadReport {
         );
         println!("  throughput : {:.0} tok/s", self.throughput_tok_s);
         println!(
-            "  latency    : p50 {:.2} ms  p90 {:.2} ms  p99 {:.2} ms",
-            self.p50_ms, self.p90_ms, self.p99_ms
+            "  score lat  : p50 {:.2} ms  p90 {:.2} ms  p99 {:.2} ms  ({} requests)",
+            self.p50_ms, self.p90_ms, self.p99_ms, self.score_requests
         );
+        if self.gen_requests > 0 {
+            println!(
+                "  generate   : {} requests, {} tokens ({:.0} tok/s, {} decode steps)",
+                self.gen_requests, self.gen_tokens, self.gen_tok_s, self.decode_steps
+            );
+            println!(
+                "  ttft       : p50 {:.2} ms  p90 {:.2} ms  p99 {:.2} ms",
+                self.ttft_p50_ms, self.ttft_p90_ms, self.ttft_p99_ms
+            );
+            println!(
+                "  itl        : p50 {:.2} ms  p90 {:.2} ms  p99 {:.2} ms",
+                self.itl_p50_ms, self.itl_p90_ms, self.itl_p99_ms
+            );
+        }
         println!(
             "  batching   : {} batches (mean {:.2}, max {})",
             self.batches, self.mean_batch, self.max_batch
@@ -421,43 +961,91 @@ impl LoadReport {
     }
 }
 
+/// Sorted-percentile pick (0.0 when the sample is empty).
+fn pct(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[((sorted.len() - 1) as f64 * q) as usize]
+}
+
+#[derive(Default)]
+struct ClientTally {
+    /// (latency ms, window len, batched_with) per score request
+    score_lat: Vec<(f64, usize, usize)>,
+    ttft: Vec<f64>,
+    itl: Vec<f64>,
+    gen_requests: usize,
+    gen_tokens: usize,
+}
+
 /// Drive the server with `clients` concurrent threads, each submitting
-/// `per_client` scoring requests over deterministic token windows of
-/// varying length, and measure per-request wall latency plus end-to-end
+/// `per_client` requests over deterministic token windows of varying
+/// length — score requests, or a [`LoadMix`]-controlled blend of
+/// scores and greedy generations — and measure per-request score
+/// latency, generation TTFT / inter-token latency, and end-to-end
 /// token throughput.
 pub fn load_test(
     server: &Server,
     clients: usize,
     per_client: usize,
     seed: u64,
+    mix: &LoadMix,
 ) -> Result<LoadReport> {
     ensure!(clients >= 1 && per_client >= 1, "empty load test");
+    ensure!(mix.max_steps >= 1, "load mix needs max_steps >= 1");
     let cfg = server.config();
     let (vocab, ctx) = (cfg.vocab, cfg.ctx);
+    let max_steps = mix.max_steps.min(server.opts().max_steps);
     let before = server.stats();
     let t0 = Instant::now();
-    let lat_tok: Vec<(f64, usize, usize)> = std::thread::scope(|scope| {
+    let tallies: Vec<ClientTally> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..clients)
             .map(|c| {
-                scope.spawn(move || -> Result<Vec<(f64, usize, usize)>> {
+                scope.spawn(move || -> Result<ClientTally> {
                     let mut rng = crate::util::rng::Rng::new(
                         seed ^ (c as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
                     );
-                    let mut out = Vec::with_capacity(per_client);
+                    let mut tally = ClientTally::default();
                     for _ in 0..per_client {
-                        let len = 4 + rng.below(ctx.saturating_sub(3).max(1));
-                        let len = len.min(ctx);
-                        let tokens: Vec<i32> =
-                            (0..len).map(|_| rng.below(vocab) as i32).collect();
-                        let t = Instant::now();
-                        let score = server.score(tokens)?;
-                        out.push((
-                            t.elapsed().as_secs_f64() * 1e3,
-                            score.len,
-                            score.batched_with,
-                        ));
+                        let is_gen = mix.generate_frac > 0.0
+                            && (rng.below(1_000_000) as f64)
+                                < mix.generate_frac * 1e6;
+                        if is_gen {
+                            let plen = 4 + rng.below((ctx / 2).max(1));
+                            let plen = plen.min(ctx);
+                            let prompt: Vec<i32> = (0..plen)
+                                .map(|_| rng.below(vocab) as i32)
+                                .collect();
+                            let steps = if mix.heavy_tail {
+                                // Pareto-like: P(steps > s) ~ s^-1.43
+                                let u = (rng.below(1_000_000) + 1) as f64 / 1e6;
+                                ((1.0 / u).powf(0.7).ceil() as usize)
+                                    .clamp(1, max_steps)
+                            } else {
+                                1 + rng.below(max_steps)
+                            };
+                            let out = server.generate_timed(&prompt, steps)?;
+                            tally.gen_requests += 1;
+                            tally.gen_tokens += out.steps();
+                            tally.ttft.push(out.ttft_ms);
+                            tally.itl.extend(out.itl_ms.iter().copied());
+                        } else {
+                            let len = 4 + rng.below(ctx.saturating_sub(3).max(1));
+                            let len = len.min(ctx);
+                            let tokens: Vec<i32> = (0..len)
+                                .map(|_| rng.below(vocab) as i32)
+                                .collect();
+                            let t = Instant::now();
+                            let score = server.score(tokens)?;
+                            tally.score_lat.push((
+                                t.elapsed().as_secs_f64() * 1e3,
+                                score.len,
+                                score.batched_with,
+                            ));
+                        }
                     }
-                    Ok(out)
+                    Ok(tally)
                 })
             })
             .collect();
@@ -465,7 +1053,7 @@ pub fn load_test(
         let mut err = None;
         for h in handles {
             match h.join().expect("load-test client panicked") {
-                Ok(v) => all.extend(v),
+                Ok(v) => all.push(v),
                 Err(e) => err = Some(e),
             }
         }
@@ -476,26 +1064,60 @@ pub fn load_test(
     })?;
     let wall_secs = t0.elapsed().as_secs_f64();
     let after = server.stats();
-    let total_tokens: usize = lat_tok.iter().map(|&(_, n, _)| n).sum();
+    let score_tokens: usize = tallies
+        .iter()
+        .flat_map(|t| t.score_lat.iter())
+        .map(|&(_, n, _)| n)
+        .sum();
+    let gen_tokens: usize = tallies.iter().map(|t| t.gen_tokens).sum();
+    let gen_requests: usize = tallies.iter().map(|t| t.gen_requests).sum();
+    let score_requests: usize = tallies.iter().map(|t| t.score_lat.len()).sum();
     // run-local, like batches/requests: derived from this run's own
     // responses, not the server-lifetime high-water mark
-    let max_batch = lat_tok.iter().map(|&(_, _, b)| b).max().unwrap_or(0);
-    let mut lats: Vec<f64> = lat_tok.iter().map(|&(l, _, _)| l).collect();
+    let max_batch = tallies
+        .iter()
+        .flat_map(|t| t.score_lat.iter())
+        .map(|&(_, _, b)| b)
+        .max()
+        .unwrap_or(0);
+    let mut lats: Vec<f64> = tallies
+        .iter()
+        .flat_map(|t| t.score_lat.iter())
+        .map(|&(l, _, _)| l)
+        .collect();
     lats.sort_by(f64::total_cmp);
-    let pick = |q: f64| lats[((lats.len() - 1) as f64 * q) as usize];
+    let mut ttfts: Vec<f64> =
+        tallies.iter().flat_map(|t| t.ttft.iter().copied()).collect();
+    ttfts.sort_by(f64::total_cmp);
+    let mut itls: Vec<f64> =
+        tallies.iter().flat_map(|t| t.itl.iter().copied()).collect();
+    itls.sort_by(f64::total_cmp);
     let batches = after.batches - before.batches;
+    let total_tokens = score_tokens + gen_tokens;
+    let requests = score_requests + gen_requests;
     Ok(LoadReport {
         clients,
-        requests: lats.len(),
+        requests,
+        score_requests,
+        gen_requests,
         total_tokens,
+        gen_tokens,
         wall_secs,
         throughput_tok_s: total_tokens as f64 / wall_secs.max(1e-9),
-        p50_ms: pick(0.5),
-        p90_ms: pick(0.9),
-        p99_ms: pick(0.99),
+        gen_tok_s: gen_tokens as f64 / wall_secs.max(1e-9),
+        p50_ms: pct(&lats, 0.5),
+        p90_ms: pct(&lats, 0.9),
+        p99_ms: pct(&lats, 0.99),
+        ttft_p50_ms: pct(&ttfts, 0.5),
+        ttft_p90_ms: pct(&ttfts, 0.9),
+        ttft_p99_ms: pct(&ttfts, 0.99),
+        itl_p50_ms: pct(&itls, 0.5),
+        itl_p90_ms: pct(&itls, 0.9),
+        itl_p99_ms: pct(&itls, 0.99),
         batches,
-        mean_batch: lats.len() as f64 / batches.max(1) as f64,
+        mean_batch: requests as f64 / batches.max(1) as f64,
         max_batch,
+        decode_steps: after.decode_steps - before.decode_steps,
     })
 }
 
@@ -506,7 +1128,9 @@ pub fn load_test(
 /// Handle one line of the serve protocol and serialize the response.
 /// Requests:
 ///   `{"tokens": [..]}`               → `{"len", "next", "nll", "batched_with"}`
-///   `{"prompt": [..], "steps": N}`   → `{"tokens": [..]}`
+///   `{"prompt": [..], "steps": N}`   → `{"tokens": [..], "steps", "ttft_ms"}`
+///     (`"max_tokens"` is accepted as an alias for `"steps"`; both are
+///     capped at the server's `WATERSIC_SERVE_MAX_STEPS`)
 /// Errors come back as `{"error": "..."}` lines — a malformed request
 /// never kills the connection.
 pub fn handle_request_line(server: &Server, line: &str) -> String {
@@ -542,16 +1166,32 @@ fn handle_request_inner(server: &Server, line: &str) -> Result<Json> {
         ]));
     }
     if let Some(prompt) = req.get("prompt") {
-        let steps = match req.get("steps") {
+        let steps = match req.get("steps").or_else(|| req.get("max_tokens")) {
             Some(s) => s.as_usize()?,
             None => 8,
         };
-        ensure!(steps <= 256, "steps capped at 256");
-        let toks = server.generate(&parse_tokens(prompt)?, steps)?;
-        return Ok(obj(vec![(
-            "tokens",
-            Json::Arr(toks.iter().map(|&t| Json::Num(t as f64)).collect()),
-        )]));
+        let prompt = parse_tokens(prompt)?;
+        if steps == 0 {
+            let toks = server.generate(&prompt, 0)?;
+            return Ok(obj(vec![(
+                "tokens",
+                Json::Arr(toks.iter().map(|&t| Json::Num(t as f64)).collect()),
+            )]));
+        }
+        // the per-request step cap (WATERSIC_SERVE_MAX_STEPS) is
+        // enforced by submit_generate — an unbounded request errors
+        // instead of monopolizing the batcher
+        let out = server.generate_timed(&prompt, steps)?;
+        return Ok(obj(vec![
+            (
+                "tokens",
+                Json::Arr(
+                    out.tokens.iter().map(|&t| Json::Num(t as f64)).collect(),
+                ),
+            ),
+            ("steps", Json::Num(out.steps() as f64)),
+            ("ttft_ms", Json::Num(out.ttft_ms)),
+        ]));
     }
     bail!("request needs \"tokens\" or \"prompt\"")
 }
@@ -561,17 +1201,19 @@ mod tests {
     use super::*;
 
     fn tiny_server(batch_max: usize, flush: Duration) -> Server {
+        tiny_server_opts(ServeOpts {
+            batch_max,
+            flush,
+            kv_budget: 1 << 30,
+            max_steps: 256,
+        })
+    }
+
+    fn tiny_server_opts(opts: ServeOpts) -> Server {
         let cfg = ModelConfig::tiny_test();
         let w = Weights::random(&cfg, 21);
         let pw = PackedWeights::new(&cfg, w, Precision::F64);
-        Server::start(
-            cfg,
-            pw,
-            ServeOpts {
-                batch_max,
-                flush,
-            },
-        )
+        Server::start(cfg, pw, opts)
     }
 
     #[test]
@@ -606,6 +1248,49 @@ mod tests {
         assert_eq!(out.len(), 6);
         assert_eq!(&out[..3], &[5, 6, 7]);
         assert!(out.iter().all(|&t| (0..128).contains(&t)));
+        let stats = server.stats();
+        assert_eq!(stats.gen_completed, 1);
+        // 1 prefill token batch + decode steps for the later tokens
+        assert!(stats.decode_tokens >= 1);
+        assert!(stats.kv_peak_bytes > 0);
+    }
+
+    #[test]
+    fn generate_steps_are_bounded() {
+        // the max_steps rider: an unbounded request errors cleanly at
+        // submit instead of holding a scheduler slot forever
+        let server = tiny_server_opts(ServeOpts {
+            batch_max: 4,
+            flush: Duration::from_micros(100),
+            kv_budget: 1 << 30,
+            max_steps: 4,
+        });
+        let err = server.generate(&[1, 2], 5).unwrap_err().to_string();
+        assert!(err.contains("cap"), "unexpected error: {err}");
+        assert_eq!(server.generate(&[1, 2], 4).unwrap().len(), 6);
+        // steps = 0 echoes the validated prompt without queueing
+        assert_eq!(server.generate(&[1, 2], 0).unwrap(), vec![1, 2]);
+        assert!(server.generate(&[999], 0).is_err());
+    }
+
+    #[test]
+    fn kv_budget_rejects_oversized_requests() {
+        // a budget below any multi-step cache: admission must reject
+        // with a clean error, and scores (no KV) keep flowing
+        let server = tiny_server_opts(ServeOpts {
+            batch_max: 4,
+            flush: Duration::from_micros(100),
+            kv_budget: 1,
+            max_steps: 256,
+        });
+        let err = server.generate(&[1, 2, 3], 8).unwrap_err().to_string();
+        assert!(
+            err.contains("KV_BUDGET") || err.contains("KV cache"),
+            "unexpected error: {err}"
+        );
+        // single-step generations need no cache and still run
+        assert_eq!(server.generate(&[1, 2, 3], 1).unwrap().len(), 4);
+        assert!(server.score(vec![1, 2, 3]).is_ok());
     }
 
     #[test]
@@ -618,6 +1303,21 @@ mod tests {
         let resp = handle_request_line(&server, "{\"prompt\": [4, 5], \"steps\": 2}");
         let j = Json::parse(&resp).unwrap();
         assert_eq!(j.req("tokens").unwrap().as_arr().unwrap().len(), 4);
+        assert_eq!(j.req("steps").unwrap().as_usize().unwrap(), 2);
+        // max_tokens is an alias for steps
+        let resp =
+            handle_request_line(&server, "{\"prompt\": [4, 5], \"max_tokens\": 3}");
+        let j = Json::parse(&resp).unwrap();
+        assert_eq!(j.req("tokens").unwrap().as_arr().unwrap().len(), 5);
+        // an over-cap request errors instead of monopolizing the batcher
+        let resp = handle_request_line(
+            &server,
+            "{\"prompt\": [4, 5], \"steps\": 100000}",
+        );
+        assert!(
+            Json::parse(&resp).unwrap().get("error").is_some(),
+            "unbounded generate must error"
+        );
         // malformed requests come back as error lines, not panics
         for bad in ["nonsense", "{}", "{\"tokens\": [99999]}", "{\"tokens\": []}"] {
             let resp = handle_request_line(&server, bad);
@@ -631,8 +1331,9 @@ mod tests {
     #[test]
     fn load_test_reports_consistent_counters() {
         let server = tiny_server(4, Duration::from_micros(200));
-        let rep = load_test(&server, 3, 4, 7).unwrap();
+        let rep = load_test(&server, 3, 4, 7, &LoadMix::default()).unwrap();
         assert_eq!(rep.requests, 12);
+        assert_eq!(rep.score_requests, 12);
         assert!(rep.total_tokens >= 12 * 4);
         assert!(rep.throughput_tok_s > 0.0);
         assert!(rep.p50_ms <= rep.p90_ms && rep.p90_ms <= rep.p99_ms);
@@ -641,5 +1342,25 @@ mod tests {
         let stats = server.shutdown();
         assert_eq!(stats.requests, 12);
         assert_eq!(stats.tokens, rep.total_tokens);
+    }
+
+    #[test]
+    fn mixed_load_test_reports_decode_percentiles() {
+        let server = tiny_server(4, Duration::from_micros(200));
+        let mix = LoadMix {
+            generate_frac: 0.5,
+            heavy_tail: true,
+            max_steps: 12,
+        };
+        let rep = load_test(&server, 3, 6, 11, &mix).unwrap();
+        assert_eq!(rep.requests, 18);
+        assert_eq!(rep.score_requests + rep.gen_requests, 18);
+        assert!(rep.gen_requests > 0, "mix produced no generations");
+        assert!(rep.gen_tokens >= rep.gen_requests);
+        assert!(rep.ttft_p50_ms <= rep.ttft_p99_ms);
+        assert!(rep.itl_p50_ms <= rep.itl_p99_ms);
+        assert!(rep.ttft_p50_ms > 0.0);
+        let stats = server.shutdown();
+        assert_eq!(stats.gen_completed, rep.gen_requests);
     }
 }

@@ -18,13 +18,24 @@ use watersic::coordinator::quantize_model;
 use watersic::experiments::{synthetic_tiny_opts, synthetic_tiny_setup};
 use watersic::linalg::gemm::Precision;
 use watersic::model::transformer::{
-    forward, forward_packed, greedy_continuation, ForwardOpts,
+    decode_packed, forward, forward_packed, greedy_continuation,
+    greedy_continuation_rescore, prefill_packed, ForwardOpts, KvCache,
 };
 use watersic::model::weights::{PackedWeights, Weights};
 use watersic::model::ModelConfig;
 use watersic::runtime::server::{ScoreHandle, Server};
 use watersic::runtime::ServeOpts;
 use watersic::util::rng::Rng;
+
+/// `ServeOpts` with deterministic scheduler limits (env-independent).
+fn opts(batch_max: usize, flush: Duration) -> ServeOpts {
+    ServeOpts {
+        batch_max,
+        flush,
+        kv_budget: 1 << 30,
+        max_steps: 256,
+    }
+}
 
 /// Serializes every test in this binary: one of them mutates
 /// `WATERSIC_THREADS` while the kernels read it through `env::var` on
@@ -92,14 +103,8 @@ fn batched_serve_bit_identical_to_sequential_reference() {
     let run_server = |batch_max: usize, flush_ms: u64, order: &[usize]| {
         let pw =
             PackedWeights::from_container(cfg, teacher, container, prec).unwrap();
-        let server = Server::start(
-            cfg.clone(),
-            pw,
-            ServeOpts {
-                batch_max,
-                flush: Duration::from_millis(flush_ms),
-            },
-        );
+        let server =
+            Server::start(cfg.clone(), pw, opts(batch_max, Duration::from_millis(flush_ms)));
         let mut handles: Vec<Option<ScoreHandle>> =
             (0..reqs.len()).map(|_| None).collect();
         for &i in order {
@@ -160,14 +165,7 @@ fn serve_outputs_invariant_across_worker_threads() {
         .collect();
     let run = || -> Vec<Vec<f64>> {
         let pw = PackedWeights::new(&cfg, weights.clone(), prec);
-        let server = Server::start(
-            cfg.clone(),
-            pw,
-            ServeOpts {
-                batch_max: 3,
-                flush: Duration::from_millis(50),
-            },
-        );
+        let server = Server::start(cfg.clone(), pw, opts(3, Duration::from_millis(50)));
         let handles: Vec<ScoreHandle> = reqs
             .iter()
             .map(|r| server.submit(r.clone()).unwrap())
@@ -197,14 +195,7 @@ fn serve_matches_plain_dequant_forward() {
     let student = student(teacher, container);
     let reqs = requests(cfg, 8, 33);
     let pw = PackedWeights::from_container(cfg, teacher, container, prec).unwrap();
-    let server = Server::start(
-        cfg.clone(),
-        pw,
-        ServeOpts {
-            batch_max: 4,
-            flush: Duration::from_millis(50),
-        },
-    );
+    let server = Server::start(cfg.clone(), pw, opts(4, Duration::from_millis(50)));
     let handles: Vec<ScoreHandle> = reqs
         .iter()
         .map(|r| server.submit(r.clone()).unwrap())
@@ -256,4 +247,234 @@ fn serve_generate_matches_plain_greedy() {
     let toks = server.generate(&prompt, 5).unwrap();
     let expect = greedy_continuation(cfg, &student, &prompt, 5);
     assert_eq!(toks, expect, "batched greedy must match the plain oracle");
+}
+
+#[test]
+fn serve_decode_matches_rescore_oracle_across_mixes() {
+    let _serial = env_lock();
+    let (cfg, teacher, container) = setup();
+    if Precision::from_env() != Precision::F64 {
+        // token-sequence parity is an argmax comparison; an f32 pack
+        // can legitimately flip near-tie argmaxes (the logits-level
+        // f32 tolerance is pinned below)
+        return;
+    }
+    let student = student(teacher, container);
+    // the pinned oracle: the PR 5 loop that re-scores the full window
+    // every step — the cached/batched/packed path must reproduce it
+    // bit-for-bit, including past ctx where the window slides
+    let gens: Vec<(Vec<i32>, usize)> = vec![
+        (vec![3, 1, 4, 1, 5, 9, 2, 6], 10), // crosses ctx = 12 mid-run
+        (vec![2, 7, 1, 8], 3),
+        (vec![1; 12], 6), // saturated from the start: reslide every step
+    ];
+    let expect: Vec<Vec<i32>> = gens
+        .iter()
+        .map(|(p, s)| greedy_continuation_rescore(cfg, &student, p, *s))
+        .collect();
+    let scores = requests(cfg, 4, 88);
+    let score_ref: Vec<Vec<f64>> = scores
+        .iter()
+        .map(|toks| {
+            let pw = PackedWeights::from_container(cfg, teacher, container, Precision::F64)
+                .unwrap();
+            let out =
+                forward_packed(cfg, &pw, toks, 1, toks.len(), &ForwardOpts::default());
+            out.logits.row(toks.len() - 1).to_vec()
+        })
+        .collect();
+
+    // mixed interleaved submission: generations and scores share
+    // iterations; then batch_max = 1 (every sequence alone)
+    for batch_max in [4usize, 1] {
+        let pw = PackedWeights::from_container(cfg, teacher, container, Precision::F64)
+            .unwrap();
+        let server =
+            Server::start(cfg.clone(), pw, opts(batch_max, Duration::from_millis(100)));
+        let g0 = server.submit_generate(gens[0].0.clone(), gens[0].1).unwrap();
+        let s0 = server.submit(scores[0].clone()).unwrap();
+        let g1 = server.submit_generate(gens[1].0.clone(), gens[1].1).unwrap();
+        let s1 = server.submit(scores[1].clone()).unwrap();
+        let g2 = server.submit_generate(gens[2].0.clone(), gens[2].1).unwrap();
+        let s2 = server.submit(scores[2].clone()).unwrap();
+        let s3 = server.submit(scores[3].clone()).unwrap();
+        for (i, (h, want)) in [(g0, &expect[0]), (g1, &expect[1]), (g2, &expect[2])]
+            .into_iter()
+            .enumerate()
+        {
+            let out = h.wait().unwrap();
+            assert_eq!(
+                &out.tokens, want,
+                "gen {i} (batch_max {batch_max}) diverged from the rescore oracle"
+            );
+        }
+        for (i, (h, want)) in [(s0, 0), (s1, 1), (s2, 2), (s3, 3)]
+            .into_iter()
+            .map(|(h, i)| (i, (h, &score_ref[i])))
+        {
+            assert_eq!(
+                &h.wait().unwrap().logits_last,
+                want,
+                "score {i} (batch_max {batch_max}) drifted while co-batched with decodes"
+            );
+        }
+    }
+}
+
+#[test]
+fn short_score_completes_while_long_generation_in_flight() {
+    let _serial = env_lock();
+    let (cfg, teacher, container) = setup();
+    let prec = Precision::from_env();
+    let pw = PackedWeights::from_container(cfg, teacher, container, prec).unwrap();
+    // a long flush window guarantees the generation and the score are
+    // admitted into the same first scheduler iteration
+    let server = Server::start(cfg.clone(), pw, opts(4, Duration::from_millis(300)));
+    let steps = 8;
+    let gen = server.submit_generate(vec![5, 6, 7, 8], steps).unwrap();
+    let score = server.submit(vec![1, 2, 3]).unwrap();
+    let s = score.wait().unwrap();
+    let g = gen.wait().unwrap();
+    // both joined the same batch...
+    assert_eq!(
+        s.iteration, g.start_iteration,
+        "score and generation did not share the first iteration"
+    );
+    // ...the generation advanced exactly one token per iteration...
+    assert_eq!(
+        g.done_iteration - g.start_iteration + 1,
+        steps,
+        "generation did not advance one token per scheduler iteration"
+    );
+    // ...so the score left the batch while the generation was still
+    // mid-flight: step-granularity join/leave, not whole-request
+    assert!(
+        s.iteration < g.done_iteration,
+        "score should complete while the generation is in flight"
+    );
+    assert_eq!(g.tokens.len(), 4 + steps);
+    assert!(g.ttft_ms >= 0.0 && g.itl_ms.len() == steps - 1);
+}
+
+#[test]
+fn kv_budget_admission_is_clean_and_serializes() {
+    let _serial = env_lock();
+    let (cfg, teacher, container) = setup();
+    let prec = Precision::from_env();
+    // budget = exactly one 4-prompt/4-step cache (cap = 4 + 4 - 1 = 7)
+    let one_seq = KvCache::bytes_for(cfg, 7);
+    let pw = PackedWeights::from_container(cfg, teacher, container, prec).unwrap();
+    let server = Server::start(
+        cfg.clone(),
+        pw,
+        ServeOpts {
+            batch_max: 4,
+            flush: Duration::from_millis(200),
+            kv_budget: one_seq,
+            max_steps: 256,
+        },
+    );
+    // a request whose cache could never fit errors cleanly (no OOM,
+    // no wedged queue): steps = 12 needs cap = ctx = 12 > 7
+    let err = server
+        .generate(&[1, 2, 3, 4], 12)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("KV"), "unexpected rejection message: {err}");
+    // two identical in-budget generations submitted together: the
+    // budget admits one at a time, so the second starts only after
+    // the first completes and frees its bytes
+    let a = server.submit_generate(vec![9, 8, 7, 6], 4).unwrap();
+    let b = server.submit_generate(vec![9, 8, 7, 6], 4).unwrap();
+    let a = a.wait().unwrap();
+    let b = b.wait().unwrap();
+    assert_eq!(a.tokens, b.tokens, "identical requests must agree");
+    assert!(
+        b.start_iteration > a.done_iteration,
+        "budget of one sequence must serialize the two generations \
+         (a: {}..{}, b: {}..{})",
+        a.start_iteration,
+        a.done_iteration,
+        b.start_iteration,
+        b.done_iteration
+    );
+    // scores ride along regardless of the KV budget
+    assert!(server.score(vec![1, 2, 3]).is_ok());
+}
+
+#[test]
+fn decode_logits_match_full_forward_every_step_across_threads() {
+    let _serial = env_lock();
+    // wide enough that the projections clear the parallel cutoffs and
+    // WATERSIC_THREADS genuinely fans out (see the invariance test)
+    let cfg = ModelConfig {
+        vocab: 64,
+        d_model: 64,
+        n_heads: 4,
+        d_ff: 128,
+        ctx: 64,
+        ..ModelConfig::tiny_test()
+    };
+    let weights = Weights::random(&cfg, 41);
+    let prec = Precision::from_env();
+    let mut rng = Rng::new(13);
+    let toks: Vec<i32> = (0..48).map(|_| rng.below(cfg.vocab) as i32).collect();
+    let prefill_len = 40;
+    // decode logits at every step, plus the full-forward reference row
+    let run = || -> Vec<(Vec<f64>, Vec<f64>)> {
+        let pw = PackedWeights::new(&cfg, weights.clone(), prec);
+        let mut cache = KvCache::new(&cfg, cfg.ctx);
+        {
+            let mut kv = [Some((&mut cache, prefill_len))];
+            prefill_packed(
+                &cfg,
+                &pw,
+                &toks[..prefill_len],
+                1,
+                prefill_len,
+                &mut kv,
+                &ForwardOpts::default(),
+            );
+        }
+        (0..8)
+            .map(|i| {
+                let t = prefill_len + i + 1;
+                let mut caches = [&mut cache];
+                let dec = decode_packed(&cfg, &pw, &[toks[t - 1]], &mut caches);
+                let full =
+                    forward_packed(&cfg, &pw, &toks[..t], 1, t, &ForwardOpts::default());
+                (dec.row(0).to_vec(), full.logits.row(t - 1).to_vec())
+            })
+            .collect()
+    };
+    let old = std::env::var("WATERSIC_THREADS").ok();
+    std::env::set_var("WATERSIC_THREADS", "1");
+    let single = run();
+    std::env::set_var("WATERSIC_THREADS", "4");
+    let multi = run();
+    match old {
+        Some(v) => std::env::set_var("WATERSIC_THREADS", v),
+        None => std::env::remove_var("WATERSIC_THREADS"),
+    }
+    assert_eq!(single, multi, "decode bits must not depend on threads");
+    for (i, (dec, full)) in single.iter().enumerate() {
+        if prec == Precision::F64 {
+            // the decode step reproduces the full forward's last row
+            // reduction-for-reduction, so the comparison is bitwise
+            assert_eq!(dec, full, "step {i}: cached decode vs full forward");
+        } else {
+            let norm = full.iter().map(|v| v * v).sum::<f64>().sqrt();
+            let diff = dec
+                .iter()
+                .zip(full)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt();
+            assert!(
+                diff / norm.max(1e-30) < 1e-3,
+                "step {i}: f32 decode drifted ({})",
+                diff / norm.max(1e-30)
+            );
+        }
+    }
 }
