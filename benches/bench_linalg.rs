@@ -368,7 +368,7 @@ fn main() {
     }
 
     // opt-in hard gates (see module docs)
-    if std::env::var("WATERSIC_BENCH_ENFORCE").as_deref() == Ok("1") {
+    if watersic::util::env::flag("WATERSIC_BENCH_ENFORCE") {
         let gates = [
             ("matmul 512³", 2.0),
             ("gram 2048x256", 4.0),

@@ -46,12 +46,8 @@ use watersic::util::bench::{report, Bench, BenchLog};
 use watersic::util::json::Json;
 use watersic::util::rng::Rng;
 
-fn env_usize(key: &str, default: usize) -> usize {
-    std::env::var(key)
-        .ok()
-        .and_then(|v| v.parse::<usize>().ok())
-        .unwrap_or(default)
-        .max(1)
+fn env_usize(key: &'static str, default: usize) -> usize {
+    watersic::util::env::usize_or(key, default).max(1)
 }
 
 fn main() -> anyhow::Result<()> {
@@ -219,7 +215,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     // opt-in hard gates (see module docs)
-    if std::env::var("WATERSIC_BENCH_ENFORCE").as_deref() == Ok("1") {
+    if watersic::util::env::flag("WATERSIC_BENCH_ENFORCE") {
         let (shape, min) = ("16x512x512", 1.05);
         let got = prepack_speedups
             .iter()

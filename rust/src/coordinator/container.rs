@@ -127,7 +127,7 @@ impl Container {
             let mut col_scale = Vec::with_capacity(n);
             for _ in 0..n {
                 let b = get_bytes(bytes, &mut pos, 4, "scales")?;
-                col_scale.push(f32::from_le_bytes(b.try_into().unwrap()) as f64);
+                col_scale.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]) as f64);
             }
             if a > (bytes.len() - pos) / 4 {
                 bail!("corrupt header: {a} row rescalers in {} bytes", bytes.len() - pos);
@@ -135,7 +135,7 @@ impl Container {
             let mut t = Vec::with_capacity(a);
             for _ in 0..a {
                 let b = get_bytes(bytes, &mut pos, 4, "t")?;
-                t.push(f32::from_le_bytes(b.try_into().unwrap()) as f64);
+                t.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]) as f64);
             }
             let ndead = get_varint(bytes, &mut pos)? as usize;
             if ndead > bytes.len() - pos {

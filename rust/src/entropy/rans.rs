@@ -24,6 +24,23 @@ struct SymStats {
     syms: Vec<u32>,
 }
 
+/// Index of the largest quantized frequency.  Total on any input:
+/// every live entry is ≥ 1 (see the `.max(1)` below), so the first
+/// element always beats the starting best of 0; an empty table —
+/// unreachable from the codec, which rejects empty payloads — yields 0
+/// rather than panicking.
+fn argmax_freq(freq: &[u32]) -> usize {
+    let mut best = 0usize;
+    let mut best_f = 0u32;
+    for (i, &f) in freq.iter().enumerate() {
+        if f > best_f {
+            best = i;
+            best_f = f;
+        }
+    }
+    best
+}
+
 /// Quantize empirical counts to 12-bit frequencies that sum exactly to
 /// PROB_SCALE, every present symbol getting freq ≥ 1.
 fn quantize_freqs(counts: &[(u32, u64)]) -> SymStats {
@@ -41,7 +58,7 @@ fn quantize_freqs(counts: &[(u32, u64)]) -> SymStats {
     while sum != PROB_SCALE as i64 {
         if sum > PROB_SCALE as i64 {
             // shrink the largest freq > 1
-            let i = (0..k).max_by_key(|&i| freq[i]).unwrap();
+            let i = argmax_freq(&freq);
             if freq[i] <= 1 {
                 break;
             }
@@ -49,7 +66,7 @@ fn quantize_freqs(counts: &[(u32, u64)]) -> SymStats {
             freq[i] -= d;
             sum -= d as i64;
         } else {
-            let i = (0..k).max_by_key(|&i| freq[i]).unwrap();
+            let i = argmax_freq(&freq);
             let d = (PROB_SCALE as i64 - sum) as u32;
             freq[i] += d;
             sum += d as i64;

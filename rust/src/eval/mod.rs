@@ -157,7 +157,7 @@ pub fn probe_suite(
         for r in 0..logits.rows {
             let row = logits.row(r);
             let pred = (0..cfg.vocab)
-                .max_by(|&a, &b| row[a].partial_cmp(&row[b]).unwrap())
+                .max_by(|&a, &b| row[a].total_cmp(&row[b]))
                 .unwrap() as i32;
             let target = tgts[r];
             let prev = toks[r];

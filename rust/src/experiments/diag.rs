@@ -46,7 +46,7 @@ pub fn fig4(ctx: &Ctx) -> Result<()> {
             ts.extend_from_slice(&q.t);
         }
         let pct = |v: &mut Vec<f64>, q: f64| {
-            v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            v.sort_by(|a, b| a.total_cmp(b));
             v[((v.len() - 1) as f64 * q) as usize]
         };
         let (g10, g50, g90) = (pct(&mut gammas, 0.1), pct(&mut gammas, 0.5), pct(&mut gammas, 0.9));
@@ -108,7 +108,7 @@ pub fn fig5(ctx: &Ctx) -> Result<()> {
     }
     let spread = {
         let mut v = all.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(|a, b| a.total_cmp(b));
         v[(v.len() * 9) / 10] - v[v.len() / 10]
     };
     println!(

@@ -38,7 +38,7 @@ pub const ARTIFACTS_DIR: &str = "artifacts";
 /// Resolve the artifacts directory: `$WATERSIC_ARTIFACTS`, else walk up
 /// from the current directory looking for `artifacts/manifest.json`.
 pub fn artifacts_dir() -> std::path::PathBuf {
-    if let Ok(p) = std::env::var("WATERSIC_ARTIFACTS") {
+    if let Some(p) = util::env::string("WATERSIC_ARTIFACTS") {
         return p.into();
     }
     let mut dir = std::env::current_dir().unwrap_or_else(|_| ".".into());

@@ -174,11 +174,17 @@ fn trsm_chol_panel(l: &mut Mat, k0: usize, k1: usize, threads: usize) {
         let base = ptr.load(Ordering::Relaxed);
         for off in range {
             let i = k1 + off;
+            // check-aliasing: row i, columns [k0, k1) is this task's
+            // exclusive write-set (rows k0..k1 are only read)
+            crate::util::aliasing::claim(base.wrapping_add(i * n + k0) as *const f64, k1 - k0);
             // SAFETY: row i is owned by this task; rows k0..k1 (the
             // factored diagonal block) are read-only during this phase
             // and disjoint from every written row (j < k1 ≤ i).
             let row = unsafe { std::slice::from_raw_parts_mut(base.add(i * n), k1) };
             for j in k0..k1 {
+                // SAFETY: row j < k1 ≤ i lies in the already-factored
+                // diagonal block — read-only this phase, never aliased
+                // by any task's written row i.
                 let lj = unsafe { std::slice::from_raw_parts(base.add(j * n), j + 1) };
                 let mut s = row[j];
                 for t in k0..j {
@@ -282,6 +288,12 @@ pub fn solve_xlt_eq_b_with_threads(l: &Mat, b: &Mat, threads: usize) -> Mat {
             parallel_ranges(rows, threads, |range| {
                 let base = ptr.load(Ordering::Relaxed);
                 for r in range {
+                    // check-aliasing: row r, columns [k0, k1) is this
+                    // task's exclusive write-set
+                    crate::util::aliasing::claim(
+                        base.wrapping_add(r * n + k0) as *const f64,
+                        k1 - k0,
+                    );
                     // SAFETY: disjoint row slices per task.
                     let row = unsafe { std::slice::from_raw_parts_mut(base.add(r * n), n) };
                     for i in k0..k1 {

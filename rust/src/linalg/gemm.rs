@@ -102,10 +102,10 @@ impl Precision {
     pub fn from_env() -> Precision {
         static CHOSEN: OnceLock<Precision> = OnceLock::new();
         *CHOSEN.get_or_init(|| {
-            match std::env::var("WATERSIC_PRECISION").as_deref() {
-                Ok("f32") | Ok("F32") => Precision::F32,
-                Ok("f64") | Ok("F64") | Err(_) => Precision::F64,
-                Ok(other) => {
+            match crate::util::env::string("WATERSIC_PRECISION").as_deref() {
+                Some("f32") | Some("F32") => Precision::F32,
+                Some("f64") | Some("F64") | None => Precision::F64,
+                Some(other) => {
                     eprintln!(
                         "[linalg] unrecognized WATERSIC_PRECISION={other:?} \
                          (expected f32 or f64); using f64"
@@ -148,6 +148,11 @@ impl SimdBackend {
 
 #[allow(unreachable_code)]
 fn detect_backend() -> SimdBackend {
+    // Miri has no SIMD intrinsics: force the scalar rung so the tagged
+    // small-shape tests can interpret the kernels end to end.
+    if cfg!(miri) {
+        return SimdBackend::Scalar;
+    }
     #[cfg(target_arch = "x86_64")]
     {
         if is_x86_feature_detected!("avx2") {
@@ -169,13 +174,13 @@ fn detect_backend() -> SimdBackend {
 pub fn simd_backend() -> SimdBackend {
     static CHOSEN: OnceLock<SimdBackend> = OnceLock::new();
     *CHOSEN.get_or_init(|| {
-        match std::env::var("WATERSIC_SIMD").as_deref() {
-            Ok("scalar") => return SimdBackend::Scalar,
-            Ok(other) => eprintln!(
+        match crate::util::env::string("WATERSIC_SIMD").as_deref() {
+            Some("scalar") => return SimdBackend::Scalar,
+            Some(other) => eprintln!(
                 "[linalg] unrecognized WATERSIC_SIMD={other:?} \
                  (only \"scalar\" can be forced); using runtime detection"
             ),
-            Err(_) => {}
+            None => {}
         }
         detect_backend()
     })
@@ -224,6 +229,8 @@ impl Element for f64 {
         x
     }
 
+    /// # Safety
+    /// See [`Element::microkernel`].
     #[inline(always)]
     unsafe fn microkernel(
         backend: SimdBackend,
@@ -260,6 +267,8 @@ impl Element for f32 {
         x as f32
     }
 
+    /// # Safety
+    /// See [`Element::microkernel`].
     #[inline(always)]
     unsafe fn microkernel(
         backend: SimdBackend,
@@ -760,6 +769,15 @@ unsafe fn gemm_pass<T: Element>(
             let ic0 = blk * MC;
             let mc_eff = MC.min(m - ic0);
             let mcr = mc_eff.div_ceil(T::MR) * T::MR;
+
+            // check-aliasing: this task owns C rows [ic0, ic0+mc_eff)
+            // of the jc0..jc0+nc_eff column window
+            crate::util::aliasing::claim_strided(
+                cbase.wrapping_add(ic0 * ldc + jc0) as *const f64,
+                mc_eff,
+                nc_eff,
+                ldc,
+            );
 
             // ---- pack A block: mcr/MR panels of MR rows
             for p in 0..mcr / T::MR {
@@ -1388,6 +1406,14 @@ fn syrk_upper(a: &Mat, c: &mut Mat, threads: usize, prec: Precision) {
             let i1 = ((bi + 1) * GB).min(n);
             let j0 = bj * GB;
             let j1 = ((bj + 1) * GB).min(n);
+            // check-aliasing: this task owns the C tile
+            // [i0..i1)×[j0..j1)
+            crate::util::aliasing::claim_strided(
+                base.wrapping_add(i0 * n + j0) as *const f64,
+                i1 - i0,
+                j1 - j0,
+                n,
+            );
             // C[i0..i1, j0..j1] += A[:, i0..i1]ᵀ · A[:, j0..j1]
             let at = Panel {
                 data: &adata[i0..],
@@ -1568,6 +1594,14 @@ pub(crate) unsafe fn syrk_lower_acc_ptr(
             let i1 = ((bi + 1) * GB).min(m);
             let j0 = bj * GB;
             let j1 = ((bj + 1) * GB).min(m);
+            // check-aliasing: this task owns the C tile
+            // [i0..i1)×[j0..j1)
+            crate::util::aliasing::claim_strided(
+                base.wrapping_add(i0 * c_ld + j0) as *const f64,
+                i1 - i0,
+                j1 - j0,
+                c_ld,
+            );
             let ap = Panel {
                 data: &p_data[i0 * p_ld..],
                 rows: i1 - i0,

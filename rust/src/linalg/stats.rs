@@ -21,7 +21,7 @@ pub fn median(xs: &[f64]) -> f64 {
         return 0.0;
     }
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let n = v.len();
     if n % 2 == 1 {
         v[n / 2]
@@ -68,7 +68,7 @@ pub fn laplace_cdf(x: f64, mu: f64, b: f64) -> f64 {
 /// model CDF.
 pub fn ks_distance(xs: &[f64], cdf: impl Fn(f64) -> f64) -> f64 {
     let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v.sort_by(|a, b| a.total_cmp(b));
     let n = v.len() as f64;
     let mut d: f64 = 0.0;
     for (i, &x) in v.iter().enumerate() {

@@ -53,12 +53,22 @@ SERVING:
   needed; same weights `quantize --model tiny` uses).
 
 ENGINE OPTIONS (env):
-  WATERSIC_PRECISION={f64,f32}   kernel/pack precision (default f64)
-  WATERSIC_THREADS=N             worker-pool width (outputs bit-identical across N)
-  WATERSIC_SERVE_BATCH=N         max prefill rows / active generations per step (default 8)
-  WATERSIC_SERVE_FLUSH_US=N      partial-batch flush deadline in us (default 500)
-  WATERSIC_SERVE_KV_BUDGET=N     KV-cache byte budget across in-flight sequences (default 1 GiB)
-  WATERSIC_SERVE_MAX_STEPS=N     per-request generation-step cap (default 256)
+  every WATERSIC_* knob is read through the util::env registry; this
+  list is pinned to it by a unit test, so it cannot go stale.
+  WATERSIC_PRECISION={f64,f32}     kernel/pack precision (default f64)
+  WATERSIC_THREADS=N               worker-pool width (outputs bit-identical across N)
+  WATERSIC_SIMD=scalar             force the scalar kernel rung (default: auto-detect)
+  WATERSIC_LOG=1                   enable debug-level logging (any value)
+  WATERSIC_ARTIFACTS=DIR           AOT artifacts dir (default: walk up for artifacts/)
+  WATERSIC_PREPARE_LOOKAHEAD=N     prepared layers alive at once while quantizing (default 2)
+  WATERSIC_SERVE_BATCH=N           max prefill rows / active generations per step (default 8)
+  WATERSIC_SERVE_FLUSH_US=N        partial-batch flush deadline in us (default 500)
+  WATERSIC_SERVE_KV_BUDGET=N       KV-cache byte budget across in-flight sequences (default 1 GiB)
+  WATERSIC_SERVE_MAX_STEPS=N       per-request generation-step cap (default 256)
+  WATERSIC_BENCH_DIR=DIR           where cargo bench writes BENCH_*.json (default .)
+  WATERSIC_BENCH_ENFORCE=1         turn bench speedup targets into hard gates
+  WATERSIC_SERVE_CLIENTS=N         bench_serve: concurrent load-test clients (default 8)
+  WATERSIC_SERVE_REQUESTS=N        bench_serve: requests per load-test client (default 8)
 ";
 
 fn main() {
@@ -89,7 +99,7 @@ fn env_logger_lite() {
     }
     static LOGGER: L = L;
     let _ = log::set_logger(&LOGGER);
-    log::set_max_level(if std::env::var("WATERSIC_LOG").is_ok() {
+    log::set_max_level(if watersic::util::env::is_set("WATERSIC_LOG") {
         log::LevelFilter::Debug
     } else {
         log::LevelFilter::Warn
@@ -516,4 +526,27 @@ fn cmd_info() -> Result<()> {
     let shapes = j.req("zsic_shapes")?.as_arr()?;
     println!("zsic artifact shapes: {}", shapes.len());
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    /// The USAGE text and the `util::env` knob registry may never
+    /// drift: every registered knob must be documented here, and every
+    /// `WATERSIC_*` name the text mentions must be a registered knob
+    /// (`xtask lint` additionally pins the registry as the only read
+    /// path in the tree).
+    #[test]
+    fn usage_documents_exactly_the_registered_knobs() {
+        for k in watersic::util::env::KNOBS {
+            assert!(super::USAGE.contains(k.name), "USAGE missing {}", k.name);
+        }
+        for token in super::USAGE.split(|c: char| !(c.is_ascii_alphanumeric() || c == '_')) {
+            if token.starts_with("WATERSIC_") {
+                assert!(
+                    watersic::util::env::KNOBS.iter().any(|k| k.name == token),
+                    "USAGE mentions unregistered knob {token}"
+                );
+            }
+        }
+    }
 }

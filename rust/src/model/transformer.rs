@@ -580,6 +580,11 @@ fn forward_src_kv(
                 } else {
                     None
                 };
+                if let Some(pbase) = flat_base {
+                    // check-aliasing: the t×t prob block of (bi, h) is
+                    // this task's exclusive write-set
+                    crate::util::aliasing::claim(pbase as *const f64, t * t);
+                }
                 let mut ctx_head = Mat::zeros(t, hd);
                 for i in 0..t {
                     let qi = q.row(base + i);
@@ -1070,7 +1075,7 @@ pub fn greedy_continuation_rescore(
         let out = forward(cfg, w, window, 1, t, &ForwardOpts::default());
         let last = out.logits.row(t - 1);
         let arg = (0..cfg.vocab)
-            .max_by(|&a, &b| last[a].partial_cmp(&last[b]).unwrap())
+            .max_by(|&a, &b| last[a].total_cmp(&last[b]))
             .unwrap();
         toks.push(arg as i32);
     }
@@ -1375,7 +1380,7 @@ mod tests {
         // matches the max_by rule the rescore loop uses
         let row = [0.25, 0.5, 0.5, 0.1];
         let via_max_by = (0..row.len())
-            .max_by(|&a, &b| row[a].partial_cmp(&row[b]).unwrap())
+            .max_by(|&a, &b| row[a].total_cmp(&row[b]))
             .unwrap();
         assert_eq!(argmax_last(&row), via_max_by);
     }

@@ -121,6 +121,12 @@ pub fn zsic(y: &Mat, l: &Mat, alphas: &[f64], lmmse: bool, clamp: Option<i32>) -
                 parallel_ranges(a, threads, |range| {
                     let p = ywp.load(std::sync::atomic::Ordering::Relaxed);
                     for r in range {
+                        // check-aliasing: residual row r is this
+                        // task's exclusive write-set
+                        crate::util::aliasing::claim(
+                            p.wrapping_add(r * n) as *const f64,
+                            blo,
+                        );
                         // SAFETY: disjoint row ranges per thread.
                         let row = unsafe {
                             std::slice::from_raw_parts_mut(p.add(r * n), blo)

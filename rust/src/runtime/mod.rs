@@ -21,9 +21,7 @@ pub use crate::linalg::gemm::{simd_backend, Precision, SimdBackend};
 /// ahead), minimum 1 (fully serial, lowest memory).
 /// `PipelineOpts::prepare_lookahead` can override per run.
 pub fn prepare_lookahead_from_env() -> usize {
-    std::env::var("WATERSIC_PREPARE_LOOKAHEAD")
-        .ok()
-        .and_then(|v| v.parse::<usize>().ok())
+    crate::util::env::parsed::<usize>("WATERSIC_PREPARE_LOOKAHEAD")
         .map(|n| n.max(1))
         .unwrap_or(2)
 }

@@ -44,7 +44,7 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Context as _, Result};
@@ -63,9 +63,7 @@ use crate::util::json::{obj, Json};
 /// batched forward and max concurrently active generations.  Default 8,
 /// minimum 1 (no batching).
 pub fn serve_batch_from_env() -> usize {
-    std::env::var("WATERSIC_SERVE_BATCH")
-        .ok()
-        .and_then(|v| v.parse::<usize>().ok())
+    crate::util::env::parsed::<usize>("WATERSIC_SERVE_BATCH")
         .map(|n| n.max(1))
         .unwrap_or(8)
 }
@@ -75,10 +73,7 @@ pub fn serve_batch_from_env() -> usize {
 /// flushing it (only while no sequence is in flight — once decoding,
 /// iterations run back to back).  Default 500µs; 0 flushes immediately.
 pub fn serve_flush_us_from_env() -> u64 {
-    std::env::var("WATERSIC_SERVE_FLUSH_US")
-        .ok()
-        .and_then(|v| v.parse::<u64>().ok())
-        .unwrap_or(500)
+    crate::util::env::parsed::<u64>("WATERSIC_SERVE_FLUSH_US").unwrap_or(500)
 }
 
 /// The `WATERSIC_SERVE_KV_BUDGET` engine option: total bytes of KV
@@ -86,9 +81,7 @@ pub fn serve_flush_us_from_env() -> u64 {
 /// (admission control — over-budget requests wait in the queue, and a
 /// request that could never fit is rejected outright).  Default 1 GiB.
 pub fn serve_kv_budget_from_env() -> usize {
-    std::env::var("WATERSIC_SERVE_KV_BUDGET")
-        .ok()
-        .and_then(|v| v.parse::<usize>().ok())
+    crate::util::env::parsed::<usize>("WATERSIC_SERVE_KV_BUDGET")
         .map(|n| n.max(1))
         .unwrap_or(1 << 30)
 }
@@ -97,9 +90,7 @@ pub fn serve_kv_budget_from_env() -> usize {
 /// generation steps — an unbounded generate request would otherwise
 /// hold a batcher slot (and its KV bytes) forever.  Default 256.
 pub fn serve_max_steps_from_env() -> usize {
-    std::env::var("WATERSIC_SERVE_MAX_STEPS")
-        .ok()
-        .and_then(|v| v.parse::<usize>().ok())
+    crate::util::env::parsed::<usize>("WATERSIC_SERVE_MAX_STEPS")
         .map(|n| n.max(1))
         .unwrap_or(256)
 }
@@ -261,6 +252,17 @@ struct Inner {
     kv_peak_bytes: AtomicUsize,
 }
 
+impl Inner {
+    /// Lock the admission queue, recovering from poisoning: every
+    /// critical section is a single push/pop/flag update, so a peer
+    /// that panicked while holding the lock still left the queue
+    /// consistent — cascading its panic into every client thread
+    /// would only bury the original failure.
+    fn lock_queue(&self) -> MutexGuard<'_, Queue> {
+        self.queue.lock().unwrap_or_else(PoisonError::into_inner)
+    }
+}
+
 /// In-flight request handle; [`ScoreHandle::wait`] blocks for the
 /// batched response.
 pub struct ScoreHandle {
@@ -323,6 +325,8 @@ impl Server {
         let batcher = std::thread::Builder::new()
             .name("watersic-serve-batcher".to_string())
             .spawn(move || batcher_loop(&worker))
+            // lint:allow(no-panic-untrusted) — thread-spawn failure at
+            // startup, before any request input exists
             .expect("spawning serve batcher");
         Server {
             inner,
@@ -366,7 +370,7 @@ impl Server {
         self.validate_tokens(&tokens)?;
         let (tx, rx) = mpsc::channel();
         {
-            let mut g = self.inner.queue.lock().unwrap();
+            let mut g = self.inner.lock_queue();
             if g.shutdown {
                 bail!("server is shutting down");
             }
@@ -404,7 +408,7 @@ impl Server {
         self.validate_tokens(&prompt)?;
         let (tx, rx) = mpsc::channel();
         {
-            let mut g = self.inner.queue.lock().unwrap();
+            let mut g = self.inner.lock_queue();
             if g.shutdown {
                 bail!("server is shutting down");
             }
@@ -472,7 +476,7 @@ impl Server {
 
     fn stop(&mut self) {
         {
-            let mut g = self.inner.queue.lock().unwrap();
+            let mut g = self.inner.lock_queue();
             g.shutdown = true;
         }
         self.inner.cv.notify_all();
@@ -508,7 +512,7 @@ fn batcher_loop(inner: &Inner) {
         let free_rows = inner.opts.batch_max.saturating_sub(reslide_rows);
         let mut picked: Vec<Pending> = Vec::new();
         {
-            let mut g = inner.queue.lock().unwrap();
+            let mut g = inner.lock_queue();
             if active.is_empty() {
                 loop {
                     if !g.q.is_empty() {
@@ -517,7 +521,7 @@ fn batcher_loop(inner: &Inner) {
                     if g.shutdown {
                         return;
                     }
-                    g = inner.cv.wait(g).unwrap();
+                    g = inner.cv.wait(g).unwrap_or_else(PoisonError::into_inner);
                 }
                 // deadline-based coalescing: hold the partial batch
                 // open a short window for co-arriving requests (only
@@ -528,7 +532,10 @@ fn batcher_loop(inner: &Inner) {
                     if now >= deadline {
                         break;
                     }
-                    let (ng, _) = inner.cv.wait_timeout(g, deadline - now).unwrap();
+                    let (ng, _) = inner
+                        .cv
+                        .wait_timeout(g, deadline - now)
+                        .unwrap_or_else(PoisonError::into_inner);
                     g = ng;
                 }
             }
@@ -571,13 +578,19 @@ fn batcher_loop(inner: &Inner) {
                     Admit::Stop => break,
                     Admit::Score => {
                         rows += 1;
-                        picked.push(g.q.pop_front().unwrap());
+                        // admission matched `front()`: head is present
+                        if let Some(p) = g.q.pop_front() {
+                            picked.push(p);
+                        }
                     }
                     Admit::Gen { need } => {
                         rows += 1;
                         slots += 1;
                         kv_in_flight += need;
-                        picked.push(g.q.pop_front().unwrap());
+                        // admission matched `front()`: head is present
+                        if let Some(p) = g.q.pop_front() {
+                            picked.push(p);
+                        }
                     }
                     Admit::Reject { need } => {
                         // could never run under this budget: clean
@@ -661,6 +674,8 @@ fn run_iteration(
     let mut rows: Vec<Row> = Vec::new();
     for (idx, a) in active.iter_mut().enumerate() {
         if a.needs_reslide() {
+            // lint:allow(no-panic-untrusted) — scheduler invariant:
+            // needs_reslide() implies an installed cache
             let cache = a.cache.take().unwrap();
             let t = cfg.ctx.min(a.toks.len());
             let window = a.toks[a.toks.len() - t..].to_vec();
@@ -717,7 +732,7 @@ fn run_iteration(
                 }
             })
             .max()
-            .unwrap();
+            .unwrap_or(0);
         // pad each window to the batch max with token 0: causal
         // attention and window-relative RoPE keep every row before the
         // pad bit-identical to the unpadded forward (module docs)
@@ -802,9 +817,13 @@ fn run_iteration(
     for (i, a) in active.iter_mut().enumerate() {
         if a.advanced_iter != iteration && a.steps_left > 0 {
             dec_idx.push(i);
+            // lint:allow(no-panic-untrusted) — scheduler invariant: an
+            // admitted generation holds a non-empty token list
             dec_toks.push(*a.toks.last().unwrap());
-            dec_caches
-                .push(a.cache.as_mut().expect("multi-step sequence without cache"));
+            // lint:allow(no-panic-untrusted) — scheduler invariant: a
+            // sequence with steps_left > 0 holds a live KV cache
+            let cache = a.cache.as_mut().expect("multi-step sequence without cache");
+            dec_caches.push(cache);
         }
     }
     if !dec_caches.is_empty() {
@@ -1052,6 +1071,8 @@ pub fn load_test(
         let mut all = Vec::new();
         let mut err = None;
         for h in handles {
+            // lint:allow(no-panic-untrusted) — harness bug if a client
+            // thread panics; re-raising it is the correct report
             match h.join().expect("load-test client panicked") {
                 Ok(v) => all.push(v),
                 Err(e) => err = Some(e),
@@ -1326,6 +1347,50 @@ mod tests {
                 "{bad} must error"
             );
         }
+    }
+
+    #[test]
+    fn hostile_payloads_become_clean_protocol_errors() {
+        // regression net for the untrusted request path: every payload
+        // here once (or plausibly could) hit an unwrap/parse panic —
+        // each must come back as an `{"error": ...}` line with the
+        // server still alive afterwards
+        let server = tiny_server(4, Duration::from_micros(100));
+        let deep_nest = format!("{}1{}", "[".repeat(200), "]".repeat(200));
+        let hostile: Vec<String> = vec![
+            // truncated / malformed escapes and encodings
+            "{\"tokens\": [\"\\u00".to_string(),
+            "{\"tokens\": \"\\uZZZZ\"}".to_string(),
+            "{\"tokens".to_string(),
+            // nesting beyond the parser's depth cap
+            format!("{{\"tokens\": {deep_nest}}}"),
+            // wrong-type fields
+            "{\"tokens\": \"abc\"}".to_string(),
+            "{\"tokens\": [true, null]}".to_string(),
+            "{\"tokens\": [[1]]}".to_string(),
+            "{\"prompt\": {\"a\": 1}}".to_string(),
+            "{\"prompt\": [1], \"steps\": \"many\"}".to_string(),
+            "{\"prompt\": [1], \"steps\": [2]}".to_string(),
+            // oversized / non-integral numerics
+            "{\"tokens\": [1e300]}".to_string(),
+            "{\"tokens\": [2147483648]}".to_string(),
+            "{\"tokens\": [-1]}".to_string(),
+            "{\"tokens\": [1.5]}".to_string(),
+            "{\"prompt\": [1], \"steps\": 1e18}".to_string(),
+            "{\"prompt\": [1], \"steps\": -3}".to_string(),
+        ];
+        for bad in &hostile {
+            let resp = handle_request_line(&server, bad);
+            let j = Json::parse(&resp).unwrap_or_else(|e| {
+                panic!("response to {bad:?} not json: {e} ({resp})")
+            });
+            assert!(j.get("error").is_some(), "{bad:?} must error, got {resp}");
+        }
+        // the server survived all of it and still answers real requests
+        let resp = handle_request_line(&server, "{\"tokens\": [1, 2]}");
+        let j = Json::parse(&resp).unwrap();
+        assert!(j.get("error").is_none(), "healthy request failed: {resp}");
+        assert_eq!(j.req("len").unwrap().as_usize().unwrap(), 2);
     }
 
     #[test]

@@ -1,0 +1,334 @@
+//! Disjoint-write race checker for the unsafe kernel substrate
+//! (`check-aliasing` feature; a no-op facade otherwise).
+//!
+//! Every raw-pointer parallel write in the tree — the packed GEMM
+//! driver's C row-blocks, the syrk block-pair tiles, the Cholesky/TRSM
+//! row slices, the ZSIC deferred-update rows, the transformer's
+//! captured prob blocks, and `parallel_map`'s `UnsafeCell` slots —
+//! relies on the same protocol: *tasks of one pool job write disjoint
+//! regions*.  That protocol lives in `// SAFETY:` comments; this module
+//! turns it into a runtime assertion.  Each task registers the
+//! `(ptr, len[, stride])` ranges it is about to write via [`claim`] /
+//! [`claim_strided`]; a per-job table asserts that no two *different*
+//! tasks of the same job ever claim overlapping bytes, and panics with
+//! both claims when they do (the panic propagates through the pool's
+//! normal payload path, so the offending test fails cleanly).
+//!
+//! Scope rules:
+//! - claims made outside any pool task (no enclosing `parallel_ranges`
+//!   job) are ignored — serial writes cannot race;
+//! - a nested job gets its own table, so an inner GEMM writing inside a
+//!   region its outer task legitimately owns is not a false positive;
+//! - a task's claims are checked against other tasks' claims only —
+//!   re-claiming your own region (e.g. once per KC block) is fine.
+//!
+//! With the feature disabled every entry point is an empty `#[inline]`
+//! function: release builds carry zero checker overhead.
+
+/// Register `len` elements at `ptr` as part of the current task's
+/// write-set (contiguous claim).
+#[inline(always)]
+pub fn claim<T>(ptr: *const T, len: usize) {
+    #[cfg(feature = "check-aliasing")]
+    imp::claim_bytes(ptr as usize, 1, len * std::mem::size_of::<T>(), 0);
+    #[cfg(not(feature = "check-aliasing"))]
+    {
+        let _ = (ptr, len);
+    }
+}
+
+/// Register a strided rectangle — `rows` runs of `row_len` elements,
+/// successive runs `stride` elements apart — as part of the current
+/// task's write-set.  This is exactly the shape of a GEMM C tile.
+#[inline(always)]
+pub fn claim_strided<T>(ptr: *const T, rows: usize, row_len: usize, stride: usize) {
+    #[cfg(feature = "check-aliasing")]
+    imp::claim_bytes(
+        ptr as usize,
+        rows,
+        row_len * std::mem::size_of::<T>(),
+        stride * std::mem::size_of::<T>(),
+    );
+    #[cfg(not(feature = "check-aliasing"))]
+    {
+        let _ = (ptr, rows, row_len, stride);
+    }
+}
+
+#[cfg(feature = "check-aliasing")]
+pub use imp::{job_end, next_job_id, task_scope, TaskScope};
+
+#[cfg(feature = "check-aliasing")]
+mod imp {
+    use std::cell::Cell;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Mutex;
+
+    thread_local! {
+        /// (job id, task id) of the pool chunk running on this thread.
+        static CURRENT: Cell<Option<(u64, u64)>> = const { Cell::new(None) };
+    }
+
+    /// One task's registered write rectangle, in bytes.
+    struct Claim {
+        task: u64,
+        start: usize,
+        rows: usize,
+        len: usize,
+        stride: usize,
+    }
+
+    impl Claim {
+        fn bound_end(&self) -> usize {
+            self.start + self.rows.saturating_sub(1) * self.stride + self.len
+        }
+    }
+
+    struct JobClaims {
+        job: u64,
+        claims: Vec<Claim>,
+    }
+
+    /// Claim tables of every in-flight job (a handful at a time).
+    static TABLES: Mutex<Vec<JobClaims>> = Mutex::new(Vec::new());
+
+    static NEXT_JOB: AtomicU64 = AtomicU64::new(1);
+
+    /// Fresh job identity for a `parallel_ranges` submission.
+    pub fn next_job_id() -> u64 {
+        NEXT_JOB.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Marks the current thread as running task `task` of job `job`
+    /// until the returned scope drops (restoring the previous task —
+    /// nested submissions run inner chunks on the submitting thread).
+    pub fn task_scope(job: u64, task: u64) -> TaskScope {
+        let prev = CURRENT.with(|c| c.replace(Some((job, task))));
+        TaskScope { prev }
+    }
+
+    pub struct TaskScope {
+        prev: Option<(u64, u64)>,
+    }
+
+    impl Drop for TaskScope {
+        fn drop(&mut self) {
+            let prev = self.prev;
+            CURRENT.with(|c| c.set(prev));
+        }
+    }
+
+    /// Drop a completed job's table (called by the submitter once every
+    /// chunk is accounted for).
+    pub fn job_end(job: u64) {
+        let mut g = TABLES.lock().unwrap();
+        g.retain(|t| t.job != job);
+    }
+
+    fn div_floor(a: isize, b: isize) -> isize {
+        let q = a / b;
+        if a % b != 0 && ((a < 0) != (b < 0)) {
+            q - 1
+        } else {
+            q
+        }
+    }
+
+    /// Exact byte-overlap test between two strided rectangles.
+    fn overlaps(a: &Claim, b: &Claim) -> bool {
+        if a.len == 0 || b.len == 0 || a.rows == 0 || b.rows == 0 {
+            return false;
+        }
+        if a.bound_end() <= b.start || b.bound_end() <= a.start {
+            return false;
+        }
+        if a.rows > 1 && b.rows > 1 && a.stride == b.stride && a.stride > 0 {
+            // same stride (the common case: tiles of one matrix): row i
+            // of a overlaps row j of b iff d + (i−j)·s ∈ (−b.len, a.len)
+            // where d = a.start − b.start; check whether any k = i−j in
+            // [−(b.rows−1), a.rows−1] lands in that open interval.
+            let s = a.stride as isize;
+            let d = a.start as isize - b.start as isize;
+            let lo_num = -(b.len as isize) - d;
+            let hi_num = a.len as isize - d;
+            let k_min = -(b.rows as isize - 1);
+            let k_max = a.rows as isize - 1;
+            let k0 = div_floor(lo_num, s) + 1; // smallest k with k·s > lo_num
+            let k = k0.max(k_min);
+            return k <= k_max && k * s < hi_num;
+        }
+        // general case: nested row sweep (rows are ≤64 at every site)
+        for i in 0..a.rows {
+            let ai = a.start + i * a.stride;
+            for j in 0..b.rows {
+                let bj = b.start + j * b.stride;
+                if ai < bj + b.len && bj < ai + a.len {
+                    return true;
+                }
+            }
+        }
+        false
+    }
+
+    pub fn claim_bytes(start: usize, rows: usize, len: usize, stride: usize) {
+        if len == 0 || rows == 0 {
+            return;
+        }
+        let Some((job, task)) = CURRENT.with(|c| c.get()) else {
+            return; // serial write: nothing to race with
+        };
+        let claim = Claim {
+            task,
+            start,
+            rows,
+            len,
+            stride,
+        };
+        let mut g = TABLES.lock().unwrap();
+        let table = match g.iter_mut().find(|t| t.job == job) {
+            Some(t) => t,
+            None => {
+                g.push(JobClaims {
+                    job,
+                    claims: Vec::new(),
+                });
+                g.last_mut().expect("just pushed")
+            }
+        };
+        for c in &table.claims {
+            if c.task != task && overlaps(c, &claim) {
+                panic!(
+                    "check-aliasing: overlapping parallel writes in job {job}: \
+                     task {task} claims {rows}×{len}B @ {start:#x} (stride {stride}), \
+                     but task {} already claimed {}×{}B @ {:#x} (stride {})",
+                    c.task, c.rows, c.len, c.start, c.stride
+                );
+            }
+        }
+        table.claims.push(claim);
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        fn c(task: u64, start: usize, rows: usize, len: usize, stride: usize) -> Claim {
+            Claim {
+                task,
+                start,
+                rows,
+                len,
+                stride,
+            }
+        }
+
+        #[test]
+        fn contiguous_overlap_cases() {
+            assert!(overlaps(&c(0, 0, 1, 40, 0), &c(1, 32, 1, 8, 0)));
+            assert!(!overlaps(&c(0, 0, 1, 32, 0), &c(1, 32, 1, 8, 0)));
+            assert!(overlaps(&c(0, 8, 1, 1, 0), &c(1, 0, 1, 16, 0)));
+        }
+
+        #[test]
+        fn same_stride_tiles_in_one_row_band_are_disjoint() {
+            // two 64×64 tiles of a 128-wide matrix, same rows,
+            // adjacent column windows (the syrk block-pair layout)
+            let a = c(0, 0, 64, 64, 128);
+            let b = c(1, 64, 64, 64, 128);
+            assert!(!overlaps(&a, &b));
+            // grow one tile a single byte into the other's window
+            let a_wide = c(0, 0, 64, 65, 128);
+            assert!(overlaps(&a_wide, &b));
+        }
+
+        #[test]
+        fn same_stride_overlapping_row_ranges_hit() {
+            // row bands [0,64) and [32,96) over the same columns
+            let a = c(0, 0, 64, 64, 128);
+            let b = c(1, 32 * 128, 64, 64, 128);
+            assert!(overlaps(&a, &b));
+        }
+
+        #[test]
+        fn mixed_stride_falls_back_to_row_sweep() {
+            // a contiguous row claim vs a strided tile that contains it
+            let tile = c(0, 0, 4, 16, 32);
+            let row = c(1, 2 * 32 + 8, 1, 4, 0);
+            assert!(overlaps(&tile, &row));
+            let gap_row = c(1, 2 * 32 + 16, 1, 8, 0);
+            assert!(!overlaps(&tile, &gap_row));
+        }
+    }
+}
+
+#[cfg(all(test, feature = "check-aliasing"))]
+mod tests {
+    use crate::util::threadpool::{default_threads, parallel_ranges};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// Deliberately overlapping claims from two tasks must abort the
+    /// job with the checker's panic (the self-test the CI feature build
+    /// pins: proves detection end to end through the pool).
+    #[test]
+    fn injected_overlap_is_detected() {
+        if default_threads() < 2 {
+            return; // no pool workers: parallel_ranges degenerates to serial
+        }
+        let mut buf = vec![0u8; 64];
+        let addr = buf.as_mut_ptr() as usize;
+        let caught = std::panic::catch_unwind(|| {
+            parallel_ranges(2, 2, |range| {
+                for _ in range {
+                    // both tasks claim the same 40-byte prefix
+                    super::claim(addr as *const u8, 40);
+                }
+            });
+        });
+        let payload = caught.expect_err("overlap must panic");
+        let msg = payload
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_default();
+        assert!(
+            msg.contains("check-aliasing: overlapping parallel writes"),
+            "unexpected panic payload: {msg:?}"
+        );
+        buf[0] = 0; // keep the buffer alive past the job
+    }
+
+    /// The disjoint protocol every kernel follows must sail through.
+    #[test]
+    fn disjoint_claims_pass() {
+        let mut buf = vec![0u64; 256];
+        let addr = buf.as_mut_ptr() as usize;
+        let touched = AtomicUsize::new(0);
+        parallel_ranges(8, 4, |range| {
+            for i in range {
+                super::claim((addr + i * 32 * 8) as *const u64, 32);
+                touched.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert_eq!(touched.load(Ordering::SeqCst), 8);
+        assert_eq!(buf[0], 0);
+    }
+
+    /// Nested jobs each get their own table: an inner job writing
+    /// inside its outer task's claimed region is not a conflict.
+    #[test]
+    fn nested_jobs_do_not_false_positive() {
+        let mut buf = vec![0u64; 1024];
+        let addr = buf.as_mut_ptr() as usize;
+        parallel_ranges(4, 2, |outer| {
+            for o in outer {
+                let base = addr + o * 256 * 8;
+                super::claim(base as *const u64, 256);
+                parallel_ranges(4, 2, |inner| {
+                    for i in inner {
+                        super::claim((base + i * 64 * 8) as *const u64, 64);
+                    }
+                });
+            }
+        });
+        assert_eq!(buf[0], 0);
+    }
+}

@@ -148,7 +148,8 @@ impl BenchLog {
 
     /// Serialize to `$WATERSIC_BENCH_DIR/<file>` (cwd by default).
     pub fn write(&self) -> std::io::Result<std::path::PathBuf> {
-        let dir = std::env::var("WATERSIC_BENCH_DIR").unwrap_or_else(|_| ".".to_string());
+        let dir =
+            crate::util::env::string("WATERSIC_BENCH_DIR").unwrap_or_else(|| ".".to_string());
         self.write_to(std::path::Path::new(&dir))
     }
 

@@ -1,0 +1,172 @@
+//! Registry of every `WATERSIC_*` engine option.
+//!
+//! This module is the **single** place in the tree that reads a
+//! `WATERSIC_*` environment variable (`xtask lint` rule `env-registry`
+//! enforces it): a knob that is not listed in [`KNOBS`] cannot be read,
+//! and a knob that is listed must be documented in the `main.rs` USAGE
+//! text (a unit test there pins the other direction).  Before this
+//! registry existed, 11 knobs were scattered raw `std::env::var` calls
+//! across eight modules and only six were documented.
+//!
+//! The typed accessors mirror the historical per-site semantics
+//! exactly: an *unset* variable and an *unparseable* value both fall
+//! back to the caller's default, so rewiring a call site through the
+//! registry can never change behavior.
+
+/// One registered engine option.
+pub struct Knob {
+    /// Environment variable name (`WATERSIC_*`).
+    pub name: &'static str,
+    /// Human-readable default, for the USAGE text.
+    pub default: &'static str,
+    /// One-line description, for the USAGE text.
+    pub doc: &'static str,
+}
+
+/// Every engine option the tree reads, in USAGE display order.
+pub static KNOBS: &[Knob] = &[
+    Knob {
+        name: "WATERSIC_PRECISION",
+        default: "f64",
+        doc: "kernel/pack precision: f64 | f32",
+    },
+    Knob {
+        name: "WATERSIC_THREADS",
+        default: "auto (≤16)",
+        doc: "worker-pool width (outputs bit-identical across N)",
+    },
+    Knob {
+        name: "WATERSIC_SIMD",
+        default: "auto",
+        doc: "force the scalar kernel rung with `scalar` (others auto-detect)",
+    },
+    Knob {
+        name: "WATERSIC_LOG",
+        default: "unset",
+        doc: "set (any value) to enable debug-level logging",
+    },
+    Knob {
+        name: "WATERSIC_ARTIFACTS",
+        default: "auto",
+        doc: "AOT artifacts dir (default: walk up for artifacts/manifest.json)",
+    },
+    Knob {
+        name: "WATERSIC_PREPARE_LOOKAHEAD",
+        default: "2",
+        doc: "prepared-layer front-ends alive at once in the streaming prepare",
+    },
+    Knob {
+        name: "WATERSIC_SERVE_BATCH",
+        default: "8",
+        doc: "max prefill rows / active generations per scheduler step",
+    },
+    Knob {
+        name: "WATERSIC_SERVE_FLUSH_US",
+        default: "500",
+        doc: "partial-batch flush deadline in microseconds",
+    },
+    Knob {
+        name: "WATERSIC_SERVE_KV_BUDGET",
+        default: "1 GiB",
+        doc: "KV-cache byte budget across in-flight sequences",
+    },
+    Knob {
+        name: "WATERSIC_SERVE_MAX_STEPS",
+        default: "256",
+        doc: "per-request generation-step cap",
+    },
+    Knob {
+        name: "WATERSIC_BENCH_DIR",
+        default: ".",
+        doc: "directory BENCH_*.json telemetry is written to",
+    },
+    Knob {
+        name: "WATERSIC_BENCH_ENFORCE",
+        default: "0",
+        doc: "set to 1 to turn bench speedup targets into hard gates",
+    },
+    Knob {
+        name: "WATERSIC_SERVE_CLIENTS",
+        default: "8",
+        doc: "bench_serve: concurrent load-test clients",
+    },
+    Knob {
+        name: "WATERSIC_SERVE_REQUESTS",
+        default: "8",
+        doc: "bench_serve: requests per load-test client",
+    },
+];
+
+fn registered(name: &str) -> bool {
+    KNOBS.iter().any(|k| k.name == name)
+}
+
+/// Raw read of a registered knob.  Panics in debug builds if `name` is
+/// not in [`KNOBS`] — reads of unregistered knobs are a programmer
+/// error (and `xtask lint` flags the literal too).
+pub fn string(name: &'static str) -> Option<String> {
+    debug_assert!(registered(name), "unregistered engine option {name}");
+    std::env::var(name).ok()
+}
+
+/// `true` iff the knob is set at all (regardless of value).
+pub fn is_set(name: &'static str) -> bool {
+    string(name).is_some()
+}
+
+/// `true` iff the knob is set to exactly `"1"`.
+pub fn flag(name: &'static str) -> bool {
+    string(name).as_deref() == Some("1")
+}
+
+/// Parse a registered knob; `None` when unset **or** unparseable (every
+/// historical call site treated those two the same way).
+pub fn parsed<T: std::str::FromStr>(name: &'static str) -> Option<T> {
+    string(name).and_then(|v| v.parse::<T>().ok())
+}
+
+/// Parse with a default (unset/unparseable → `default`).
+pub fn usize_or(name: &'static str, default: usize) -> usize {
+    parsed(name).unwrap_or(default)
+}
+
+/// The `ENGINE OPTIONS (env)` block of the USAGE text, generated from
+/// the registry so documentation cannot drift from the code.
+pub fn usage_block() -> String {
+    let mut out = String::from("ENGINE OPTIONS (env):\n");
+    for k in KNOBS {
+        let head = format!("  {}", k.name);
+        out.push_str(&format!("{head:<31} {} (default {})\n", k.doc, k.default));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_knob_is_watersic_prefixed_and_unique() {
+        for (i, k) in KNOBS.iter().enumerate() {
+            assert!(k.name.starts_with("WATERSIC_"), "{}", k.name);
+            assert!(!k.doc.is_empty() && !k.default.is_empty(), "{}", k.name);
+            for other in &KNOBS[i + 1..] {
+                assert_ne!(k.name, other.name, "duplicate knob");
+            }
+        }
+    }
+
+    #[test]
+    fn usage_block_mentions_every_knob() {
+        let block = usage_block();
+        for k in KNOBS {
+            assert!(block.contains(k.name), "missing {}", k.name);
+        }
+    }
+
+    #[test]
+    fn accessors_fall_back_on_unset() {
+        assert_eq!(string("WATERSIC_LOG").is_some(), is_set("WATERSIC_LOG"));
+        assert!(usize_or("WATERSIC_SERVE_BATCH", 8) >= 1);
+    }
+}

@@ -24,6 +24,7 @@ impl Json {
         let mut p = Parser {
             b: text.as_bytes(),
             i: 0,
+            depth: 0,
         };
         p.skip_ws();
         let v = p.value()?;
@@ -53,8 +54,15 @@ impl Json {
         }
     }
 
+    /// The number as a usize, rejecting negative, fractional, and
+    /// out-of-range values — an `as usize` cast would silently saturate
+    /// them, turning e.g. a hostile `"steps": -3` into 0.
     pub fn as_usize(&self) -> Result<usize> {
-        Ok(self.as_f64()? as usize)
+        let x = self.as_f64()?;
+        if !(x.fract() == 0.0 && (0.0..=usize::MAX as f64).contains(&x)) {
+            bail!("not a non-negative integer: {x}");
+        }
+        Ok(x as usize)
     }
 
     pub fn as_str(&self) -> Result<&str> {
@@ -163,9 +171,16 @@ fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
 }
 
+/// Nesting cap: far deeper than any document we produce, far shallower
+/// than the stack — a hostile `[[[[…` line errors instead of
+/// overflowing the recursive parser (the serve front door feeds this
+/// untrusted bytes).
+const MAX_DEPTH: usize = 128;
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -194,7 +209,11 @@ impl<'a> Parser<'a> {
 
     fn value(&mut self) -> Result<Json> {
         self.skip_ws();
-        match self.peek()? {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            bail!("JSON nested deeper than {MAX_DEPTH}");
+        }
+        let v = match self.peek()? {
             b'{' => self.object(),
             b'[' => self.array(),
             b'"' => Ok(Json::Str(self.string()?)),
@@ -202,7 +221,9 @@ impl<'a> Parser<'a> {
             b'f' => self.lit("false", Json::Bool(false)),
             b'n' => self.lit("null", Json::Null),
             _ => self.number(),
-        }
+        };
+        self.depth -= 1;
+        v
     }
 
     fn lit(&mut self, word: &str, v: Json) -> Result<Json> {
@@ -247,8 +268,12 @@ impl<'a> Parser<'a> {
                         b'b' => out.push('\u{8}'),
                         b'f' => out.push('\u{c}'),
                         b'u' => {
+                            // bounds-checked: a line truncated inside
+                            // the escape must error, not slice-panic
                             let hex = std::str::from_utf8(
-                                &self.b[self.i..self.i + 4],
+                                self.b
+                                    .get(self.i..self.i + 4)
+                                    .ok_or_else(|| anyhow!("truncated \\u escape"))?,
                             )?;
                             let code = u32::from_str_radix(hex, 16)?;
                             self.i += 4;
@@ -273,8 +298,11 @@ impl<'a> Parser<'a> {
                         } else {
                             2
                         };
-                        let s =
-                            std::str::from_utf8(&self.b[start..start + len])?;
+                        let s = std::str::from_utf8(
+                            self.b
+                                .get(start..start + len)
+                                .ok_or_else(|| anyhow!("truncated UTF-8 sequence"))?,
+                        )?;
                         out.push_str(s);
                         self.i = start + len;
                     }
@@ -385,6 +413,27 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("hello").is_err());
         assert!(Json::parse("{} trailing").is_err());
+    }
+
+    #[test]
+    fn truncated_escape_errors_not_panics() {
+        // regression: a line ending inside a \u escape used to slice
+        // b[i..i+4] out of bounds — an index panic one malformed
+        // request away from killing a serve connection handler
+        assert!(Json::parse(r#""\u"#).is_err());
+        assert!(Json::parse(r#""\u0"#).is_err());
+        assert!(Json::parse(r#"{"a": "\u00"#).is_err());
+        assert!(Json::parse(r#""\uZZZZ""#).is_err());
+    }
+
+    #[test]
+    fn deep_nesting_errors_not_overflows() {
+        // regression: the recursive parser had no depth cap, so a
+        // hostile `[[[[…` line overflowed the stack (process abort)
+        let hostile = "[".repeat(100_000);
+        assert!(Json::parse(&hostile).is_err());
+        let deep_ok = format!("{}1{}", "[".repeat(64), "]".repeat(64));
+        assert!(Json::parse(&deep_ok).is_ok());
     }
 
     #[test]

@@ -2,8 +2,10 @@
 //! crates.io: RNG, JSON, npy IO, a CLI parser, a scoped thread pool, and
 //! a criterion-style bench harness.
 
+pub mod aliasing;
 pub mod bench;
 pub mod cli;
+pub mod env;
 pub mod json;
 pub mod npy;
 pub mod rng;

@@ -42,10 +42,8 @@ use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Number of worker threads to use (respects `WATERSIC_THREADS`).
 pub fn default_threads() -> usize {
-    if let Ok(v) = std::env::var("WATERSIC_THREADS") {
-        if let Ok(n) = v.parse::<usize>() {
-            return n.max(1);
-        }
+    if let Some(n) = crate::util::env::parsed::<usize>("WATERSIC_THREADS") {
+        return n.max(1);
     }
     std::thread::available_parallelism()
         .map(|n| n.get())
@@ -61,10 +59,15 @@ struct TaskPtr(*const (dyn Fn(usize, usize) + Sync));
 // SAFETY: the pointee is `Sync`, and the submission protocol (see
 // module docs) guarantees it outlives every dereference.
 unsafe impl Send for TaskPtr {}
+// SAFETY: same argument as `Send` above — the pointee is `Sync`, so
+// shared references may be dereferenced from any worker.
 unsafe impl Sync for TaskPtr {}
 
 struct Job {
     task: TaskPtr,
+    /// check-aliasing: identity for the per-job disjoint-write table
+    #[cfg(feature = "check-aliasing")]
+    alias_id: u64,
     /// next unclaimed item index (claimed `chunk` at a time)
     next: AtomicUsize,
     end: usize,
@@ -166,11 +169,16 @@ fn run_chunks(job: &Job) {
         }
         let hi = (lo + job.chunk).min(job.end);
         if !job.panicked.load(Ordering::SeqCst) {
-            // SAFETY: see module docs — the submitter blocks until
-            // `done == end`, and this call strictly precedes the
-            // increment that can make that condition true.
-            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| unsafe {
-                (*job.task.0)(lo, hi)
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                // check-aliasing: writes from this chunk are recorded
+                // as task `lo` of this job (dropped guard restores any
+                // enclosing task — nested submissions run inline here)
+                #[cfg(feature = "check-aliasing")]
+                let _scope = crate::util::aliasing::task_scope(job.alias_id, lo as u64);
+                // SAFETY: see module docs — the submitter blocks until
+                // `done == end`, and this call strictly precedes the
+                // increment that can make that condition true.
+                unsafe { (*job.task.0)(lo, hi) }
             }));
             if let Err(payload) = result {
                 job.panicked.store(true, Ordering::SeqCst);
@@ -223,6 +231,8 @@ where
         unsafe { std::mem::transmute(task_ref) };
     let job = Arc::new(Job {
         task: TaskPtr(task_ref as *const _),
+        #[cfg(feature = "check-aliasing")]
+        alias_id: crate::util::aliasing::next_job_id(),
         next: AtomicUsize::new(0),
         end: n,
         chunk,
@@ -257,6 +267,9 @@ where
         let mut g = pool.mx.lock().unwrap();
         g.jobs.retain(|j| !Arc::ptr_eq(j, &job));
     }
+    // the job is complete: drop its disjoint-write claim table
+    #[cfg(feature = "check-aliasing")]
+    crate::util::aliasing::job_end(job.alias_id);
     // every chunk is accounted for and no worker will touch the task
     // again — safe to re-raise a caught panic as our own
     let payload = job.panic_payload.lock().unwrap().take();
@@ -269,6 +282,9 @@ where
 /// touched by exactly one thread (disjoint ranges from
 /// `parallel_ranges`), so there is no aliased access.
 struct SyncSlice<'a, X>(&'a [std::cell::UnsafeCell<X>]);
+// SAFETY: cells are only accessed through the disjoint index ranges
+// handed out by `parallel_ranges` (see the struct docs), so no two
+// threads ever touch the same slot.
 unsafe impl<'a, X: Send> Sync for SyncSlice<'a, X> {}
 
 /// Apply `f` to each item of `items`, running up to `threads` at a
@@ -298,11 +314,17 @@ where
         let out_s = SyncSlice(&out);
         parallel_ranges(n, threads, |range| {
             for i in range {
+                // check-aliasing: slot i (item and result cells) is
+                // this task's exclusive write-set
+                crate::util::aliasing::claim(work_s.0[i].get() as *const _, 1);
+                crate::util::aliasing::claim(out_s.0[i].get() as *const _, 1);
                 // SAFETY: parallel_ranges hands out disjoint ranges
                 // covering 0..n exactly once, so slot i has a single
                 // accessor.
                 let item = unsafe { (*work_s.0[i].get()).take().unwrap() };
                 let r = f(item);
+                // SAFETY: same disjointness argument — slot i of the
+                // output has this thread as its only writer.
                 unsafe {
                     *out_s.0[i].get() = Some(r);
                 }

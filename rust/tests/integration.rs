@@ -164,3 +164,68 @@ fn theory_gap_medium_instance() {
     // the AM/GM penalty for AR(1) ρ=0.95 at n=64 is ≈0.07 bit
     assert!(gap_gq > gap_ws + 0.04, "GPTQ gap {gap_gq:.3} vs WS {gap_ws:.3}");
 }
+
+// ---------------------------------------------------------------------
+// Miri-tagged small-shape tests.  CI's Miri job runs exactly these
+// (`cargo +nightly miri test --test integration miri_`): tiny shapes
+// and ≤ 2 threads keep interpretation time bounded while still driving
+// the unsafe pack/kernel/threadpool paths end to end (the backend
+// selector forces the scalar rung under Miri — see `detect_backend`).
+// They also run, near-instantly, as part of the normal suite.
+
+fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols, b.rows);
+    Mat::from_fn(a.rows, b.cols, |i, j| {
+        (0..a.cols).map(|k| a[(i, k)] * b[(k, j)]).sum()
+    })
+}
+
+#[test]
+fn miri_gemm_small_matches_naive() {
+    let mut rng = Rng::new(7);
+    for (m, k, n) in [(1usize, 1usize, 1usize), (3, 5, 4), (7, 6, 9)] {
+        let a = Mat::from_fn(m, k, |_, _| rng.gaussian());
+        let b = Mat::from_fn(k, n, |_, _| rng.gaussian());
+        let c = watersic::linalg::gemm::matmul_with_threads(&a, &b, 2);
+        let r = naive_matmul(&a, &b);
+        for (x, y) in c.data.iter().zip(&r.data) {
+            assert!((x - y).abs() < 1e-9, "{x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn miri_prepacked_gemm_small_matches_naive() {
+    use watersic::linalg::gemm::{matmul_prepacked_with, simd_backend, Precision, PrepackedB};
+    let mut rng = Rng::new(11);
+    let a = Mat::from_fn(5, 7, |_, _| rng.gaussian());
+    let b = Mat::from_fn(7, 6, |_, _| rng.gaussian());
+    let pb = PrepackedB::pack(&b, Precision::F64);
+    let c = matmul_prepacked_with(&a, &pb, 2, simd_backend());
+    let r = naive_matmul(&a, &b);
+    for (x, y) in c.data.iter().zip(&r.data) {
+        assert!((x - y).abs() < 1e-9, "{x} vs {y}");
+    }
+}
+
+#[test]
+fn miri_cholesky_small_roundtrips() {
+    use watersic::linalg::chol::{cholesky_with_threads, solve_lower};
+    let n = 6;
+    let sigma = ar1_sigma(n, 0.6);
+    let l = cholesky_with_threads(&sigma, 2).unwrap();
+    // L·Lᵀ reproduces Σ
+    for i in 0..n {
+        for j in 0..n {
+            let s: f64 = (0..n).map(|k| l[(i, k)] * l[(j, k)]).sum();
+            assert!((s - sigma[(i, j)]).abs() < 1e-9);
+        }
+    }
+    // and the triangular solve inverts it
+    let b: Vec<f64> = (0..n).map(|i| (i as f64) - 2.5).collect();
+    let x = solve_lower(&l, &b);
+    for i in 0..n {
+        let s: f64 = (0..=i).map(|k| l[(i, k)] * x[k]).sum();
+        assert!((s - b[i]).abs() < 1e-8);
+    }
+}

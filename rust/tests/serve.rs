@@ -175,7 +175,7 @@ fn serve_outputs_invariant_across_worker_threads() {
             .map(|h| h.wait().unwrap().logits_last)
             .collect()
     };
-    let old = std::env::var("WATERSIC_THREADS").ok();
+    let old = watersic::util::env::string("WATERSIC_THREADS");
     std::env::set_var("WATERSIC_THREADS", "1");
     let single = run();
     std::env::set_var("WATERSIC_THREADS", "4");
@@ -447,7 +447,7 @@ fn decode_logits_match_full_forward_every_step_across_threads() {
             })
             .collect()
     };
-    let old = std::env::var("WATERSIC_THREADS").ok();
+    let old = watersic::util::env::string("WATERSIC_THREADS");
     std::env::set_var("WATERSIC_THREADS", "1");
     let single = run();
     std::env::set_var("WATERSIC_THREADS", "4");

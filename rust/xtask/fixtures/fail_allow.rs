@@ -1,0 +1,9 @@
+// Fixture: malformed suppressions are themselves findings, and do
+// not silence the violation they sit on.
+pub fn write_one(p: *mut f64) {
+    // lint:allow(no-such-rule) — the rule name is not real
+    // lint:allow(unsafe-safety)
+    unsafe {
+        *p = 1.0;
+    }
+}

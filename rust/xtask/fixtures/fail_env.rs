@@ -1,0 +1,7 @@
+// Fixture: a direct read of an engine option, plus a literal that
+// names no registered knob.
+pub fn threads() -> Option<String> {
+    std::env::var("WATERSIC_THREADS").ok()
+}
+
+pub const TYPO: &str = "WATERSIC_THREDS";

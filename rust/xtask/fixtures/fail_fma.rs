@@ -1,0 +1,12 @@
+// Fixture: fused-multiply-add tokens are banned inside linalg/.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        s = a[i].mul_add(b[i], s);
+    }
+    s
+}
+
+pub fn uses_intrinsic_name() {
+    let _vfmaq_f64 = ();
+}

@@ -1,0 +1,9 @@
+// Fixture: all three panic forms on an untrusted surface.
+pub fn parse(v: Option<u32>, r: Result<u32, String>) -> u32 {
+    let a = v.unwrap();
+    let b = r.expect("bad input");
+    if a == b {
+        panic!("matched");
+    }
+    a + b
+}

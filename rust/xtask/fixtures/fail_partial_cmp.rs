@@ -1,0 +1,4 @@
+// Fixture: partial_cmp + unwrap panics on NaN.
+pub fn sort(v: &mut [f64]) {
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}

@@ -1,0 +1,6 @@
+// Fixture: an unsafe block with no SAFETY comment must be flagged.
+pub fn write_one(p: *mut f64) {
+    unsafe {
+        *p = 1.0;
+    }
+}

@@ -1,0 +1,15 @@
+// Fixture: a well-formed suppression — known rule, em-dash (or `--`),
+// non-empty reason — silences exactly its rule.
+pub fn write_one(p: *mut f64) {
+    // lint:allow(unsafe-safety) — fixture demonstrating suppression syntax
+    unsafe {
+        *p = 1.0;
+    }
+}
+
+pub fn write_two(p: *mut f64) {
+    // lint:allow(unsafe-safety) -- ascii double-dash also accepted
+    unsafe {
+        *p = 2.0;
+    }
+}

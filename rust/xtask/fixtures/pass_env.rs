@@ -1,0 +1,8 @@
+// Fixture: registered knob names as plain literals (e.g. handed to
+// util::env accessors or set_var in tests) are fine; so are reads of
+// non-WATERSIC variables.
+pub const KNOB: &str = "WATERSIC_THREADS";
+
+pub fn home() -> Option<String> {
+    std::env::var("HOME").ok()
+}

@@ -1,0 +1,9 @@
+// Fixture: separate mul + add rounding is the required idiom; the
+// words only appearing in comments (mul_add, fma) are not tokens.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}

@@ -1,0 +1,18 @@
+// Fixture: untrusted surfaces return errors; tests and reasoned
+// suppressions are exempt.
+pub fn parse(v: Option<u32>) -> Result<u32, String> {
+    v.ok_or_else(|| "missing field".to_string())
+}
+
+pub fn invariant(v: Option<u32>) -> u32 {
+    // lint:allow(no-panic-untrusted) — fixture: invariant established above
+    v.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        assert_eq!(super::parse(Some(3)).unwrap(), 3);
+    }
+}

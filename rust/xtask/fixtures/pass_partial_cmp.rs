@@ -1,0 +1,9 @@
+// Fixture: total_cmp is total — no NaN panic, deterministic order.
+pub fn sort(v: &mut [f64]) {
+    v.sort_by(|a, b| a.total_cmp(b));
+}
+
+pub fn inspect(a: f64, b: f64) -> bool {
+    // partial_cmp without the unwrap is fine
+    a.partial_cmp(&b).is_some()
+}

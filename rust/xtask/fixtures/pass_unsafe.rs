@@ -1,0 +1,26 @@
+// Fixture: documented unsafe passes in each accepted shape.
+pub fn write_one(p: *mut f64) {
+    // SAFETY: caller hands us a valid, exclusive pointer.
+    unsafe {
+        *p = 1.0;
+    }
+}
+
+pub fn mid_statement(p: *mut f64, n: usize) -> &'static mut [f64] {
+    // SAFETY: the comment sits above the statement, not the `unsafe`
+    // token itself — continuation lines are walked through.
+    let s =
+        unsafe { std::slice::from_raw_parts_mut(p, n) };
+    s
+}
+
+/// Doc'd contract form.
+///
+/// # Safety
+/// `p` must be valid for writes.
+pub unsafe fn write_doc(p: *mut f64) {
+    // SAFETY: contract forwarded from the fn's `# Safety` section.
+    unsafe {
+        *p = 2.0;
+    }
+}

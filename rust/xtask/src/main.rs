@@ -1,0 +1,934 @@
+//! watersic-lint: the repo's own static checks, run as
+//! `cargo run -p xtask -- lint` (CI blocks on it).
+//!
+//! Six rule families, tuned to this codebase's pinned invariants (see
+//! `rust/xtask/README.md` for the full contract and the suppression
+//! syntax):
+//!
+//! - `unsafe-safety` — every `unsafe` block, fn, or impl carries an
+//!   adjacent `// SAFETY:` comment (or a `/// # Safety` doc section).
+//! - `no-fma` — no fused-multiply-add tokens (`mul_add`, `fma`,
+//!   `vfma`) anywhere in `rust/src/linalg/`: the kernels' bit-for-bit
+//!   reproducibility contract requires separate mul + add rounding.
+//! - `no-panic-untrusted` — no `.unwrap()` / `.expect(` / `panic!(`
+//!   outside `#[cfg(test)]` in the untrusted-input surfaces
+//!   (`runtime/server.rs`, `coordinator/container.rs`,
+//!   `entropy/rans.rs`): malformed bytes must become `Err`, not a
+//!   crashed serving thread.
+//! - `no-partial-cmp-unwrap` — `partial_cmp(..).unwrap()` anywhere is
+//!   a NaN landmine; `total_cmp` is the house idiom.
+//! - `env-registry` — every `WATERSIC_*` engine option is read through
+//!   `util::env` (no direct `env::var("WATERSIC_..")` elsewhere),
+//!   every such string literal names a registered knob, and every
+//!   registered knob is documented in `main.rs` USAGE.
+//! - `lint-allow` — suppression comments must name a known rule and
+//!   carry an em-dash reason (exact syntax in the README).
+//!
+//! The analysis is a line-oriented scan over a "code view" of each
+//! file (string and comment interiors blanked, positions preserved) —
+//! deliberately not a full parser, so it stays dependency-free and
+//! fast, at the cost of requiring rustfmt-shaped input (which CI's
+//! `cargo fmt --check` already guarantees).
+
+use std::collections::HashMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+const KNOWN_RULES: &[&str] = &[
+    "unsafe-safety",
+    "no-fma",
+    "no-panic-untrusted",
+    "no-partial-cmp-unwrap",
+    "env-registry",
+    "lint-allow",
+];
+
+/// Files whose inputs arrive from outside the process (wire bytes,
+/// container files) — the no-panic rule applies here.
+const UNTRUSTED: &[&str] = &[
+    "rust/src/runtime/server.rs",
+    "rust/src/coordinator/container.rs",
+    "rust/src/entropy/rans.rs",
+];
+
+const SCAN_ROOTS: &[&str] = &["rust/src", "rust/tests", "benches", "rust/xtask/src"];
+
+/// Directory names never descended into: vendored stand-in crates and
+/// the lint's own deliberately-failing fixture snippets.
+const SKIP_DIRS: &[&str] = &["vendor", "fixtures"];
+
+const ENV_REGISTRY_FILE: &str = "rust/src/util/env.rs";
+const USAGE_FILE: &str = "rust/src/main.rs";
+
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+struct Finding {
+    file: String,
+    line: usize,
+    rule: &'static str,
+    msg: String,
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut root = PathBuf::from(".");
+    let mut cmd: Option<&str> = None;
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "lint" => cmd = Some("lint"),
+            "--root" => {
+                i += 1;
+                match args.get(i) {
+                    Some(d) => root = PathBuf::from(d),
+                    None => {
+                        eprintln!("xtask: --root needs a directory");
+                        return ExitCode::from(2);
+                    }
+                }
+            }
+            other => {
+                eprintln!("xtask: unknown argument `{other}`");
+                eprintln!("usage: cargo run -p xtask -- lint [--root DIR]");
+                return ExitCode::from(2);
+            }
+        }
+        i += 1;
+    }
+    if cmd != Some("lint") {
+        eprintln!("usage: cargo run -p xtask -- lint [--root DIR]");
+        return ExitCode::from(2);
+    }
+    match run_lint(&root) {
+        Ok((findings, nfiles)) => {
+            for f in &findings {
+                println!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.msg);
+            }
+            if findings.is_empty() {
+                eprintln!("xtask lint: clean ({nfiles} files)");
+                ExitCode::SUCCESS
+            } else {
+                eprintln!("xtask lint: {} finding(s)", findings.len());
+                ExitCode::FAILURE
+            }
+        }
+        Err(e) => {
+            eprintln!("xtask lint: {e}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+/// Lint the whole tree under `root`; returns (findings, files seen).
+fn run_lint(root: &Path) -> Result<(Vec<Finding>, usize), String> {
+    let env_src = fs::read_to_string(root.join(ENV_REGISTRY_FILE))
+        .map_err(|e| format!("reading {ENV_REGISTRY_FILE}: {e}"))?;
+    let knobs = parse_knobs(&env_src);
+    if knobs.is_empty() {
+        return Err(format!("no knobs parsed from {ENV_REGISTRY_FILE}"));
+    }
+    let main_src = fs::read_to_string(root.join(USAGE_FILE))
+        .map_err(|e| format!("reading {USAGE_FILE}: {e}"))?;
+
+    let files = collect_files(root);
+    let mut findings = Vec::new();
+    for path in &files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = fs::read_to_string(path).map_err(|e| format!("reading {rel}: {e}"))?;
+        findings.extend(lint_source(&rel, &src, &knobs));
+    }
+    for name in &knobs {
+        if !main_src.contains(name.as_str()) {
+            findings.push(Finding {
+                file: USAGE_FILE.to_string(),
+                line: 1,
+                rule: "env-registry",
+                msg: format!("registered knob {name} is missing from the USAGE text"),
+            });
+        }
+    }
+    findings.sort();
+    Ok((findings, files.len()))
+}
+
+fn collect_files(root: &Path) -> Vec<PathBuf> {
+    let mut out = Vec::new();
+    for r in SCAN_ROOTS {
+        let d = root.join(r);
+        if d.is_dir() {
+            walk(&d, &mut out);
+        }
+    }
+    out.sort();
+    out
+}
+
+fn walk(dir: &Path, out: &mut Vec<PathBuf>) {
+    let Ok(rd) = fs::read_dir(dir) else { return };
+    for entry in rd.flatten() {
+        let p = entry.path();
+        if p.is_dir() {
+            let name = p.file_name().and_then(|s| s.to_str()).unwrap_or("");
+            if !SKIP_DIRS.contains(&name) {
+                walk(&p, out);
+            }
+        } else if p.extension().and_then(|s| s.to_str()) == Some("rs") {
+            out.push(p);
+        }
+    }
+}
+
+/// Knob names registered in `util::env::KNOBS` (`name: "..."` fields).
+fn parse_knobs(env_src: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut rest = env_src;
+    while let Some(p) = rest.find("name: \"") {
+        let after = &rest[p + 7..];
+        if let Some(q) = after.find('"') {
+            let name = &after[..q];
+            if name.starts_with("WATERSIC_") {
+                out.push(name.to_string());
+            }
+            rest = &after[q..];
+        } else {
+            break;
+        }
+    }
+    out
+}
+
+/// All six rule families over one file.  `rel` is the repo-relative
+/// path with `/` separators — it selects which path-scoped rules
+/// apply, so tests can exercise fixtures as if they lived anywhere.
+fn lint_source(rel: &str, src: &str, knobs: &[String]) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let raw_lines: Vec<&str> = src.split('\n').collect();
+    let (code, comments) = code_view(src);
+    let line_starts = line_starts(src.as_bytes());
+    let test_ranges = cfg_test_ranges(&code);
+    let supp = Suppressions::parse(src, &comments, &line_starts, rel, &mut findings);
+
+    let finding = |line: usize, rule: &'static str, msg: String| Finding {
+        file: rel.to_string(),
+        line,
+        rule,
+        msg,
+    };
+
+    let in_linalg = rel.starts_with("rust/src/linalg/");
+    let untrusted = UNTRUSTED.contains(&rel);
+
+    for (start, end) in idents(&code) {
+        let tok = &code[start..end];
+        let line = line_at(&line_starts, start);
+
+        // R1: unsafe-safety
+        if tok == b"unsafe" {
+            let here = raw_lines.get(line - 1).copied().unwrap_or("");
+            let ok = here.contains("SAFETY:")
+                || safety_context_above(&raw_lines, line)
+                    .iter()
+                    .any(|t| t.contains("SAFETY:") || t.contains("# Safety"));
+            if !ok && !supp.covers(&raw_lines, "unsafe-safety", line) {
+                findings.push(finding(
+                    line,
+                    "unsafe-safety",
+                    "`unsafe` without an adjacent `// SAFETY:` comment or \
+                     `/// # Safety` section"
+                        .to_string(),
+                ));
+            }
+        }
+
+        // R2: no-fma (linalg only)
+        if in_linalg {
+            let lower: Vec<u8> = tok.iter().map(|c| c.to_ascii_lowercase()).collect();
+            if subslice(tok, b"mul_add") || subslice(&lower, b"fma") {
+                if !supp.covers(&raw_lines, "no-fma", line) {
+                    findings.push(finding(
+                        line,
+                        "no-fma",
+                        format!(
+                            "fused-multiply-add token `{}` in linalg/ breaks the \
+                             separate-rounding reproducibility contract",
+                            String::from_utf8_lossy(tok)
+                        ),
+                    ));
+                }
+            }
+        }
+
+        // R3: no-panic-untrusted
+        if untrusted && !in_ranges(&test_ranges, start) {
+            let hit = match tok {
+                b"unwrap" => {
+                    prev_nonws(&code, start) == Some(b'.') && call_is_empty(&code, end)
+                }
+                b"expect" => {
+                    prev_nonws(&code, start) == Some(b'.')
+                        && next_nonws(&code, end) == Some(b'(')
+                }
+                b"panic" => {
+                    next_nonws(&code, end) == Some(b'!')
+                        // `panic!` then `(`: skip the `!` and any ws
+                        && next_nonws(&code, skip_to(&code, end, b'!') + 1) == Some(b'(')
+                }
+                _ => false,
+            };
+            if hit && !supp.covers(&raw_lines, "no-panic-untrusted", line) {
+                findings.push(finding(
+                    line,
+                    "no-panic-untrusted",
+                    format!(
+                        "`{}` on an untrusted-input surface — return Err or \
+                         suppress with a reason",
+                        String::from_utf8_lossy(tok)
+                    ),
+                ));
+            }
+        }
+
+        // R4: no-partial-cmp-unwrap (everywhere)
+        if tok == b"partial_cmp" {
+            if let Some(after) = balanced_call_end(&code, end) {
+                let mut tail = Vec::with_capacity(12);
+                let mut j = after;
+                while j < code.len() && tail.len() < 12 {
+                    if !code[j].is_ascii_whitespace() {
+                        tail.push(code[j]);
+                    }
+                    j += 1;
+                }
+                if tail.starts_with(b".unwrap()") || tail.starts_with(b".expect(") {
+                    if !supp.covers(&raw_lines, "no-partial-cmp-unwrap", line) {
+                        findings.push(finding(
+                            line,
+                            "no-partial-cmp-unwrap",
+                            "`partial_cmp(..).unwrap()` panics on NaN — use \
+                             `total_cmp`"
+                                .to_string(),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+
+    // R5a: direct env reads of engine options outside the registry
+    if rel != ENV_REGISTRY_FILE {
+        let bytes = src.as_bytes();
+        for pos in find_all(&code, b"env::var") {
+            // the literal itself lives in the raw bytes (the code view
+            // blanks string interiors but preserves every position)
+            let mut j = pos + 8;
+            if bytes.get(j..j + 3) == Some(&b"_os"[..]) {
+                j += 3;
+            }
+            while j < bytes.len() && bytes[j].is_ascii_whitespace() {
+                j += 1;
+            }
+            if bytes.get(j) != Some(&b'(') {
+                continue;
+            }
+            j += 1;
+            while j < bytes.len() && bytes[j].is_ascii_whitespace() {
+                j += 1;
+            }
+            if bytes.get(j) == Some(&b'"') && bytes[j + 1..].starts_with(b"WATERSIC_") {
+                let line = line_at(&line_starts, pos);
+                if !supp.covers(&raw_lines, "env-registry", line) {
+                    findings.push(finding(
+                        line,
+                        "env-registry",
+                        "direct env read of a WATERSIC_* option — go through \
+                         util::env"
+                            .to_string(),
+                    ));
+                }
+            }
+        }
+        // R5b: every quoted WATERSIC_* literal must be a registered knob
+        for (pos, name) in watersic_literals(src) {
+            if !knobs.iter().any(|k| k == &name) {
+                let line = line_at(&line_starts, pos);
+                if !supp.covers(&raw_lines, "env-registry", line) {
+                    findings.push(finding(
+                        line,
+                        "env-registry",
+                        format!("{name} is not registered in util::env::KNOBS"),
+                    ));
+                }
+            }
+        }
+    }
+
+    findings
+}
+
+// ---- suppressions -------------------------------------------------
+
+struct Suppressions {
+    by_line: HashMap<usize, Vec<&'static str>>,
+}
+
+impl Suppressions {
+    /// Parse suppression comments — the marker, a known rule name in
+    /// parens, then an em-dash (or `--`) and a reason; malformed ones
+    /// become `lint-allow` findings.  Only true comment spans are
+    /// scanned, so the marker inside a string literal is inert.
+    fn parse(
+        src: &str,
+        comments: &[(usize, usize)],
+        starts: &[usize],
+        rel: &str,
+        findings: &mut Vec<Finding>,
+    ) -> Suppressions {
+        let mut by_line: HashMap<usize, Vec<&'static str>> = HashMap::new();
+        for &(cs, ce) in comments {
+            let c = &src[cs..ce];
+            let Some(q) = c.find("lint:allow(") else { continue };
+            let ln = line_at(starts, cs + q);
+            let after = &c[q + "lint:allow(".len()..];
+            let Some(r) = after.find(')') else {
+                findings.push(Finding {
+                    file: rel.to_string(),
+                    line: ln,
+                    rule: "lint-allow",
+                    msg: "unclosed lint:allow(".to_string(),
+                });
+                continue;
+            };
+            let rule = after[..r].trim();
+            let Some(&known) = KNOWN_RULES.iter().find(|k| **k == rule) else {
+                findings.push(Finding {
+                    file: rel.to_string(),
+                    line: ln,
+                    rule: "lint-allow",
+                    msg: format!("unknown rule `{rule}` in lint:allow"),
+                });
+                continue;
+            };
+            let rest = after[r + 1..].trim_start();
+            let reason = rest
+                .strip_prefix('—')
+                .or_else(|| rest.strip_prefix("--"))
+                .or_else(|| rest.strip_prefix('-'))
+                .map(str::trim)
+                .unwrap_or("");
+            if reason.is_empty() {
+                findings.push(Finding {
+                    file: rel.to_string(),
+                    line: ln,
+                    rule: "lint-allow",
+                    msg: format!(
+                        "suppression needs a reason: `// lint:allow({rule}) — why`"
+                    ),
+                });
+                continue;
+            }
+            by_line.entry(ln).or_default().push(known);
+        }
+        Suppressions { by_line }
+    }
+
+    /// A violation on `line` is covered by an allow on that line or in
+    /// the contiguous comment block immediately above it.
+    fn covers(&self, raw_lines: &[&str], rule: &'static str, line: usize) -> bool {
+        let at = |ln: usize| self.by_line.get(&ln).is_some_and(|v| v.contains(&rule));
+        if at(line) {
+            return true;
+        }
+        let mut i = line - 1;
+        while i >= 1 {
+            let t = raw_lines.get(i - 1).map(|s| s.trim()).unwrap_or("");
+            if t.starts_with("//") {
+                if at(i) {
+                    return true;
+                }
+                i -= 1;
+            } else {
+                break;
+            }
+        }
+        false
+    }
+}
+
+/// Lines to search for a SAFETY comment above `line`: contiguous
+/// comments, attribute lines, and statement continuations (a previous
+/// line that doesn't end in `;`/`{`/`}` means `line` belongs to the
+/// same statement, so keep walking up to the statement's own comment).
+fn safety_context_above<'a>(raw_lines: &[&'a str], line: usize) -> Vec<&'a str> {
+    let mut texts = Vec::new();
+    let mut i = line - 1;
+    while i >= 1 {
+        let t = raw_lines.get(i - 1).map(|s| s.trim()).unwrap_or("");
+        if t.starts_with("//") {
+            texts.push(t);
+            i -= 1;
+        } else if t.starts_with("#[") || t.starts_with("#![") {
+            i -= 1;
+        } else if !t.is_empty() && !t.ends_with([';', '{', '}']) {
+            i -= 1;
+        } else {
+            break;
+        }
+    }
+    texts
+}
+
+// ---- code view ----------------------------------------------------
+
+/// Copy of the source with comment bodies and string/char interiors
+/// blanked to spaces (newlines kept), so token scans can't match text,
+/// plus the byte spans of the comments themselves — suppressions are
+/// parsed from those spans only, so the marker appearing inside a
+/// string literal is inert.
+fn code_view(src: &str) -> (Vec<u8>, Vec<(usize, usize)>) {
+    let b = src.as_bytes();
+    let n = b.len();
+    let mut out = b.to_vec();
+    let mut comments = Vec::new();
+    let mut i = 0;
+    while i < n {
+        match b[i] {
+            b'/' if i + 1 < n && b[i + 1] == b'/' => {
+                let mut j = i;
+                while j < n && b[j] != b'\n' {
+                    j += 1;
+                }
+                blank(&mut out, i, j);
+                comments.push((i, j));
+                i = j;
+            }
+            b'/' if i + 1 < n && b[i + 1] == b'*' => {
+                let mut depth = 1usize;
+                let mut j = i + 2;
+                while j < n && depth > 0 {
+                    if b[j] == b'/' && j + 1 < n && b[j + 1] == b'*' {
+                        depth += 1;
+                        j += 2;
+                    } else if b[j] == b'*' && j + 1 < n && b[j + 1] == b'/' {
+                        depth -= 1;
+                        j += 2;
+                    } else {
+                        j += 1;
+                    }
+                }
+                blank(&mut out, i, j);
+                comments.push((i, j));
+                i = j;
+            }
+            b'r' if !ident_before(b, i) && raw_string_start(b, i).is_some() => {
+                i = blank_raw_string(b, &mut out, i);
+            }
+            b'b' if !ident_before(b, i) && i + 1 < n && b[i + 1] == b'"' => {
+                i = blank_plain_string(b, &mut out, i + 1);
+            }
+            b'b' if !ident_before(b, i)
+                && i + 1 < n
+                && b[i + 1] == b'r'
+                && raw_string_start(b, i + 1).is_some() =>
+            {
+                i = blank_raw_string(b, &mut out, i + 1);
+            }
+            b'"' => {
+                i = blank_plain_string(b, &mut out, i);
+            }
+            b'\'' => {
+                i = blank_char_or_lifetime(b, &mut out, i);
+            }
+            _ => i += 1,
+        }
+    }
+    (out, comments)
+}
+
+fn blank(out: &mut [u8], from: usize, to: usize) {
+    for c in out[from.min(out.len())..to.min(out.len())].iter_mut() {
+        if *c != b'\n' {
+            *c = b' ';
+        }
+    }
+}
+
+fn ident_before(b: &[u8], i: usize) -> bool {
+    i > 0 && (b[i - 1] == b'_' || b[i - 1].is_ascii_alphanumeric())
+}
+
+/// `Some(hash_count)` if `b[i..]` opens a raw string `r#*"`.
+fn raw_string_start(b: &[u8], i: usize) -> Option<usize> {
+    if b.get(i) != Some(&b'r') {
+        return None;
+    }
+    let mut j = i + 1;
+    while b.get(j) == Some(&b'#') {
+        j += 1;
+    }
+    (b.get(j) == Some(&b'"')).then_some(j - i - 1)
+}
+
+/// Blank `"..."` starting at the quote `at`; returns the index after.
+fn blank_plain_string(b: &[u8], out: &mut [u8], at: usize) -> usize {
+    let n = b.len();
+    let mut j = at + 1;
+    while j < n {
+        match b[j] {
+            b'\\' => j += 2,
+            b'"' => break,
+            _ => j += 1,
+        }
+    }
+    blank(out, at + 1, j.min(n));
+    (j + 1).min(n)
+}
+
+/// Blank `r#"..."#` whose `r` is at `at`; returns the index after.
+fn blank_raw_string(b: &[u8], out: &mut [u8], at: usize) -> usize {
+    let n = b.len();
+    let hashes = raw_string_start(b, at).unwrap_or(0);
+    let body = at + 1 + hashes + 1;
+    let mut j = body;
+    while j < n {
+        if b[j] == b'"' && b[j + 1..].iter().take(hashes).filter(|&&c| c == b'#').count() == hashes
+        {
+            blank(out, body, j);
+            return j + 1 + hashes;
+        }
+        j += 1;
+    }
+    blank(out, body, n);
+    n
+}
+
+/// Blank a char literal at `at`, or step over a lifetime tick.
+fn blank_char_or_lifetime(b: &[u8], out: &mut [u8], at: usize) -> usize {
+    let n = b.len();
+    if at + 1 >= n {
+        return at + 1;
+    }
+    if b[at + 1] == b'\\' {
+        // escaped char literal: blank to the closing quote
+        let mut j = at + 2;
+        while j < n && b[j] != b'\'' {
+            j += 1;
+        }
+        blank(out, at + 1, j.min(n));
+        return (j + 1).min(n);
+    }
+    // single-char literal `'x'` (possibly multi-byte UTF-8); anything
+    // else — `'a` in generics, `&'static` — is a lifetime: skip it
+    let ch_len = utf8_len(b[at + 1]);
+    if at + 1 + ch_len < n && b[at + 1 + ch_len] == b'\'' && b[at + 1] != b'\'' {
+        blank(out, at + 1, at + 1 + ch_len);
+        at + 2 + ch_len
+    } else {
+        at + 1
+    }
+}
+
+fn utf8_len(lead: u8) -> usize {
+    match lead {
+        0x00..=0x7f => 1,
+        0xc0..=0xdf => 2,
+        0xe0..=0xef => 3,
+        _ => 4,
+    }
+}
+
+// ---- scanning helpers ---------------------------------------------
+
+/// Byte offsets where each line starts (index 0 = line 1).
+fn line_starts(b: &[u8]) -> Vec<usize> {
+    let mut v = vec![0usize];
+    for (i, &c) in b.iter().enumerate() {
+        if c == b'\n' {
+            v.push(i + 1);
+        }
+    }
+    v
+}
+
+fn line_at(starts: &[usize], pos: usize) -> usize {
+    starts.partition_point(|&s| s <= pos)
+}
+
+/// `(start, end)` of every identifier token in the code view.
+fn idents(code: &[u8]) -> Vec<(usize, usize)> {
+    let mut v = Vec::new();
+    let mut i = 0;
+    let n = code.len();
+    while i < n {
+        let c = code[i];
+        if c == b'_' || c.is_ascii_alphabetic() {
+            let s = i;
+            while i < n && (code[i] == b'_' || code[i].is_ascii_alphanumeric()) {
+                i += 1;
+            }
+            v.push((s, i));
+        } else if c.is_ascii_digit() {
+            // numeric literal (incl. a suffix like `0usize`): not an
+            // ident — but stop at `.` so `x.0.unwrap()` still yields
+            // the `unwrap` token
+            while i < n && (code[i] == b'_' || code[i].is_ascii_alphanumeric()) {
+                i += 1;
+            }
+        } else {
+            i += 1;
+        }
+    }
+    v
+}
+
+fn subslice(hay: &[u8], needle: &[u8]) -> bool {
+    hay.windows(needle.len()).any(|w| w == needle)
+}
+
+fn find_all(hay: &[u8], needle: &[u8]) -> Vec<usize> {
+    if needle.is_empty() || hay.len() < needle.len() {
+        return Vec::new();
+    }
+    (0..=hay.len() - needle.len())
+        .filter(|&i| &hay[i..i + needle.len()] == needle)
+        .collect()
+}
+
+fn prev_nonws(code: &[u8], mut i: usize) -> Option<u8> {
+    while i > 0 {
+        i -= 1;
+        if !code[i].is_ascii_whitespace() {
+            return Some(code[i]);
+        }
+    }
+    None
+}
+
+fn next_nonws(code: &[u8], mut i: usize) -> Option<u8> {
+    while i < code.len() {
+        if !code[i].is_ascii_whitespace() {
+            return Some(code[i]);
+        }
+        i += 1;
+    }
+    None
+}
+
+/// First index at or after `i` holding `what` (or `code.len()`).
+fn skip_to(code: &[u8], mut i: usize, what: u8) -> usize {
+    while i < code.len() && code[i] != what {
+        i += 1;
+    }
+    i
+}
+
+/// `.unwrap()` check: after the ident, `(` then `)` with only ws.
+fn call_is_empty(code: &[u8], end: usize) -> bool {
+    let open = skip_to(code, end, b'(');
+    if next_nonws(code, end) != Some(b'(') {
+        return false;
+    }
+    next_nonws(code, open + 1) == Some(b')')
+}
+
+/// Index just past the balanced `(...)` that follows `end`, if any.
+fn balanced_call_end(code: &[u8], end: usize) -> Option<usize> {
+    if next_nonws(code, end) != Some(b'(') {
+        return None;
+    }
+    let open = skip_to(code, end, b'(');
+    let mut depth = 1usize;
+    let mut j = open + 1;
+    while j < code.len() && depth > 0 {
+        match code[j] {
+            b'(' => depth += 1,
+            b')' => depth -= 1,
+            _ => {}
+        }
+        j += 1;
+    }
+    (depth == 0).then_some(j)
+}
+
+/// Byte ranges of `#[cfg(test)]` items (attribute through closing
+/// brace) in the code view.
+fn cfg_test_ranges(code: &[u8]) -> Vec<(usize, usize)> {
+    let mut ranges = Vec::new();
+    for m in find_all(code, b"#[cfg(test)]") {
+        let mut k = m + b"#[cfg(test)]".len();
+        // opening brace of the following item (a `;` first means the
+        // attribute decorated a brace-less item: nothing to span)
+        let mut open = None;
+        while k < code.len() {
+            match code[k] {
+                b'{' => {
+                    open = Some(k);
+                    break;
+                }
+                b';' => break,
+                _ => k += 1,
+            }
+        }
+        let Some(open) = open else { continue };
+        let mut depth = 1usize;
+        let mut j = open + 1;
+        while j < code.len() && depth > 0 {
+            match code[j] {
+                b'{' => depth += 1,
+                b'}' => depth -= 1,
+                _ => {}
+            }
+            j += 1;
+        }
+        ranges.push((m, j));
+    }
+    ranges
+}
+
+fn in_ranges(ranges: &[(usize, usize)], pos: usize) -> bool {
+    ranges.iter().any(|&(a, b)| pos >= a && pos < b)
+}
+
+/// `(offset, name)` of every quoted `"WATERSIC_..."` literal.
+fn watersic_literals(src: &str) -> Vec<(usize, String)> {
+    let b = src.as_bytes();
+    let mut out = Vec::new();
+    for pos in find_all(b, b"\"WATERSIC_") {
+        let start = pos + 1;
+        let mut j = start;
+        while j < b.len() && (b[j] == b'_' || b[j].is_ascii_uppercase() || b[j].is_ascii_digit())
+        {
+            j += 1;
+        }
+        // require a non-empty suffix and the closing quote so prefix
+        // constants like `"WATERSIC_"` don't register as knob names
+        if j > start + "WATERSIC_".len() && b.get(j) == Some(&b'"') {
+            out.push((pos, String::from_utf8_lossy(&b[start..j]).to_string()));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const KNOBS: &[&str] = &["WATERSIC_THREADS", "WATERSIC_LOG"];
+
+    fn lint(rel: &str, src: &str) -> Vec<Finding> {
+        let knobs: Vec<String> = KNOBS.iter().map(|s| s.to_string()).collect();
+        lint_source(rel, src, &knobs)
+    }
+
+    fn rules(f: &[Finding]) -> Vec<&'static str> {
+        f.iter().map(|x| x.rule).collect()
+    }
+
+    #[test]
+    fn unsafe_rule_fires_and_passes() {
+        let f = lint("rust/src/x.rs", include_str!("../fixtures/fail_unsafe.rs"));
+        assert!(rules(&f).contains(&"unsafe-safety"), "{f:?}");
+        let f = lint("rust/src/x.rs", include_str!("../fixtures/pass_unsafe.rs"));
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn fma_rule_scoped_to_linalg() {
+        let src = include_str!("../fixtures/fail_fma.rs");
+        let f = lint("rust/src/linalg/x.rs", src);
+        assert!(rules(&f).contains(&"no-fma"), "{f:?}");
+        // the same tokens outside linalg/ are fine
+        let f = lint("rust/src/model/x.rs", src);
+        assert!(!rules(&f).contains(&"no-fma"), "{f:?}");
+        let f = lint(
+            "rust/src/linalg/x.rs",
+            include_str!("../fixtures/pass_fma.rs"),
+        );
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn panic_rule_scoped_to_untrusted_surfaces() {
+        let src = include_str!("../fixtures/fail_panic.rs");
+        let f = lint("rust/src/runtime/server.rs", src);
+        let n = rules(&f)
+            .iter()
+            .filter(|r| **r == "no-panic-untrusted")
+            .count();
+        assert_eq!(n, 3, "unwrap + expect + panic! should all fire: {f:?}");
+        // not an untrusted surface -> no findings
+        let f = lint("rust/src/eval/mod.rs", src);
+        assert!(!rules(&f).contains(&"no-panic-untrusted"), "{f:?}");
+        let f = lint(
+            "rust/src/runtime/server.rs",
+            include_str!("../fixtures/pass_panic.rs"),
+        );
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn partial_cmp_rule_fires_everywhere() {
+        let f = lint(
+            "rust/src/model/x.rs",
+            include_str!("../fixtures/fail_partial_cmp.rs"),
+        );
+        assert!(rules(&f).contains(&"no-partial-cmp-unwrap"), "{f:?}");
+        let f = lint(
+            "rust/src/model/x.rs",
+            include_str!("../fixtures/pass_partial_cmp.rs"),
+        );
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn env_rule_catches_direct_reads_and_unknown_knobs() {
+        let f = lint("rust/src/x.rs", include_str!("../fixtures/fail_env.rs"));
+        let n = rules(&f).iter().filter(|r| **r == "env-registry").count();
+        assert_eq!(n, 2, "direct read + unregistered literal: {f:?}");
+        let f = lint("rust/src/x.rs", include_str!("../fixtures/pass_env.rs"));
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn suppressions_cover_and_malformed_ones_fail() {
+        let f = lint("rust/src/x.rs", include_str!("../fixtures/pass_allow.rs"));
+        assert!(f.is_empty(), "{f:?}");
+        let f = lint("rust/src/x.rs", include_str!("../fixtures/fail_allow.rs"));
+        let n = rules(&f).iter().filter(|r| **r == "lint-allow").count();
+        assert_eq!(n, 2, "unknown rule + missing reason: {f:?}");
+        // a malformed allow does NOT suppress the violation under it
+        assert!(rules(&f).contains(&"unsafe-safety"), "{f:?}");
+    }
+
+    #[test]
+    fn code_view_blanks_strings_and_comments() {
+        let src = "let s = \"unsafe .unwrap()\"; // unsafe here too\n";
+        let (code, comments) = code_view(src);
+        assert!(!subslice(&code, b"unwrap"));
+        assert!(!subslice(&code, b"unsafe"));
+        // positions and line structure survive; the line comment span
+        // is reported
+        assert_eq!(code.len(), src.len());
+        assert_eq!(comments.len(), 1);
+    }
+
+    #[test]
+    fn cfg_test_regions_are_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f() { x.unwrap(); }\n}\n";
+        let f = lint("rust/src/runtime/server.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    /// The real tree must be clean — the same invariant CI enforces
+    /// with `cargo run -p xtask -- lint`.
+    #[test]
+    fn repo_tree_is_clean() {
+        let root = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/../.."));
+        let (findings, nfiles) = run_lint(root).expect("lint run");
+        assert!(findings.is_empty(), "{findings:#?}");
+        assert!(nfiles > 20, "scanned only {nfiles} files");
+    }
+}
