@@ -4,7 +4,9 @@
 //! synthetic tiny model.  Emits `BENCH_serve.json` — the CI
 //! serve-smoke job greps the `speedup prepack <shape>` entry, the
 //! `decode tok/s <window>` / `speedup decode <window>` pair, and the
-//! `serve throughput tok/s` / TTFT / inter-token percentiles.
+//! `serve throughput tok/s` / TTFT / inter-token percentiles, and the
+//! overload-smoke job greps the `shed frac 2x` / `p99 under overload
+//! ms` pair from the open-loop section.
 //!
 //! The prepack rows measure exactly what the server removes from the
 //! hot path: `repack`-tagged rows run the public pack-per-call driver
@@ -17,10 +19,18 @@
 //! baseline is the PR 5 generation loop (every token re-runs the full
 //! window forward — O(t²) attention per token), the `decode` rows run
 //! one-token [`decode_packed`] steps against the cache (O(t) per
-//! token).  `WATERSIC_BENCH_ENFORCE=1` turns the modest ≥1.05× prepack
-//! gate and the ≥10× decode-speedup gate at window 256 into hard
-//! failures (off by default: shared runners are too noisy to fail
-//! builds on).
+//! token).
+//!
+//! The open-loop rows measure what bounded admission buys under
+//! overload: a saturating probe pins the service rate, then arrivals
+//! at 2× that rate must be shed cleanly at admission while the
+//! *accepted*-request p99 stays within a fixed multiple of the
+//! uncontended p99 — overload turns into fast `overloaded` rejections
+//! instead of unbounded queueing delay.  `WATERSIC_BENCH_ENFORCE=1`
+//! turns the modest ≥1.05× prepack gate, the ≥10× decode-speedup gate
+//! at window 256, and the overload gates (zero errors, sheds present,
+//! bounded accepted p99) into hard failures (off by default: shared
+//! runners are too noisy to fail builds on).
 //!
 //! Load-test knobs: `WATERSIC_SERVE_CLIENTS` (default 8; the CI gate
 //! needs ≥8 concurrent) and `WATERSIC_SERVE_REQUESTS` per client
@@ -40,7 +50,9 @@ use watersic::model::transformer::{
 };
 use watersic::model::weights::{PackedWeights, Weights};
 use watersic::model::ModelConfig;
-use watersic::runtime::server::{load_test, serve_batch_from_env, LoadMix, Server};
+use watersic::runtime::server::{
+    load_test, load_test_open, serve_batch_from_env, LoadMix, Server,
+};
 use watersic::runtime::ServeOpts;
 use watersic::util::bench::{report, Bench, BenchLog};
 use watersic::util::json::Json;
@@ -209,6 +221,48 @@ fn main() -> anyhow::Result<()> {
         stats.requests, stats.batches, stats.tokens, stats.decode_steps
     );
 
+    // ---- overload: open-loop arrivals at 2× measured capacity into a
+    // small bounded queue.  The probe offers far beyond any plausible
+    // service rate, so its accepted/wall IS the drain rate; the 2× run
+    // must then shed at admission while accepted-request latency stays
+    // bounded by the queue, not by the arrival backlog.
+    let osrv = Server::from_container(
+        &cfg,
+        &teacher,
+        &container,
+        prec,
+        ServeOpts {
+            queue_max: 16,
+            ..ServeOpts::default()
+        },
+    )?;
+    let probe = load_test_open(&osrv, 200_000.0, Duration::from_millis(400), 101)?;
+    let cap_rps = (probe.accepted as f64 / probe.wall_secs.max(1e-9)).max(50.0);
+    println!("measured serve capacity: {cap_rps:.0} req/s");
+    let rep_unc = load_test_open(
+        &osrv,
+        (cap_rps * 0.25).max(25.0),
+        Duration::from_millis(800),
+        102,
+    )?;
+    rep_unc.print();
+    let rep_over = load_test_open(
+        &osrv,
+        cap_rps * 2.0,
+        Duration::from_millis(800),
+        103,
+    )?;
+    rep_over.print();
+    let ostats = osrv.shutdown();
+    println!(
+        "overload server: {} requests in {} batches ({} shed)",
+        ostats.requests, ostats.batches, ostats.shed
+    );
+    log.note("serve capacity rps", cap_rps);
+    log.note("p99 uncontended ms", rep_unc.p99_ms);
+    log.note("shed frac 2x", rep_over.shed_frac);
+    log.note("p99 under overload ms", rep_over.p99_ms);
+
     match log.write() {
         Ok(path) => println!("wrote {}", path.display()),
         Err(e) => eprintln!("failed to write bench log: {e}"),
@@ -235,6 +289,34 @@ fn main() -> anyhow::Result<()> {
             std::process::exit(1);
         }
         println!("gate ok: decode {decode_speedup:.1}× ≥ {min_decode}× at window {window}");
+        // overload: accepted work must finish cleanly, admission must
+        // actually shed at 2× capacity, and the bounded queue must keep
+        // accepted p99 within a fixed multiple of the uncontended p99
+        if rep_over.errors > 0 || rep_unc.errors > 0 {
+            eprintln!(
+                "GATE FAILED: {} errors under overload ({} uncontended)",
+                rep_over.errors, rep_unc.errors
+            );
+            std::process::exit(1);
+        }
+        if rep_over.shed == 0 {
+            eprintln!("GATE FAILED: no sheds at 2× capacity — admission control inert");
+            std::process::exit(1);
+        }
+        let p99_cap = (rep_unc.p99_ms * 25.0).max(25.0);
+        if rep_over.p99_ms > p99_cap {
+            eprintln!(
+                "GATE FAILED: overload p99 {:.2} ms > {:.2} ms (25× uncontended {:.2} ms)",
+                rep_over.p99_ms, p99_cap, rep_unc.p99_ms
+            );
+            std::process::exit(1);
+        }
+        println!(
+            "gate ok: overload shed {:.0}%, accepted p99 {:.2} ms ≤ {:.2} ms",
+            rep_over.shed_frac * 100.0,
+            rep_over.p99_ms,
+            p99_cap
+        );
     }
     Ok(())
 }

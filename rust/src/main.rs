@@ -15,7 +15,7 @@ use watersic::coordinator::{quantize_model, Algo};
 use watersic::experiments::{self, Ctx};
 use watersic::model::weights::PackedWeights;
 use watersic::runtime::server as serve;
-use watersic::runtime::{Precision, ServeOpts, Server};
+use watersic::runtime::{reactor, Precision, ServeOpts, Server};
 use watersic::util::cli::Args;
 
 const USAGE: &str = "\
@@ -28,6 +28,7 @@ USAGE:
   watersic serve     --container model.wsic [--model picollama_s] [--addr 127.0.0.1:7878]
                      [--batch 8] [--flush-us 500] [--loadtest N [--requests M]
                       [--gen-frac 0.5] [--heavy-tail] [--max-steps 16]]
+                     [--open-rps R [--duration-s S]]
   watersic repro     <id> [--fast] [--no-engine]
                      ids: theory fig1 table1|fig2 table2|fig3 fig4 fig5 table6
                           ablate fig11 fig12 mixing table7 table15 tasks all
@@ -52,6 +53,22 @@ SERVING:
   `--model tiny` serves the synthetic tiny model (zero artifacts
   needed; same weights `quantize --model tiny` uses).
 
+  The TCP front door is an event-driven reactor (epoll/kqueue; falls
+  back to thread-per-connection where neither exists) with a hard
+  connection cap and per-connection idle/write-stall timeouts.
+  Admission is bounded: when the request queue is full the server
+  sheds instead of stalling, answering
+      {\"error\": \"overloaded\", \"retry_after_ms\": N}
+  immediately (N estimated from queue depth and the EWMA scheduler
+  step time — back off at least that long before retrying).  Requests
+  may carry \"deadline_ms\"; expired work is cancelled at step
+  granularity and its KV bytes freed (WATERSIC_SERVE_DEADLINE_MS sets
+  a default for requests that don't).  `--open-rps R` drives the
+  in-process server open-loop at a fixed offered rate for S seconds,
+  printing the shed fraction and accepted-latency percentiles.  ^C
+  drains: accepting stops, in-flight work finishes (or hits its
+  deadline), responses flush, then the process exits.
+
 ENGINE OPTIONS (env):
   every WATERSIC_* knob is read through the util::env registry; this
   list is pinned to it by a unit test, so it cannot go stale.
@@ -65,6 +82,12 @@ ENGINE OPTIONS (env):
   WATERSIC_SERVE_FLUSH_US=N        partial-batch flush deadline in us (default 500)
   WATERSIC_SERVE_KV_BUDGET=N       KV-cache byte budget across in-flight sequences (default 1 GiB)
   WATERSIC_SERVE_MAX_STEPS=N       per-request generation-step cap (default 256)
+  WATERSIC_SERVE_QUEUE=N           bounded admission-queue depth; overflow sheds (default 64)
+  WATERSIC_SERVE_DEADLINE_MS=N     default per-request deadline, 0 = off (default 0)
+  WATERSIC_SERVE_MAX_CONNS=N       concurrent front-door connection cap (default 1024)
+  WATERSIC_SERVE_IDLE_MS=N         per-connection idle timeout (default 60000)
+  WATERSIC_SERVE_WRITE_MS=N        per-connection write-stall timeout (default 10000)
+  WATERSIC_FAULT=SPEC              deterministic fault plan (fault-inject builds only)
   WATERSIC_BENCH_DIR=DIR           where cargo bench writes BENCH_*.json (default .)
   WATERSIC_BENCH_ENFORCE=1         turn bench speedup targets into hard gates
   WATERSIC_SERVE_CLIENTS=N         bench_serve: concurrent load-test clients (default 8)
@@ -280,6 +303,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         ),
         kv_budget: serve::serve_kv_budget_from_env(),
         max_steps: serve::serve_max_steps_from_env(),
+        queue_max: serve::serve_queue_from_env(),
+        deadline: serve::serve_deadline_from_env(),
     };
     println!(
         "engine    : batch_max {}, flush {:?}, precision {}, kv_budget {:.1} MiB, max_steps {}",
@@ -288,6 +313,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         prec.name(),
         opts.kv_budget as f64 / (1024.0 * 1024.0),
         opts.max_steps
+    );
+    println!(
+        "admission : queue_max {}, default deadline {}",
+        opts.queue_max,
+        match opts.deadline {
+            Some(d) => format!("{d:?}"),
+            None => "off".to_string(),
+        }
     );
     let server = match args.str_opt("container") {
         Some(path) => {
@@ -331,72 +364,69 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
         return Ok(());
     }
+
+    let open_rps = args.f64_or("open-rps", 0.0)?;
+    if open_rps > 0.0 {
+        let secs = args.f64_or("duration-s", 2.0)?.max(0.1);
+        let duration = std::time::Duration::from_secs_f64(secs);
+        let rep = serve::load_test_open(&server, open_rps, duration, 7)?;
+        rep.print();
+        let stats = server.shutdown();
+        println!(
+            "served {} requests in {} batches ({} shed)",
+            stats.requests, stats.batches, stats.shed
+        );
+        return Ok(());
+    }
     serve_tcp(server, &args.str_or("addr", "127.0.0.1:7878"))
 }
 
-/// A request line longer than this is rejected and the connection
-/// closed — an unbounded `read_line` would let one client grow a
-/// String until the server OOMs.
-const MAX_REQUEST_LINE: u64 = 1 << 20;
+/// Install a SIGINT handler that sets (and never clears) a stop flag,
+/// so `serve` can drain in-flight requests instead of dying mid-write.
+#[cfg(unix)]
+fn install_sigint_flag() -> &'static std::sync::atomic::AtomicBool {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    static STOP: AtomicBool = AtomicBool::new(false);
+    extern "C" fn on_sigint(_sig: i32) {
+        // async-signal-safe: nothing but one atomic store
+        STOP.store(true, Ordering::Relaxed);
+    }
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    // SAFETY: registers an async-signal-safe handler (a single atomic
+    // store, no allocation or locking) for SIGINT through the libc
+    // `signal` entry point; both the handler and the flag are 'static.
+    unsafe {
+        signal(SIGINT, on_sigint);
+    }
+    &STOP
+}
+
+#[cfg(not(unix))]
+fn install_sigint_flag() -> &'static std::sync::atomic::AtomicBool {
+    // no signal wiring: serve runs until the process is killed
+    static STOP: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+    &STOP
+}
 
 fn serve_tcp(server: Server, addr: &str) -> Result<()> {
-    use std::io::{BufRead, Read, Write};
     let listener = std::net::TcpListener::bind(addr)
         .with_context(|| format!("binding {addr}"))?;
-    println!("listening on {addr} (line-delimited JSON; ^C to stop)");
+    let opts = reactor::ReactorOpts::default();
+    println!(
+        "listening on {addr} (line-delimited JSON; max {} conns, idle {:?}, ^C drains)",
+        opts.max_conns, opts.idle
+    );
     let server = std::sync::Arc::new(server);
-    for stream in listener.incoming() {
-        let stream = match stream {
-            Ok(s) => s,
-            Err(e) => {
-                eprintln!("[serve] accept failed: {e}");
-                continue;
-            }
-        };
-        let srv = server.clone();
-        std::thread::spawn(move || {
-            let mut writer = match stream.try_clone() {
-                Ok(w) => w,
-                Err(e) => {
-                    eprintln!("[serve] connection clone failed: {e}");
-                    return;
-                }
-            };
-            let mut reader = std::io::BufReader::new(stream);
-            let mut buf = Vec::new();
-            loop {
-                buf.clear();
-                // re-armed per line: bounds each request, not the session
-                let n = match (&mut reader)
-                    .take(MAX_REQUEST_LINE)
-                    .read_until(b'\n', &mut buf)
-                {
-                    Ok(0) => break, // clean EOF
-                    Ok(n) => n,
-                    Err(_) => break,
-                };
-                if n as u64 >= MAX_REQUEST_LINE && buf.last() != Some(&b'\n') {
-                    let _ = writer.write_all(b"{\"error\": \"request line too long\"}\n");
-                    break;
-                }
-                let Ok(line) = std::str::from_utf8(&buf) else {
-                    let _ = writer.write_all(b"{\"error\": \"request not utf-8\"}\n");
-                    break;
-                };
-                if line.trim().is_empty() {
-                    continue;
-                }
-                let resp = serve::handle_request_line(&srv, line.trim_end());
-                if writer
-                    .write_all(resp.as_bytes())
-                    .and_then(|()| writer.write_all(b"\n"))
-                    .is_err()
-                {
-                    break;
-                }
-            }
-        });
-    }
+    let stop = install_sigint_flag();
+    reactor::serve(&server, &listener, &opts, stop)?;
+    let stats = server.stats();
+    println!(
+        "drained; served {} requests in {} batches ({} shed, {} cancelled)",
+        stats.requests, stats.batches, stats.shed, stats.gen_cancelled
+    );
     Ok(())
 }
 
@@ -541,7 +571,9 @@ mod tests {
             assert!(super::USAGE.contains(k.name), "USAGE missing {}", k.name);
         }
         for token in super::USAGE.split(|c: char| !(c.is_ascii_alphanumeric() || c == '_')) {
-            if token.starts_with("WATERSIC_") {
+            // the bare prefix (as in the phrase "every WATERSIC_*
+            // knob") names the family, not a knob
+            if token.starts_with("WATERSIC_") && token != "WATERSIC_" {
                 assert!(
                     watersic::util::env::KNOBS.iter().any(|k| k.name == token),
                     "USAGE mentions unregistered knob {token}"

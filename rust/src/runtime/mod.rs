@@ -4,10 +4,12 @@
 //! never runs here.  Executables are compiled once and cached.
 
 pub mod engine;
+pub mod reactor;
 pub mod server;
 
 pub use engine::{Engine, ZsicArtifact};
-pub use server::{GenOut, LoadMix, LoadReport, Server, ServeOpts, ServeStats};
+pub use reactor::ReactorOpts;
+pub use server::{GenOut, LoadMix, LoadReport, Server, ServeOpts, ServeStats, SubmitError};
 // The native-path kernel options are part of the engine surface: the
 // coordinator reads them from here rather than reaching into linalg.
 pub use crate::linalg::gemm::{simd_backend, Precision, SimdBackend};

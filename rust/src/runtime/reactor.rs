@@ -1,0 +1,564 @@
+//! Event-driven TCP front door for the serving engine.
+//!
+//! One reactor thread multiplexes every connection through a readiness
+//! poller (epoll on Linux, kqueue on macOS, via the vendored `polling`
+//! shim) instead of the old thread-per-connection model: non-blocking
+//! accept behind a hard connection cap, per-connection read/write state
+//! machines with idle and write-stall timeouts, and request lines
+//! submitted to the [`Server`] scheduler through its *non-blocking*
+//! typed admission path — a slow generation never parks an OS thread,
+//! and an admission-queue overflow comes back to the client immediately
+//! as `{"error":"overloaded","retry_after_ms":N}`.
+//!
+//! Responses drain in request order per connection (head-of-line by
+//! design: the protocol has no request ids), via [`ScoreHandle::
+//! try_wait`]/[`GenHandle::try_wait`] polls each tick.  Dropping a
+//! connection drops its handles, which cancels any in-flight
+//! generation at the scheduler's next iteration and frees its KV bytes
+//! (see [`GenHandle`]).
+//!
+//! On platforms with no readiness backend, [`serve`] falls back to
+//! [`serve_threaded`]: the same protocol, one thread per connection,
+//! still behind the connection cap and with `set_read_timeout`/
+//! `set_write_timeout` bounding idle and stalled peers.
+//!
+//! Shutdown (the `stop` flag, wired to SIGINT by `main.rs`) drains
+//! rather than aborts: the listener stops accepting, queued and
+//! in-flight requests finish (or get deadline-cancelled by the
+//! scheduler), the responses flush, and then the loop exits.
+//!
+//! Fault-injection sites (`util::fault`, `fault-inject` builds only):
+//! `accept` (drop a fresh connection), `read` (partial/slow reads),
+//! `conn` (kill a connection on a complete request line), `write`
+//! (stall before flushing).  The `sched` site lives in the scheduler.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context as _, Result};
+
+use crate::runtime::server::{
+    self as serve, error_line, overloaded_line, GenHandle, ScoreHandle, Server, Submitted,
+};
+use crate::util::fault::{self, Fault};
+
+/// The `WATERSIC_SERVE_MAX_CONNS` engine option: hard cap on concurrent
+/// front-door connections.  A connection beyond the cap gets one
+/// best-effort `overloaded` line and is closed.  Default 1024, min 1.
+pub fn serve_max_conns_from_env() -> usize {
+    crate::util::env::parsed::<usize>("WATERSIC_SERVE_MAX_CONNS")
+        .map(|n| n.max(1))
+        .unwrap_or(1024)
+}
+
+/// The `WATERSIC_SERVE_IDLE_MS` engine option: per-connection idle
+/// timeout — a connection with no request bytes and nothing in flight
+/// for this long is closed (slow-loris bound).  Default 60s, min 1ms.
+pub fn serve_idle_ms_from_env() -> Duration {
+    Duration::from_millis(
+        crate::util::env::parsed::<u64>("WATERSIC_SERVE_IDLE_MS")
+            .map(|n| n.max(1))
+            .unwrap_or(60_000),
+    )
+}
+
+/// The `WATERSIC_SERVE_WRITE_MS` engine option: per-connection
+/// write-stall timeout — a peer that stops draining its responses for
+/// this long is dropped (its buffered bytes can't grow unboundedly).
+/// Default 10s, min 1ms.
+pub fn serve_write_ms_from_env() -> Duration {
+    Duration::from_millis(
+        crate::util::env::parsed::<u64>("WATERSIC_SERVE_WRITE_MS")
+            .map(|n| n.max(1))
+            .unwrap_or(10_000),
+    )
+}
+
+/// A request line longer than this is rejected and the connection
+/// closed — an unbounded line buffer would let one client grow memory
+/// until the server OOMs.
+pub const MAX_REQUEST_LINE: usize = 1 << 20;
+
+/// Front-door limits (the scheduler's own limits live in
+/// [`serve::ServeOpts`]).
+#[derive(Clone, Copy, Debug)]
+pub struct ReactorOpts {
+    pub max_conns: usize,
+    pub idle: Duration,
+    pub write_stall: Duration,
+}
+
+impl Default for ReactorOpts {
+    fn default() -> ReactorOpts {
+        ReactorOpts {
+            max_conns: serve_max_conns_from_env(),
+            idle: serve_idle_ms_from_env(),
+            write_stall: serve_write_ms_from_env(),
+        }
+    }
+}
+
+/// Serve the line-JSON protocol on `listener` until `stop` is set:
+/// the event-driven reactor where a readiness backend exists, else the
+/// threaded fallback.  Returns once drained.
+pub fn serve(
+    server: &Arc<Server>,
+    listener: &TcpListener,
+    opts: &ReactorOpts,
+    stop: &AtomicBool,
+) -> Result<()> {
+    match polling::Poller::new() {
+        Ok(poller) => serve_reactor_on(server, listener, &poller, opts, stop),
+        Err(e) if e.kind() == ErrorKind::Unsupported => {
+            log::warn!("no readiness backend ({e}); using thread-per-connection");
+            serve_threaded(server, listener, opts, stop)
+        }
+        Err(e) => Err(e).context("creating readiness poller"),
+    }
+}
+
+/// poller key of the listening socket (connections start at 1)
+const KEY_LISTENER: usize = 0;
+
+/// One response slot, kept in submit order per connection.
+enum OutItem {
+    /// answered at submit time (errors, sheds, `steps: 0` echo)
+    Now(String),
+    Score(ScoreHandle),
+    Gen(GenHandle),
+}
+
+/// Per-connection state machine.
+struct Conn {
+    stream: TcpStream,
+    /// accumulated request bytes (may end mid-line)
+    rbuf: Vec<u8>,
+    /// responses pending or in flight, in request order
+    out: VecDeque<OutItem>,
+    /// serialized response bytes not yet written (`wpos` = progress)
+    wbuf: Vec<u8>,
+    wpos: usize,
+    last_activity: Instant,
+    /// set while a write has made no progress (stall timeout base)
+    stalled_since: Option<Instant>,
+    /// flush what's pending, accept no new requests, then close
+    closing: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            rbuf: Vec::new(),
+            out: VecDeque::new(),
+            wbuf: Vec::new(),
+            wpos: 0,
+            last_activity: Instant::now(),
+            stalled_since: None,
+            closing: false,
+        }
+    }
+
+    fn done(&self) -> bool {
+        self.out.is_empty() && self.wbuf.is_empty()
+    }
+}
+
+/// The event-driven front door (public entry; creates its own poller).
+pub fn serve_reactor(
+    server: &Arc<Server>,
+    listener: &TcpListener,
+    opts: &ReactorOpts,
+    stop: &AtomicBool,
+) -> Result<()> {
+    let poller = polling::Poller::new().context("creating readiness poller")?;
+    serve_reactor_on(server, listener, &poller, opts, stop)
+}
+
+fn serve_reactor_on(
+    server: &Server,
+    listener: &TcpListener,
+    poller: &polling::Poller,
+    opts: &ReactorOpts,
+    stop: &AtomicBool,
+) -> Result<()> {
+    use std::os::fd::AsRawFd;
+    listener.set_nonblocking(true).context("listener nonblocking")?;
+    poller
+        .add(listener.as_raw_fd(), polling::Event::readable(KEY_LISTENER))
+        .context("registering listener")?;
+    let mut conns: HashMap<usize, Conn> = HashMap::new();
+    let mut next_key = KEY_LISTENER + 1;
+    let mut events: Vec<polling::Event> = Vec::new();
+    let mut draining = false;
+    loop {
+        if stop.load(Ordering::Relaxed) && !draining {
+            draining = true;
+            let _ = poller.delete(listener.as_raw_fd());
+            for c in conns.values_mut() {
+                c.closing = true;
+            }
+        }
+        if draining && conns.is_empty() {
+            return Ok(());
+        }
+        // short tick while responses are pending (try_wait polls need
+        // it); long tick when purely waiting on sockets
+        let busy = conns.values().any(|c| !c.done());
+        let tick = if busy || draining {
+            Duration::from_millis(2)
+        } else {
+            Duration::from_millis(200)
+        };
+        events.clear();
+        poller
+            .wait(&mut events, Some(tick))
+            .context("polling for readiness")?;
+        let mut dead: Vec<usize> = Vec::new();
+        for ev in &events {
+            if ev.key == KEY_LISTENER {
+                accept_ready(server, listener, poller, opts, &mut conns, &mut next_key);
+            } else if ev.readable {
+                if let Some(c) = conns.get_mut(&ev.key) {
+                    if !read_ready(server, c) {
+                        dead.push(ev.key);
+                    }
+                }
+            }
+            // writable readiness needs no handler: every pending wbuf
+            // is re-flushed on the (short) tick below
+        }
+        let now = Instant::now();
+        for (&key, c) in conns.iter_mut() {
+            drain_out(c);
+            if !flush(c, opts.write_stall) {
+                dead.push(key);
+                continue;
+            }
+            let idle_out = now.duration_since(c.last_activity) > opts.idle;
+            if c.done() && (c.closing || idle_out) {
+                dead.push(key);
+            }
+        }
+        for key in dead {
+            if let Some(c) = conns.remove(&key) {
+                let _ = poller.delete(c.stream.as_raw_fd());
+                // dropping the Conn drops its handles: any in-flight
+                // generation is cancelled and its KV bytes freed
+            }
+        }
+    }
+}
+
+/// Accept until `WouldBlock`, applying the connection cap.
+fn accept_ready(
+    server: &Server,
+    listener: &TcpListener,
+    poller: &polling::Poller,
+    opts: &ReactorOpts,
+    conns: &mut HashMap<usize, Conn>,
+    next_key: &mut usize,
+) {
+    use std::os::fd::AsRawFd;
+    loop {
+        let stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => {
+                log::warn!("[serve] accept failed: {e}");
+                return;
+            }
+        };
+        if let Some(Fault::Disconnect) = fault::check("accept") {
+            continue; // injected: drop the fresh connection on the floor
+        }
+        if conns.len() >= opts.max_conns {
+            shed_connection(server, stream);
+            continue;
+        }
+        if stream.set_nonblocking(true).is_err() {
+            continue;
+        }
+        let key = *next_key;
+        *next_key += 1;
+        if poller
+            .add(stream.as_raw_fd(), polling::Event::readable(key))
+            .is_err()
+        {
+            continue;
+        }
+        conns.insert(key, Conn::new(stream));
+    }
+}
+
+/// One best-effort `overloaded` line on a blocking socket, then close.
+fn shed_connection(server: &Server, mut stream: TcpStream) {
+    let _ = stream.set_nonblocking(false);
+    let _ = stream.set_write_timeout(Some(Duration::from_millis(250)));
+    let msg = overloaded_line(server.retry_after_hint_ms());
+    let _ = stream
+        .write_all(msg.as_bytes())
+        .and_then(|()| stream.write_all(b"\n"));
+}
+
+/// Pull available bytes and submit any completed lines.  `false` means
+/// the connection is gone (EOF, error, or injected disconnect).
+fn read_ready(server: &Server, c: &mut Conn) -> bool {
+    let mut per_pass = usize::MAX;
+    match fault::check("read") {
+        Some(Fault::Disconnect) => return false,
+        Some(Fault::SlowRead { ms }) => std::thread::sleep(Duration::from_millis(ms)),
+        Some(Fault::PartialRead) => per_pass = 1,
+        _ => {}
+    }
+    let mut buf = [0u8; 4096];
+    loop {
+        let want = per_pass.min(buf.len());
+        match c.stream.read(&mut buf[..want]) {
+            Ok(0) => return false, // clean EOF
+            Ok(n) => {
+                c.last_activity = Instant::now();
+                c.rbuf.extend_from_slice(&buf[..n]);
+                if !consume_lines(server, c) {
+                    return false;
+                }
+                if n < want || per_pass == 1 {
+                    return true;
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => return true,
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => return false,
+        }
+    }
+}
+
+/// Parse and submit every complete line in `rbuf`.  `false` means an
+/// injected mid-request disconnect.
+fn consume_lines(server: &Server, c: &mut Conn) -> bool {
+    while let Some(nl) = c.rbuf.iter().position(|&b| b == b'\n') {
+        let line: Vec<u8> = c.rbuf.drain(..=nl).collect();
+        if c.closing {
+            continue; // draining: flush what's in flight, take no more
+        }
+        if let Some(Fault::Disconnect) = fault::check("conn") {
+            return false;
+        }
+        let Ok(text) = std::str::from_utf8(&line) else {
+            c.out.push_back(OutItem::Now(error_line("request not utf-8")));
+            c.closing = true;
+            continue;
+        };
+        let text = text.trim();
+        if text.is_empty() {
+            continue;
+        }
+        let item = match serve::submit_request_line(server, text) {
+            Submitted::Ready(s) => OutItem::Now(s),
+            Submitted::Score(h) => OutItem::Score(h),
+            Submitted::Gen(h) => OutItem::Gen(h),
+        };
+        c.out.push_back(item);
+    }
+    if c.rbuf.len() > MAX_REQUEST_LINE {
+        if !c.closing {
+            c.out
+                .push_back(OutItem::Now(error_line("request line too long")));
+            c.closing = true;
+        }
+        // keep draining (harmlessly) so the peer's writes don't wedge
+        c.rbuf.clear();
+    }
+    true
+}
+
+/// Move completed responses (in request order) into the write buffer.
+fn drain_out(c: &mut Conn) {
+    loop {
+        let line = match c.out.front() {
+            None => return,
+            Some(OutItem::Now(s)) => s.clone(),
+            Some(OutItem::Score(h)) => match h.try_wait() {
+                None => return, // head still in flight: keep order
+                Some(Ok(o)) => serve::score_line(&o),
+                Some(Err(e)) => error_line(&format!("{e:#}")),
+            },
+            Some(OutItem::Gen(h)) => match h.try_wait() {
+                None => return,
+                Some(Ok(o)) => serve::gen_line(&o),
+                Some(Err(e)) => error_line(&format!("{e:#}")),
+            },
+        };
+        c.out.pop_front();
+        c.wbuf.extend_from_slice(line.as_bytes());
+        c.wbuf.push(b'\n');
+    }
+}
+
+/// Write as much of `wbuf` as the socket takes.  `false` means the
+/// connection is dead (error, or stalled past the timeout).
+fn flush(c: &mut Conn, write_stall: Duration) -> bool {
+    if c.wpos >= c.wbuf.len() {
+        c.wbuf.clear();
+        c.wpos = 0;
+        c.stalled_since = None;
+        return true;
+    }
+    if let Some(Fault::WriteStall { ms }) = fault::check("write") {
+        std::thread::sleep(Duration::from_millis(ms));
+    }
+    loop {
+        match c.stream.write(&c.wbuf[c.wpos..]) {
+            Ok(0) => return false,
+            Ok(n) => {
+                c.wpos += n;
+                c.stalled_since = None;
+                c.last_activity = Instant::now();
+                if c.wpos >= c.wbuf.len() {
+                    c.wbuf.clear();
+                    c.wpos = 0;
+                    return true;
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                let since = *c.stalled_since.get_or_insert_with(Instant::now);
+                return since.elapsed() <= write_stall;
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => return false,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// threaded fallback
+
+/// Thread-per-connection fallback front door: same protocol and the
+/// same connection cap, with `set_read_timeout` bounding idle peers
+/// and `set_write_timeout` bounding stalled ones.  Used when no
+/// readiness backend exists (and directly testable on any platform).
+pub fn serve_threaded(
+    server: &Arc<Server>,
+    listener: &TcpListener,
+    opts: &ReactorOpts,
+    stop: &AtomicBool,
+) -> Result<()> {
+    listener.set_nonblocking(true).context("listener nonblocking")?;
+    let active = Arc::new(AtomicUsize::new(0));
+    while !stop.load(Ordering::Relaxed) {
+        let stream = match listener.accept() {
+            Ok((s, _)) => s,
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(20));
+                continue;
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => {
+                log::warn!("[serve] accept failed: {e}");
+                continue;
+            }
+        };
+        if let Some(Fault::Disconnect) = fault::check("accept") {
+            continue;
+        }
+        if stream.set_nonblocking(false).is_err() {
+            continue;
+        }
+        if active.load(Ordering::Relaxed) >= opts.max_conns {
+            shed_connection(server, stream);
+            continue;
+        }
+        active.fetch_add(1, Ordering::Relaxed);
+        let srv = server.clone();
+        let count = active.clone();
+        let (idle, write_stall) = (opts.idle, opts.write_stall);
+        let spawned = std::thread::Builder::new()
+            .name("watersic-serve-conn".to_string())
+            .spawn(move || {
+                handle_connection(&srv, stream, idle, write_stall);
+                count.fetch_sub(1, Ordering::Relaxed);
+            });
+        if spawned.is_err() {
+            active.fetch_sub(1, Ordering::Relaxed);
+        }
+    }
+    // drain: in-flight handlers finish their current request (the
+    // socket timeouts bound how long an idle peer can hold one)
+    while active.load(Ordering::Relaxed) > 0 {
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    Ok(())
+}
+
+/// Blocking per-connection loop of the threaded fallback.
+fn handle_connection(
+    server: &Server,
+    stream: TcpStream,
+    idle: Duration,
+    write_stall: Duration,
+) {
+    use std::io::BufRead;
+    if stream.set_read_timeout(Some(idle)).is_err()
+        || stream.set_write_timeout(Some(write_stall)).is_err()
+    {
+        return;
+    }
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(e) => {
+            log::warn!("[serve] connection clone failed: {e}");
+            return;
+        }
+    };
+    let mut reader = std::io::BufReader::new(stream);
+    let mut buf = Vec::new();
+    loop {
+        match fault::check("read") {
+            Some(Fault::Disconnect) => return,
+            Some(Fault::SlowRead { ms }) => std::thread::sleep(Duration::from_millis(ms)),
+            // a buffered blocking reader has no partial-read notion
+            _ => {}
+        }
+        buf.clear();
+        // re-armed per line: bounds each request, not the session; a
+        // timeout here is the idle bound kicking in
+        let n = match (&mut reader)
+            .take(MAX_REQUEST_LINE as u64)
+            .read_until(b'\n', &mut buf)
+        {
+            Ok(0) => return, // clean EOF
+            Ok(n) => n,
+            Err(_) => return,
+        };
+        if n >= MAX_REQUEST_LINE && buf.last() != Some(&b'\n') {
+            let _ = writer.write_all(b"{\"error\": \"request line too long\"}\n");
+            return;
+        }
+        let Ok(line) = std::str::from_utf8(&buf) else {
+            let _ = writer.write_all(b"{\"error\": \"request not utf-8\"}\n");
+            return;
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        if let Some(Fault::Disconnect) = fault::check("conn") {
+            return;
+        }
+        let resp = serve::handle_request_line(server, line.trim_end());
+        if let Some(Fault::WriteStall { ms }) = fault::check("write") {
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+        if writer
+            .write_all(resp.as_bytes())
+            .and_then(|()| writer.write_all(b"\n"))
+            .is_err()
+        {
+            return;
+        }
+    }
+}

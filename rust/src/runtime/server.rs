@@ -43,7 +43,7 @@
 //! re-score oracle.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
@@ -95,6 +95,29 @@ pub fn serve_max_steps_from_env() -> usize {
         .unwrap_or(256)
 }
 
+/// The `WATERSIC_SERVE_QUEUE` engine option: bounded admission-queue
+/// depth.  A submit that finds the queue full is shed immediately with
+/// [`SubmitError::Overloaded`] (and a `retry_after_ms` estimate)
+/// instead of queueing unboundedly.  Default 64, minimum 1.
+pub fn serve_queue_from_env() -> usize {
+    crate::util::env::parsed::<usize>("WATERSIC_SERVE_QUEUE")
+        .map(|n| n.max(1))
+        .unwrap_or(64)
+}
+
+/// The `WATERSIC_SERVE_DEADLINE_MS` engine option: default per-request
+/// deadline.  Expired requests are cancelled at step granularity —
+/// while queued they error cleanly; mid-generation they return their
+/// partial tokens with [`GenOut::cancelled`] set and free their KV
+/// bytes.  Default 0 = no deadline; a per-request `"deadline_ms"`
+/// protocol field overrides it either way.
+pub fn serve_deadline_from_env() -> Option<Duration> {
+    match crate::util::env::parsed::<u64>("WATERSIC_SERVE_DEADLINE_MS") {
+        Some(0) | None => None,
+        Some(ms) => Some(Duration::from_millis(ms)),
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct ServeOpts {
     /// max prefill rows per batched forward, and max concurrently
@@ -106,6 +129,10 @@ pub struct ServeOpts {
     pub kv_budget: usize,
     /// per-request generation-step cap
     pub max_steps: usize,
+    /// bounded admission-queue depth (beyond it, submits shed)
+    pub queue_max: usize,
+    /// default per-request deadline (`None` = none)
+    pub deadline: Option<Duration>,
 }
 
 impl Default for ServeOpts {
@@ -115,9 +142,38 @@ impl Default for ServeOpts {
             flush: Duration::from_micros(serve_flush_us_from_env()),
             kv_budget: serve_kv_budget_from_env(),
             max_steps: serve_max_steps_from_env(),
+            queue_max: serve_queue_from_env(),
+            deadline: serve_deadline_from_env(),
         }
     }
 }
+
+/// Why a typed submit ([`Server::try_submit_score`] /
+/// [`Server::try_submit_generate`]) refused a request.  A dedicated
+/// error type (not a flattened `anyhow` chain) so the front door can
+/// distinguish *shed because overloaded* — which becomes the
+/// `{"error":"overloaded","retry_after_ms":N}` protocol response —
+/// from a request that is simply invalid.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// admission queue full: retry after the estimated drain time
+    Overloaded { retry_after_ms: u64 },
+    /// invalid request, over-budget request, or server shutting down
+    Rejected(String),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Overloaded { retry_after_ms } => {
+                write!(f, "overloaded; retry after {retry_after_ms} ms")
+            }
+            SubmitError::Rejected(msg) => f.write_str(msg),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 /// Response to one scoring request.
 #[derive(Clone, Debug)]
@@ -159,6 +215,9 @@ pub struct GenOut {
     pub start_iteration: usize,
     /// scheduler iteration that produced the final token
     pub done_iteration: usize,
+    /// the sequence was cancelled (deadline expiry) before finishing
+    /// its requested steps; `tokens` holds the partial continuation
+    pub cancelled: bool,
 }
 
 impl GenOut {
@@ -171,14 +230,22 @@ impl GenOut {
 enum Pending {
     Score {
         tokens: Vec<i32>,
-        resp: mpsc::Sender<ScoreOut>,
+        resp: mpsc::Sender<Result<ScoreOut>>,
+        deadline: Option<Instant>,
     },
     Gen {
         prompt: Vec<i32>,
         steps: usize,
         resp: mpsc::Sender<Result<GenOut>>,
         submitted: Instant,
+        deadline: Option<Instant>,
+        cancel: Arc<AtomicBool>,
     },
+}
+
+/// `true` once a deadline has passed.
+fn expired(deadline: Option<Instant>, now: Instant) -> bool {
+    deadline.is_some_and(|d| now >= d)
 }
 
 struct Queue {
@@ -205,6 +272,10 @@ struct Active {
     /// iteration at which this sequence last advanced a token (0 =
     /// never) — each iteration advances every active exactly once
     advanced_iter: usize,
+    deadline: Option<Instant>,
+    /// set by the client side (handle drop, connection death) — the
+    /// reap sweep frees the slot and KV bytes at the next iteration
+    cancel: Arc<AtomicBool>,
 }
 
 impl Active {
@@ -231,6 +302,11 @@ pub struct ServeStats {
     pub decode_tokens: usize,
     /// generation requests completed
     pub gen_completed: usize,
+    /// sequences cancelled before completion (client gone or deadline
+    /// expired), their slot and KV bytes freed at the next iteration
+    pub gen_cancelled: usize,
+    /// submits shed at admission because the bounded queue was full
+    pub shed: usize,
     /// high-water mark of in-flight KV cache bytes
     pub kv_peak_bytes: usize,
 }
@@ -249,7 +325,12 @@ struct Inner {
     decode_steps: AtomicUsize,
     decode_tokens: AtomicUsize,
     gen_completed: AtomicUsize,
+    gen_cancelled: AtomicUsize,
+    shed: AtomicUsize,
     kv_peak_bytes: AtomicUsize,
+    /// EWMA of scheduler-iteration wall time in µs (retry-after
+    /// estimates); 0 until the first iteration completes
+    iter_ewma_us: AtomicU64,
 }
 
 impl Inner {
@@ -261,26 +342,53 @@ impl Inner {
     fn lock_queue(&self) -> MutexGuard<'_, Queue> {
         self.queue.lock().unwrap_or_else(PoisonError::into_inner)
     }
+
+    /// Retry-after estimate for a shed request: roughly how long a
+    /// queue of `depth` takes to drain at the measured per-iteration
+    /// pace (1 ms per iteration until the EWMA warms up).
+    fn retry_after_ms(&self, depth: usize) -> u64 {
+        let per_iter_ms = (self.iter_ewma_us.load(Ordering::Relaxed) / 1000).max(1);
+        let iterations = (depth / self.opts.batch_max.max(1) + 1) as u64;
+        (iterations * per_iter_ms).max(1)
+    }
 }
 
 /// In-flight request handle; [`ScoreHandle::wait`] blocks for the
 /// batched response.
 pub struct ScoreHandle {
-    rx: mpsc::Receiver<ScoreOut>,
+    rx: mpsc::Receiver<Result<ScoreOut>>,
 }
 
 impl ScoreHandle {
     pub fn wait(self) -> Result<ScoreOut> {
         self.rx
             .recv()
-            .map_err(|_| anyhow!("serve request dropped before completion"))
+            .map_err(|_| anyhow!("serve request dropped before completion"))?
+    }
+
+    /// Non-blocking poll (the reactor's per-tick drain).  `Some` is
+    /// final: the response (or the dropped-channel error) is consumed.
+    pub fn try_wait(&self) -> Option<Result<ScoreOut>> {
+        match self.rx.try_recv() {
+            Ok(v) => Some(v),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                Some(Err(anyhow!("serve request dropped before completion")))
+            }
+        }
     }
 }
 
 /// In-flight generation handle; [`GenHandle::wait`] blocks until the
 /// sequence completes (or is rejected by admission control).
+///
+/// Dropping the handle without waiting **cancels** the generation: the
+/// scheduler reaps the sequence at its next iteration and frees its
+/// slot and KV bytes — a client that gave up (or a connection that
+/// died) no longer burns decode steps to completion.
 pub struct GenHandle {
     rx: mpsc::Receiver<Result<GenOut>>,
+    cancel: Arc<AtomicBool>,
 }
 
 impl GenHandle {
@@ -288,6 +396,32 @@ impl GenHandle {
         self.rx
             .recv()
             .map_err(|_| anyhow!("generate request dropped before completion"))?
+    }
+
+    /// Non-blocking poll (the reactor's per-tick drain).  `Some` is
+    /// final: the response (or the dropped-channel error) is consumed.
+    pub fn try_wait(&self) -> Option<Result<GenOut>> {
+        match self.rx.try_recv() {
+            Ok(v) => Some(v),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => {
+                Some(Err(anyhow!("generate request dropped before completion")))
+            }
+        }
+    }
+
+    /// Cancel the generation without dropping the handle; the
+    /// scheduler frees its slot and KV bytes at the next iteration.
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::Relaxed);
+    }
+}
+
+impl Drop for GenHandle {
+    fn drop(&mut self) {
+        // completed sequences already left the scheduler; for the rest
+        // this is the disconnect-cancels-the-sequence path
+        self.cancel.store(true, Ordering::Relaxed);
     }
 }
 
@@ -319,7 +453,10 @@ impl Server {
             decode_steps: AtomicUsize::new(0),
             decode_tokens: AtomicUsize::new(0),
             gen_completed: AtomicUsize::new(0),
+            gen_cancelled: AtomicUsize::new(0),
+            shed: AtomicUsize::new(0),
             kv_peak_bytes: AtomicUsize::new(0),
+            iter_ewma_us: AtomicU64::new(0),
         });
         let worker = inner.clone();
         let batcher = std::thread::Builder::new()
@@ -358,23 +495,59 @@ impl Server {
         Ok(())
     }
 
+    /// Effective deadline: the explicit per-request one, else the
+    /// server default (`WATERSIC_SERVE_DEADLINE_MS`).
+    fn effective_deadline(&self, deadline: Option<Instant>) -> Option<Instant> {
+        deadline.or_else(|| self.inner.opts.deadline.map(|d| Instant::now() + d))
+    }
+
     /// Enqueue a scoring request (returns immediately).
     pub fn submit(&self, tokens: Vec<i32>) -> Result<ScoreHandle> {
-        ensure!(!tokens.is_empty(), "empty token window");
-        ensure!(
-            tokens.len() <= self.inner.cfg.ctx,
-            "window of {} exceeds ctx {}",
-            tokens.len(),
-            self.inner.cfg.ctx
-        );
-        self.validate_tokens(&tokens)?;
+        Ok(self.try_submit_score(tokens, None)?)
+    }
+
+    /// Typed admission path for the front door: validates, applies the
+    /// bounded-queue admission control, and distinguishes *shed* from
+    /// *invalid* in the error.  `deadline` overrides the server-wide
+    /// default.
+    pub fn try_submit_score(
+        &self,
+        tokens: Vec<i32>,
+        deadline: Option<Instant>,
+    ) -> Result<ScoreHandle, SubmitError> {
+        let valid = (|| -> Result<()> {
+            ensure!(!tokens.is_empty(), "empty token window");
+            ensure!(
+                tokens.len() <= self.inner.cfg.ctx,
+                "window of {} exceeds ctx {}",
+                tokens.len(),
+                self.inner.cfg.ctx
+            );
+            self.validate_tokens(&tokens)
+        })();
+        if let Err(e) = valid {
+            return Err(SubmitError::Rejected(format!("{e:#}")));
+        }
+        let deadline = self.effective_deadline(deadline);
         let (tx, rx) = mpsc::channel();
         {
             let mut g = self.inner.lock_queue();
             if g.shutdown {
-                bail!("server is shutting down");
+                return Err(SubmitError::Rejected(
+                    "server is shutting down".to_string(),
+                ));
             }
-            g.q.push_back(Pending::Score { tokens, resp: tx });
+            if g.q.len() >= self.inner.opts.queue_max {
+                self.inner.shed.fetch_add(1, Ordering::Relaxed);
+                return Err(SubmitError::Overloaded {
+                    retry_after_ms: self.inner.retry_after_ms(g.q.len()),
+                });
+            }
+            g.q.push_back(Pending::Score {
+                tokens,
+                resp: tx,
+                deadline,
+            });
         }
         self.inner.requests.fetch_add(1, Ordering::Relaxed);
         self.inner.cv.notify_all();
@@ -397,31 +570,59 @@ impl Server {
         prompt: Vec<i32>,
         steps: usize,
     ) -> Result<GenHandle> {
-        ensure!(!prompt.is_empty(), "empty prompt");
-        ensure!(steps >= 1, "generate needs at least one step");
-        ensure!(
-            steps <= self.inner.opts.max_steps,
-            "steps {} exceeds the per-request cap {} (WATERSIC_SERVE_MAX_STEPS)",
-            steps,
-            self.inner.opts.max_steps
-        );
-        self.validate_tokens(&prompt)?;
+        Ok(self.try_submit_generate(prompt, steps, None)?)
+    }
+
+    /// Typed admission path for the front door (see
+    /// [`Server::try_submit_score`]).
+    pub fn try_submit_generate(
+        &self,
+        prompt: Vec<i32>,
+        steps: usize,
+        deadline: Option<Instant>,
+    ) -> Result<GenHandle, SubmitError> {
+        let valid = (|| -> Result<()> {
+            ensure!(!prompt.is_empty(), "empty prompt");
+            ensure!(steps >= 1, "generate needs at least one step");
+            ensure!(
+                steps <= self.inner.opts.max_steps,
+                "steps {} exceeds the per-request cap {} (WATERSIC_SERVE_MAX_STEPS)",
+                steps,
+                self.inner.opts.max_steps
+            );
+            self.validate_tokens(&prompt)
+        })();
+        if let Err(e) = valid {
+            return Err(SubmitError::Rejected(format!("{e:#}")));
+        }
+        let deadline = self.effective_deadline(deadline);
+        let cancel = Arc::new(AtomicBool::new(false));
         let (tx, rx) = mpsc::channel();
         {
             let mut g = self.inner.lock_queue();
             if g.shutdown {
-                bail!("server is shutting down");
+                return Err(SubmitError::Rejected(
+                    "server is shutting down".to_string(),
+                ));
+            }
+            if g.q.len() >= self.inner.opts.queue_max {
+                self.inner.shed.fetch_add(1, Ordering::Relaxed);
+                return Err(SubmitError::Overloaded {
+                    retry_after_ms: self.inner.retry_after_ms(g.q.len()),
+                });
             }
             g.q.push_back(Pending::Gen {
                 prompt,
                 steps,
                 resp: tx,
                 submitted: Instant::now(),
+                deadline,
+                cancel: cancel.clone(),
             });
         }
         self.inner.requests.fetch_add(1, Ordering::Relaxed);
         self.inner.cv.notify_all();
-        Ok(GenHandle { rx })
+        Ok(GenHandle { rx, cancel })
     }
 
     /// Greedy continuation, blocking for the full sequence with decode
@@ -450,12 +651,23 @@ impl Server {
             decode_steps: self.inner.decode_steps.load(Ordering::Relaxed),
             decode_tokens: self.inner.decode_tokens.load(Ordering::Relaxed),
             gen_completed: self.inner.gen_completed.load(Ordering::Relaxed),
+            gen_cancelled: self.inner.gen_cancelled.load(Ordering::Relaxed),
+            shed: self.inner.shed.load(Ordering::Relaxed),
             kv_peak_bytes: self.inner.kv_peak_bytes.load(Ordering::Relaxed),
         }
     }
 
     pub fn config(&self) -> &ModelConfig {
         &self.inner.cfg
+    }
+
+    /// Overload retry hint (the `retry_after_ms` protocol field) for
+    /// sheds decided *outside* the scheduler — e.g. the front door's
+    /// connection cap — using the current queue depth and the measured
+    /// per-iteration pace.
+    pub fn retry_after_hint_ms(&self) -> u64 {
+        let depth = self.inner.lock_queue().q.len();
+        self.inner.retry_after_ms(depth)
     }
 
     pub fn opts(&self) -> &ServeOpts {
@@ -497,7 +709,48 @@ enum Admit {
     Score,
     Gen { need: usize },
     Reject { need: usize },
+    /// head is cancelled or past its deadline: drop it cleanly
+    Drop,
     Stop,
+}
+
+/// Remove cancelled and deadline-expired sequences (before admission,
+/// so the freed slots and KV bytes re-admit queued work this very
+/// iteration): cancelled sequences close silently — the client is
+/// gone — while expired ones return their partial tokens with
+/// [`GenOut::cancelled`] set.
+fn reap(
+    inner: &Inner,
+    active: &mut Vec<Active>,
+    kv_in_flight: &mut usize,
+    iteration: usize,
+) {
+    let now = Instant::now();
+    let mut i = 0;
+    while i < active.len() {
+        let dead = active[i].cancel.load(Ordering::Relaxed);
+        let late = expired(active[i].deadline, now);
+        if !(dead || late) {
+            i += 1;
+            continue;
+        }
+        let act = active.swap_remove(i);
+        *kv_in_flight -= act.kv_bytes;
+        inner.gen_cancelled.fetch_add(1, Ordering::Relaxed);
+        if dead {
+            let _ = act.resp.send(Err(anyhow!("generation cancelled")));
+        } else {
+            let _ = act.resp.send(Ok(GenOut {
+                tokens: act.toks,
+                prompt_len: act.prompt_len,
+                ttft_ms: act.ttft_ms,
+                itl_ms: act.itl_ms,
+                start_iteration: act.start_iteration,
+                done_iteration: iteration,
+                cancelled: true,
+            }));
+        }
+    }
 }
 
 fn batcher_loop(inner: &Inner) {
@@ -506,6 +759,7 @@ fn batcher_loop(inner: &Inner) {
     let mut iteration: usize = 0;
     loop {
         iteration += 1;
+        reap(inner, &mut active, &mut kv_in_flight, iteration);
         // slid windows must re-prefill this iteration; they occupy
         // prefill rows before any new admission
         let reslide_rows = active.iter().filter(|a| a.needs_reslide()).count();
@@ -542,9 +796,22 @@ fn batcher_loop(inner: &Inner) {
             // strict-FIFO admission at step granularity
             let mut rows = 0usize;
             let mut slots = active.len();
+            let now = Instant::now();
             loop {
                 let decision = match g.q.front() {
                     None => Admit::Stop,
+                    Some(Pending::Score { deadline, .. })
+                        if expired(*deadline, now) =>
+                    {
+                        Admit::Drop
+                    }
+                    Some(Pending::Gen {
+                        deadline, cancel, ..
+                    }) if cancel.load(Ordering::Relaxed)
+                        || expired(*deadline, now) =>
+                    {
+                        Admit::Drop
+                    }
                     Some(Pending::Score { .. }) => {
                         if rows < free_rows {
                             Admit::Score
@@ -603,6 +870,21 @@ fn batcher_loop(inner: &Inner) {
                             )));
                         }
                     }
+                    Admit::Drop => match g.q.pop_front() {
+                        Some(Pending::Score { resp, .. }) => {
+                            let _ = resp
+                                .send(Err(anyhow!("deadline exceeded while queued")));
+                        }
+                        Some(Pending::Gen { resp, cancel, .. }) => {
+                            inner.gen_cancelled.fetch_add(1, Ordering::Relaxed);
+                            if !cancel.load(Ordering::Relaxed) {
+                                let _ = resp.send(Err(anyhow!(
+                                    "deadline exceeded while queued"
+                                )));
+                            }
+                        }
+                        None => {}
+                    },
                 }
             }
         }
@@ -614,6 +896,7 @@ fn batcher_loop(inner: &Inner) {
         // a panicking forward must not kill the batcher; the in-flight
         // state may be mid-mutation, so drop every affected sequence
         // (their senders close, clients see an error) and start clean
+        let t_iter = Instant::now();
         let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             run_iteration(inner, &mut active, &mut kv_in_flight, iteration, picked)
         }));
@@ -625,6 +908,11 @@ fn batcher_loop(inner: &Inner) {
             active.clear();
             kv_in_flight = 0;
         }
+        // EWMA of iteration wall time, feeding retry-after estimates
+        let us = t_iter.elapsed().as_micros().min(u64::MAX as u128) as u64;
+        let prev = inner.iter_ewma_us.load(Ordering::Relaxed);
+        let next = if prev == 0 { us.max(1) } else { (prev * 7 + us) / 8 };
+        inner.iter_ewma_us.store(next, Ordering::Relaxed);
         inner.kv_peak_bytes.fetch_max(kv_in_flight, Ordering::Relaxed);
     }
 }
@@ -654,12 +942,20 @@ fn run_iteration(
     picked: Vec<Pending>,
 ) {
     let cfg = &inner.cfg;
+    if let Some(crate::util::fault::Fault::Panic) =
+        crate::util::fault::check("sched")
+    {
+        // lint:allow(no-panic-untrusted) — deliberate fault-injection
+        // site (fault-inject builds only); the batcher's catch_unwind
+        // must contain it, which rust/tests/fault.rs pins
+        panic!("injected scheduler fault (site sched)");
+    }
 
     // ---- prefill batch
     enum Row {
         Score {
             tokens: Vec<i32>,
-            resp: mpsc::Sender<ScoreOut>,
+            resp: mpsc::Sender<Result<ScoreOut>>,
         },
         NewGen {
             act: Active,
@@ -684,12 +980,16 @@ fn run_iteration(
     }
     for p in picked {
         match p {
-            Pending::Score { tokens, resp } => rows.push(Row::Score { tokens, resp }),
+            Pending::Score { tokens, resp, .. } => {
+                rows.push(Row::Score { tokens, resp })
+            }
             Pending::Gen {
                 prompt,
                 steps,
                 resp,
                 submitted,
+                deadline,
+                cancel,
             } => {
                 let t = cfg.ctx.min(prompt.len());
                 let window = prompt[prompt.len() - t..].to_vec();
@@ -716,6 +1016,8 @@ fn run_iteration(
                     itl_ms: Vec::new(),
                     start_iteration: iteration,
                     advanced_iter: 0,
+                    deadline,
+                    cancel,
                 };
                 rows.push(Row::NewGen { act, window });
             }
@@ -790,7 +1092,7 @@ fn run_iteration(
                     };
                     // a client that gave up (dropped its handle) is not
                     // an error
-                    let _ = resp.send(score);
+                    let _ = resp.send(Ok(score));
                 }
                 Row::NewGen { mut act, window } => {
                     let next =
@@ -857,6 +1159,7 @@ fn run_iteration(
                 itl_ms: act.itl_ms,
                 start_iteration: act.start_iteration,
                 done_iteration: iteration,
+                cancelled: false,
             }));
         } else {
             i += 1;
@@ -1142,22 +1445,214 @@ pub fn load_test(
     })
 }
 
+/// Result of one [`load_test_open`] run.  Open-loop offered load
+/// (fixed arrival rate, not closed-loop request-after-response), so
+/// shed fraction and *accepted*-request latency are the interesting
+/// numbers: a server at 2x capacity should shed cleanly and keep the
+/// accepted p99 bounded, not let queueing delay grow without limit.
+#[derive(Clone, Debug)]
+pub struct OpenLoopReport {
+    pub offered: usize,
+    pub accepted: usize,
+    pub shed: usize,
+    pub errors: usize,
+    pub wall_secs: f64,
+    /// fraction of offered requests shed with `overloaded`
+    pub shed_frac: f64,
+    /// accepted-request whole-latency percentiles (ms)
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+impl OpenLoopReport {
+    pub fn print(&self) {
+        println!(
+            "open-loop: {} offered over {:.2}s ({} accepted, {} shed [{:.0}%], {} errors)",
+            self.offered,
+            self.wall_secs,
+            self.accepted,
+            self.shed,
+            self.shed_frac * 100.0,
+            self.errors
+        );
+        println!(
+            "  accepted lat: p50 {:.2} ms  p99 {:.2} ms",
+            self.p50_ms, self.p99_ms
+        );
+    }
+}
+
+/// Offer score requests at a fixed rate for `duration`, regardless of
+/// how fast responses come back (open loop).  A dispatcher thread
+/// paces non-blocking [`Server::try_submit_score`] calls on a strict
+/// interval; collector threads drain the accepted handles so slow
+/// responses never delay the arrival process.  Overload sheds count
+/// toward `shed_frac` rather than blocking.
+pub fn load_test_open(
+    server: &Server,
+    offered_rps: f64,
+    duration: Duration,
+    seed: u64,
+) -> Result<OpenLoopReport> {
+    ensure!(offered_rps > 0.0, "open-loop rate must be positive");
+    let cfg = server.config();
+    let (vocab, ctx) = (cfg.vocab, cfg.ctx);
+    let interval = Duration::from_secs_f64(1.0 / offered_rps);
+    let t0 = Instant::now();
+    let (tx, rx) = mpsc::channel::<(Instant, ScoreHandle)>();
+    let rx = Mutex::new(rx);
+    let (mut offered, mut shed) = (0usize, 0usize);
+    let mut lat_err: Vec<(Vec<f64>, usize)> = std::thread::scope(|scope| {
+        let collectors: Vec<_> = (0..4)
+            .map(|_| {
+                scope.spawn(|| {
+                    let (mut lats, mut errors) = (Vec::new(), 0usize);
+                    loop {
+                        let msg = {
+                            let g = rx.lock().unwrap_or_else(PoisonError::into_inner);
+                            g.recv()
+                        };
+                        let Ok((sent, handle)) = msg else { break };
+                        match handle.wait() {
+                            Ok(_) => {
+                                lats.push(sent.elapsed().as_secs_f64() * 1e3)
+                            }
+                            Err(_) => errors += 1,
+                        }
+                    }
+                    (lats, errors)
+                })
+            })
+            .collect();
+        let mut rng = crate::util::rng::Rng::new(seed ^ 0x0BE7_0BE7);
+        let mut next = t0;
+        while t0.elapsed() < duration {
+            let now = Instant::now();
+            if now < next {
+                std::thread::sleep(next - now);
+            }
+            next += interval;
+            let len = (4 + rng.below(ctx.saturating_sub(3).max(1))).min(ctx);
+            let tokens: Vec<i32> =
+                (0..len).map(|_| rng.below(vocab) as i32).collect();
+            offered += 1;
+            match server.try_submit_score(tokens, None) {
+                Ok(h) => {
+                    let _ = tx.send((Instant::now(), h));
+                }
+                Err(SubmitError::Overloaded { .. }) => shed += 1,
+                Err(SubmitError::Rejected(_)) => shed += 1,
+            }
+        }
+        drop(tx);
+        collectors
+            .into_iter()
+            // lint:allow(no-panic-untrusted) — harness bug if a
+            // collector thread panics; re-raising is the right report
+            .map(|h| h.join().expect("open-loop collector panicked"))
+            .collect()
+    });
+    let wall_secs = t0.elapsed().as_secs_f64();
+    let errors: usize = lat_err.iter().map(|(_, e)| e).sum();
+    let mut lats: Vec<f64> =
+        lat_err.drain(..).flat_map(|(l, _)| l).collect();
+    lats.sort_by(f64::total_cmp);
+    let accepted = lats.len();
+    Ok(OpenLoopReport {
+        offered,
+        accepted,
+        shed,
+        errors,
+        wall_secs,
+        shed_frac: shed as f64 / offered.max(1) as f64,
+        p50_ms: pct(&lats, 0.5),
+        p99_ms: pct(&lats, 0.99),
+    })
+}
+
 // ---------------------------------------------------------------------
 // line-JSON front door (the TCP protocol body, kept here so the lib
 // tests cover it; main.rs only wires the sockets)
 
-/// Handle one line of the serve protocol and serialize the response.
-/// Requests:
+/// A request line accepted into the scheduler (or answered on the
+/// spot).  The synchronous front door waits the handle; the reactor
+/// polls it with `try_wait` so one slow generation never blocks the
+/// event loop.
+pub enum Submitted {
+    /// answered inline: validation/parse error, overload shed, or the
+    /// `steps: 0` prompt echo
+    Ready(String),
+    Score(ScoreHandle),
+    Gen(GenHandle),
+}
+
+/// `{"error": msg}` as a compact protocol line.
+pub fn error_line(msg: &str) -> String {
+    obj(vec![("error", Json::Str(msg.to_string()))]).to_string_compact()
+}
+
+/// The load-shed protocol line:
+/// `{"error":"overloaded","retry_after_ms":N}`.
+pub fn overloaded_line(retry_after_ms: u64) -> String {
+    obj(vec![
+        ("error", Json::Str("overloaded".to_string())),
+        ("retry_after_ms", Json::Num(retry_after_ms as f64)),
+    ])
+    .to_string_compact()
+}
+
+fn submit_error_line(e: &SubmitError) -> String {
+    match e {
+        SubmitError::Overloaded { retry_after_ms } => {
+            overloaded_line(*retry_after_ms)
+        }
+        SubmitError::Rejected(msg) => error_line(msg),
+    }
+}
+
+/// Serialize a score response for the line protocol.
+pub fn score_line(out: &ScoreOut) -> String {
+    obj(vec![
+        ("len", Json::Num(out.len as f64)),
+        ("next", Json::Num(out.argmax() as f64)),
+        ("nll", Json::Num(out.nll)),
+        ("batched_with", Json::Num(out.batched_with as f64)),
+    ])
+    .to_string_compact()
+}
+
+/// Serialize a generation response for the line protocol (adds
+/// `"cancelled": true` when a deadline cut the sequence short).
+pub fn gen_line(out: &GenOut) -> String {
+    let mut pairs = vec![
+        (
+            "tokens",
+            Json::Arr(out.tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+        ),
+        ("steps", Json::Num(out.steps() as f64)),
+        ("ttft_ms", Json::Num(out.ttft_ms)),
+    ];
+    if out.cancelled {
+        pairs.push(("cancelled", Json::Bool(true)));
+    }
+    obj(pairs).to_string_compact()
+}
+
+/// Parse one protocol line and submit it without blocking on the
+/// response.  Requests:
 ///   `{"tokens": [..]}`               → `{"len", "next", "nll", "batched_with"}`
 ///   `{"prompt": [..], "steps": N}`   → `{"tokens": [..], "steps", "ttft_ms"}`
 ///     (`"max_tokens"` is accepted as an alias for `"steps"`; both are
 ///     capped at the server's `WATERSIC_SERVE_MAX_STEPS`)
-/// Errors come back as `{"error": "..."}` lines — a malformed request
-/// never kills the connection.
-pub fn handle_request_line(server: &Server, line: &str) -> String {
-    match handle_request_inner(server, line) {
-        Ok(j) => j.to_string_compact(),
-        Err(e) => obj(vec![("error", Json::Str(format!("{e:#}")))]).to_string_compact(),
+/// Either form takes an optional `"deadline_ms"` field overriding the
+/// server-wide `WATERSIC_SERVE_DEADLINE_MS` default.  Errors come back
+/// as `{"error": "..."}` lines (overload sheds carry
+/// `"retry_after_ms"`) — a malformed request never kills the
+/// connection.
+pub fn submit_request_line(server: &Server, line: &str) -> Submitted {
+    match submit_request_inner(server, line) {
+        Ok(s) => s,
+        Err(e) => Submitted::Ready(error_line(&format!("{e:#}"))),
     }
 }
 
@@ -1175,16 +1670,21 @@ fn parse_tokens(j: &Json) -> Result<Vec<i32>> {
         .collect()
 }
 
-fn handle_request_inner(server: &Server, line: &str) -> Result<Json> {
+fn submit_request_inner(server: &Server, line: &str) -> Result<Submitted> {
     let req = Json::parse(line).context("parsing request")?;
+    let deadline = match req.get("deadline_ms") {
+        Some(v) => {
+            let ms = v.as_usize().context("bad deadline_ms")?;
+            Some(Instant::now() + Duration::from_millis(ms as u64))
+        }
+        None => None,
+    };
     if let Some(toks) = req.get("tokens") {
-        let out = server.score(parse_tokens(toks)?)?;
-        return Ok(obj(vec![
-            ("len", Json::Num(out.len as f64)),
-            ("next", Json::Num(out.argmax() as f64)),
-            ("nll", Json::Num(out.nll)),
-            ("batched_with", Json::Num(out.batched_with as f64)),
-        ]));
+        let tokens = parse_tokens(toks)?;
+        return Ok(match server.try_submit_score(tokens, deadline) {
+            Ok(h) => Submitted::Score(h),
+            Err(e) => Submitted::Ready(submit_error_line(&e)),
+        });
     }
     if let Some(prompt) = req.get("prompt") {
         let steps = match req.get("steps").or_else(|| req.get("max_tokens")) {
@@ -1193,28 +1693,42 @@ fn handle_request_inner(server: &Server, line: &str) -> Result<Json> {
         };
         let prompt = parse_tokens(prompt)?;
         if steps == 0 {
+            // validated echo; never queues
             let toks = server.generate(&prompt, 0)?;
-            return Ok(obj(vec![(
-                "tokens",
-                Json::Arr(toks.iter().map(|&t| Json::Num(t as f64)).collect()),
-            )]));
+            return Ok(Submitted::Ready(
+                obj(vec![(
+                    "tokens",
+                    Json::Arr(toks.iter().map(|&t| Json::Num(t as f64)).collect()),
+                )])
+                .to_string_compact(),
+            ));
         }
         // the per-request step cap (WATERSIC_SERVE_MAX_STEPS) is
-        // enforced by submit_generate — an unbounded request errors
+        // enforced by the submit path — an unbounded request errors
         // instead of monopolizing the batcher
-        let out = server.generate_timed(&prompt, steps)?;
-        return Ok(obj(vec![
-            (
-                "tokens",
-                Json::Arr(
-                    out.tokens.iter().map(|&t| Json::Num(t as f64)).collect(),
-                ),
-            ),
-            ("steps", Json::Num(out.steps() as f64)),
-            ("ttft_ms", Json::Num(out.ttft_ms)),
-        ]));
+        return Ok(match server.try_submit_generate(prompt, steps, deadline) {
+            Ok(h) => Submitted::Gen(h),
+            Err(e) => Submitted::Ready(submit_error_line(&e)),
+        });
     }
     bail!("request needs \"tokens\" or \"prompt\"")
+}
+
+/// Handle one protocol line synchronously (submit + block for the
+/// response) — the threaded front door and the lib tests use this;
+/// the reactor uses [`submit_request_line`] directly.
+pub fn handle_request_line(server: &Server, line: &str) -> String {
+    match submit_request_line(server, line) {
+        Submitted::Ready(s) => s,
+        Submitted::Score(h) => match h.wait() {
+            Ok(o) => score_line(&o),
+            Err(e) => error_line(&format!("{e:#}")),
+        },
+        Submitted::Gen(h) => match h.wait() {
+            Ok(o) => gen_line(&o),
+            Err(e) => error_line(&format!("{e:#}")),
+        },
+    }
 }
 
 #[cfg(test)]
@@ -1227,6 +1741,8 @@ mod tests {
             flush,
             kv_budget: 1 << 30,
             max_steps: 256,
+            queue_max: 64,
+            deadline: None,
         })
     }
 
@@ -1285,6 +1801,8 @@ mod tests {
             flush: Duration::from_micros(100),
             kv_budget: 1 << 30,
             max_steps: 4,
+            queue_max: 64,
+            deadline: None,
         });
         let err = server.generate(&[1, 2], 5).unwrap_err().to_string();
         assert!(err.contains("cap"), "unexpected error: {err}");
@@ -1303,6 +1821,8 @@ mod tests {
             flush: Duration::from_micros(100),
             kv_budget: 1,
             max_steps: 256,
+            queue_max: 64,
+            deadline: None,
         });
         let err = server.generate(&[1, 2, 3], 8).unwrap_err().to_string();
         assert!(
@@ -1427,5 +1947,149 @@ mod tests {
         assert!(rep.ttft_p50_ms > 0.0);
         let stats = server.shutdown();
         assert_eq!(stats.gen_completed, rep.gen_requests);
+    }
+
+    /// A kv_budget sized for exactly one full-window cache, so a second
+    /// multi-step generation must wait for the first one's bytes.
+    fn one_seq_budget_server(max_steps: usize) -> Server {
+        let cfg = ModelConfig::tiny_test();
+        let budget = KvCache::bytes_for(&cfg, cfg.ctx);
+        tiny_server_opts(ServeOpts {
+            batch_max: 4,
+            flush: Duration::from_micros(0),
+            kv_budget: budget,
+            max_steps,
+            queue_max: 64,
+            deadline: None,
+        })
+    }
+
+    #[test]
+    fn cancelled_generation_frees_kv_budget_for_queued_request() {
+        // the disconnect-cancels-sequence path: A holds the entire KV
+        // budget on an effectively endless generation; B queues behind
+        // it.  Cancelling A must free A's bytes at the next iteration
+        // so B admits and completes.
+        let server = one_seq_budget_server(1 << 20);
+        let a = server
+            .try_submit_generate(vec![1, 2, 3, 4], 1 << 20, None)
+            .unwrap();
+        // wait until A is decoding, so the cancel lands mid-flight
+        while server.stats().decode_steps == 0 {
+            std::thread::sleep(Duration::from_micros(50));
+        }
+        let b = server.try_submit_generate(vec![5, 6], 3, None).unwrap();
+        a.cancel();
+        let out = b.wait().expect("B must admit once A's bytes free");
+        assert_eq!(out.tokens.len(), 5);
+        assert!(!out.cancelled);
+        let err = a.wait().unwrap_err().to_string();
+        assert!(err.contains("cancel"), "unexpected A error: {err}");
+        let stats = server.stats();
+        assert_eq!(stats.gen_cancelled, 1);
+        assert_eq!(stats.gen_completed, 1);
+    }
+
+    #[test]
+    fn dropping_a_gen_handle_cancels_the_sequence() {
+        // what the front door does when a client disconnects
+        // mid-generation: the handle drops, the sequence dies at the
+        // next iteration instead of burning the batcher forever
+        let server = one_seq_budget_server(1 << 20);
+        let a = server
+            .try_submit_generate(vec![1, 2, 3], 1 << 20, None)
+            .unwrap();
+        while server.stats().decode_steps == 0 {
+            std::thread::sleep(Duration::from_micros(50));
+        }
+        drop(a);
+        while server.stats().gen_cancelled == 0 {
+            std::thread::sleep(Duration::from_micros(50));
+        }
+        // the scheduler is idle again and still serves
+        assert!(server.score(vec![1, 2]).is_ok());
+    }
+
+    #[test]
+    fn deadline_mid_flight_returns_cancelled_partial_output() {
+        let server = one_seq_budget_server(1 << 20);
+        let deadline = Some(Instant::now() + Duration::from_millis(30));
+        let h = server
+            .try_submit_generate(vec![1, 2, 3, 4], 1 << 20, deadline)
+            .unwrap();
+        let out = h.wait().expect("expired mid-flight must still respond");
+        assert!(out.cancelled, "a ~10s generation must hit a 30ms deadline");
+        assert!(out.tokens.len() >= 4, "partial output keeps the prompt");
+        assert!(out.tokens.len() < 4 + (1 << 20));
+        let line = gen_line(&out);
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.req("cancelled").unwrap(), &Json::Bool(true));
+        assert_eq!(server.stats().gen_cancelled, 1);
+    }
+
+    #[test]
+    fn deadline_expired_while_queued_errors_cleanly() {
+        let server = one_seq_budget_server(1 << 20);
+        let a = server
+            .try_submit_generate(vec![1, 2, 3], 1 << 20, None)
+            .unwrap();
+        while server.stats().decode_steps == 0 {
+            std::thread::sleep(Duration::from_micros(50));
+        }
+        // B queues behind A's KV hold and its deadline is already gone
+        let b = server
+            .try_submit_generate(vec![4, 5], 3, Some(Instant::now()))
+            .unwrap();
+        let err = b.wait().unwrap_err().to_string();
+        assert!(err.contains("deadline"), "unexpected B error: {err}");
+        a.cancel();
+    }
+
+    #[test]
+    fn full_queue_sheds_with_retry_after() {
+        let cfg = ModelConfig::tiny_test();
+        let server = tiny_server_opts(ServeOpts {
+            batch_max: 4,
+            flush: Duration::from_micros(0),
+            kv_budget: KvCache::bytes_for(&cfg, cfg.ctx),
+            max_steps: 1 << 20,
+            queue_max: 1,
+            deadline: None,
+        });
+        let a = server
+            .try_submit_generate(vec![1, 2, 3, 4], 1 << 20, None)
+            .unwrap();
+        while server.stats().decode_steps == 0 {
+            std::thread::sleep(Duration::from_micros(50));
+        }
+        // B needs KV bytes A holds → parks at the queue head (FIFO)
+        let b = server.try_submit_generate(vec![5, 6], 3, None).unwrap();
+        // the queue is at its bound: C sheds immediately
+        match server.try_submit_score(vec![7, 8], None) {
+            Err(SubmitError::Overloaded { retry_after_ms }) => {
+                assert!(retry_after_ms >= 1);
+                let line = overloaded_line(retry_after_ms);
+                let j = Json::parse(&line).unwrap();
+                assert_eq!(j.req("error").unwrap().as_str().unwrap(), "overloaded");
+                assert!(j.req("retry_after_ms").unwrap().as_usize().unwrap() >= 1);
+            }
+            Ok(_) => panic!("expected overload shed, got an accepted request"),
+            Err(e) => panic!("expected overload shed, got {e}"),
+        }
+        assert_eq!(server.stats().shed, 1);
+        a.cancel();
+        assert!(b.wait().is_ok(), "queued request must survive the shed");
+    }
+
+    #[test]
+    fn open_loop_accounts_every_offered_request() {
+        let server = tiny_server(4, Duration::from_micros(100));
+        let rep =
+            load_test_open(&server, 200.0, Duration::from_millis(100), 7).unwrap();
+        assert!(rep.offered >= 1);
+        assert_eq!(rep.accepted + rep.shed + rep.errors, rep.offered);
+        assert_eq!(rep.errors, 0);
+        assert!(rep.p50_ms <= rep.p99_ms);
+        assert!((rep.shed_frac - rep.shed as f64 / rep.offered as f64).abs() < 1e-12);
     }
 }

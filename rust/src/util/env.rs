@@ -76,6 +76,36 @@ pub static KNOBS: &[Knob] = &[
         doc: "per-request generation-step cap",
     },
     Knob {
+        name: "WATERSIC_SERVE_QUEUE",
+        default: "64",
+        doc: "bounded admission-queue depth; beyond it requests shed with `overloaded`",
+    },
+    Knob {
+        name: "WATERSIC_SERVE_DEADLINE_MS",
+        default: "0 (off)",
+        doc: "default per-request deadline; expired work is cancelled at step granularity",
+    },
+    Knob {
+        name: "WATERSIC_SERVE_MAX_CONNS",
+        default: "1024",
+        doc: "hard cap on concurrent front-door connections",
+    },
+    Knob {
+        name: "WATERSIC_SERVE_IDLE_MS",
+        default: "60000",
+        doc: "per-connection idle timeout (no request bytes, nothing in flight)",
+    },
+    Knob {
+        name: "WATERSIC_SERVE_WRITE_MS",
+        default: "10000",
+        doc: "per-connection write-stall timeout on unflushed response bytes",
+    },
+    Knob {
+        name: "WATERSIC_FAULT",
+        default: "unset",
+        doc: "fault-injection plan (fault-inject builds only; see util::fault)",
+    },
+    Knob {
         name: "WATERSIC_BENCH_DIR",
         default: ".",
         doc: "directory BENCH_*.json telemetry is written to",

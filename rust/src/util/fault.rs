@@ -1,0 +1,285 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! Compiled-in only under the `fault-inject` feature (zero cost
+//! otherwise: [`check`] is an inlined `None`).  Faults fire at **named
+//! sites** — the reactor and scheduler call `fault::check("<site>")`
+//! at each injection point — according to a [`Plan`] of rules, each
+//! with a deterministic [`Trigger`] (every hit, the n-th hit, every
+//! k-th hit, or a seeded coin flip).  The same plan + seed always
+//! yields the same fault schedule, so `rust/tests/fault.rs` can assert
+//! *bit-identical* outputs for the requests a fault does not touch.
+//!
+//! Sites wired in this tree:
+//!   `accept` — drop a connection immediately after accept
+//!   `read`   — partial (1-byte) or delayed reads on a connection
+//!   `conn`   — kill a connection mid-request (server-side disconnect)
+//!   `write`  — stall before flushing response bytes
+//!   `sched`  — panic inside a scheduler iteration (the batcher's
+//!              panic isolation must contain it)
+//!
+//! Plans come from the `WATERSIC_FAULT` engine option (ignored in
+//! non-`fault-inject` builds), or programmatically via [`install`] in
+//! tests.  Spec grammar, comma-separated:
+//!   `seed=N`                     seed for probabilistic triggers
+//!   `<site>=<fault>[@<trigger>]` one rule
+//! with `<fault>` one of `partial` | `slow:MS` | `drop` | `stall:MS` |
+//! `panic`, and `<trigger>` one of `nN` (n-th hit only) | `eK` (every
+//! k-th hit) | `pF` (probability F per hit); no trigger = every hit.
+//! Example: `WATERSIC_FAULT="seed=7,read=partial@e2,sched=panic@n1"`.
+
+use anyhow::{bail, Context as _, Result};
+
+/// What happens when a rule fires.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fault {
+    /// deliver at most one byte to this read pass
+    PartialRead,
+    /// sleep `ms` before servicing the read
+    SlowRead { ms: u64 },
+    /// drop the connection on the spot
+    Disconnect,
+    /// sleep `ms` before flushing the write
+    WriteStall { ms: u64 },
+    /// panic at the site
+    Panic,
+}
+
+/// When a rule fires, counted per site (hit counts start at 1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Trigger {
+    /// every hit
+    Always,
+    /// only the n-th hit of the site
+    Nth(u64),
+    /// every k-th hit of the site
+    Every(u64),
+    /// seeded coin flip per hit
+    Prob(f64),
+}
+
+#[derive(Clone, Debug)]
+pub struct Rule {
+    pub site: String,
+    pub fault: Fault,
+    pub trigger: Trigger,
+}
+
+/// A full fault schedule: rules plus the seed for probabilistic
+/// triggers.
+#[derive(Clone, Debug, Default)]
+pub struct Plan {
+    pub seed: u64,
+    pub rules: Vec<Rule>,
+}
+
+impl Plan {
+    /// Parse the `WATERSIC_FAULT` spec grammar (module docs).
+    pub fn parse(spec: &str) -> Result<Plan> {
+        let mut plan = Plan::default();
+        for clause in spec.split(',') {
+            let clause = clause.trim();
+            if clause.is_empty() {
+                continue;
+            }
+            let (key, val) = clause
+                .split_once('=')
+                .with_context(|| format!("fault clause {clause:?} needs '='"))?;
+            if key == "seed" {
+                plan.seed = val
+                    .parse()
+                    .with_context(|| format!("bad fault seed {val:?}"))?;
+                continue;
+            }
+            let (fault_spec, trigger) = match val.split_once('@') {
+                Some((f, t)) => (f, parse_trigger(t)?),
+                None => (val, Trigger::Always),
+            };
+            plan.rules.push(Rule {
+                site: key.to_string(),
+                fault: parse_fault(fault_spec)?,
+                trigger,
+            });
+        }
+        Ok(plan)
+    }
+}
+
+fn parse_fault(spec: &str) -> Result<Fault> {
+    let (name, arg) = match spec.split_once(':') {
+        Some((n, a)) => (n, Some(a)),
+        None => (spec, None),
+    };
+    let ms = |arg: Option<&str>| -> Result<u64> {
+        arg.with_context(|| format!("fault {name:?} needs :MS"))?
+            .parse()
+            .with_context(|| format!("bad ms in fault {spec:?}"))
+    };
+    Ok(match name {
+        "partial" => Fault::PartialRead,
+        "slow" => Fault::SlowRead { ms: ms(arg)? },
+        "drop" => Fault::Disconnect,
+        "stall" => Fault::WriteStall { ms: ms(arg)? },
+        "panic" => Fault::Panic,
+        other => bail!("unknown fault {other:?}"),
+    })
+}
+
+fn parse_trigger(spec: &str) -> Result<Trigger> {
+    let (kind, rest) = spec.split_at(spec.len().min(1));
+    Ok(match kind {
+        "n" => Trigger::Nth(
+            rest.parse()
+                .with_context(|| format!("bad trigger {spec:?}"))?,
+        ),
+        "e" => {
+            let k: u64 = rest
+                .parse()
+                .with_context(|| format!("bad trigger {spec:?}"))?;
+            if k == 0 {
+                bail!("trigger e0 would never fire");
+            }
+            Trigger::Every(k)
+        }
+        "p" => {
+            let p: f64 = rest
+                .parse()
+                .with_context(|| format!("bad trigger {spec:?}"))?;
+            if !(0.0..=1.0).contains(&p) {
+                bail!("trigger probability {p} outside [0, 1]");
+            }
+            Trigger::Prob(p)
+        }
+        _ => bail!("unknown trigger {spec:?} (want nN | eK | pF)"),
+    })
+}
+
+#[cfg(feature = "fault-inject")]
+mod active {
+    use super::{Fault, Plan, Trigger};
+    use crate::util::rng::Rng;
+    use std::collections::HashMap;
+    use std::sync::{Mutex, PoisonError};
+
+    struct State {
+        plan: Option<Plan>,
+        rng: Rng,
+        hits: HashMap<String, u64>,
+    }
+
+    impl State {
+        fn new(plan: Option<Plan>) -> State {
+            let seed = plan.as_ref().map(|p| p.seed).unwrap_or(0);
+            State {
+                plan,
+                rng: Rng::new(seed ^ 0x5EED_FA17),
+                hits: HashMap::new(),
+            }
+        }
+
+        fn from_env() -> State {
+            let plan = match crate::util::env::string("WATERSIC_FAULT") {
+                None => None,
+                Some(spec) => match Plan::parse(&spec) {
+                    Ok(p) => Some(p),
+                    Err(e) => {
+                        log::warn!("ignoring unparseable WATERSIC_FAULT: {e:#}");
+                        None
+                    }
+                },
+            };
+            State::new(plan)
+        }
+    }
+
+    static STATE: Mutex<Option<State>> = Mutex::new(None);
+
+    /// Count a hit at `site` and return the fault to inject, if any.
+    pub fn check(site: &str) -> Option<Fault> {
+        let mut g = STATE.lock().unwrap_or_else(PoisonError::into_inner);
+        let st = g.get_or_insert_with(State::from_env);
+        let State { plan, rng, hits } = st;
+        let plan = plan.as_ref()?;
+        let hit = hits.entry(site.to_string()).or_insert(0);
+        *hit += 1;
+        let count = *hit;
+        for r in &plan.rules {
+            if r.site != site {
+                continue;
+            }
+            let fire = match r.trigger {
+                Trigger::Always => true,
+                Trigger::Nth(n) => count == n,
+                Trigger::Every(k) => count % k == 0,
+                Trigger::Prob(p) => (rng.below(1_000_000) as f64) < p * 1e6,
+            };
+            if fire {
+                return Some(r.fault);
+            }
+        }
+        None
+    }
+
+    /// Replace the global plan (fresh hit counters and RNG).
+    /// `install(None)` disables injection; either way the
+    /// `WATERSIC_FAULT` env spec is no longer consulted.
+    pub fn install(plan: Option<Plan>) {
+        let mut g = STATE.lock().unwrap_or_else(PoisonError::into_inner);
+        *g = Some(State::new(plan));
+    }
+}
+
+#[cfg(feature = "fault-inject")]
+pub use active::{check, install};
+
+/// No-op without the `fault-inject` feature.
+#[cfg(not(feature = "fault-inject"))]
+#[inline(always)]
+pub fn check(_site: &str) -> Option<Fault> {
+    None
+}
+
+/// No-op without the `fault-inject` feature.
+#[cfg(not(feature = "fault-inject"))]
+pub fn install(_plan: Option<Plan>) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_parser_roundtrips() {
+        let p =
+            Plan::parse("seed=7, read=partial@e2, write=stall:5@n3, sched=panic")
+                .unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.rules.len(), 3);
+        assert_eq!(p.rules[0].site, "read");
+        assert_eq!(p.rules[0].fault, Fault::PartialRead);
+        assert_eq!(p.rules[0].trigger, Trigger::Every(2));
+        assert_eq!(p.rules[1].fault, Fault::WriteStall { ms: 5 });
+        assert_eq!(p.rules[1].trigger, Trigger::Nth(3));
+        assert_eq!(p.rules[2].fault, Fault::Panic);
+        assert_eq!(p.rules[2].trigger, Trigger::Always);
+        assert!(Plan::parse("").unwrap().rules.is_empty());
+        assert_eq!(
+            Plan::parse("conn=drop@p0.5").unwrap().rules[0].trigger,
+            Trigger::Prob(0.5)
+        );
+    }
+
+    #[test]
+    fn plan_parser_rejects_junk() {
+        for bad in [
+            "nonsense",
+            "read=explode",
+            "read=partial@x3",
+            "read=partial@e0",
+            "read=partial@p1.5",
+            "read=slow",
+            "write=stall:abc",
+            "seed=minus-one",
+        ] {
+            assert!(Plan::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+    }
+}

@@ -6,6 +6,7 @@ pub mod aliasing;
 pub mod bench;
 pub mod cli;
 pub mod env;
+pub mod fault;
 pub mod json;
 pub mod npy;
 pub mod rng;

@@ -1,0 +1,239 @@
+#![cfg(feature = "fault-inject")]
+//! Deterministic fault-injection sweeps over the live front door
+//! (`cargo test --features fault-inject --test fault`): partial and
+//! delayed reads, injected mid-request disconnects, write stalls, and a
+//! scheduler panic during batched work.  Under every fault the server
+//! must stay up, answer unaffected clients **bit-identically** to a
+//! fault-free reference, and emit only well-formed JSON errors.
+//!
+//! Own binary: [`install`] swaps a process-global fault plan, so every
+//! test serializes on [`fault_lock`] and computes its fault-free
+//! references *before* installing its plan (installation resets the
+//! per-site hit counters, keeping each schedule deterministic).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use watersic::experiments::synthetic_tiny_setup;
+use watersic::linalg::gemm::Precision;
+use watersic::model::weights::PackedWeights;
+use watersic::runtime::reactor::{self, ReactorOpts};
+use watersic::runtime::{ServeOpts, Server};
+use watersic::util::fault::{install, Plan};
+use watersic::util::json::Json;
+
+/// The fault plan is process-global state: no two tests may overlap.
+fn fault_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn plan(spec: &str) -> Option<Plan> {
+    Some(Plan::parse(spec).unwrap())
+}
+
+fn opts() -> ServeOpts {
+    ServeOpts {
+        batch_max: 4,
+        flush: Duration::from_micros(0),
+        kv_budget: 1 << 30,
+        max_steps: 1 << 20,
+        queue_max: 64,
+        deadline: None,
+    }
+}
+
+fn tiny_server() -> Arc<Server> {
+    let (cfg, teacher, _) = synthetic_tiny_setup();
+    let packed = PackedWeights::new(&cfg, teacher, Precision::from_env());
+    Arc::new(Server::start(cfg, packed, opts()))
+}
+
+fn ropts() -> ReactorOpts {
+    ReactorOpts {
+        max_conns: 16,
+        idle: Duration::from_secs(10),
+        write_stall: Duration::from_secs(10),
+    }
+}
+
+/// Run the reactor front door, hand the body its address, then stop,
+/// clear the fault plan, and assert the front door exited cleanly.
+fn with_front_door<F: FnOnce(SocketAddr, &Server)>(server: &Arc<Server>, body: F) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let ropts = ropts();
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        let door = s.spawn(|| reactor::serve(server, &listener, &ropts, &stop));
+        body(addr, server);
+        install(None);
+        stop.store(true, Ordering::Relaxed);
+        door.join().unwrap().unwrap();
+    });
+}
+
+fn connect(addr: SocketAddr) -> (TcpStream, BufReader<TcpStream>) {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let reader = BufReader::new(stream.try_clone().unwrap());
+    (stream, reader)
+}
+
+fn send_line(stream: &mut TcpStream, line: &str) {
+    stream.write_all(line.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+}
+
+/// Read one response line and parse it; panics on EOF.
+fn read_json(reader: &mut BufReader<TcpStream>) -> Json {
+    let mut line = String::new();
+    let n = reader.read_line(&mut line).unwrap();
+    assert!(n > 0, "connection closed before a response arrived");
+    Json::parse(line.trim()).unwrap()
+}
+
+/// `true` iff the peer closed the connection with no (further) data.
+fn at_eof(reader: &mut BufReader<TcpStream>) -> bool {
+    let mut line = String::new();
+    matches!(reader.read_line(&mut line), Ok(0))
+}
+
+/// Fault-free reference for a score request, via direct submission on
+/// the same server the faulty TCP path will hit.
+fn score_ref(server: &Server, toks: &[i32]) -> (usize, usize, f64) {
+    let out = server.submit(toks.to_vec()).unwrap().wait().unwrap();
+    (out.len, out.argmax(), out.nll)
+}
+
+/// Assert a TCP score response matches the reference **exactly** —
+/// `nll` is serialized with Rust's shortest-round-trip float display,
+/// so bit-identical outputs survive the protocol.
+fn assert_matches_ref(j: &Json, reference: (usize, usize, f64)) {
+    assert!(j.get("error").is_none(), "errored: {}", j.to_string_compact());
+    assert_eq!(j.req("len").unwrap().as_usize().unwrap(), reference.0);
+    assert_eq!(j.req("next").unwrap().as_f64().unwrap(), reference.1 as f64);
+    assert_eq!(j.req("nll").unwrap().as_f64().unwrap(), reference.2);
+}
+
+const REQ_A: &str = "{\"tokens\": [1, 2, 3, 4, 5]}";
+const REQ_B: &str = "{\"tokens\": [9, 8, 7]}";
+const TOKS_A: &[i32] = &[1, 2, 3, 4, 5];
+const TOKS_B: &[i32] = &[9, 8, 7];
+
+#[test]
+fn partial_reads_trickle_requests_through_intact() {
+    let _serial = fault_lock();
+    let server = tiny_server();
+    with_front_door(&server, |addr, srv| {
+        let ra = score_ref(srv, TOKS_A);
+        let rb = score_ref(srv, TOKS_B);
+        // EVERY read pass delivers at most one byte
+        install(plan("read=partial"));
+        let (mut c, mut r) = connect(addr);
+        send_line(&mut c, REQ_A);
+        assert_matches_ref(&read_json(&mut r), ra);
+        send_line(&mut c, REQ_B);
+        assert_matches_ref(&read_json(&mut r), rb);
+    });
+}
+
+#[test]
+fn slow_reads_delay_but_do_not_corrupt() {
+    let _serial = fault_lock();
+    let server = tiny_server();
+    with_front_door(&server, |addr, srv| {
+        let ra = score_ref(srv, TOKS_A);
+        install(plan("read=slow:5@e3"));
+        let (mut c, mut r) = connect(addr);
+        for _ in 0..4 {
+            send_line(&mut c, REQ_A);
+            assert_matches_ref(&read_json(&mut r), ra);
+        }
+    });
+}
+
+#[test]
+fn injected_disconnect_kills_one_conn_not_the_server() {
+    let _serial = fault_lock();
+    let server = tiny_server();
+    with_front_door(&server, |addr, srv| {
+        let rb = score_ref(srv, TOKS_B);
+        // the FIRST completed request line loses its connection
+        install(plan("conn=drop@n1"));
+        let (mut a, mut ra) = connect(addr);
+        send_line(&mut a, REQ_A);
+        assert!(at_eof(&mut ra), "faulted connection must die silently");
+        // an unaffected client gets bit-identical service
+        let (mut b, mut rbuf) = connect(addr);
+        send_line(&mut b, REQ_B);
+        assert_matches_ref(&read_json(&mut rbuf), rb);
+    });
+}
+
+#[test]
+fn dropped_connections_at_accept_do_not_wedge_the_listener() {
+    let _serial = fault_lock();
+    let server = tiny_server();
+    with_front_door(&server, |addr, srv| {
+        let ra = score_ref(srv, TOKS_A);
+        // the first accepted connection is dropped on the floor
+        install(plan("accept=drop@n1"));
+        let (_dead, mut rdead) = connect(addr);
+        assert!(at_eof(&mut rdead), "sacrificial connection must close");
+        let (mut c, mut r) = connect(addr);
+        send_line(&mut c, REQ_A);
+        assert_matches_ref(&read_json(&mut r), ra);
+    });
+}
+
+#[test]
+fn write_stalls_delay_responses_without_losing_them() {
+    let _serial = fault_lock();
+    let server = tiny_server();
+    with_front_door(&server, |addr, srv| {
+        let ra = score_ref(srv, TOKS_A);
+        let rb = score_ref(srv, TOKS_B);
+        // every second flush stalls 50 ms — well under the write-stall
+        // timeout, so responses arrive late but intact and in order
+        install(plan("write=stall:50@e2"));
+        let (mut c, mut r) = connect(addr);
+        c.write_all(REQ_A.as_bytes()).unwrap();
+        c.write_all(b"\n").unwrap();
+        c.write_all(REQ_B.as_bytes()).unwrap();
+        c.write_all(b"\n").unwrap();
+        assert_matches_ref(&read_json(&mut r), ra);
+        assert_matches_ref(&read_json(&mut r), rb);
+    });
+}
+
+#[test]
+fn scheduler_panic_is_contained_to_its_iteration() {
+    let _serial = fault_lock();
+    let server = tiny_server();
+    with_front_door(&server, |addr, srv| {
+        let ra = score_ref(srv, TOKS_A);
+        let rb = score_ref(srv, TOKS_B);
+        // the SECOND worked scheduler iteration panics mid-decode path;
+        // the batcher's catch_unwind must contain it
+        install(plan("sched=panic@n2"));
+        let (mut c, mut r) = connect(addr);
+        // iteration 1: fine
+        send_line(&mut c, REQ_A);
+        assert_matches_ref(&read_json(&mut r), ra);
+        // iteration 2: its batch dies, but as a well-formed JSON error
+        send_line(&mut c, REQ_B);
+        let j = read_json(&mut r);
+        assert!(j.get("error").is_some(), "expected an error response");
+        assert!(!j.req("error").unwrap().as_str().unwrap().is_empty());
+        // iteration 3: the server recovered, bit-identical service
+        send_line(&mut c, REQ_B);
+        assert_matches_ref(&read_json(&mut r), rb);
+        assert!(srv.stats().requests >= 3);
+    });
+}

@@ -1,0 +1,316 @@
+//! Front-door integration tests over real TCP sockets: the event-driven
+//! reactor and the threaded fallback must speak the same line-JSON
+//! protocol, enforce the connection cap and idle/write timeouts, shed
+//! overload with a well-formed `retry_after_ms` hint, cancel work whose
+//! client disconnected (freeing its KV bytes for queued requests),
+//! honor per-request deadlines over the wire, and drain cleanly on
+//! shutdown.
+//!
+//! Own binary: each test runs a live server + front-door thread pair
+//! over `127.0.0.1:0` sockets.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use watersic::experiments::synthetic_tiny_setup;
+use watersic::linalg::gemm::Precision;
+use watersic::model::transformer::KvCache;
+use watersic::model::weights::PackedWeights;
+use watersic::model::ModelConfig;
+use watersic::runtime::reactor::{self, ReactorOpts};
+use watersic::runtime::{ServeOpts, Server};
+use watersic::util::json::Json;
+
+/// Deterministic, env-independent scheduler limits.  `max_steps` is
+/// huge so tests can park a generation "forever" and cancel it.
+fn base_opts() -> ServeOpts {
+    ServeOpts {
+        batch_max: 4,
+        flush: Duration::from_micros(0),
+        kv_budget: 1 << 30,
+        max_steps: 1 << 20,
+        queue_max: 64,
+        deadline: None,
+    }
+}
+
+/// An unquantized tiny-model server (zero artifacts, random weights —
+/// the same setup the CLI `serve --model tiny` path uses).
+fn tiny_server(opts: ServeOpts) -> Arc<Server> {
+    let (cfg, teacher, _) = synthetic_tiny_setup();
+    let packed = PackedWeights::new(&cfg, teacher, Precision::from_env());
+    Arc::new(Server::start(cfg, packed, opts))
+}
+
+fn ropts(max_conns: usize, idle_ms: u64, write_ms: u64) -> ReactorOpts {
+    ReactorOpts {
+        max_conns,
+        idle: Duration::from_millis(idle_ms),
+        write_stall: Duration::from_millis(write_ms),
+    }
+}
+
+/// Run a front door over `127.0.0.1:0`, hand the client body its
+/// address (plus the server and stop flag), then stop and assert the
+/// front door exits cleanly.
+fn with_front_door<F>(server: &Arc<Server>, ropts: ReactorOpts, threaded: bool, body: F)
+where
+    F: FnOnce(SocketAddr, &Server, &AtomicBool),
+{
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        let door = s.spawn(|| {
+            if threaded {
+                reactor::serve_threaded(server, &listener, &ropts, &stop)
+            } else {
+                reactor::serve(server, &listener, &ropts, &stop)
+            }
+        });
+        body(addr, server, &stop);
+        stop.store(true, Ordering::Relaxed);
+        door.join().unwrap().unwrap();
+    });
+}
+
+fn connect(addr: SocketAddr) -> (TcpStream, BufReader<TcpStream>) {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(30)))
+        .unwrap();
+    let reader = BufReader::new(stream.try_clone().unwrap());
+    (stream, reader)
+}
+
+fn send_line(stream: &mut TcpStream, line: &str) {
+    stream.write_all(line.as_bytes()).unwrap();
+    stream.write_all(b"\n").unwrap();
+}
+
+/// Read one response line and parse it; panics on EOF.
+fn read_json(reader: &mut BufReader<TcpStream>) -> Json {
+    let mut line = String::new();
+    let n = reader.read_line(&mut line).unwrap();
+    assert!(n > 0, "connection closed before a response arrived");
+    Json::parse(line.trim()).unwrap()
+}
+
+/// `true` iff the peer closed the connection (clean EOF).
+fn at_eof(reader: &mut BufReader<TcpStream>) -> bool {
+    let mut line = String::new();
+    matches!(reader.read_line(&mut line), Ok(0))
+}
+
+fn spin_until(what: &str, f: impl Fn() -> bool) {
+    let t0 = Instant::now();
+    while !f() {
+        assert!(t0.elapsed() < Duration::from_secs(30), "timed out: {what}");
+        std::thread::sleep(Duration::from_micros(200));
+    }
+}
+
+#[test]
+fn reactor_roundtrip_pipelining_and_malformed_lines() {
+    let server = tiny_server(base_opts());
+    with_front_door(&server, ropts(16, 10_000, 10_000), false, |addr, _, _| {
+        let (mut c, mut r) = connect(addr);
+
+        // score
+        send_line(&mut c, "{\"tokens\": [1, 2, 3]}");
+        let j = read_json(&mut r);
+        assert_eq!(j.req("len").unwrap().as_usize().unwrap(), 3);
+        assert!(j.req("nll").unwrap().as_f64().unwrap().is_finite());
+        assert!(j.get("error").is_none());
+
+        // generation
+        send_line(&mut c, "{\"prompt\": [1, 2], \"steps\": 3}");
+        let j = read_json(&mut r);
+        assert_eq!(j.req("steps").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.req("tokens").unwrap().as_arr().unwrap().len(), 5);
+
+        // steps: 0 echoes the prompt without touching the scheduler
+        send_line(&mut c, "{\"prompt\": [7], \"steps\": 0}");
+        let j = read_json(&mut r);
+        assert_eq!(j.req("tokens").unwrap().as_arr().unwrap().len(), 1);
+
+        // malformed JSON answers an error on the same connection
+        send_line(&mut c, "this is not json");
+        let j = read_json(&mut r);
+        assert!(j.get("error").is_some());
+
+        // pipelining: two requests in one write, two responses in order
+        c.write_all(b"{\"tokens\": [5, 6]}\n{\"tokens\": [1, 2, 3, 4]}\n")
+            .unwrap();
+        let first = read_json(&mut r);
+        let second = read_json(&mut r);
+        assert_eq!(first.req("len").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(second.req("len").unwrap().as_usize().unwrap(), 4);
+
+        // a non-utf-8 line gets a JSON error, then the conn closes
+        let (mut c2, mut r2) = connect(addr);
+        c2.write_all(&[b'{', 0xff, 0xfe, b'\n']).unwrap();
+        let j = read_json(&mut r2);
+        assert!(j.req("error").unwrap().as_str().unwrap().contains("utf-8"));
+        assert!(at_eof(&mut r2));
+
+        // an unbounded line (no newline) is rejected, then the conn
+        // closes — one client cannot grow server memory forever
+        // sized to cross the limit only near the write's end, so the
+        // kernel buffers absorb the tail and the write never races the
+        // server's close
+        let (mut c3, mut r3) = connect(addr);
+        let blob = vec![b'x'; (1 << 20) + 4096];
+        c3.write_all(&blob).unwrap();
+        let j = read_json(&mut r3);
+        assert!(j.req("error").unwrap().as_str().unwrap().contains("too long"));
+        assert!(at_eof(&mut r3));
+    });
+}
+
+#[test]
+fn reactor_connection_cap_sheds_with_retry_after() {
+    let server = tiny_server(base_opts());
+    with_front_door(&server, ropts(1, 10_000, 10_000), false, |addr, _, _| {
+        // occupy the single slot (roundtrip proves it is registered)
+        let (mut a, mut ra) = connect(addr);
+        send_line(&mut a, "{\"tokens\": [1, 2]}");
+        assert_eq!(read_json(&mut ra).req("len").unwrap().as_usize().unwrap(), 2);
+
+        // the next connection is shed immediately with a retry hint
+        let (_b, mut rb) = connect(addr);
+        let j = read_json(&mut rb);
+        assert_eq!(j.req("error").unwrap().as_str().unwrap(), "overloaded");
+        assert!(j.req("retry_after_ms").unwrap().as_usize().unwrap() >= 1);
+        assert!(at_eof(&mut rb));
+
+        // the admitted connection is unaffected
+        send_line(&mut a, "{\"tokens\": [3, 4, 5]}");
+        assert_eq!(read_json(&mut ra).req("len").unwrap().as_usize().unwrap(), 3);
+    });
+}
+
+#[test]
+fn reactor_idle_timeout_reaps_slow_loris() {
+    let server = tiny_server(base_opts());
+    with_front_door(&server, ropts(16, 150, 10_000), false, |addr, _, _| {
+        // half a request, then silence: the idle timeout must close it
+        let (mut c, mut r) = connect(addr);
+        c.write_all(b"{\"tok").unwrap();
+        let t0 = Instant::now();
+        assert!(at_eof(&mut r), "slow-loris connection was never reaped");
+        assert!(t0.elapsed() < Duration::from_secs(10));
+
+        // and the server still serves fresh connections afterwards
+        let (mut c2, mut r2) = connect(addr);
+        send_line(&mut c2, "{\"tokens\": [1, 2]}");
+        assert_eq!(read_json(&mut r2).req("len").unwrap().as_usize().unwrap(), 2);
+    });
+}
+
+#[test]
+fn reactor_disconnect_mid_generation_frees_kv_for_queued_request() {
+    // budget for exactly one full-context sequence: B cannot start
+    // until A's KV bytes are freed
+    let cfg = ModelConfig::tiny_test();
+    let mut opts = base_opts();
+    opts.kv_budget = KvCache::bytes_for(&cfg, cfg.ctx);
+    let server = tiny_server(opts);
+    with_front_door(&server, ropts(16, 10_000, 10_000), false, |addr, srv, _| {
+        // A: a generation that would run ~forever, holding the budget
+        let (mut a, _ra) = connect(addr);
+        send_line(&mut a, "{\"prompt\": [1, 2], \"steps\": 1048576}");
+        spin_until("A decoding", || srv.stats().decode_steps > 0);
+
+        // B: queued behind A (strict FIFO + no KV headroom)
+        let (mut b, mut rb) = connect(addr);
+        send_line(&mut b, "{\"prompt\": [3, 4], \"steps\": 3}");
+
+        // A's client vanishes: the reactor drops the handle, the
+        // scheduler cancels the sequence and frees its KV bytes…
+        drop(a);
+        drop(_ra);
+
+        // …which must let B run to completion
+        let j = read_json(&mut rb);
+        assert!(j.get("error").is_none(), "B errored: {}", j.to_string_compact());
+        assert_eq!(j.req("steps").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(j.req("tokens").unwrap().as_arr().unwrap().len(), 5);
+        spin_until("A cancelled", || srv.stats().gen_cancelled == 1);
+    });
+}
+
+#[test]
+fn reactor_deadline_over_the_wire_cancels_mid_flight() {
+    let server = tiny_server(base_opts());
+    with_front_door(&server, ropts(16, 10_000, 10_000), false, |addr, _, _| {
+        let (mut c, mut r) = connect(addr);
+        send_line(&mut c, "{\"prompt\": [1, 2], \"steps\": 1048576, \"deadline_ms\": 50}");
+        let j = read_json(&mut r);
+        assert!(j.get("error").is_none(), "deadline: {}", j.to_string_compact());
+        assert!(j.get("cancelled").is_some(), "missing cancelled marker");
+        // partial output: prompt + at least one decoded token, far
+        // fewer than requested
+        let toks = j.req("tokens").unwrap().as_arr().unwrap().len();
+        assert!(toks >= 2 && toks < 1048576, "got {toks} tokens");
+    });
+}
+
+#[test]
+fn reactor_graceful_shutdown_drains_in_flight_generation() {
+    let server = tiny_server(base_opts());
+    with_front_door(&server, ropts(16, 10_000, 10_000), false, |addr, srv, stop| {
+        let (mut c, mut r) = connect(addr);
+        send_line(&mut c, "{\"prompt\": [1, 2], \"steps\": 4000}");
+        spin_until("decoding", || srv.stats().decode_steps > 0);
+
+        // shutdown lands mid-generation: the response must still
+        // arrive complete, then the server closes the connection
+        stop.store(true, Ordering::Relaxed);
+        let j = read_json(&mut r);
+        assert!(j.get("error").is_none(), "drain: {}", j.to_string_compact());
+        assert_eq!(j.req("steps").unwrap().as_usize().unwrap(), 4000);
+        assert_eq!(j.req("tokens").unwrap().as_arr().unwrap().len(), 4002);
+        assert!(at_eof(&mut r));
+    });
+}
+
+#[test]
+fn threaded_fallback_roundtrip_and_idle_timeout() {
+    let server = tiny_server(base_opts());
+    with_front_door(&server, ropts(16, 300, 2_000), true, |addr, _, _| {
+        // protocol parity with the reactor path
+        let (mut c, mut r) = connect(addr);
+        send_line(&mut c, "{\"tokens\": [1, 2, 3]}");
+        assert_eq!(read_json(&mut r).req("len").unwrap().as_usize().unwrap(), 3);
+        send_line(&mut c, "{\"prompt\": [1], \"steps\": 2}");
+        assert_eq!(read_json(&mut r).req("steps").unwrap().as_usize().unwrap(), 2);
+
+        // connect-and-sleep client: `set_read_timeout` must reap it
+        // instead of pinning a handler thread forever
+        let (_idle, mut ridle) = connect(addr);
+        let t0 = Instant::now();
+        assert!(at_eof(&mut ridle), "idle connection was never reaped");
+        assert!(t0.elapsed() >= Duration::from_millis(200), "reaped too early");
+        assert!(t0.elapsed() < Duration::from_secs(10));
+    });
+}
+
+#[test]
+fn threaded_fallback_sheds_over_connection_cap() {
+    let server = tiny_server(base_opts());
+    with_front_door(&server, ropts(1, 500, 2_000), true, |addr, _, _| {
+        let (mut a, mut ra) = connect(addr);
+        send_line(&mut a, "{\"tokens\": [1, 2]}");
+        assert_eq!(read_json(&mut ra).req("len").unwrap().as_usize().unwrap(), 2);
+
+        let (_b, mut rb) = connect(addr);
+        let j = read_json(&mut rb);
+        assert_eq!(j.req("error").unwrap().as_str().unwrap(), "overloaded");
+        assert!(j.req("retry_after_ms").unwrap().as_usize().unwrap() >= 1);
+        assert!(at_eof(&mut rb));
+    });
+}

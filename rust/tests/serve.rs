@@ -34,6 +34,8 @@ fn opts(batch_max: usize, flush: Duration) -> ServeOpts {
         flush,
         kv_budget: 1 << 30,
         max_steps: 256,
+        queue_max: 64,
+        deadline: None,
     }
 }
 
@@ -372,6 +374,8 @@ fn kv_budget_admission_is_clean_and_serializes() {
             flush: Duration::from_millis(200),
             kv_budget: one_seq,
             max_steps: 256,
+            queue_max: 64,
+            deadline: None,
         },
     );
     // a request whose cache could never fit errors cleanly (no OOM,

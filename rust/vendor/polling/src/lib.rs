@@ -1,0 +1,526 @@
+//! Offline stand-in for the `polling` crate: a minimal readiness
+//! poller over **epoll** on Linux and **kqueue** on macOS, covering
+//! exactly the surface the `watersic` reactor front door uses.
+//!
+//! Divergence from the real crate (kept deliberately small so the
+//! path dependency can be re-pointed at crates.io when network access
+//! exists): registrations here are **level-triggered and persistent**
+//! — an interest stays armed until `modify`/`delete` — where the real
+//! crate defaults to oneshot.  The reactor only re-arms on interest
+//! *changes*, which is exactly the level-triggered contract.
+//!
+//! No `libc` crate exists offline; the raw syscall surface is declared
+//! directly (std already links the platform C library).
+
+use std::io;
+use std::time::Duration;
+
+#[cfg(unix)]
+pub type RawFd = std::os::fd::RawFd;
+#[cfg(not(unix))]
+pub type RawFd = i64;
+
+/// A readiness interest or readiness report for one registered fd,
+/// identified by the caller-chosen `key`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Event {
+    pub key: usize,
+    pub readable: bool,
+    pub writable: bool,
+}
+
+impl Event {
+    pub fn readable(key: usize) -> Event {
+        Event {
+            key,
+            readable: true,
+            writable: false,
+        }
+    }
+
+    pub fn writable(key: usize) -> Event {
+        Event {
+            key,
+            readable: false,
+            writable: true,
+        }
+    }
+
+    pub fn all(key: usize) -> Event {
+        Event {
+            key,
+            readable: true,
+            writable: true,
+        }
+    }
+
+    pub fn none(key: usize) -> Event {
+        Event {
+            key,
+            readable: false,
+            writable: false,
+        }
+    }
+}
+
+/// The OS readiness queue.  `add`/`modify`/`delete` manage registered
+/// fds; `wait` blocks up to `timeout` and appends ready [`Event`]s.
+pub struct Poller {
+    sys: sys::Poller,
+}
+
+impl Poller {
+    pub fn new() -> io::Result<Poller> {
+        Ok(Poller {
+            sys: sys::Poller::new()?,
+        })
+    }
+
+    /// Register `fd` with the given interest (level-triggered).
+    pub fn add(&self, fd: RawFd, interest: Event) -> io::Result<()> {
+        self.sys.add(fd, interest)
+    }
+
+    /// Replace the interest of an already-registered `fd`.
+    pub fn modify(&self, fd: RawFd, interest: Event) -> io::Result<()> {
+        self.sys.modify(fd, interest)
+    }
+
+    /// Deregister `fd` entirely.
+    pub fn delete(&self, fd: RawFd) -> io::Result<()> {
+        self.sys.delete(fd)
+    }
+
+    /// Block until at least one registered fd is ready or `timeout`
+    /// expires (`None` blocks indefinitely), appending readiness
+    /// events and returning how many were appended.
+    pub fn wait(
+        &self,
+        events: &mut Vec<Event>,
+        timeout: Option<Duration>,
+    ) -> io::Result<usize> {
+        self.sys.wait(events, timeout)
+    }
+}
+
+#[cfg(target_os = "linux")]
+mod sys {
+    use super::{Event, RawFd};
+    use std::io;
+    use std::time::Duration;
+
+    // Matching the kernel ABI: packed on x86-64 only (the kernel
+    // struct is __attribute__((packed)) there; aarch64 and others use
+    // natural alignment).
+    #[repr(C)]
+    #[cfg_attr(target_arch = "x86_64", repr(packed))]
+    #[derive(Clone, Copy)]
+    struct EpollEvent {
+        events: u32,
+        data: u64,
+    }
+
+    extern "C" {
+        fn epoll_create1(flags: i32) -> i32;
+        fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+        fn epoll_wait(
+            epfd: i32,
+            events: *mut EpollEvent,
+            maxevents: i32,
+            timeout: i32,
+        ) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+
+    const EPOLL_CLOEXEC: i32 = 0o2000000;
+    const EPOLL_CTL_ADD: i32 = 1;
+    const EPOLL_CTL_DEL: i32 = 2;
+    const EPOLL_CTL_MOD: i32 = 3;
+    const EPOLLIN: u32 = 0x001;
+    const EPOLLOUT: u32 = 0x004;
+    const EPOLLERR: u32 = 0x008;
+    const EPOLLHUP: u32 = 0x010;
+    const EPOLLRDHUP: u32 = 0x2000;
+
+    const WAIT_CAP: usize = 64;
+
+    pub struct Poller {
+        epfd: i32,
+    }
+
+    fn mask(interest: Event) -> u32 {
+        let mut m = EPOLLRDHUP;
+        if interest.readable {
+            m |= EPOLLIN;
+        }
+        if interest.writable {
+            m |= EPOLLOUT;
+        }
+        m
+    }
+
+    fn ctl(epfd: i32, op: i32, fd: RawFd, interest: Option<Event>) -> io::Result<()> {
+        let mut ev = EpollEvent {
+            events: interest.map(mask).unwrap_or(0),
+            data: interest.map(|e| e.key as u64).unwrap_or(0),
+        };
+        // SAFETY: epfd is a live epoll fd owned by this Poller and ev
+        // outlives the call; the kernel copies it before returning.
+        let rc = unsafe { epoll_ctl(epfd, op, fd as i32, &mut ev) };
+        if rc < 0 {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(())
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            // SAFETY: plain syscall, no pointers.
+            let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+            if epfd < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Poller { epfd })
+        }
+
+        pub fn add(&self, fd: RawFd, interest: Event) -> io::Result<()> {
+            ctl(self.epfd, EPOLL_CTL_ADD, fd, Some(interest))
+        }
+
+        pub fn modify(&self, fd: RawFd, interest: Event) -> io::Result<()> {
+            ctl(self.epfd, EPOLL_CTL_MOD, fd, Some(interest))
+        }
+
+        pub fn delete(&self, fd: RawFd) -> io::Result<()> {
+            ctl(self.epfd, EPOLL_CTL_DEL, fd, None)
+        }
+
+        pub fn wait(
+            &self,
+            events: &mut Vec<Event>,
+            timeout: Option<Duration>,
+        ) -> io::Result<usize> {
+            let ms: i32 = match timeout {
+                None => -1,
+                Some(d) => {
+                    // round up so a 100µs timeout still sleeps
+                    d.as_micros().div_ceil(1000).min(i32::MAX as u128) as i32
+                }
+            };
+            let mut buf = [EpollEvent { events: 0, data: 0 }; WAIT_CAP];
+            // SAFETY: buf is a live stack array of WAIT_CAP entries
+            // and the kernel writes at most WAIT_CAP of them.
+            let n = unsafe {
+                epoll_wait(self.epfd, buf.as_mut_ptr(), WAIT_CAP as i32, ms)
+            };
+            if n < 0 {
+                let err = io::Error::last_os_error();
+                if err.kind() == io::ErrorKind::Interrupted {
+                    return Ok(0);
+                }
+                return Err(err);
+            }
+            for e in buf.iter().take(n as usize) {
+                // copy out of the (possibly packed) struct by value —
+                // no references into unaligned fields
+                let bits = { e.events };
+                let data = { e.data };
+                events.push(Event {
+                    key: data as usize,
+                    readable: bits & (EPOLLIN | EPOLLHUP | EPOLLERR | EPOLLRDHUP)
+                        != 0,
+                    writable: bits & (EPOLLOUT | EPOLLERR | EPOLLHUP) != 0,
+                });
+            }
+            Ok(n as usize)
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            // SAFETY: epfd is owned by this Poller and not used again.
+            unsafe {
+                close(self.epfd);
+            }
+        }
+    }
+}
+
+#[cfg(target_os = "macos")]
+mod sys {
+    use super::{Event, RawFd};
+    use std::io;
+    use std::time::Duration;
+
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    struct KEvent {
+        ident: usize,
+        filter: i16,
+        flags: u16,
+        fflags: u32,
+        data: isize,
+        udata: usize,
+    }
+
+    #[repr(C)]
+    struct Timespec {
+        tv_sec: isize,
+        tv_nsec: isize,
+    }
+
+    extern "C" {
+        fn kqueue() -> i32;
+        fn kevent(
+            kq: i32,
+            changelist: *const KEvent,
+            nchanges: i32,
+            eventlist: *mut KEvent,
+            nevents: i32,
+            timeout: *const Timespec,
+        ) -> i32;
+        fn close(fd: i32) -> i32;
+    }
+
+    const EVFILT_READ: i16 = -1;
+    const EVFILT_WRITE: i16 = -2;
+    const EV_ADD: u16 = 0x1;
+    const EV_DELETE: u16 = 0x2;
+    const EV_ERROR: u16 = 0x4000;
+
+    const WAIT_CAP: usize = 64;
+
+    pub struct Poller {
+        kq: i32,
+    }
+
+    fn change(kq: i32, fd: RawFd, filter: i16, flags: u16, key: usize) -> i32 {
+        let ev = KEvent {
+            ident: fd as usize,
+            filter,
+            flags,
+            fflags: 0,
+            data: 0,
+            udata: key,
+        };
+        // SAFETY: kq is a live kqueue fd owned by this Poller; ev
+        // outlives the call and the kernel copies it.
+        unsafe { kevent(kq, &ev, 1, std::ptr::null_mut(), 0, std::ptr::null()) }
+    }
+
+    fn apply(kq: i32, fd: RawFd, interest: Event) -> io::Result<()> {
+        for (filter, on) in [
+            (EVFILT_READ, interest.readable),
+            (EVFILT_WRITE, interest.writable),
+        ] {
+            if on {
+                if change(kq, fd, filter, EV_ADD, interest.key) < 0 {
+                    return Err(io::Error::last_os_error());
+                }
+            } else {
+                // removing a filter that was never armed is fine
+                let _ = change(kq, fd, filter, EV_DELETE, interest.key);
+            }
+        }
+        Ok(())
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            // SAFETY: plain syscall, no pointers.
+            let kq = unsafe { kqueue() };
+            if kq < 0 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(Poller { kq })
+        }
+
+        pub fn add(&self, fd: RawFd, interest: Event) -> io::Result<()> {
+            apply(self.kq, fd, interest)
+        }
+
+        pub fn modify(&self, fd: RawFd, interest: Event) -> io::Result<()> {
+            apply(self.kq, fd, interest)
+        }
+
+        pub fn delete(&self, fd: RawFd) -> io::Result<()> {
+            let _ = change(self.kq, fd, EVFILT_READ, EV_DELETE, 0);
+            let _ = change(self.kq, fd, EVFILT_WRITE, EV_DELETE, 0);
+            Ok(())
+        }
+
+        pub fn wait(
+            &self,
+            events: &mut Vec<Event>,
+            timeout: Option<Duration>,
+        ) -> io::Result<usize> {
+            let ts;
+            let ts_ptr = match timeout {
+                None => std::ptr::null(),
+                Some(d) => {
+                    ts = Timespec {
+                        tv_sec: d.as_secs().min(isize::MAX as u64) as isize,
+                        tv_nsec: d.subsec_nanos() as isize,
+                    };
+                    &ts as *const Timespec
+                }
+            };
+            let mut buf = [KEvent {
+                ident: 0,
+                filter: 0,
+                flags: 0,
+                fflags: 0,
+                data: 0,
+                udata: 0,
+            }; WAIT_CAP];
+            // SAFETY: buf is a live stack array of WAIT_CAP entries
+            // and the kernel writes at most WAIT_CAP of them; ts (when
+            // non-null) outlives the call.
+            let n = unsafe {
+                kevent(
+                    self.kq,
+                    std::ptr::null(),
+                    0,
+                    buf.as_mut_ptr(),
+                    WAIT_CAP as i32,
+                    ts_ptr,
+                )
+            };
+            if n < 0 {
+                let err = io::Error::last_os_error();
+                if err.kind() == io::ErrorKind::Interrupted {
+                    return Ok(0);
+                }
+                return Err(err);
+            }
+            let mut pushed = 0;
+            for e in buf.iter().take(n as usize) {
+                if e.flags & EV_ERROR != 0 {
+                    continue;
+                }
+                events.push(Event {
+                    key: e.udata,
+                    readable: e.filter == EVFILT_READ,
+                    writable: e.filter == EVFILT_WRITE,
+                });
+                pushed += 1;
+            }
+            Ok(pushed)
+        }
+    }
+
+    impl Drop for Poller {
+        fn drop(&mut self) {
+            // SAFETY: kq is owned by this Poller and not used again.
+            unsafe {
+                close(self.kq);
+            }
+        }
+    }
+}
+
+#[cfg(not(any(target_os = "linux", target_os = "macos")))]
+mod sys {
+    use super::{Event, RawFd};
+    use std::io;
+    use std::time::Duration;
+
+    /// Unsupported platform: construction fails cleanly and the caller
+    /// (the watersic front door) falls back to its threaded path.
+    pub struct Poller {
+        _private: (),
+    }
+
+    impl Poller {
+        pub fn new() -> io::Result<Poller> {
+            Err(io::Error::new(
+                io::ErrorKind::Unsupported,
+                "polling shim: no epoll/kqueue backend on this platform",
+            ))
+        }
+
+        pub fn add(&self, _fd: RawFd, _interest: Event) -> io::Result<()> {
+            unreachable!("Poller cannot be constructed on this platform")
+        }
+
+        pub fn modify(&self, _fd: RawFd, _interest: Event) -> io::Result<()> {
+            unreachable!("Poller cannot be constructed on this platform")
+        }
+
+        pub fn delete(&self, _fd: RawFd) -> io::Result<()> {
+            unreachable!("Poller cannot be constructed on this platform")
+        }
+
+        pub fn wait(
+            &self,
+            _events: &mut Vec<Event>,
+            _timeout: Option<Duration>,
+        ) -> io::Result<usize> {
+            unreachable!("Poller cannot be constructed on this platform")
+        }
+    }
+}
+
+#[cfg(all(test, any(target_os = "linux", target_os = "macos")))]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::fd::AsRawFd;
+
+    #[test]
+    fn tcp_readiness_roundtrip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let poller = Poller::new().unwrap();
+        poller.add(listener.as_raw_fd(), Event::readable(7)).unwrap();
+
+        let mut client = TcpStream::connect(addr).unwrap();
+        let mut events = Vec::new();
+        poller
+            .wait(&mut events, Some(Duration::from_secs(5)))
+            .unwrap();
+        assert!(events.iter().any(|e| e.key == 7 && e.readable));
+
+        let (mut peer, _) = listener.accept().unwrap();
+        peer.set_nonblocking(true).unwrap();
+        poller.add(peer.as_raw_fd(), Event::readable(9)).unwrap();
+        client.write_all(b"hi").unwrap();
+        events.clear();
+        poller
+            .wait(&mut events, Some(Duration::from_secs(5)))
+            .unwrap();
+        assert!(events.iter().any(|e| e.key == 9 && e.readable));
+        let mut buf = [0u8; 2];
+        peer.read_exact(&mut buf).unwrap();
+        assert_eq!(&buf, b"hi");
+
+        // write-interest on an idle socket reports writable
+        poller.modify(peer.as_raw_fd(), Event::all(9)).unwrap();
+        events.clear();
+        poller
+            .wait(&mut events, Some(Duration::from_secs(5)))
+            .unwrap();
+        assert!(events.iter().any(|e| e.key == 9 && e.writable));
+
+        poller.delete(peer.as_raw_fd()).unwrap();
+        events.clear();
+        let n = poller
+            .wait(&mut events, Some(Duration::from_millis(20)))
+            .unwrap();
+        assert_eq!(n, events.len());
+        assert!(events.iter().all(|e| e.key != 9));
+    }
+
+    #[test]
+    fn timeout_expires_with_no_events() {
+        let poller = Poller::new().unwrap();
+        let mut events = Vec::new();
+        let t = std::time::Instant::now();
+        let n = poller
+            .wait(&mut events, Some(Duration::from_millis(10)))
+            .unwrap();
+        assert_eq!(n, 0);
+        assert!(t.elapsed() >= Duration::from_millis(5));
+    }
+}

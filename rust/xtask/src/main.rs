@@ -19,8 +19,10 @@
 //!   a NaN landmine; `total_cmp` is the house idiom.
 //! - `env-registry` — every `WATERSIC_*` engine option is read through
 //!   `util::env` (no direct `env::var("WATERSIC_..")` elsewhere),
-//!   every such string literal names a registered knob, and every
-//!   registered knob is documented in `main.rs` USAGE.
+//!   every such string literal names a registered knob, every
+//!   registered knob is documented in `main.rs` USAGE, and every knob
+//!   the top-level `README.md` ops section mentions is registered (so
+//!   the ops docs cannot drift from the code).
 //! - `lint-allow` — suppression comments must name a known rule and
 //!   carry an em-dash reason (exact syntax in the README).
 //!
@@ -47,6 +49,7 @@ const KNOWN_RULES: &[&str] = &[
 /// Files whose inputs arrive from outside the process (wire bytes,
 /// container files) — the no-panic rule applies here.
 const UNTRUSTED: &[&str] = &[
+    "rust/src/runtime/reactor.rs",
     "rust/src/runtime/server.rs",
     "rust/src/coordinator/container.rs",
     "rust/src/entropy/rans.rs",
@@ -60,6 +63,7 @@ const SKIP_DIRS: &[&str] = &["vendor", "fixtures"];
 
 const ENV_REGISTRY_FILE: &str = "rust/src/util/env.rs";
 const USAGE_FILE: &str = "rust/src/main.rs";
+const README_FILE: &str = "README.md";
 
 #[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
 struct Finding {
@@ -151,6 +155,20 @@ fn run_lint(root: &Path) -> Result<(Vec<Finding>, usize), String> {
             });
         }
     }
+    // the ops README may only name registered knobs — stale or
+    // misspelled docs fail the lint instead of drifting silently
+    if let Ok(readme) = fs::read_to_string(root.join(README_FILE)) {
+        for (line, name) in doc_knob_mentions(&readme) {
+            if !knobs.iter().any(|k| k == &name) {
+                findings.push(Finding {
+                    file: README_FILE.to_string(),
+                    line,
+                    rule: "env-registry",
+                    msg: format!("{name} is not registered in util::env::KNOBS"),
+                });
+            }
+        }
+    }
     findings.sort();
     Ok((findings, files.len()))
 }
@@ -180,6 +198,27 @@ fn walk(dir: &Path, out: &mut Vec<PathBuf>) {
             out.push(p);
         }
     }
+}
+
+/// `WATERSIC_*` knob names mentioned in a prose document, with their
+/// 1-based line numbers.  A bare `WATERSIC_` prefix (as in the phrase
+/// "any `WATERSIC_*` knob") is not a mention.
+fn doc_knob_mentions(text: &str) -> Vec<(usize, String)> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let mut rest = line;
+        while let Some(p) = rest.find("WATERSIC_") {
+            let tail = &rest[p..];
+            let end = tail
+                .find(|c: char| !(c.is_ascii_uppercase() || c.is_ascii_digit() || c == '_'))
+                .unwrap_or(tail.len());
+            if end > "WATERSIC_".len() {
+                out.push((i + 1, tail[..end].to_string()));
+            }
+            rest = &tail[end..];
+        }
+    }
+    out
 }
 
 /// Knob names registered in `util::env::KNOBS` (`name: "..."` fields).
@@ -890,6 +929,18 @@ mod tests {
         assert_eq!(n, 2, "direct read + unregistered literal: {f:?}");
         let f = lint("rust/src/x.rs", include_str!("../fixtures/pass_env.rs"));
         assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn readme_knob_mentions_tokenize_and_skip_bare_prefixes() {
+        let text = "set `WATERSIC_SERVE_QUEUE=64` (or any `WATERSIC_*` knob)\n\
+                    WATERSIC_FAULT='read=partial'";
+        let got = doc_knob_mentions(text);
+        let want = vec![
+            (1, "WATERSIC_SERVE_QUEUE".to_string()),
+            (2, "WATERSIC_FAULT".to_string()),
+        ];
+        assert_eq!(got, want);
     }
 
     #[test]
