@@ -20,7 +20,7 @@
 //! all-at-once transient footprint.
 
 use std::collections::BTreeMap;
-use std::sync::{mpsc, Condvar, Mutex};
+use std::sync::mpsc;
 
 use anyhow::{Context, Result};
 
@@ -40,6 +40,7 @@ use crate::quant::watersic::{
 };
 use crate::quant::{LayerQuant, LayerStats, QuantOpts};
 use crate::runtime::{Engine, Precision};
+use crate::util::sync::{classes, TrackedCondvar, TrackedMutex};
 
 /// The two front-ends a rate-targeted WaterSIC matrix needs: the full
 /// system and (when subsampling is in effect) the secant's row
@@ -279,8 +280,8 @@ thread_local! {
 /// pairs exist, including the one being drained.  Tracks a high-water
 /// mark for the report/bench telemetry.
 struct PrepareWindow {
-    state: Mutex<WindowState>,
-    cv: Condvar,
+    state: TrackedMutex<WindowState>,
+    cv: TrackedCondvar,
 }
 
 struct WindowState {
@@ -293,22 +294,25 @@ struct WindowState {
 impl PrepareWindow {
     fn new(window: usize) -> PrepareWindow {
         PrepareWindow {
-            state: Mutex::new(WindowState {
-                available: window.max(1),
-                in_use: 0,
-                peak: 0,
-                closed: false,
-            }),
-            cv: Condvar::new(),
+            state: TrackedMutex::new(
+                &classes::PIPELINE_WINDOW,
+                WindowState {
+                    available: window.max(1),
+                    in_use: 0,
+                    peak: 0,
+                    closed: false,
+                },
+            ),
+            cv: TrackedCondvar::new(),
         }
     }
 
     /// Block until a slot frees up; `false` once the window is closed
     /// (the consumer bailed out — stop producing).
     fn acquire(&self) -> bool {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock();
         while st.available == 0 && !st.closed {
-            st = self.cv.wait(st).unwrap();
+            st = self.cv.wait(st);
         }
         if st.closed {
             return false;
@@ -320,7 +324,7 @@ impl PrepareWindow {
     }
 
     fn release(&self) {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock();
         st.available += 1;
         st.in_use -= 1;
         self.cv.notify_all();
@@ -330,12 +334,12 @@ impl PrepareWindow {
     /// [`CloseOnDrop`] on every consumer exit (return, error, panic);
     /// without it the scoped join would deadlock.
     fn close(&self) {
-        self.state.lock().unwrap().closed = true;
+        self.state.lock().closed = true;
         self.cv.notify_all();
     }
 
     fn peak(&self) -> usize {
-        self.state.lock().unwrap().peak
+        self.state.lock().peak
     }
 }
 

@@ -4,11 +4,11 @@
 
 use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::Mutex;
 
 use anyhow::{bail, Context, Result};
 
 use crate::linalg::gemm::Precision;
+use crate::util::sync::{classes, TrackedMutex};
 use crate::linalg::Mat;
 use crate::model::weights::Weights;
 use crate::model::ModelConfig;
@@ -17,7 +17,7 @@ use crate::quant::zsic::ZsicOut;
 pub struct Engine {
     client: xla::PjRtClient,
     artifacts_dir: PathBuf,
-    cache: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+    cache: TrackedMutex<HashMap<String, xla::PjRtLoadedExecutable>>,
 }
 
 /// Identifies one exported ZSIC graph.
@@ -42,7 +42,7 @@ impl Engine {
         Ok(Engine {
             client,
             artifacts_dir,
-            cache: Mutex::new(HashMap::new()),
+            cache: TrackedMutex::new(&classes::ENGINE_CACHE, HashMap::new()),
         })
     }
 
@@ -69,7 +69,7 @@ impl Engine {
 
     /// Compile (or fetch from cache) an HLO-text artifact.
     fn load(&self, name: &str) -> Result<()> {
-        let mut cache = self.cache.lock().unwrap();
+        let mut cache = self.cache.lock();
         if cache.contains_key(name) {
             return Ok(());
         }
@@ -92,7 +92,7 @@ impl Engine {
 
     fn execute(&self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
         self.load(name)?;
-        let cache = self.cache.lock().unwrap();
+        let cache = self.cache.lock();
         let exe = cache.get(name).unwrap();
         let result = exe
             .execute::<xla::Literal>(args)

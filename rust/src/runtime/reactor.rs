@@ -297,6 +297,8 @@ fn accept_ready(
 }
 
 /// One best-effort `overloaded` line on a blocking socket, then close.
+// lint:allow(reactor-blocking) — deliberate bounded blocking write (250 ms
+// timeout caps it) so the shed message actually reaches the peer
 fn shed_connection(server: &Server, mut stream: TcpStream) {
     let _ = stream.set_nonblocking(false);
     let _ = stream.set_write_timeout(Some(Duration::from_millis(250)));
@@ -312,6 +314,7 @@ fn read_ready(server: &Server, c: &mut Conn) -> bool {
     let mut per_pass = usize::MAX;
     match fault::check("read") {
         Some(Fault::Disconnect) => return false,
+        // lint:allow(reactor-blocking) — injected fault: the delay is the point
         Some(Fault::SlowRead { ms }) => std::thread::sleep(Duration::from_millis(ms)),
         Some(Fault::PartialRead) => per_pass = 1,
         _ => {}
@@ -410,6 +413,7 @@ fn flush(c: &mut Conn, write_stall: Duration) -> bool {
         return true;
     }
     if let Some(Fault::WriteStall { ms }) = fault::check("write") {
+        // lint:allow(reactor-blocking) — injected fault: the stall is the point
         std::thread::sleep(Duration::from_millis(ms));
     }
     loop {
@@ -442,6 +446,8 @@ fn flush(c: &mut Conn, write_stall: Duration) -> bool {
 /// same connection cap, with `set_read_timeout` bounding idle peers
 /// and `set_write_timeout` bounding stalled ones.  Used when no
 /// readiness backend exists (and directly testable on any platform).
+// lint:allow(reactor-blocking) — thread-per-connection fallback: each
+// connection owns a thread, so blocking socket I/O is the design
 pub fn serve_threaded(
     server: &Arc<Server>,
     listener: &TcpListener,
@@ -496,6 +502,8 @@ pub fn serve_threaded(
 }
 
 /// Blocking per-connection loop of the threaded fallback.
+// lint:allow(reactor-blocking) — threaded fallback: this loop runs on a
+// dedicated per-connection thread, never on the event loop
 fn handle_connection(
     server: &Server,
     stream: TcpStream,

@@ -44,7 +44,9 @@
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
-use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard, PoisonError};
+use std::sync::{mpsc, Arc};
+
+use crate::util::sync::{classes, TrackedCondvar, TrackedMutex, TrackedMutexGuard};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, ensure, Context as _, Result};
@@ -315,8 +317,8 @@ struct Inner {
     cfg: ModelConfig,
     model: PackedWeights,
     opts: ServeOpts,
-    queue: Mutex<Queue>,
-    cv: Condvar,
+    queue: TrackedMutex<Queue>,
+    cv: TrackedCondvar,
     requests: AtomicUsize,
     batches: AtomicUsize,
     tokens: AtomicUsize,
@@ -334,13 +336,14 @@ struct Inner {
 }
 
 impl Inner {
-    /// Lock the admission queue, recovering from poisoning: every
-    /// critical section is a single push/pop/flag update, so a peer
-    /// that panicked while holding the lock still left the queue
-    /// consistent — cascading its panic into every client thread
-    /// would only bury the original failure.
-    fn lock_queue(&self) -> MutexGuard<'_, Queue> {
-        self.queue.lock().unwrap_or_else(PoisonError::into_inner)
+    /// Lock the admission queue.  Poison recovery now lives in the
+    /// tracked wrapper (the tree-wide policy, `util::sync` module
+    /// docs): every critical section here is a single push/pop/flag
+    /// update, so a peer that panicked while holding the lock still
+    /// left the queue consistent — cascading its panic into every
+    /// client thread would only bury the original failure.
+    fn lock_queue(&self) -> TrackedMutexGuard<'_, Queue> {
+        self.queue.lock()
     }
 
     /// Retry-after estimate for a shed request: roughly how long a
@@ -440,11 +443,14 @@ impl Server {
             cfg,
             model,
             opts,
-            queue: Mutex::new(Queue {
-                q: VecDeque::new(),
-                shutdown: false,
-            }),
-            cv: Condvar::new(),
+            queue: TrackedMutex::new(
+                &classes::SERVE_QUEUE,
+                Queue {
+                    q: VecDeque::new(),
+                    shutdown: false,
+                },
+            ),
+            cv: TrackedCondvar::new(),
             requests: AtomicUsize::new(0),
             batches: AtomicUsize::new(0),
             tokens: AtomicUsize::new(0),
@@ -775,7 +781,7 @@ fn batcher_loop(inner: &Inner) {
                     if g.shutdown {
                         return;
                     }
-                    g = inner.cv.wait(g).unwrap_or_else(PoisonError::into_inner);
+                    g = inner.cv.wait(g);
                 }
                 // deadline-based coalescing: hold the partial batch
                 // open a short window for co-arriving requests (only
@@ -786,10 +792,7 @@ fn batcher_loop(inner: &Inner) {
                     if now >= deadline {
                         break;
                     }
-                    let (ng, _) = inner
-                        .cv
-                        .wait_timeout(g, deadline - now)
-                        .unwrap_or_else(PoisonError::into_inner);
+                    let (ng, _) = inner.cv.wait_timeout(g, deadline - now);
                     g = ng;
                 }
             }
@@ -1500,7 +1503,7 @@ pub fn load_test_open(
     let interval = Duration::from_secs_f64(1.0 / offered_rps);
     let t0 = Instant::now();
     let (tx, rx) = mpsc::channel::<(Instant, ScoreHandle)>();
-    let rx = Mutex::new(rx);
+    let rx = TrackedMutex::new(&classes::SERVE_LOADTEST, rx);
     let (mut offered, mut shed) = (0usize, 0usize);
     let mut lat_err: Vec<(Vec<f64>, usize)> = std::thread::scope(|scope| {
         let collectors: Vec<_> = (0..4)
@@ -1509,7 +1512,7 @@ pub fn load_test_open(
                     let (mut lats, mut errors) = (Vec::new(), 0usize);
                     loop {
                         let msg = {
-                            let g = rx.lock().unwrap_or_else(PoisonError::into_inner);
+                            let g = rx.lock();
                             g.recv()
                         };
                         let Ok((sent, handle)) = msg else { break };

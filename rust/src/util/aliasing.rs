@@ -60,9 +60,9 @@ pub use imp::{job_end, next_job_id, task_scope, TaskScope};
 
 #[cfg(feature = "check-aliasing")]
 mod imp {
+    use crate::util::sync::{classes, TrackedMutex};
     use std::cell::Cell;
     use std::sync::atomic::{AtomicU64, Ordering};
-    use std::sync::Mutex;
 
     thread_local! {
         /// (job id, task id) of the pool chunk running on this thread.
@@ -90,7 +90,12 @@ mod imp {
     }
 
     /// Claim tables of every in-flight job (a handful at a time).
-    static TABLES: Mutex<Vec<JobClaims>> = Mutex::new(Vec::new());
+    /// Tracked: the overlap panic below fires while this lock is held,
+    /// and the wrapper's poison recovery keeps that panic from
+    /// cascading `PoisonError` into every *unrelated* later job (see
+    /// `overlap_panic_does_not_poison_unrelated_jobs`).
+    static TABLES: TrackedMutex<Vec<JobClaims>> =
+        TrackedMutex::new(&classes::ALIASING_TABLES, Vec::new());
 
     static NEXT_JOB: AtomicU64 = AtomicU64::new(1);
 
@@ -121,7 +126,7 @@ mod imp {
     /// Drop a completed job's table (called by the submitter once every
     /// chunk is accounted for).
     pub fn job_end(job: u64) {
-        let mut g = TABLES.lock().unwrap();
+        let mut g = TABLES.lock();
         g.retain(|t| t.job != job);
     }
 
@@ -184,7 +189,7 @@ mod imp {
             len,
             stride,
         };
-        let mut g = TABLES.lock().unwrap();
+        let mut g = TABLES.lock();
         let table = match g.iter_mut().find(|t| t.job == job) {
             Some(t) => t,
             None => {
@@ -294,6 +299,41 @@ mod tests {
             "unexpected panic payload: {msg:?}"
         );
         buf[0] = 0; // keep the buffer alive past the job
+    }
+
+    /// Regression (poison-policy bugfix): the overlap panic fires while
+    /// the global claim table is locked, which used to poison it — and
+    /// every *unrelated* later job then died with `PoisonError` instead
+    /// of its own result (it even made the payload assertion above
+    /// scheduling-dependent: a submitter that drained both chunks hit
+    /// the poisoned lock in `job_end` before it could re-raise the real
+    /// panic).  The tracked wrapper's single poison policy recovers, so
+    /// a clean job after a caught overlap must pass untouched.
+    #[test]
+    fn overlap_panic_does_not_poison_unrelated_jobs() {
+        if default_threads() < 2 {
+            return; // no pool workers: parallel_ranges degenerates to serial
+        }
+        let mut buf = vec![0u8; 1024];
+        let addr = buf.as_mut_ptr() as usize;
+        let caught = std::panic::catch_unwind(|| {
+            parallel_ranges(2, 2, |range| {
+                for _ in range {
+                    super::claim(addr as *const u8, 40);
+                }
+            });
+        });
+        assert!(caught.is_err(), "overlap must panic");
+        // an unrelated job with disjoint claims must still pass
+        let touched = AtomicUsize::new(0);
+        parallel_ranges(4, 2, |range| {
+            for i in range {
+                super::claim((addr + 64 + i * 8) as *const u8, 8);
+                touched.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert_eq!(touched.load(Ordering::SeqCst), 4);
+        buf[0] = 0; // keep the buffer alive past both jobs
     }
 
     /// The disjoint protocol every kernel follows must sail through.

@@ -16,6 +16,9 @@
 //!   `write`  — stall before flushing response bytes
 //!   `sched`  — panic inside a scheduler iteration (the batcher's
 //!              panic isolation must contain it)
+//!   `lock`   — delay (`slow:MS`/`stall:MS`) or fail (`panic`) a
+//!              tracked-lock acquisition (`util::sync`), widening
+//!              race windows for the fault suite
 //!
 //! Plans come from the `WATERSIC_FAULT` engine option (ignored in
 //! non-`fault-inject` builds), or programmatically via [`install`] in
@@ -157,8 +160,8 @@ fn parse_trigger(spec: &str) -> Result<Trigger> {
 mod active {
     use super::{Fault, Plan, Trigger};
     use crate::util::rng::Rng;
+    use crate::util::sync::{classes, TrackedMutex};
     use std::collections::HashMap;
-    use std::sync::{Mutex, PoisonError};
 
     struct State {
         plan: Option<Plan>,
@@ -191,11 +194,14 @@ mod active {
         }
     }
 
-    static STATE: Mutex<Option<State>> = Mutex::new(None);
+    // A tracked lock like everything else: the `lock` fault site's
+    // re-entrancy guard (util::sync::fault_point) keeps this from
+    // recursing into itself.
+    static STATE: TrackedMutex<Option<State>> = TrackedMutex::new(&classes::FAULT_STATE, None);
 
     /// Count a hit at `site` and return the fault to inject, if any.
     pub fn check(site: &str) -> Option<Fault> {
-        let mut g = STATE.lock().unwrap_or_else(PoisonError::into_inner);
+        let mut g = STATE.lock();
         let st = g.get_or_insert_with(State::from_env);
         let State { plan, rng, hits } = st;
         let plan = plan.as_ref()?;
@@ -223,7 +229,7 @@ mod active {
     /// `install(None)` disables injection; either way the
     /// `WATERSIC_FAULT` env spec is no longer consulted.
     pub fn install(plan: Option<Plan>) {
-        let mut g = STATE.lock().unwrap_or_else(PoisonError::into_inner);
+        let mut g = STATE.lock();
         *g = Some(State::new(plan));
     }
 }

@@ -10,6 +10,7 @@ pub mod fault;
 pub mod json;
 pub mod npy;
 pub mod rng;
+pub mod sync;
 pub mod threadpool;
 
 /// Round half-to-even for f64 — matches `numpy.round` / `jnp.round` and

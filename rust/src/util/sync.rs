@@ -1,0 +1,662 @@
+//! Tracked lock primitives: the only sanctioned home of `std::sync`
+//! locks in this tree (the `watersic-lint` rule `no-raw-sync` bans
+//! them everywhere else).
+//!
+//! In release builds [`TrackedMutex`] / [`TrackedRwLock`] /
+//! [`TrackedCondvar`] are zero-cost transparent wrappers: `lock()`
+//! inlines to the std acquisition plus the poison policy below, and
+//! the per-lock [`LockClass`] pointer is the only extra state.
+//!
+//! Under `--features check-locks` every acquisition is checked against
+//! a lockdep-style rank discipline:
+//!
+//! - each lock registers a [`LockClass`] with a numeric rank (the
+//!   repo-wide table lives in [`classes`]); nesting must go strictly
+//!   *upward* in rank,
+//! - a per-thread stack of held locks catches inversions at the
+//!   acquisition that would close a cycle, panicking with **both**
+//!   acquisition sites,
+//! - every observed (outer, inner) nesting is recorded into a
+//!   process-global acquisition-order graph ([`order_edges`]), so one
+//!   checked run documents the discipline actually exercised,
+//! - a condvar wait may hold only its own guard plus strictly
+//!   lower-rank (outer) locks: a same-or-higher-rank lock held across
+//!   a wait would deadlock the waker that needs it, and panics
+//!   *before* blocking.
+//!
+//! # Poison policy
+//!
+//! All wrappers recover from poisoning via
+//! `unwrap_or_else(PoisonError::into_inner)` — the one documented
+//! policy for the whole tree.  Every guarded region here either keeps
+//! its invariants at each intermediate panic point (counters, queues,
+//! claim tables), or the poisoning panic *is* the primary failure
+//! being reported (a checker firing, an injected fault).  Cascading
+//! `PoisonError` panics into unrelated threads buries that primary
+//! failure — the pre-tracked claim table did exactly that (see
+//! `overlap_panic_does_not_poison_unrelated_jobs` in
+//! `util/aliasing.rs`).
+//!
+//! # Fault injection
+//!
+//! With `--features fault-inject`, acquisitions pass through the
+//! `lock` fault site before touching the lock: `slow:MS` / `stall:MS`
+//! delay the acquisition (widening race windows for the fault suite)
+//! and `panic` fails it.  See `util/fault.rs` for the plan grammar.
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError, RwLock};
+use std::sync::{RwLockReadGuard, RwLockWriteGuard, WaitTimeoutResult};
+use std::time::Duration;
+
+/// A named lock class with a total-order rank.  Within one thread,
+/// locks must be acquired in strictly increasing rank order.
+pub struct LockClass {
+    name: &'static str,
+    rank: u32,
+}
+
+impl LockClass {
+    pub const fn new(name: &'static str, rank: u32) -> LockClass {
+        LockClass { name, rank }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    pub fn rank(&self) -> u32 {
+        self.rank
+    }
+}
+
+/// The repo-wide rank table.  Outer (coarse) locks rank low, leaf
+/// locks rank high; acquisition must go low → high.  Gaps are left so
+/// new classes slot in without renumbering.
+pub mod classes {
+    use super::LockClass;
+
+    /// Test-binary environment serialization (`env_lock()` in the
+    /// integration suites).  Rank 0: held around whole test bodies,
+    /// outside every runtime lock.
+    pub static TEST_ENV: LockClass = LockClass::new("test.env", 0);
+    /// Server request queue + scheduler state (`runtime/server.rs`).
+    pub static SERVE_QUEUE: LockClass = LockClass::new("serve.queue", 10);
+    /// Bounded prepare-window state (`coordinator/pipeline.rs`).
+    pub static PIPELINE_WINDOW: LockClass = LockClass::new("pipeline.window", 20);
+    /// PJRT executable cache (`runtime/engine.rs`).
+    pub static ENGINE_CACHE: LockClass = LockClass::new("engine.cache", 30);
+    /// Open-loop load-test collector handoff (`runtime/server.rs`).
+    pub static SERVE_LOADTEST: LockClass = LockClass::new("serve.loadtest", 40);
+    /// Thread-pool shared job queue (`util/threadpool.rs`).
+    pub static POOL_QUEUE: LockClass = LockClass::new("pool.queue", 50);
+    /// Per-job completion latch (`util/threadpool.rs`).
+    pub static POOL_JOB: LockClass = LockClass::new("pool.job", 60);
+    /// Per-job panic-payload slot (`util/threadpool.rs`).
+    pub static POOL_PANIC: LockClass = LockClass::new("pool.panic", 65);
+    /// Installed fault plan (`util/fault.rs`).  Near-leaf: the `lock`
+    /// fault site consults it from inside other acquisitions.
+    pub static FAULT_STATE: LockClass = LockClass::new("fault.state", 80);
+    /// check-aliasing claim tables (`util/aliasing.rs`).  Leaf:
+    /// claims happen under arbitrary job locks.
+    pub static ALIASING_TABLES: LockClass = LockClass::new("aliasing.tables", 90);
+}
+
+/// A mutex registered under a [`LockClass`].
+pub struct TrackedMutex<T: ?Sized> {
+    class: &'static LockClass,
+    inner: Mutex<T>,
+}
+
+impl<T> TrackedMutex<T> {
+    /// `const`, so tracked locks can live in `static` items (the
+    /// installed fault plan, the test-env locks).
+    pub const fn new(class: &'static LockClass, value: T) -> TrackedMutex<T> {
+        TrackedMutex {
+            class,
+            inner: Mutex::new(value),
+        }
+    }
+}
+
+impl<T: ?Sized> TrackedMutex<T> {
+    pub fn class(&self) -> &'static LockClass {
+        self.class
+    }
+
+    /// Acquire.  Recovers from poisoning (module docs), passes the
+    /// `lock` fault site, and under `check-locks` enforces the rank
+    /// discipline *before* blocking on the inner lock.
+    #[inline]
+    #[track_caller]
+    pub fn lock(&self) -> TrackedMutexGuard<'_, T> {
+        fault_point();
+        #[cfg(feature = "check-locks")]
+        let held = check::acquired(self.class);
+        TrackedMutexGuard {
+            #[cfg(feature = "check-locks")]
+            held,
+            guard: self.inner.lock().unwrap_or_else(PoisonError::into_inner),
+        }
+    }
+}
+
+/// RAII guard for [`TrackedMutex`].  Under `check-locks` it also owns
+/// the held-stack entry, which unregisters itself on drop (guards may
+/// drop in any order, not just LIFO).
+pub struct TrackedMutexGuard<'a, T: ?Sized> {
+    #[cfg(feature = "check-locks")]
+    held: check::Held,
+    guard: MutexGuard<'a, T>,
+}
+
+impl<T: ?Sized> std::ops::Deref for TrackedMutexGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.guard
+    }
+}
+
+impl<T: ?Sized> std::ops::DerefMut for TrackedMutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.guard
+    }
+}
+
+/// A condvar that pairs with [`TrackedMutex`] guards.
+pub struct TrackedCondvar {
+    inner: Condvar,
+}
+
+impl TrackedCondvar {
+    pub const fn new() -> TrackedCondvar {
+        TrackedCondvar {
+            inner: Condvar::new(),
+        }
+    }
+
+    /// Wait, re-acquiring the same tracked lock on wake.  Under
+    /// `check-locks`, panics *before* blocking if any held lock other
+    /// than the guard's own has rank >= the guard's class: the waker
+    /// that should wake us may need that inner lock.
+    #[track_caller]
+    pub fn wait<'a, T: ?Sized>(&self, guard: TrackedMutexGuard<'a, T>) -> TrackedMutexGuard<'a, T> {
+        #[cfg(feature = "check-locks")]
+        check::waiting(&guard.held);
+        #[cfg(feature = "check-locks")]
+        let held = guard.held;
+        let inner = self
+            .inner
+            .wait(guard.guard)
+            .unwrap_or_else(PoisonError::into_inner);
+        TrackedMutexGuard {
+            #[cfg(feature = "check-locks")]
+            held,
+            guard: inner,
+        }
+    }
+
+    /// [`Self::wait`] with a timeout; identical checking.
+    #[track_caller]
+    pub fn wait_timeout<'a, T: ?Sized>(
+        &self,
+        guard: TrackedMutexGuard<'a, T>,
+        dur: Duration,
+    ) -> (TrackedMutexGuard<'a, T>, WaitTimeoutResult) {
+        #[cfg(feature = "check-locks")]
+        check::waiting(&guard.held);
+        #[cfg(feature = "check-locks")]
+        let held = guard.held;
+        let (inner, timeout) = self
+            .inner
+            .wait_timeout(guard.guard, dur)
+            .unwrap_or_else(PoisonError::into_inner);
+        (
+            TrackedMutexGuard {
+                #[cfg(feature = "check-locks")]
+                held,
+                guard: inner,
+            },
+            timeout,
+        )
+    }
+
+    pub fn notify_one(&self) {
+        self.inner.notify_one();
+    }
+
+    pub fn notify_all(&self) {
+        self.inner.notify_all();
+    }
+}
+
+/// An rwlock registered under a [`LockClass`].  Both `read()` and
+/// `write()` follow the same strict rank order — in particular a
+/// re-entrant `read()` of one class panics under `check-locks`,
+/// because a writer queued between the two reads deadlocks both.
+pub struct TrackedRwLock<T: ?Sized> {
+    class: &'static LockClass,
+    inner: RwLock<T>,
+}
+
+impl<T> TrackedRwLock<T> {
+    pub const fn new(class: &'static LockClass, value: T) -> TrackedRwLock<T> {
+        TrackedRwLock {
+            class,
+            inner: RwLock::new(value),
+        }
+    }
+}
+
+impl<T: ?Sized> TrackedRwLock<T> {
+    pub fn class(&self) -> &'static LockClass {
+        self.class
+    }
+
+    #[inline]
+    #[track_caller]
+    pub fn read(&self) -> TrackedReadGuard<'_, T> {
+        fault_point();
+        #[cfg(feature = "check-locks")]
+        let held = check::acquired(self.class);
+        TrackedReadGuard {
+            #[cfg(feature = "check-locks")]
+            _held: held,
+            guard: self.inner.read().unwrap_or_else(PoisonError::into_inner),
+        }
+    }
+
+    #[inline]
+    #[track_caller]
+    pub fn write(&self) -> TrackedWriteGuard<'_, T> {
+        fault_point();
+        #[cfg(feature = "check-locks")]
+        let held = check::acquired(self.class);
+        TrackedWriteGuard {
+            #[cfg(feature = "check-locks")]
+            _held: held,
+            guard: self.inner.write().unwrap_or_else(PoisonError::into_inner),
+        }
+    }
+}
+
+/// Shared-access RAII guard for [`TrackedRwLock`].
+pub struct TrackedReadGuard<'a, T: ?Sized> {
+    #[cfg(feature = "check-locks")]
+    _held: check::Held,
+    guard: RwLockReadGuard<'a, T>,
+}
+
+impl<T: ?Sized> std::ops::Deref for TrackedReadGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.guard
+    }
+}
+
+/// Exclusive-access RAII guard for [`TrackedRwLock`].
+pub struct TrackedWriteGuard<'a, T: ?Sized> {
+    #[cfg(feature = "check-locks")]
+    _held: check::Held,
+    guard: RwLockWriteGuard<'a, T>,
+}
+
+impl<T: ?Sized> std::ops::Deref for TrackedWriteGuard<'_, T> {
+    type Target = T;
+    fn deref(&self) -> &T {
+        &self.guard
+    }
+}
+
+impl<T: ?Sized> std::ops::DerefMut for TrackedWriteGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        &mut self.guard
+    }
+}
+
+/// The `lock` fault site (`--features fault-inject`): delays or fails
+/// an acquisition *before* the lock is touched.  The installed plan
+/// itself lives behind a `TrackedMutex`, so a thread-local
+/// re-entrancy flag keeps the hook from recursing into itself.
+#[cfg(feature = "fault-inject")]
+#[inline]
+fn fault_point() {
+    use std::cell::Cell;
+    thread_local! {
+        static IN_HOOK: Cell<bool> = const { Cell::new(false) };
+    }
+    let entered = IN_HOOK.with(|flag| {
+        if flag.get() {
+            false
+        } else {
+            flag.set(true);
+            true
+        }
+    });
+    if !entered {
+        return;
+    }
+    let fault = crate::util::fault::check("lock");
+    IN_HOOK.with(|flag| flag.set(false));
+    match fault {
+        Some(crate::util::fault::Fault::SlowRead { ms })
+        | Some(crate::util::fault::Fault::WriteStall { ms }) => {
+            std::thread::sleep(Duration::from_millis(ms));
+        }
+        Some(crate::util::fault::Fault::Panic) => {
+            panic!("injected fault: lock acquisition");
+        }
+        _ => {}
+    }
+}
+
+#[cfg(not(feature = "fault-inject"))]
+#[inline(always)]
+fn fault_point() {}
+
+#[cfg(feature = "check-locks")]
+mod check {
+    use super::LockClass;
+    use std::cell::RefCell;
+    use std::panic::Location;
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::{Mutex, PoisonError};
+
+    struct HeldEntry {
+        class: &'static LockClass,
+        site: &'static Location<'static>,
+        token: u64,
+    }
+
+    thread_local! {
+        static HELD: RefCell<Vec<HeldEntry>> = const { RefCell::new(Vec::new()) };
+    }
+
+    /// Tokens make guard drops order-independent: entries are removed
+    /// by identity, not by popping, so guards may drop out of
+    /// acquisition order.
+    static NEXT_TOKEN: AtomicU64 = AtomicU64::new(1);
+
+    struct Edge {
+        outer: &'static LockClass,
+        inner: &'static LockClass,
+        outer_site: &'static Location<'static>,
+        inner_site: &'static Location<'static>,
+    }
+
+    /// Process-global acquisition-order graph.  A raw `Mutex` over a
+    /// const-initializable `Vec` (edge counts are tiny): the
+    /// checker's own state cannot go through the tracked wrappers it
+    /// implements.
+    static EDGES: Mutex<Vec<Edge>> = Mutex::new(Vec::new());
+
+    /// Held-stack entry owned by a guard; unregisters itself on drop.
+    pub(super) struct Held {
+        token: u64,
+    }
+
+    impl Drop for Held {
+        fn drop(&mut self) {
+            let token = self.token;
+            HELD.with(|held| {
+                let mut held = held.borrow_mut();
+                if let Some(at) = held.iter().position(|e| e.token == token) {
+                    held.remove(at);
+                }
+            });
+        }
+    }
+
+    #[track_caller]
+    pub(super) fn acquired(class: &'static LockClass) -> Held {
+        let site = Location::caller();
+        let token = NEXT_TOKEN.fetch_add(1, Ordering::Relaxed);
+        HELD.with(|held| {
+            let mut held = held.borrow_mut();
+            if let Some(blocker) = held.iter().find(|e| e.class.rank >= class.rank) {
+                panic!(
+                    "check-locks: lock-order inversion: acquiring {} (rank {}) at {} \
+                     while holding {} (rank {}) acquired at {}",
+                    class.name, class.rank, site, blocker.class.name, blocker.class.rank, blocker.site,
+                );
+            }
+            let mut edges = EDGES.lock().unwrap_or_else(PoisonError::into_inner);
+            for outer in held.iter() {
+                let dup = edges
+                    .iter()
+                    .any(|e| std::ptr::eq(e.outer, outer.class) && std::ptr::eq(e.inner, class));
+                if !dup {
+                    edges.push(Edge {
+                        outer: outer.class,
+                        inner: class,
+                        outer_site: outer.site,
+                        inner_site: site,
+                    });
+                }
+            }
+            drop(edges);
+            held.push(HeldEntry { class, site, token });
+        });
+        Held { token }
+    }
+
+    /// The pre-block condvar check: with `own` about to be released
+    /// for the wait, every *other* held lock must rank strictly below
+    /// `own`'s class (a true outer lock).  Runs before blocking, so a
+    /// violation panics instead of deadlocking.
+    #[track_caller]
+    pub(super) fn waiting(own: &Held) {
+        let wait_site = Location::caller();
+        HELD.with(|held| {
+            let held = held.borrow();
+            let own_entry = held
+                .iter()
+                .find(|e| e.token == own.token)
+                .expect("check-locks: condvar guard missing from the held stack");
+            for other in held.iter() {
+                if other.token != own.token && other.class.rank >= own_entry.class.rank {
+                    panic!(
+                        "check-locks: condvar wait at {} would release {} (rank {}) \
+                         while holding {} (rank {}) acquired at {} — an inner lock \
+                         held across a wait deadlocks its waker",
+                        wait_site,
+                        own_entry.class.name,
+                        own_entry.class.rank,
+                        other.class.name,
+                        other.class.rank,
+                        other.site,
+                    );
+                }
+            }
+        });
+    }
+
+    /// Snapshot of the global order graph:
+    /// `(outer class, inner class, outer site, inner site)` rows.
+    pub fn order_edges() -> Vec<(String, String, String, String)> {
+        let edges = EDGES.lock().unwrap_or_else(PoisonError::into_inner);
+        edges
+            .iter()
+            .map(|e| {
+                (
+                    e.outer.name.to_string(),
+                    e.inner.name.to_string(),
+                    e.outer_site.to_string(),
+                    e.inner_site.to_string(),
+                )
+            })
+            .collect()
+    }
+}
+
+#[cfg(feature = "check-locks")]
+pub use check::order_edges;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    #[test]
+    fn mutex_roundtrip_with_in_rank_nesting() {
+        let outer = TrackedMutex::new(&classes::SERVE_QUEUE, 1u32);
+        let inner = TrackedMutex::new(&classes::POOL_QUEUE, 2u32);
+        assert_eq!(outer.class().name(), "serve.queue");
+        {
+            let g1 = outer.lock();
+            let mut g2 = inner.lock();
+            *g2 += *g1;
+        }
+        assert_eq!(*inner.lock(), 3);
+    }
+
+    #[test]
+    fn rwlock_roundtrip() {
+        let l = TrackedRwLock::new(&classes::ENGINE_CACHE, 0u32);
+        {
+            let mut w = l.write();
+            *w = 7;
+        }
+        assert_eq!(*l.read(), 7);
+        assert_eq!(l.class().rank(), 30);
+    }
+
+    #[test]
+    fn condvar_wakes_waiter() {
+        let flag = TrackedMutex::new(&classes::PIPELINE_WINDOW, false);
+        let cv = TrackedCondvar::new();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                let mut g = flag.lock();
+                *g = true;
+                cv.notify_all();
+            });
+            let mut g = flag.lock();
+            while !*g {
+                g = cv.wait(g);
+            }
+        });
+    }
+
+    #[test]
+    fn condvar_wait_timeout_returns_guard() {
+        let flag = TrackedMutex::new(&classes::PIPELINE_WINDOW, 41u32);
+        let cv = TrackedCondvar::new();
+        let g = flag.lock();
+        // no notifier: spurious wakes are allowed, but the guard must
+        // come back owning the same lock
+        let (mut g, _timed_out) = cv.wait_timeout(g, Duration::from_millis(1));
+        *g += 1;
+        assert_eq!(*g, 42);
+    }
+
+    #[test]
+    fn poisoned_lock_recovers_with_inner_value() {
+        let m = TrackedMutex::new(&classes::ENGINE_CACHE, 5u32);
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            let mut g = m.lock();
+            *g = 6;
+            panic!("poison it");
+        }));
+        assert!(err.is_err());
+        // the single poison policy: recover and keep serving
+        assert_eq!(*m.lock(), 6);
+    }
+}
+
+#[cfg(all(test, feature = "check-locks"))]
+mod check_tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+
+    fn panic_message(err: Box<dyn std::any::Any + Send>) -> String {
+        match err.downcast::<String>() {
+            Ok(s) => *s,
+            Err(err) => match err.downcast::<&'static str>() {
+                Ok(s) => s.to_string(),
+                Err(_) => String::from("<non-string panic payload>"),
+            },
+        }
+    }
+
+    #[test]
+    fn rank_inversion_panics_with_both_sites() {
+        let low = TrackedMutex::new(&classes::SERVE_QUEUE, ());
+        let high = TrackedMutex::new(&classes::ALIASING_TABLES, ());
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            let _gh = high.lock();
+            let _gl = low.lock(); // inversion: rank 90 held, acquiring rank 10
+        }))
+        .expect_err("inverted acquisition must panic");
+        let msg = panic_message(err);
+        assert!(msg.contains("lock-order inversion"), "{msg}");
+        assert!(msg.contains("serve.queue"), "{msg}");
+        assert!(msg.contains("aliasing.tables"), "{msg}");
+        // both acquisition sites must be named, and both are in this file
+        assert!(msg.matches("sync.rs").count() >= 2, "{msg}");
+    }
+
+    #[test]
+    fn same_class_reentry_panics() {
+        let a = TrackedMutex::new(&classes::POOL_JOB, ());
+        let _g = a.lock();
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            let _again = a.lock();
+        }))
+        .expect_err("same-rank re-entry must panic");
+        assert!(panic_message(err).contains("lock-order inversion"));
+    }
+
+    #[test]
+    fn condvar_wait_with_inner_lock_held_panics_before_blocking() {
+        let outer = TrackedMutex::new(&classes::SERVE_QUEUE, ());
+        let inner = TrackedMutex::new(&classes::POOL_QUEUE, ());
+        let cv = TrackedCondvar::new();
+        // no notifier exists: if the check ran after blocking instead
+        // of before, this test would hang, not fail
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            let g_outer = outer.lock();
+            let _g_inner = inner.lock();
+            let _ = cv.wait(g_outer);
+        }))
+        .expect_err("wait holding an inner lock must panic, not block");
+        let msg = panic_message(err);
+        assert!(msg.contains("condvar wait"), "{msg}");
+        assert!(msg.contains("pool.queue"), "{msg}");
+    }
+
+    #[test]
+    fn wait_holding_only_outer_locks_is_allowed() {
+        // the serve-suite pattern: a rank-0 env lock held around a
+        // body that internally waits on higher-rank locks
+        let outer = TrackedMutex::new(&classes::TEST_ENV, ());
+        let flag = TrackedMutex::new(&classes::POOL_JOB, false);
+        let cv = TrackedCondvar::new();
+        let _outer_guard = outer.lock();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                let mut g = flag.lock();
+                *g = true;
+                cv.notify_all();
+            });
+            let mut g = flag.lock();
+            while !*g {
+                g = cv.wait(g);
+            }
+        });
+    }
+
+    #[test]
+    fn order_graph_records_nesting_edges() {
+        let outer = TrackedMutex::new(&classes::PIPELINE_WINDOW, ());
+        let inner = TrackedMutex::new(&classes::FAULT_STATE, ());
+        let _go = outer.lock();
+        let _gi = inner.lock();
+        let edges = order_edges();
+        assert!(
+            edges
+                .iter()
+                .any(|(o, i, _, _)| o == "pipeline.window" && i == "fault.state"),
+            "{edges:?}"
+        );
+    }
+}

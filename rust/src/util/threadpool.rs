@@ -38,7 +38,9 @@
 use std::collections::VecDeque;
 use std::ops::Range;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::sync::{Arc, OnceLock};
+
+use crate::util::sync::{classes, TrackedCondvar, TrackedMutex};
 
 /// Number of worker threads to use (respects `WATERSIC_THREADS`).
 pub fn default_threads() -> usize {
@@ -81,9 +83,9 @@ struct Job {
     /// set on the first chunk panic: later chunks are skipped
     panicked: std::sync::atomic::AtomicBool,
     /// payload of the first panic, re-raised by the submitter
-    panic_payload: Mutex<Option<Box<dyn std::any::Any + Send>>>,
-    mx: Mutex<()>,
-    cv: Condvar,
+    panic_payload: TrackedMutex<Option<Box<dyn std::any::Any + Send>>>,
+    mx: TrackedMutex<()>,
+    cv: TrackedCondvar,
 }
 
 struct Shared {
@@ -93,8 +95,8 @@ struct Shared {
 }
 
 struct Pool {
-    mx: Mutex<Shared>,
-    cv: Condvar,
+    mx: TrackedMutex<Shared>,
+    cv: TrackedCondvar,
     workers: usize,
 }
 
@@ -106,10 +108,13 @@ fn pool() -> &'static Arc<Pool> {
         // fewer worker than the target parallelism
         let workers = default_threads().saturating_sub(1);
         let pool = Arc::new(Pool {
-            mx: Mutex::new(Shared {
-                jobs: VecDeque::new(),
-            }),
-            cv: Condvar::new(),
+            mx: TrackedMutex::new(
+                &classes::POOL_QUEUE,
+                Shared {
+                    jobs: VecDeque::new(),
+                },
+            ),
+            cv: TrackedCondvar::new(),
             workers,
         });
         for i in 0..workers {
@@ -126,12 +131,12 @@ fn pool() -> &'static Arc<Pool> {
 fn worker_loop(pool: Arc<Pool>) {
     loop {
         let job = {
-            let mut g = pool.mx.lock().unwrap();
+            let mut g = pool.mx.lock();
             loop {
                 if let Some(job) = claim_job(&mut g) {
                     break job;
                 }
-                g = pool.cv.wait(g).unwrap();
+                g = pool.cv.wait(g);
             }
         };
         run_chunks(&job);
@@ -182,7 +187,7 @@ fn run_chunks(job: &Job) {
             }));
             if let Err(payload) = result {
                 job.panicked.store(true, Ordering::SeqCst);
-                let mut slot = job.panic_payload.lock().unwrap();
+                let mut slot = job.panic_payload.lock();
                 if slot.is_none() {
                     *slot = Some(payload);
                 }
@@ -194,7 +199,7 @@ fn run_chunks(job: &Job) {
             // take the lock before notifying so the submitter cannot
             // check the predicate and sleep between our increment and
             // our notify
-            let _g = job.mx.lock().unwrap();
+            let _g = job.mx.lock();
             job.cv.notify_all();
         }
     }
@@ -240,13 +245,13 @@ where
         joined: AtomicUsize::new(0),
         max_helpers: threads - 1,
         panicked: std::sync::atomic::AtomicBool::new(false),
-        panic_payload: Mutex::new(None),
-        mx: Mutex::new(()),
-        cv: Condvar::new(),
+        panic_payload: TrackedMutex::new(&classes::POOL_PANIC, None),
+        mx: TrackedMutex::new(&classes::POOL_JOB, ()),
+        cv: TrackedCondvar::new(),
     });
 
     {
-        let mut g = pool.mx.lock().unwrap();
+        let mut g = pool.mx.lock();
         // opportunistic prune keeps the queue bounded by in-flight jobs
         g.jobs.retain(|j| j.next.load(Ordering::SeqCst) < j.end);
         g.jobs.push_back(Arc::clone(&job));
@@ -256,15 +261,15 @@ where
     // participate, then wait out any stragglers
     run_chunks(&job);
     {
-        let mut g = job.mx.lock().unwrap();
+        let mut g = job.mx.lock();
         while job.done.load(Ordering::SeqCst) < n {
-            g = job.cv.wait(g).unwrap();
+            g = job.cv.wait(g);
         }
     }
     // our job is exhausted — drop its queue entry eagerly so the deque
     // holds only live work even if no worker ever scans again
     {
-        let mut g = pool.mx.lock().unwrap();
+        let mut g = pool.mx.lock();
         g.jobs.retain(|j| !Arc::ptr_eq(j, &job));
     }
     // the job is complete: drop its disjoint-write claim table
@@ -272,7 +277,7 @@ where
     crate::util::aliasing::job_end(job.alias_id);
     // every chunk is accounted for and no worker will touch the task
     // again — safe to re-raise a caught panic as our own
-    let payload = job.panic_payload.lock().unwrap().take();
+    let payload = job.panic_payload.lock().take();
     if let Some(p) = payload {
         std::panic::resume_unwind(p);
     }

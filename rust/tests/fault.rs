@@ -14,7 +14,7 @@
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex, MutexGuard};
+use std::sync::Arc;
 use std::time::Duration;
 
 use watersic::experiments::synthetic_tiny_setup;
@@ -24,11 +24,14 @@ use watersic::runtime::reactor::{self, ReactorOpts};
 use watersic::runtime::{ServeOpts, Server};
 use watersic::util::fault::{install, Plan};
 use watersic::util::json::Json;
+use watersic::util::sync::{classes, TrackedMutex, TrackedMutexGuard};
 
 /// The fault plan is process-global state: no two tests may overlap.
-fn fault_lock() -> MutexGuard<'static, ()> {
-    static LOCK: Mutex<()> = Mutex::new(());
-    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+/// Ranked `test.env` (rank 0) so under `check-locks` it must be the
+/// outermost lock any test thread holds.
+fn fault_lock() -> TrackedMutexGuard<'static, ()> {
+    static LOCK: TrackedMutex<()> = TrackedMutex::new(&classes::TEST_ENV, ());
+    LOCK.lock()
 }
 
 fn plan(spec: &str) -> Option<Plan> {
@@ -209,6 +212,27 @@ fn write_stalls_delay_responses_without_losing_them() {
         c.write_all(b"\n").unwrap();
         assert_matches_ref(&read_json(&mut r), ra);
         assert_matches_ref(&read_json(&mut r), rb);
+    });
+}
+
+#[test]
+fn injected_lock_delays_are_bit_transparent() {
+    let _serial = fault_lock();
+    let server = tiny_server();
+    with_front_door(&server, |addr, srv| {
+        let ra = score_ref(srv, TOKS_A);
+        let rb = score_ref(srv, TOKS_B);
+        // every 7th tracked-lock acquisition anywhere in the process
+        // (queue, condvar reacquires, pool, fault state itself) sleeps
+        // 1 ms — widened race windows must not change a single bit
+        install(plan("lock=slow:1@e7"));
+        let (mut c, mut r) = connect(addr);
+        for _ in 0..3 {
+            send_line(&mut c, REQ_A);
+            assert_matches_ref(&read_json(&mut r), ra);
+            send_line(&mut c, REQ_B);
+            assert_matches_ref(&read_json(&mut r), rb);
+        }
     });
 }
 

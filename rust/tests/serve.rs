@@ -10,7 +10,7 @@
 //! setup the CLI `--model tiny` path and CI's determinism gate use)
 //! and the container round-trips through bytes before serving.
 
-use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::sync::OnceLock;
 use std::time::Duration;
 
 use watersic::coordinator::container::Container;
@@ -26,6 +26,7 @@ use watersic::model::ModelConfig;
 use watersic::runtime::server::{ScoreHandle, Server};
 use watersic::runtime::ServeOpts;
 use watersic::util::rng::Rng;
+use watersic::util::sync::{classes, TrackedMutex, TrackedMutexGuard};
 
 /// `ServeOpts` with deterministic scheduler limits (env-independent).
 fn opts(batch_max: usize, flush: Duration) -> ServeOpts {
@@ -43,10 +44,14 @@ fn opts(batch_max: usize, flush: Duration) -> ServeOpts {
 /// `WATERSIC_THREADS` while the kernels read it through `env::var` on
 /// every GEMM call, and a concurrent `setenv`/`getenv` pair is UB on
 /// glibc — so no two tests here may overlap.  (Held across the whole
-/// test body; a panicked holder must not wedge the rest.)
-fn env_lock() -> MutexGuard<'static, ()> {
-    static LOCK: Mutex<()> = Mutex::new(());
-    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+/// test body; the tracked wrapper's poison policy keeps a panicked
+/// holder from wedging the rest.)  Ranked `test.env` (rank 0): under
+/// `check-locks` this must be the outermost lock a test thread holds,
+/// which is exactly the intended nesting — every server/pool lock the
+/// body takes ranks strictly higher.
+fn env_lock() -> TrackedMutexGuard<'static, ()> {
+    static LOCK: TrackedMutex<()> = TrackedMutex::new(&classes::TEST_ENV, ());
+    LOCK.lock()
 }
 
 /// Quantize the synthetic tiny model once per process.

@@ -1,0 +1,36 @@
+//! Seeded `lock-order` fixture: `A`/`B` invert across two functions,
+//! and `C`/`D` invert through a one-level helper call.
+
+use crate::util::sync::{classes, TrackedMutex};
+
+static A: TrackedMutex<u32> = TrackedMutex::new(&classes::POOL_QUEUE, 0);
+static B: TrackedMutex<u32> = TrackedMutex::new(&classes::POOL_JOB, 0);
+static C: TrackedMutex<u32> = TrackedMutex::new(&classes::FAULT_STATE, 0);
+static D: TrackedMutex<u32> = TrackedMutex::new(&classes::ALIASING_TABLES, 0);
+
+fn ab() -> u32 {
+    let a = A.lock();
+    let b = B.lock();
+    *a + *b
+}
+
+fn ba() -> u32 {
+    let b = B.lock();
+    let a = A.lock();
+    *a + *b
+}
+
+fn helper_locks_c() -> u32 {
+    *C.lock()
+}
+
+fn holds_d_calls_helper() -> u32 {
+    let d = D.lock();
+    *d + helper_locks_c()
+}
+
+fn holds_c_then_d() -> u32 {
+    let c = C.lock();
+    let d = D.lock();
+    *c + *d
+}

@@ -1,0 +1,10 @@
+//! Seeded `no-raw-sync` fixture: the poisoning std primitives used
+//! outside util/sync.rs (three import idents + three field types).
+
+use std::sync::{Condvar, Mutex, RwLock};
+
+struct Shared {
+    m: Mutex<u32>,
+    c: Condvar,
+    r: RwLock<u32>,
+}

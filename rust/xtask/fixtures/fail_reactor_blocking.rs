@@ -1,0 +1,19 @@
+//! Seeded `reactor-blocking` fixture: a sleep, synchronous socket I/O,
+//! a blocking-mode flip, and a poll wait under a live lock guard —
+//! five findings when linted at the reactor path.
+
+use crate::util::sync::{classes, TrackedMutex};
+
+static LOCK: TrackedMutex<u32> = TrackedMutex::new(&classes::SERVE_QUEUE, 0);
+
+fn event_loop(stream: &mut TcpStream, poller: &mut Poller) -> io::Result<()> {
+    let mut buf = Vec::new();
+    std::thread::sleep(Duration::from_millis(1));
+    stream.read_to_end(&mut buf)?;
+    stream.write_all(&buf)?;
+    stream.set_nonblocking(false)?;
+    let g = LOCK.lock();
+    poller.wait(&mut buf, None)?;
+    drop(g);
+    Ok(())
+}

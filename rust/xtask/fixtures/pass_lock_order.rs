@@ -1,0 +1,30 @@
+//! Lock-order-clean file: consistent `A` -> `B` nesting everywhere,
+//! including through a guard-returning helper.
+
+use crate::util::sync::{classes, TrackedMutex, TrackedMutexGuard};
+
+static A: TrackedMutex<u32> = TrackedMutex::new(&classes::POOL_QUEUE, 0);
+static B: TrackedMutex<u32> = TrackedMutex::new(&classes::POOL_JOB, 0);
+
+fn ab() -> u32 {
+    let a = A.lock();
+    let b = B.lock();
+    *a + *b
+}
+
+fn also_ab() -> u32 {
+    let a = A.lock();
+    let b = B.lock();
+    *b - *a
+}
+
+/// Centralized acquisition: callers inherit the `A` holding.
+fn guard_helper() -> TrackedMutexGuard<'static, u32> {
+    A.lock()
+}
+
+fn uses_guard_helper() -> u32 {
+    let g = guard_helper();
+    let b = B.lock();
+    *g + *b
+}

@@ -1,0 +1,18 @@
+//! Raw-sync-clean file: atomics, channels, and the tracked wrappers
+//! are all fine anywhere, and a justified suppression keeps one raw
+//! alias.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::{Arc, OnceLock};
+
+use crate::util::sync::{classes, TrackedCondvar, TrackedMutex};
+
+struct Shared {
+    queue: TrackedMutex<Vec<u32>>,
+    cv: TrackedCondvar,
+    stop: AtomicBool,
+}
+
+// lint:allow(no-raw-sync) — FFI boundary: the C side owns this alias
+type RawSlot = std::sync::Mutex<u32>;

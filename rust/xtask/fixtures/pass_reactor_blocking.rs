@@ -1,0 +1,27 @@
+//! Reactor-clean file: readiness waiting with no guard live,
+//! non-blocking reads, and properly suppressed off-loop paths.
+
+fn event_loop(stream: &mut TcpStream, poller: &mut Poller) -> io::Result<()> {
+    let mut events = Vec::new();
+    // no guard is live here: waiting for readiness is the loop's job
+    poller.wait(&mut events, None)?;
+    let mut buf = [0u8; 4096];
+    let _n = stream.read(&mut buf)?;
+    stream.set_nonblocking(true)?;
+    Ok(())
+}
+
+// lint:allow(reactor-blocking) — dedicated per-connection thread, not
+// the event loop
+fn fallback(stream: &mut TcpStream) -> io::Result<()> {
+    let mut line = Vec::new();
+    stream.read_to_end(&mut line)?;
+    stream.write_all(&line)?;
+    std::thread::sleep(Duration::from_millis(1));
+    Ok(())
+}
+
+fn fault_path() {
+    // lint:allow(reactor-blocking) — injected fault: the delay is the point
+    std::thread::sleep(Duration::from_millis(1));
+}

@@ -1,7 +1,7 @@
 //! watersic-lint: the repo's own static checks, run as
 //! `cargo run -p xtask -- lint` (CI blocks on it).
 //!
-//! Six rule families, tuned to this codebase's pinned invariants (see
+//! Nine rule families, tuned to this codebase's pinned invariants (see
 //! `rust/xtask/README.md` for the full contract and the suppression
 //! syntax):
 //!
@@ -25,6 +25,19 @@
 //!   the ops docs cannot drift from the code).
 //! - `lint-allow` — suppression comments must name a known rule and
 //!   carry an em-dash reason (exact syntax in the README).
+//! - `no-raw-sync` — raw `std::sync` lock primitives (`Mutex`,
+//!   `RwLock`, `Condvar`, their guards, `PoisonError`) are banned
+//!   outside `util/sync.rs`: the tracked wrappers are the one place
+//!   poisoning and lock-order discipline are handled.
+//! - `lock-order` — acquisition nesting is extracted per function
+//!   (with one level of follow-through into named helpers), the edges
+//!   feed a global acquisition-order graph, and any cycle fails the
+//!   lint.  Lock class keys are receiver chains (`pool.mx`, `queue`,
+//!   `STATE`), so a given lock must be named consistently.
+//! - `reactor-blocking` — blocking calls (`sleep`, `read_to_end`,
+//!   `write_all`, blocking-mode flips, a lock guard live across the
+//!   poll wait) are banned in `runtime/reactor.rs`: one stalled call
+//!   there stalls every connection.
 //!
 //! The analysis is a line-oriented scan over a "code view" of each
 //! file (string and comment interiors blanked, positions preserved) —
@@ -32,7 +45,7 @@
 //! fast, at the cost of requiring rustfmt-shaped input (which CI's
 //! `cargo fmt --check` already guarantees).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::fs;
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
@@ -44,6 +57,9 @@ const KNOWN_RULES: &[&str] = &[
     "no-partial-cmp-unwrap",
     "env-registry",
     "lint-allow",
+    "no-raw-sync",
+    "lock-order",
+    "reactor-blocking",
 ];
 
 /// Files whose inputs arrive from outside the process (wire bytes,
@@ -61,6 +77,27 @@ const SCAN_ROOTS: &[&str] = &["rust/src", "rust/tests", "benches", "rust/xtask/s
 /// the lint's own deliberately-failing fixture snippets.
 const SKIP_DIRS: &[&str] = &["vendor", "fixtures"];
 
+/// Home of the tracked lock wrappers — the one file allowed to name
+/// the raw `std::sync` primitives, and the one file whose own internal
+/// `inner.lock()` plumbing the lock-order extractor must not index.
+const SYNC_FILE: &str = "rust/src/util/sync.rs";
+
+/// The event-loop surface the `reactor-blocking` rule polices.
+const REACTOR_FILE: &str = "rust/src/runtime/reactor.rs";
+
+/// Idents banned outside `SYNC_FILE` by `no-raw-sync`.  Atomics,
+/// `Arc`, `OnceLock`, and `mpsc` stay legal everywhere — only the
+/// poisoning lock primitives are centralized.
+const RAW_SYNC_IDENTS: &[&[u8]] = &[
+    b"Mutex",
+    b"RwLock",
+    b"Condvar",
+    b"MutexGuard",
+    b"RwLockReadGuard",
+    b"RwLockWriteGuard",
+    b"PoisonError",
+];
+
 const ENV_REGISTRY_FILE: &str = "rust/src/util/env.rs";
 const USAGE_FILE: &str = "rust/src/main.rs";
 const README_FILE: &str = "README.md";
@@ -73,10 +110,66 @@ struct Finding {
     msg: String,
 }
 
+/// Output format for findings (`--format`): the plain text default, a
+/// GitHub workflow-command annotation per finding, or a JSON array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Format {
+    Text,
+    Github,
+    Json,
+}
+
+/// One finding in the selected format.  Every format is one line per
+/// finding — for JSON, `main` wraps the lines in `[`…`]` and inserts
+/// the separating commas.
+fn render_finding(f: &Finding, format: Format) -> String {
+    match format {
+        Format::Text => format!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.msg),
+        Format::Github => format!(
+            "::error file={},line={},title=watersic-lint {}::{}",
+            f.file,
+            f.line,
+            f.rule,
+            gh_escape(&f.msg)
+        ),
+        Format::Json => format!(
+            "  {{\"file\": \"{}\", \"line\": {}, \"rule\": \"{}\", \"msg\": \"{}\"}}",
+            json_escape(&f.file),
+            f.line,
+            f.rule,
+            json_escape(&f.msg)
+        ),
+    }
+}
+
+/// GitHub workflow-command message escaping (the documented set).
+fn gh_escape(s: &str) -> String {
+    s.replace('%', "%25").replace('\r', "%0D").replace('\n', "%0A")
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+const USAGE: &str = "usage: cargo run -p xtask -- lint [--root DIR] [--format text|github|json]";
+
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let mut root = PathBuf::from(".");
     let mut cmd: Option<&str> = None;
+    let mut format = Format::Text;
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
@@ -91,22 +184,45 @@ fn main() -> ExitCode {
                     }
                 }
             }
+            "--format" => {
+                i += 1;
+                format = match args.get(i).map(String::as_str) {
+                    Some("text") => Format::Text,
+                    Some("github") => Format::Github,
+                    Some("json") => Format::Json,
+                    other => {
+                        eprintln!("xtask: --format wants text|github|json, got {other:?}");
+                        return ExitCode::from(2);
+                    }
+                };
+            }
             other => {
                 eprintln!("xtask: unknown argument `{other}`");
-                eprintln!("usage: cargo run -p xtask -- lint [--root DIR]");
+                eprintln!("{USAGE}");
                 return ExitCode::from(2);
             }
         }
         i += 1;
     }
     if cmd != Some("lint") {
-        eprintln!("usage: cargo run -p xtask -- lint [--root DIR]");
+        eprintln!("{USAGE}");
         return ExitCode::from(2);
     }
     match run_lint(&root) {
         Ok((findings, nfiles)) => {
-            for f in &findings {
-                println!("{}:{}: [{}] {}", f.file, f.line, f.rule, f.msg);
+            if format == Format::Json {
+                println!("[");
+            }
+            for (i, f) in findings.iter().enumerate() {
+                let sep = if format == Format::Json && i + 1 < findings.len() {
+                    ","
+                } else {
+                    ""
+                };
+                println!("{}{sep}", render_finding(f, format));
+            }
+            if format == Format::Json {
+                println!("]");
             }
             if findings.is_empty() {
                 eprintln!("xtask lint: clean ({nfiles} files)");
@@ -135,7 +251,7 @@ fn run_lint(root: &Path) -> Result<(Vec<Finding>, usize), String> {
         .map_err(|e| format!("reading {USAGE_FILE}: {e}"))?;
 
     let files = collect_files(root);
-    let mut findings = Vec::new();
+    let mut sources: Vec<(String, String)> = Vec::new();
     for path in &files {
         let rel = path
             .strip_prefix(root)
@@ -143,8 +259,13 @@ fn run_lint(root: &Path) -> Result<(Vec<Finding>, usize), String> {
             .to_string_lossy()
             .replace('\\', "/");
         let src = fs::read_to_string(path).map_err(|e| format!("reading {rel}: {e}"))?;
-        findings.extend(lint_source(&rel, &src, &knobs));
+        sources.push((rel, src));
     }
+    let mut findings = Vec::new();
+    for (rel, src) in &sources {
+        findings.extend(lint_source(rel, src, &knobs));
+    }
+    findings.extend(lock_order_findings(&sources));
     for name in &knobs {
         if !main_src.contains(name.as_str()) {
             findings.push(Finding {
@@ -240,9 +361,11 @@ fn parse_knobs(env_src: &str) -> Vec<String> {
     out
 }
 
-/// All six rule families over one file.  `rel` is the repo-relative
-/// path with `/` separators — it selects which path-scoped rules
-/// apply, so tests can exercise fixtures as if they lived anywhere.
+/// The per-file rule families over one file (`lock-order` is the
+/// cross-file pass in [`lock_order_findings`]).  `rel` is the
+/// repo-relative path with `/` separators — it selects which
+/// path-scoped rules apply, so tests can exercise fixtures as if they
+/// lived anywhere.
 fn lint_source(rel: &str, src: &str, knobs: &[String]) -> Vec<Finding> {
     let mut findings = Vec::new();
     let raw_lines: Vec<&str> = src.split('\n').collect();
@@ -260,6 +383,22 @@ fn lint_source(rel: &str, src: &str, knobs: &[String]) -> Vec<Finding> {
 
     let in_linalg = rel.starts_with("rust/src/linalg/");
     let untrusted = UNTRUSTED.contains(&rel);
+    let in_sync = rel == SYNC_FILE;
+    let in_reactor = rel == REACTOR_FILE;
+    // fn declaration lines, so a reactor-blocking suppression above a
+    // `fn` can cover the whole function (the threaded-fallback idiom)
+    let fns = if in_reactor {
+        fn_spans(&code, &line_starts)
+    } else {
+        Vec::new()
+    };
+    let fn_covered = |rule: &'static str, pos: usize, line: usize| {
+        supp.covers(&raw_lines, rule, line)
+            || fns
+                .iter()
+                .find(|f| f.body_start < pos && pos < f.body_end)
+                .is_some_and(|f| supp.covers(&raw_lines, rule, f.decl_line))
+    };
 
     for (start, end) in idents(&code) {
         let tok = &code[start..end];
@@ -331,6 +470,51 @@ fn lint_source(rel: &str, src: &str, knobs: &[String]) -> Vec<Finding> {
             }
         }
 
+        // R6: no-raw-sync — the poisoning lock primitives live in
+        // util/sync.rs only; everything else takes the tracked wrappers
+        if !in_sync
+            && RAW_SYNC_IDENTS.contains(&tok)
+            && !supp.covers(&raw_lines, "no-raw-sync", line)
+        {
+            findings.push(finding(
+                line,
+                "no-raw-sync",
+                format!(
+                    "raw std::sync `{}` outside util/sync.rs — use the \
+                     tracked wrappers (util::sync)",
+                    String::from_utf8_lossy(tok)
+                ),
+            ));
+        }
+
+        // R7: reactor-blocking — one blocked call on the event loop
+        // stalls every connection behind it
+        if in_reactor && !in_ranges(&test_ranges, start) {
+            let blocking = match tok {
+                b"sleep" | b"read_until" | b"read_to_end" | b"read_exact" | b"write_all" => {
+                    next_nonws(&code, end) == Some(b'(')
+                }
+                b"recv" | b"join" => {
+                    prev_nonws(&code, start) == Some(b'.') && call_is_empty(&code, end)
+                }
+                b"set_nonblocking" => {
+                    code.get(end) == Some(&b'(') && next_nonws(&code, end + 1) == Some(b'f')
+                }
+                _ => false,
+            };
+            if blocking && !fn_covered("reactor-blocking", start, line) {
+                findings.push(finding(
+                    line,
+                    "reactor-blocking",
+                    format!(
+                        "blocking call `{}` on the reactor event loop — poll \
+                         readiness instead, or suppress on a non-event-loop path",
+                        String::from_utf8_lossy(tok)
+                    ),
+                ));
+            }
+        }
+
         // R4: no-partial-cmp-unwrap (everywhere)
         if tok == b"partial_cmp" {
             if let Some(after) = balanced_call_end(&code, end) {
@@ -350,6 +534,35 @@ fn lint_source(rel: &str, src: &str, knobs: &[String]) -> Vec<Finding> {
                             "`partial_cmp(..).unwrap()` panics on NaN — use \
                              `total_cmp`"
                                 .to_string(),
+                        ));
+                    }
+                }
+            }
+        }
+    }
+
+    // R7b: a lock guard live across the poll wait serializes the whole
+    // event loop on whatever that lock protects
+    if in_reactor {
+        let braces = brace_pairs(&code);
+        for acq in direct_acquisitions(&code, &test_ranges) {
+            let live_end = acq_live_end(&code, &braces, &acq);
+            for (s, e) in idents(&code) {
+                if &code[s..e] == b"wait"
+                    && code.get(e) == Some(&b'(')
+                    && s > acq.pos
+                    && s < live_end
+                {
+                    let line = line_at(&line_starts, s);
+                    if !fn_covered("reactor-blocking", s, line) {
+                        findings.push(finding(
+                            line,
+                            "reactor-blocking",
+                            format!(
+                                "poll wait while the `{}` lock guard is live — \
+                                 drop the guard before blocking",
+                                acq.class
+                            ),
                         ));
                     }
                 }
@@ -792,37 +1005,39 @@ fn balanced_call_end(code: &[u8], end: usize) -> Option<usize> {
     (depth == 0).then_some(j)
 }
 
-/// Byte ranges of `#[cfg(test)]` items (attribute through closing
-/// brace) in the code view.
+/// Byte ranges of `#[cfg(test)]` / `#[cfg(all(test, ...))]` items
+/// (attribute through closing brace) in the code view.
 fn cfg_test_ranges(code: &[u8]) -> Vec<(usize, usize)> {
     let mut ranges = Vec::new();
-    for m in find_all(code, b"#[cfg(test)]") {
-        let mut k = m + b"#[cfg(test)]".len();
-        // opening brace of the following item (a `;` first means the
-        // attribute decorated a brace-less item: nothing to span)
-        let mut open = None;
-        while k < code.len() {
-            match code[k] {
-                b'{' => {
-                    open = Some(k);
-                    break;
+    for marker in [&b"#[cfg(test)]"[..], &b"#[cfg(all(test"[..]] {
+        for m in find_all(code, marker) {
+            let mut k = m + marker.len();
+            // opening brace of the following item (a `;` first means the
+            // attribute decorated a brace-less item: nothing to span)
+            let mut open = None;
+            while k < code.len() {
+                match code[k] {
+                    b'{' => {
+                        open = Some(k);
+                        break;
+                    }
+                    b';' => break,
+                    _ => k += 1,
                 }
-                b';' => break,
-                _ => k += 1,
             }
-        }
-        let Some(open) = open else { continue };
-        let mut depth = 1usize;
-        let mut j = open + 1;
-        while j < code.len() && depth > 0 {
-            match code[j] {
-                b'{' => depth += 1,
-                b'}' => depth -= 1,
-                _ => {}
+            let Some(open) = open else { continue };
+            let mut depth = 1usize;
+            let mut j = open + 1;
+            while j < code.len() && depth > 0 {
+                match code[j] {
+                    b'{' => depth += 1,
+                    b'}' => depth -= 1,
+                    _ => {}
+                }
+                j += 1;
             }
-            j += 1;
+            ranges.push((m, j));
         }
-        ranges.push((m, j));
     }
     ranges
 }
@@ -849,6 +1064,453 @@ fn watersic_literals(src: &str) -> Vec<(usize, String)> {
         }
     }
     out
+}
+
+// ---- lock-order extraction ----------------------------------------
+
+/// One `fn` item in the code view: its name, declaration line, and the
+/// byte span of its brace body.
+struct FnSpan {
+    name: String,
+    decl_line: usize,
+    sig_start: usize,
+    body_start: usize,
+    body_end: usize,
+}
+
+/// Every `fn` item with a brace body.  The `fn` keyword must be
+/// directly followed by the name, which filters `fn(..)` pointer types;
+/// bodiless trait-method declarations are skipped.
+fn fn_spans(code: &[u8], starts: &[usize]) -> Vec<FnSpan> {
+    let mut out = Vec::new();
+    let toks = idents(code);
+    for (i, &(s, e)) in toks.iter().enumerate() {
+        if &code[s..e] != b"fn" {
+            continue;
+        }
+        let Some(&(ns, ne)) = toks.get(i + 1) else {
+            continue;
+        };
+        if code[e..ns].iter().any(|c| !c.is_ascii_whitespace()) {
+            continue;
+        }
+        let mut j = ne;
+        let mut open = None;
+        while j < code.len() {
+            match code[j] {
+                b'{' => {
+                    open = Some(j);
+                    break;
+                }
+                b';' => break,
+                _ => j += 1,
+            }
+        }
+        let Some(open) = open else { continue };
+        out.push(FnSpan {
+            name: String::from_utf8_lossy(&code[ns..ne]).to_string(),
+            decl_line: line_at(starts, s),
+            sig_start: s,
+            body_start: open,
+            body_end: match_brace(code, open),
+        });
+    }
+    out
+}
+
+/// Position of the `}` matching the `{` at `open` (or `code.len()`).
+fn match_brace(code: &[u8], open: usize) -> usize {
+    let mut depth = 0usize;
+    let mut j = open;
+    while j < code.len() {
+        match code[j] {
+            b'{' => depth += 1,
+            b'}' => {
+                depth -= 1;
+                if depth == 0 {
+                    return j;
+                }
+            }
+            _ => {}
+        }
+        j += 1;
+    }
+    code.len()
+}
+
+/// All `{`..`}` pairs in the code view, via a match stack.
+fn brace_pairs(code: &[u8]) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let mut stack = Vec::new();
+    for (j, &c) in code.iter().enumerate() {
+        match c {
+            b'{' => stack.push(j),
+            b'}' => {
+                if let Some(o) = stack.pop() {
+                    out.push((o, j));
+                }
+            }
+            _ => {}
+        }
+    }
+    out
+}
+
+/// A direct `.lock()` / `.read()` / `.write()` acquisition site, with
+/// its receiver-chain class key and statement shape.
+struct Acq {
+    pos: usize,
+    class: String,
+    let_bound: bool,
+}
+
+/// Direct acquisition sites outside `#[cfg(test)]` items.  The class
+/// key is the receiver chain minus a leading `self` (`self.queue.lock()`
+/// and a helper's `queue.lock()` both key as `queue`), so naming a
+/// given lock consistently across call-sites is part of the contract.
+fn direct_acquisitions(code: &[u8], test_ranges: &[(usize, usize)]) -> Vec<Acq> {
+    let mut out = Vec::new();
+    for (s, e) in idents(code) {
+        let tok = &code[s..e];
+        if tok != b"lock" && tok != b"read" && tok != b"write" {
+            continue;
+        }
+        if in_ranges(test_ranges, s)
+            || prev_nonws(code, s) != Some(b'.')
+            || !call_is_empty(code, e)
+        {
+            continue;
+        }
+        let Some(class) = receiver_chain(code, s) else {
+            continue;
+        };
+        out.push(Acq {
+            pos: s,
+            class,
+            let_bound: stmt_is_let(code, stmt_start(code, s)),
+        });
+    }
+    out
+}
+
+/// Receiver segments of a method call at `ident_start`, walking back
+/// over a plain `ident.ident.` chain (`self.queue.lock` ->
+/// `["self", "queue"]`).  `None` when the receiver is not a plain
+/// chain — e.g. a call result (`foo().lock()`) or an index expression.
+fn receiver_segments(code: &[u8], ident_start: usize) -> Option<Vec<String>> {
+    let mut segs = Vec::new();
+    let mut j = ident_start;
+    loop {
+        // back over whitespace to the `.`
+        while j > 0 && code[j - 1].is_ascii_whitespace() {
+            j -= 1;
+        }
+        if j == 0 || code[j - 1] != b'.' {
+            break;
+        }
+        j -= 1;
+        while j > 0 && code[j - 1].is_ascii_whitespace() {
+            j -= 1;
+        }
+        let end = j;
+        while j > 0 && (code[j - 1] == b'_' || code[j - 1].is_ascii_alphanumeric()) {
+            j -= 1;
+        }
+        if j == end {
+            return None;
+        }
+        segs.push(String::from_utf8_lossy(&code[j..end]).to_string());
+    }
+    segs.reverse();
+    if segs.is_empty() {
+        None
+    } else {
+        Some(segs)
+    }
+}
+
+/// Class key for an acquisition: the receiver chain joined with `.`,
+/// minus a leading `self`.
+fn receiver_chain(code: &[u8], ident_start: usize) -> Option<String> {
+    let mut segs = receiver_segments(code, ident_start)?;
+    if segs.first().map(String::as_str) == Some("self") {
+        segs.remove(0);
+    }
+    if segs.is_empty() {
+        None
+    } else {
+        Some(segs.join("."))
+    }
+}
+
+/// Start of the statement containing `pos`: just after the previous
+/// `;`, `{`, or `}`, skipping whitespace.
+fn stmt_start(code: &[u8], pos: usize) -> usize {
+    let mut j = pos;
+    while j > 0 && !matches!(code[j - 1], b';' | b'{' | b'}') {
+        j -= 1;
+    }
+    while j < code.len() && code[j].is_ascii_whitespace() {
+        j += 1;
+    }
+    j
+}
+
+/// `true` when the statement at `start` is a `let` binding.
+fn stmt_is_let(code: &[u8], start: usize) -> bool {
+    code[start..].starts_with(b"let")
+        && !code
+            .get(start + 3)
+            .is_some_and(|&c| c == b'_' || c.is_ascii_alphanumeric())
+}
+
+/// End of the innermost brace block containing `pos`.
+fn enclosing_block_end(code: &[u8], braces: &[(usize, usize)], pos: usize) -> usize {
+    braces
+        .iter()
+        .filter(|&&(o, c)| o < pos && pos < c)
+        .map(|&(_, c)| c)
+        .min()
+        .unwrap_or(code.len())
+}
+
+/// Last position at which the guard from `acq` is held: a let-bound
+/// guard lives to its enclosing block's close, a temporary to its
+/// statement's `;`.
+fn acq_live_end(code: &[u8], braces: &[(usize, usize)], acq: &Acq) -> usize {
+    let block_end = enclosing_block_end(code, braces, acq.pos);
+    if acq.let_bound {
+        block_end
+    } else {
+        skip_to(code, acq.pos, b';').min(block_end)
+    }
+}
+
+/// Whether a call at `start` participates in the one level of
+/// inter-procedural follow-through.  Free and path calls always do;
+/// method calls only as `self.helper()` or `ident.helper()` — deeper
+/// receivers (`j.next.load()`) share names with std methods too freely
+/// to index by bare name.
+fn followable_call(code: &[u8], start: usize) -> bool {
+    if prev_nonws(code, start) != Some(b'.') {
+        return true;
+    }
+    matches!(receiver_segments(code, start), Some(s) if s.len() == 1)
+}
+
+/// Per-function lock facts, merged across files by bare name — the one
+/// level of inter-procedural follow-through.  Name collisions merge
+/// conservatively (union of classes), which can only add edges a human
+/// reviewer would also have to consider.
+#[derive(Default)]
+struct FnLocks {
+    classes: Vec<String>,
+    returns_guard: bool,
+}
+
+/// The cross-file `lock-order` pass: record which lock classes are
+/// acquired while which are held (guard liveness approximated as
+/// let-binding -> enclosing block, temporary -> statement), follow one
+/// level into named helpers, and flag every edge that closes a cycle in
+/// the global acquisition graph.  `util/sync.rs` (the wrappers' own
+/// plumbing) and `#[cfg(test)]` items are exempt; suppressions attach
+/// to the inner-acquisition line or the enclosing `fn` line.
+fn lock_order_findings(sources: &[(String, String)]) -> Vec<Finding> {
+    struct Art {
+        rel: String,
+        src: String,
+        code: Vec<u8>,
+        starts: Vec<usize>,
+        test_ranges: Vec<(usize, usize)>,
+        fns: Vec<FnSpan>,
+        acqs: Vec<Acq>,
+        braces: Vec<(usize, usize)>,
+        supp: Suppressions,
+    }
+
+    // pass 1: per-fn direct classes and guard-returning signatures
+    let mut arts: Vec<Art> = Vec::new();
+    let mut index: HashMap<String, FnLocks> = HashMap::new();
+    for (rel, src) in sources {
+        if rel == SYNC_FILE {
+            continue;
+        }
+        let (code, comments) = code_view(src);
+        let starts = line_starts(src.as_bytes());
+        let test_ranges = cfg_test_ranges(&code);
+        let fns = fn_spans(&code, &starts);
+        let acqs = direct_acquisitions(&code, &test_ranges);
+        let braces = brace_pairs(&code);
+        let supp = Suppressions::parse(src, &comments, &starts, rel, &mut Vec::new());
+        for f in &fns {
+            if in_ranges(&test_ranges, f.sig_start) {
+                continue;
+            }
+            let entry = index.entry(f.name.clone()).or_default();
+            if subslice(&code[f.sig_start..f.body_start], b"Guard") {
+                entry.returns_guard = true;
+            }
+            for a in &acqs {
+                if a.pos <= f.body_start || a.pos >= f.body_end {
+                    continue;
+                }
+                if !entry.classes.contains(&a.class) {
+                    entry.classes.push(a.class.clone());
+                }
+            }
+        }
+        arts.push(Art {
+            rel: rel.clone(),
+            src: src.clone(),
+            code,
+            starts,
+            test_ranges,
+            fns,
+            acqs,
+            braces,
+            supp,
+        });
+    }
+
+    // pass 2: per-fn holdings x later acquisition events -> global edges
+    struct Site {
+        line: usize,
+        fn_decl_line: usize,
+        art: usize,
+    }
+    let mut adj: HashMap<String, Vec<String>> = HashMap::new();
+    let mut pairs: Vec<(String, String, Site)> = Vec::new();
+    let mut seen: HashSet<(String, String)> = HashSet::new();
+    for (ai, art) in arts.iter().enumerate() {
+        let toks = idents(&art.code);
+        for f in &art.fns {
+            if in_ranges(&art.test_ranges, f.sig_start) {
+                continue;
+            }
+            // holdings: this fn's live guards; events: every acquisition
+            // (direct, or one call deep through an indexed helper)
+            let mut holdings: Vec<(usize, usize, String)> = Vec::new();
+            let mut events: Vec<(usize, Vec<String>)> = Vec::new();
+            for a in &art.acqs {
+                if a.pos > f.body_start && a.pos < f.body_end {
+                    let live = acq_live_end(&art.code, &art.braces, a);
+                    holdings.push((a.pos, live, a.class.clone()));
+                    events.push((a.pos, vec![a.class.clone()]));
+                }
+            }
+            for (ti, &(s, e)) in toks.iter().enumerate() {
+                if s <= f.body_start || s >= f.body_end || in_ranges(&art.test_ranges, s) {
+                    continue;
+                }
+                let tok = &art.code[s..e];
+                if tok == b"lock" || tok == b"read" || tok == b"write" {
+                    continue;
+                }
+                if art.code.get(e) != Some(&b'(') || !followable_call(&art.code, s) {
+                    continue;
+                }
+                // a nested fn's own declaration is not a call
+                if ti > 0 {
+                    let (ps, pe) = toks[ti - 1];
+                    if &art.code[ps..pe] == b"fn" {
+                        continue;
+                    }
+                }
+                let name = String::from_utf8_lossy(tok);
+                let Some(info) = index.get(name.as_ref()) else {
+                    continue;
+                };
+                if info.classes.is_empty() {
+                    continue;
+                }
+                events.push((s, info.classes.clone()));
+                if info.returns_guard && stmt_is_let(&art.code, stmt_start(&art.code, s)) {
+                    let live = enclosing_block_end(&art.code, &art.braces, s);
+                    for c in &info.classes {
+                        holdings.push((s, live, c.clone()));
+                    }
+                }
+            }
+            for &(hp, hend, ref hclass) in &holdings {
+                for &(ep, ref eclasses) in &events {
+                    if ep <= hp || ep > hend {
+                        continue;
+                    }
+                    for c in eclasses {
+                        if c == hclass {
+                            continue; // re-entry is the runtime checker's job
+                        }
+                        adj.entry(hclass.clone()).or_default().push(c.clone());
+                        if seen.insert((hclass.clone(), c.clone())) {
+                            let site = Site {
+                                line: line_at(&art.starts, ep),
+                                fn_decl_line: f.decl_line,
+                                art: ai,
+                            };
+                            pairs.push((hclass.clone(), c.clone(), site));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // an edge u -> v closes a cycle iff v already reaches u
+    let mut findings = Vec::new();
+    for (u, v, site) in pairs {
+        let Some(path) = reaches(&adj, &v, &u) else {
+            continue;
+        };
+        let art = &arts[site.art];
+        let raw_lines: Vec<&str> = art.src.split('\n').collect();
+        if art.supp.covers(&raw_lines, "lock-order", site.line)
+            || art.supp.covers(&raw_lines, "lock-order", site.fn_decl_line)
+        {
+            continue;
+        }
+        findings.push(Finding {
+            file: art.rel.clone(),
+            line: site.line,
+            rule: "lock-order",
+            msg: format!(
+                "lock-order cycle: `{v}` is acquired while `{u}` is held, closing the cycle \
+                 {u} -> {}",
+                path.join(" -> ")
+            ),
+        });
+    }
+    findings
+}
+
+/// BFS path from `from` to `to` in the acquisition graph, inclusive of
+/// both endpoints (`from == to` is the trivial self-path).
+fn reaches(adj: &HashMap<String, Vec<String>>, from: &str, to: &str) -> Option<Vec<String>> {
+    if from == to {
+        return Some(vec![from.to_string()]);
+    }
+    let mut parent: HashMap<&str, &str> = HashMap::new();
+    let mut queue: VecDeque<&str> = VecDeque::new();
+    queue.push_back(from);
+    while let Some(n) = queue.pop_front() {
+        for m in adj.get(n).map(Vec::as_slice).unwrap_or(&[]) {
+            let m = m.as_str();
+            if m == to {
+                let mut path = vec![m, n];
+                let mut cur = n;
+                while let Some(&p) = parent.get(cur) {
+                    path.push(p);
+                    cur = p;
+                }
+                path.reverse();
+                return Some(path.into_iter().map(String::from).collect());
+            }
+            if m != from && !parent.contains_key(m) {
+                parent.insert(m, n);
+                queue.push_back(m);
+            }
+        }
+    }
+    None
 }
 
 #[cfg(test)]
@@ -952,6 +1614,96 @@ mod tests {
         assert_eq!(n, 2, "unknown rule + missing reason: {f:?}");
         // a malformed allow does NOT suppress the violation under it
         assert!(rules(&f).contains(&"unsafe-safety"), "{f:?}");
+    }
+
+    #[test]
+    fn raw_sync_rule_scoped_to_sync_module() {
+        let src = include_str!("../fixtures/fail_raw_sync.rs");
+        let f = lint("rust/src/x.rs", src);
+        let n = rules(&f).iter().filter(|r| **r == "no-raw-sync").count();
+        assert_eq!(n, 6, "three import idents + three field types: {f:?}");
+        // the wrappers' own home is the one sanctioned user
+        let f = lint(SYNC_FILE, src);
+        assert!(f.is_empty(), "{f:?}");
+        let f = lint("rust/src/x.rs", include_str!("../fixtures/pass_raw_sync.rs"));
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    fn lock_order(rel: &str, src: &str) -> Vec<Finding> {
+        lock_order_findings(&[(rel.to_string(), src.to_string())])
+    }
+
+    #[test]
+    fn lock_order_cycles_fire_and_consistent_order_passes() {
+        let src = include_str!("../fixtures/fail_lock_order.rs");
+        let f = lock_order("rust/src/a.rs", src);
+        let n = rules(&f).iter().filter(|r| **r == "lock-order").count();
+        assert_eq!(n, 4, "two direct + two helper-mediated edges: {f:?}");
+        let f = lock_order("rust/src/a.rs", include_str!("../fixtures/pass_lock_order.rs"));
+        assert!(f.is_empty(), "{f:?}");
+        // the wrappers' own home is exempt (its guts nest freely)
+        let f = lock_order(SYNC_FILE, src);
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn lock_order_follows_helpers_across_files() {
+        let caller = "fn outer() -> u32 { let d = D.lock(); helper() }\n";
+        let helper = "fn helper() -> u32 { *C.lock() }\n\
+                      fn other() { let c = C.lock(); let d = D.lock(); }\n";
+        let f = lock_order_findings(&[
+            ("rust/src/a.rs".to_string(), caller.to_string()),
+            ("rust/src/b.rs".to_string(), helper.to_string()),
+        ]);
+        assert_eq!(rules(&f), vec!["lock-order", "lock-order"], "{f:?}");
+    }
+
+    #[test]
+    fn reactor_blocking_rule_scoped_to_reactor() {
+        let src = include_str!("../fixtures/fail_reactor_blocking.rs");
+        let f = lint(REACTOR_FILE, src);
+        let n = rules(&f).iter().filter(|r| **r == "reactor-blocking").count();
+        assert_eq!(n, 5, "sleep, read, write, mode flip, wait-under-guard: {f:?}");
+        assert_eq!(f.len(), 5, "only reactor-blocking fires: {f:?}");
+        // the same code off the event loop is legal
+        let f = lint("rust/src/runtime/x.rs", src);
+        assert!(f.is_empty(), "{f:?}");
+        let f = lint(
+            REACTOR_FILE,
+            include_str!("../fixtures/pass_reactor_blocking.rs"),
+        );
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn formats_carry_identical_findings() {
+        let f = Finding {
+            file: "rust/src/x.rs".to_string(),
+            line: 7,
+            rule: "no-raw-sync",
+            msg: "50% \"raw\"\nnewline".to_string(),
+        };
+        assert_eq!(
+            render_finding(&f, Format::Text),
+            "rust/src/x.rs:7: [no-raw-sync] 50% \"raw\"\nnewline"
+        );
+        assert_eq!(
+            render_finding(&f, Format::Github),
+            "::error file=rust/src/x.rs,line=7,title=watersic-lint no-raw-sync\
+             ::50%25 \"raw\"%0Anewline"
+        );
+        assert_eq!(
+            render_finding(&f, Format::Json),
+            "  {\"file\": \"rust/src/x.rs\", \"line\": 7, \"rule\": \"no-raw-sync\", \
+             \"msg\": \"50% \\\"raw\\\"\\nnewline\"}"
+        );
+    }
+
+    #[test]
+    fn cfg_all_test_regions_are_exempt() {
+        let src = "#[cfg(all(test, feature = \"f\"))]\nmod t {\n    fn f() { x.unwrap(); } \n}\n";
+        let f = lint("rust/src/runtime/server.rs", src);
+        assert!(f.is_empty(), "{f:?}");
     }
 
     #[test]
