@@ -121,6 +121,19 @@ fn seed_gram(a: &Mat) -> Mat {
     c
 }
 
+/// JSON entries whose values the `WATERSIC_BENCH_ENFORCE=1` gates at
+/// the bottom of `main` enforce.  The `bench-json-sync` lint
+/// (rust/xtask) requires every name listed here to be emitted into
+/// BENCH_linalg.json by this file *and* pinned by a `grep` in CI — a
+/// gate whose telemetry CI never checks is a gate that can rot out of
+/// the artifact.
+const GATED_ENTRIES: &[&str] = &[
+    "speedup matmul 512³",
+    "speedup gram 2048x256",
+    "speedup chol 1024",
+    "speedup f32 matmul 512³",
+];
+
 fn main() {
     println!("== bench_linalg: f64 dense kernels (packed vs seed) ==");
     let mut rng = Rng::new(3);
@@ -369,6 +382,7 @@ fn main() {
 
     // opt-in hard gates (see module docs)
     if watersic::util::env::flag("WATERSIC_BENCH_ENFORCE") {
+        println!("enforcing entries: {}", GATED_ENTRIES.join(", "));
         let gates = [
             ("matmul 512³", 2.0),
             ("gram 2048x256", 4.0),

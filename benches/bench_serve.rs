@@ -21,6 +21,21 @@
 //! one-token [`decode_packed`] steps against the cache (O(t) per
 //! token).
 //!
+//! The coded-residency rows measure what serving straight from
+//! quantized codes buys: a wide synthetic model (eager panels far
+//! larger than last-level cache) is loaded both ways —
+//! `from_container` (eager dequantized panels) vs
+//! `from_container_coded` (bit-packed codes resident, dequantized per
+//! KC block inside the GEMM pack stage) — and batched decode at
+//! window 256 is timed through each.  The token traces are asserted
+//! identical (the coded path is bit-for-bit the dequant path), and
+//! the emitted `coded bytes resident` / `dequant bytes resident` /
+//! `artifact code bytes` triple plus `coded decode tok/s 256` /
+//! `dequant decode tok/s 256` / `speedup coded decode 256` are what
+//! the CI coded-serve job greps.  Under `WATERSIC_BENCH_ENFORCE=1`
+//! the coded resident bytes must stay ≤ 1.25× the entropy-coded
+//! artifact's code plane and the coded decode speedup must be ≥ 1×.
+//!
 //! The open-loop rows measure what bounded admission buys under
 //! overload: a saturating probe pins the service rate, then arrivals
 //! at 2× that rate must be shed cleanly at admission while the
@@ -38,6 +53,7 @@
 //! `WATERSIC_SERVE_FLUSH_US` / `WATERSIC_SERVE_KV_BUDGET` /
 //! `WATERSIC_SERVE_MAX_STEPS` / `WATERSIC_PRECISION` options.
 
+use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 use watersic::coordinator::container::Container;
@@ -50,6 +66,7 @@ use watersic::model::transformer::{
 };
 use watersic::model::weights::{PackedWeights, Weights};
 use watersic::model::ModelConfig;
+use watersic::quant::LayerQuant;
 use watersic::runtime::server::{
     load_test, load_test_open, serve_batch_from_env, LoadMix, Server,
 };
@@ -61,6 +78,20 @@ use watersic::util::rng::Rng;
 fn env_usize(key: &'static str, default: usize) -> usize {
     watersic::util::env::usize_or(key, default).max(1)
 }
+
+/// JSON entries whose values the `WATERSIC_BENCH_ENFORCE=1` gates
+/// below enforce.  The `bench-json-sync` lint (rust/xtask) requires
+/// every name listed here to be emitted into BENCH_serve.json by this
+/// file *and* pinned by a `grep` in CI — a gate whose telemetry CI
+/// never checks is a gate that can rot out of the artifact.
+const GATED_ENTRIES: &[&str] = &[
+    "speedup prepack 16x512x512",
+    "speedup decode 256",
+    "shed frac 2x",
+    "p99 under overload ms",
+    "coded bytes resident",
+    "speedup coded decode 256",
+];
 
 fn main() -> anyhow::Result<()> {
     println!("== bench_serve: continuous-batching serving engine ==");
@@ -168,6 +199,140 @@ fn main() -> anyhow::Result<()> {
     log.note(&format!("rescore tok/s {window}"), rescore_tok_s);
     log.note(&format!("speedup decode {window}"), decode_speedup);
 
+    // ---- coded weight residency: serve straight from quantized
+    // codes.  A wide synthetic model — eager panels ~100 MiB, far
+    // larger than last-level cache — quantized to narrow codes, then
+    // loaded both ways.  At decode widths the eager path streams the
+    // full panels from RAM every step; the coded path keeps ~7 MiB of
+    // bit-packed codes resident and decodes per KC block (in
+    // parallel) into a cache-sized scratch panel, so it trades
+    // memory-bound panel traffic for compute that fits in cache.
+    let ccfg = ModelConfig {
+        vocab: 256,
+        d_model: 512,
+        n_heads: 8,
+        n_layers: 3,
+        d_ff: 2048,
+        ctx: 384,
+        ..ModelConfig::tiny_test()
+    };
+    let cbase = Weights::random(&ccfg, 23);
+    let mut qrng = Rng::new(40);
+    let mut quants = BTreeMap::new();
+    let mut qnames: Vec<String> = Vec::new();
+    for i in 0..ccfg.n_layers {
+        for s in [
+            "attn.wq", "attn.wk", "attn.wv", "attn.wo", "ffn.w1", "ffn.w3", "ffn.w2",
+        ] {
+            qnames.push(format!("layers.{i}.{s}"));
+        }
+    }
+    qnames.push("head".to_string());
+    for name in &qnames {
+        let (a, n) = ccfg.shape_of(name);
+        let z: Vec<i32> = (0..a * n)
+            .map(|_| ((qrng.gaussian() * 5.0).round() as i32).clamp(-7, 7))
+            .collect();
+        let alphas: Vec<f64> = (0..n).map(|_| 0.01 + 0.01 * qrng.uniform()).collect();
+        let gammas: Vec<f64> = (0..n).map(|_| 0.9 + 0.2 * qrng.uniform()).collect();
+        let t: Vec<f64> = (0..a).map(|_| 0.9 + 0.2 * qrng.uniform()).collect();
+        quants.insert(
+            name.clone(),
+            LayerQuant {
+                a,
+                n,
+                z,
+                alphas,
+                gammas,
+                t,
+                entropy_bits: 0.0,
+                rate_bits: 0.0,
+                dead_cols: Vec::new(),
+            },
+        );
+    }
+    let ccontainer = Container::new("coded_bench", quants);
+    let artifact_code_bytes = ccontainer.code_bytes();
+    let pw_dequant = PackedWeights::from_container(&ccfg, &cbase, &ccontainer, prec)?;
+    let pw_coded = PackedWeights::from_container_coded(&ccfg, &cbase, &ccontainer, prec)?;
+    let dequant_resident = pw_dequant.packed_bytes();
+    let coded_resident = pw_coded.packed_bytes();
+    println!(
+        "coded residency: {:.1} MiB eager panels -> {:.2} MiB coded ({} coded projections; artifact code plane {:.2} MiB)",
+        dequant_resident as f64 / (1024.0 * 1024.0),
+        coded_resident as f64 / (1024.0 * 1024.0),
+        pw_coded.coded_count(),
+        artifact_code_bytes as f64 / (1024.0 * 1024.0),
+    );
+    log.note("dequant bytes resident", dequant_resident as f64);
+    log.note("coded bytes resident", coded_resident as f64);
+    log.note("artifact code bytes", artifact_code_bytes as f64);
+
+    // batched decode at window 256 through each residency: prefill 8
+    // sequences once, then time full-batch decode steps (2 warmup).
+    // The returned token trace doubles as the bit-identity check —
+    // any reconstruction difference would change an argmax somewhere
+    // over 12 greedy steps × 8 sequences × 3 layers.
+    let cbatch = 8usize;
+    let coded_steps = 10usize;
+    let mut crng = Rng::new(6);
+    let cprompt: Vec<i32> = (0..cbatch * window)
+        .map(|_| crng.below(ccfg.vocab) as i32)
+        .collect();
+    let run_decode = |pw: &PackedWeights| -> (f64, Vec<i32>) {
+        let mut caches: Vec<KvCache> =
+            (0..cbatch).map(|_| KvCache::new(&ccfg, ccfg.ctx)).collect();
+        let mut kv: Vec<Option<(&mut KvCache, usize)>> =
+            caches.iter_mut().map(|c| Some((c, window))).collect();
+        let out = prefill_packed(
+            &ccfg,
+            pw,
+            &cprompt,
+            cbatch,
+            window,
+            &mut kv,
+            &ForwardOpts::default(),
+        );
+        drop(kv);
+        let mut last: Vec<i32> = (0..cbatch)
+            .map(|s| argmax_last(out.logits.row(s * window + window - 1)) as i32)
+            .collect();
+        let mut trace = last.clone();
+        let mut elapsed = Duration::ZERO;
+        for step in 0..coded_steps + 2 {
+            let t0 = Instant::now();
+            let logits = {
+                let mut cs: Vec<&mut KvCache> = caches.iter_mut().collect();
+                decode_packed(&ccfg, pw, &last, &mut cs)
+            };
+            if step >= 2 {
+                elapsed += t0.elapsed();
+            }
+            last = (0..cbatch)
+                .map(|s| argmax_last(logits.row(s)) as i32)
+                .collect();
+            trace.extend_from_slice(&last);
+        }
+        let tok_s = (cbatch * coded_steps) as f64 / elapsed.as_secs_f64().max(1e-9);
+        (tok_s, trace)
+    };
+    let (dequant_tok_s, dequant_trace) = run_decode(&pw_dequant);
+    let (coded_tok_s, coded_trace) = run_decode(&pw_coded);
+    assert_eq!(
+        dequant_trace, coded_trace,
+        "coded residency diverged from dequant — bit-identity broken"
+    );
+    let coded_speedup = coded_tok_s / dequant_tok_s.max(1e-9);
+    println!(
+        "coded decode tok/s {window}: {coded_tok_s:.0}  (dequant {dequant_tok_s:.0} tok/s, speedup {coded_speedup:.2}×)"
+    );
+    log.note(&format!("coded decode tok/s {window}"), coded_tok_s);
+    log.note(&format!("dequant decode tok/s {window}"), dequant_tok_s);
+    log.note(&format!("speedup coded decode {window}"), coded_speedup);
+    drop(pw_dequant);
+    drop(pw_coded);
+    drop(cbase);
+
     // ---- end-to-end: quantize the synthetic tiny model, serve it,
     // drive it with concurrent clients
     let (cfg, teacher, corpus) = synthetic_tiny_setup();
@@ -270,6 +435,7 @@ fn main() -> anyhow::Result<()> {
 
     // opt-in hard gates (see module docs)
     if watersic::util::env::flag("WATERSIC_BENCH_ENFORCE") {
+        println!("enforcing entries: {}", GATED_ENTRIES.join(", "));
         let (shape, min) = ("16x512x512", 1.05);
         let got = prepack_speedups
             .iter()
@@ -317,6 +483,30 @@ fn main() -> anyhow::Result<()> {
             rep_over.p99_ms,
             p99_cap
         );
+        // coded residency: the bit-packed panel codes plus decode side
+        // info must stay near the entropy-coded artifact's code plane,
+        // and serving straight from codes must not lose decode
+        // throughput against the eager panels it replaces
+        let max_resident = artifact_code_bytes as f64 * 1.25;
+        if coded_resident as f64 > max_resident {
+            eprintln!(
+                "GATE FAILED: coded bytes resident {coded_resident} > 1.25× artifact code bytes {artifact_code_bytes}"
+            );
+            std::process::exit(1);
+        }
+        println!(
+            "gate ok: coded resident {:.2} MiB ≤ 1.25× artifact code plane {:.2} MiB",
+            coded_resident as f64 / (1024.0 * 1024.0),
+            artifact_code_bytes as f64 / (1024.0 * 1024.0)
+        );
+        let min_coded = 1.0;
+        if coded_speedup < min_coded {
+            eprintln!(
+                "GATE FAILED: coded decode speedup {coded_speedup:.2}× < {min_coded}× at window {window}"
+            );
+            std::process::exit(1);
+        }
+        println!("gate ok: coded decode {coded_speedup:.2}× ≥ {min_coded}× at window {window}");
     }
     Ok(())
 }

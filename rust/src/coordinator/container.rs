@@ -188,6 +188,15 @@ impl Container {
     pub fn size_bytes(&self) -> usize {
         self.to_bytes().len()
     }
+
+    /// Bytes of the code plane alone: the rANS streams, without the
+    /// continuous side information (scales, rescalers, headers).  The
+    /// coded serving path's resident-byte telemetry compares against
+    /// this — its bit-packed panel codes plus decode side info should
+    /// land within a small factor of the entropy-coded artifact.
+    pub fn code_bytes(&self) -> usize {
+        self.quants.values().map(|q| Rans.encode(&q.z).len()).sum()
+    }
 }
 
 #[cfg(test)]

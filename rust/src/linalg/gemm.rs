@@ -1105,6 +1105,542 @@ pub fn matmul_prepacked_with(
     c
 }
 
+// ---------------------------------------------------------------------
+// coded static operands (serve straight from quantized codes)
+
+/// Sub-panel column width of the coded code plane.  Both element
+/// types use NR = 8, so one bit-packed code layout serves f64 and f32
+/// decode alike; the assertions pin that equality so a future NR
+/// change cannot silently shear the coded layout off the pack layout.
+const CODED_NR: usize = 8;
+const _: () = assert!(NR_F64 == CODED_NR, "coded layout assumes f64 NR == 8");
+const _: () = assert!(NR_F32 == CODED_NR, "coded layout assumes f32 NR == 8");
+
+/// Codes per bit-packed group: each group stores one width byte plus
+/// 32 zigzagged codes at that width, so the framing overhead is a
+/// fixed ¼ bit per weight while the width adapts to local magnitude.
+const CODE_GROUP: usize = 32;
+
+#[inline(always)]
+fn zigzag(z: i32) -> u32 {
+    ((z << 1) ^ (z >> 31)) as u32
+}
+
+#[inline(always)]
+fn unzigzag(u: u32) -> i32 {
+    ((u >> 1) as i32) ^ -((u & 1) as i32)
+}
+
+/// Append one group of zigzagged codes: a width byte (bits of the
+/// group maximum), then the values packed LSB-first.
+fn put_code_group(out: &mut Vec<u8>, vals: &[u32]) {
+    let mut width = 0u32;
+    for &v in vals {
+        width = width.max(32 - v.leading_zeros());
+    }
+    out.push(width as u8);
+    if width == 0 {
+        return;
+    }
+    let mut acc = 0u64;
+    let mut nbits = 0u32;
+    for &v in vals {
+        acc |= (v as u64) << nbits;
+        nbits += width;
+        while nbits >= 8 {
+            out.push((acc & 0xff) as u8);
+            acc >>= 8;
+            nbits -= 8;
+        }
+    }
+    if nbits > 0 {
+        out.push((acc & 0xff) as u8);
+    }
+}
+
+/// Streaming reader over one sub-panel's bit-packed code stream.
+struct CodeReader<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl CodeReader<'_> {
+    /// Decode the next group into `out` (length ≤ [`CODE_GROUP`]).
+    #[inline]
+    fn read_group(&mut self, out: &mut [i32]) {
+        let width = u32::from(self.bytes[self.pos]);
+        self.pos += 1;
+        if width == 0 {
+            out.fill(0);
+            return;
+        }
+        let mask = if width == 32 {
+            u64::from(u32::MAX)
+        } else {
+            (1u64 << width) - 1
+        };
+        let mut acc = 0u64;
+        let mut nbits = 0u32;
+        for o in out.iter_mut() {
+            while nbits < width {
+                acc |= u64::from(self.bytes[self.pos]) << nbits;
+                self.pos += 1;
+                nbits += 8;
+            }
+            *o = unzigzag((acc & mask) as u32);
+            acc >>= width;
+            nbits -= width;
+        }
+    }
+}
+
+/// One stacked part of a coded operand: the quantized form of one
+/// weight matrix W in `rows`×`cols` storage (codes row-major), with
+/// the reconstruction Ŵ[i][j] = ((t[i]·z[i·cols+j])·γ[j])·α[j] — the
+/// exact association order of the quantizer's eager dequant, so
+/// decoding inside the pack stage and dequantizing eagerly then
+/// packing produce the same f64 value bit for bit.  Under the
+/// [`CodedPanel::pack_nt_parts`] orientation (operand = Ŵᵀ), storage
+/// rows stack into operand *columns* — the fused-projection layout
+/// ([wq; wk; wv] etc.).
+#[derive(Clone, Copy)]
+pub struct CodedPart<'a> {
+    /// integer codes, row-major `rows`×`cols`
+    pub z: &'a [i32],
+    /// per-storage-row rescalers T (len `rows`)
+    pub t: &'a [f64],
+    /// per-storage-column rescalers γ (len `cols`)
+    pub gammas: &'a [f64],
+    /// per-storage-column grid spacings α (len `cols`)
+    pub alphas: &'a [f64],
+    pub rows: usize,
+    pub cols: usize,
+}
+
+/// Owned side information of one coded part.
+struct CodedPartMeta {
+    /// first operand column of this part in the stacked operand
+    col0: usize,
+    gammas: Vec<f64>,
+    alphas: Vec<f64>,
+}
+
+/// A static GEMM operand kept in *quantized* form: the integer codes
+/// stay resident bit-packed in exactly the (jc, pc, q) sub-panel
+/// traversal order of [`pack_b_panel`], and each (jc, pc) panel is
+/// dequantized on the fly into an L2/L3-resident scratch that feeds
+/// the unchanged [`gemm_pass`] tile sweep.  Resident weight bytes drop
+/// to roughly the artifact size while every dispatch rung and both
+/// precisions inherit the path for free.
+///
+/// Bit-identity: the decode computes `from_f64(((t·z)·γ)·α)` — the
+/// same f64 expression, in the same association order, at the same
+/// panel position as eagerly dequantizing the codes and packing
+/// through [`pack_b_panel`] — and then runs the same tile sweep, so
+/// [`matmul_coded`] equals [`matmul_prepacked`] over the
+/// eagerly-dequantized weights bit for bit, across dispatch rungs,
+/// thread counts, and f32/f64.
+pub struct CodedPanel {
+    /// operand rows (the GEMM inner dimension k = storage cols)
+    k: usize,
+    /// operand cols (sum of part storage rows)
+    n: usize,
+    prec: Precision,
+    parts: Vec<CodedPartMeta>,
+    /// per operand column: the part's row rescaler t
+    col_t: Vec<f64>,
+    /// per operand column: owning part index
+    col_part: Vec<u32>,
+    /// bit-packed zigzag codes, one independent stream per (jc, pc, q)
+    /// sub-panel so panel decode can fan sub-panels over the pool
+    codes: Vec<u8>,
+    /// byte offset of each sub-panel stream in `codes` + end sentinel
+    sub_offsets: Vec<usize>,
+}
+
+impl CodedPanel {
+    /// Pack the quantized parts as the transposed operand of C = A·Ŵᵀ
+    /// (the projection orientation; parts stack top-to-bottom exactly
+    /// like the eager fused operand).  Errors on inconsistent part
+    /// shapes — corrupted code planes must never build a panel that
+    /// could index out of bounds later.
+    pub fn pack_nt_parts(parts: &[CodedPart], prec: Precision) -> Result<CodedPanel, String> {
+        if parts.is_empty() {
+            return Err("coded operand needs at least one part".to_string());
+        }
+        let k = parts[0].cols;
+        let mut n = 0usize;
+        for (idx, p) in parts.iter().enumerate() {
+            if p.cols != k {
+                return Err(format!(
+                    "coded part {idx}: {} storage cols != shared {k}",
+                    p.cols
+                ));
+            }
+            let codes = p.rows.checked_mul(p.cols).ok_or_else(|| {
+                format!("coded part {idx}: {}x{} overflows", p.rows, p.cols)
+            })?;
+            if p.z.len() != codes {
+                return Err(format!(
+                    "coded part {idx}: {} codes for {}x{} storage",
+                    p.z.len(),
+                    p.rows,
+                    p.cols
+                ));
+            }
+            if p.t.len() != p.rows {
+                return Err(format!(
+                    "coded part {idx}: {} row rescalers for {} rows",
+                    p.t.len(),
+                    p.rows
+                ));
+            }
+            if p.gammas.len() != k || p.alphas.len() != k {
+                return Err(format!(
+                    "coded part {idx}: {}γ/{}α for {k} storage cols",
+                    p.gammas.len(),
+                    p.alphas.len()
+                ));
+            }
+            n += p.rows;
+        }
+
+        let mut metas = Vec::with_capacity(parts.len());
+        let mut col_t = Vec::with_capacity(n);
+        let mut col_part = Vec::with_capacity(n);
+        let mut col0 = 0usize;
+        for (idx, p) in parts.iter().enumerate() {
+            metas.push(CodedPartMeta {
+                col0,
+                gammas: p.gammas.to_vec(),
+                alphas: p.alphas.to_vec(),
+            });
+            col_t.extend_from_slice(p.t);
+            col_part.extend(std::iter::repeat_n(idx as u32, p.rows));
+            col0 += p.rows;
+        }
+
+        // encode the code plane in pack traversal order: operand column
+        // j ↔ storage row of its part, operand row kk ↔ storage column
+        let mut codes = Vec::new();
+        let mut sub_offsets = Vec::new();
+        let mut grp = [0u32; CODE_GROUP];
+        for jc0 in (0..n).step_by(NC) {
+            let nc_eff = NC.min(n - jc0);
+            let ncr = nc_eff.div_ceil(CODED_NR) * CODED_NR;
+            for pc0 in (0..k).step_by(KC) {
+                let kc_eff = KC.min(k - pc0);
+                for q in 0..ncr / CODED_NR {
+                    let joff = jc0 + q * CODED_NR;
+                    let valid = CODED_NR.min(jc0 + nc_eff - joff);
+                    sub_offsets.push(codes.len());
+                    let mut gi = 0usize;
+                    for kk in 0..kc_eff {
+                        for cc in 0..valid {
+                            let j = joff + cc;
+                            let p = col_part[j] as usize;
+                            let local = j - metas[p].col0;
+                            grp[gi] = zigzag(parts[p].z[local * k + pc0 + kk]);
+                            gi += 1;
+                            if gi == CODE_GROUP {
+                                put_code_group(&mut codes, &grp);
+                                gi = 0;
+                            }
+                        }
+                    }
+                    if gi > 0 {
+                        put_code_group(&mut codes, &grp[..gi]);
+                    }
+                }
+            }
+        }
+        sub_offsets.push(codes.len());
+        codes.shrink_to_fit();
+
+        Ok(CodedPanel {
+            k,
+            n,
+            prec,
+            parts: metas,
+            col_t,
+            col_part,
+            codes,
+            sub_offsets,
+        })
+    }
+
+    /// Operand rows after the transpose (the GEMM inner dimension).
+    pub fn op_rows(&self) -> usize {
+        self.k
+    }
+
+    /// Operand cols (the output width).
+    pub fn op_cols(&self) -> usize {
+        self.n
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.prec
+    }
+
+    /// Resident bytes of the coded operand: the bit-packed code plane
+    /// plus every piece of side information held for decode (f64 row/
+    /// column rescalers, part map, sub-panel offsets).  This — not the
+    /// code plane alone — is what the serving telemetry compares to
+    /// the artifact size.
+    pub fn bytes(&self) -> usize {
+        self.codes.len()
+            + self.sub_offsets.len() * std::mem::size_of::<usize>()
+            + self.col_t.len() * std::mem::size_of::<f64>()
+            + self.col_part.len() * std::mem::size_of::<u32>()
+            + self
+                .parts
+                .iter()
+                .map(|p| (p.gammas.len() + p.alphas.len()) * std::mem::size_of::<f64>())
+                .sum::<usize>()
+    }
+
+    /// Decode one (jc, pc) panel into `dst` in the exact
+    /// [`pack_b_panel`] layout, fanning the independent q sub-panels
+    /// over the pool: at decode widths the tile sweep is a single
+    /// MC block (serial), so the decode itself must parallelize for
+    /// the coded path to beat streaming eager panels from DRAM.
+    #[allow(clippy::too_many_arguments)]
+    fn decode_panel<T: Element>(
+        &self,
+        sub0: usize,
+        jc0: usize,
+        nc_eff: usize,
+        pc0: usize,
+        kc_eff: usize,
+        dst: &mut [T],
+        threads: usize,
+    ) {
+        debug_assert_eq!(T::NR, CODED_NR, "coded layout pins NR == 8");
+        let nq = nc_eff.div_ceil(CODED_NR);
+        debug_assert_eq!(dst.len(), nq * CODED_NR * kc_eff, "coded panel buffer size");
+        let dshared = AtomicPtr::new(dst.as_mut_ptr());
+        parallel_ranges(nq, threads, |range| {
+            let base = dshared.load(Ordering::Relaxed);
+            for q in range {
+                let off = q * CODED_NR * kc_eff;
+                // check-aliasing: this task owns sub-panel q's slice
+                crate::util::aliasing::claim(
+                    base.wrapping_add(off) as *const T,
+                    CODED_NR * kc_eff,
+                );
+                let joff = jc0 + q * CODED_NR;
+                let valid = CODED_NR.min(jc0 + nc_eff - joff);
+                // SAFETY: sub-panels occupy disjoint `CODED_NR * kc_eff`
+                // slices of `dst`, each claimed by exactly one task.
+                let sub = unsafe {
+                    std::slice::from_raw_parts_mut(base.add(off), CODED_NR * kc_eff)
+                };
+                self.decode_sub::<T>(sub0 + q, joff, valid, pc0, kc_eff, sub);
+            }
+        });
+    }
+
+    /// Decode one q sub-panel (NR interleaved operand columns) into
+    /// `dst`, padding columns past `valid` with zero exactly like
+    /// [`pack_b_panel`].
+    fn decode_sub<T: Element>(
+        &self,
+        sub: usize,
+        joff: usize,
+        valid: usize,
+        pc0: usize,
+        kc_eff: usize,
+        dst: &mut [T],
+    ) {
+        let mut rd = CodeReader {
+            bytes: &self.codes[self.sub_offsets[sub]..self.sub_offsets[sub + 1]],
+            pos: 0,
+        };
+        let mut tcol = [0.0f64; CODED_NR];
+        for cc in 0..valid {
+            tcol[cc] = self.col_t[joff + cc];
+        }
+        let mut grp = [0i32; CODE_GROUP];
+        let mut remaining = valid * kc_eff;
+        let mut gi = 0usize;
+        let mut gn = 0usize;
+        // hot path: every column of the sub-panel in one part (part
+        // boundaries are storage-row counts, usually multiples of NR),
+        // so γ/α are scalars per kk
+        let one_part = valid > 0
+            && (1..valid).all(|cc| {
+                self.col_part[joff + cc] == self.col_part[joff]
+            });
+        if one_part {
+            let meta = &self.parts[self.col_part[joff] as usize];
+            for kk in 0..kc_eff {
+                let g = meta.gammas[pc0 + kk];
+                let al = meta.alphas[pc0 + kk];
+                let d = kk * CODED_NR;
+                for cc in 0..valid {
+                    if gi == gn {
+                        gn = remaining.min(CODE_GROUP);
+                        rd.read_group(&mut grp[..gn]);
+                        remaining -= gn;
+                        gi = 0;
+                    }
+                    let zf = f64::from(grp[gi]);
+                    gi += 1;
+                    dst[d + cc] = T::from_f64(((tcol[cc] * zf) * g) * al);
+                }
+                for cc in valid..CODED_NR {
+                    dst[d + cc] = T::ZERO;
+                }
+            }
+        } else {
+            for kk in 0..kc_eff {
+                let d = kk * CODED_NR;
+                for cc in 0..valid {
+                    if gi == gn {
+                        gn = remaining.min(CODE_GROUP);
+                        rd.read_group(&mut grp[..gn]);
+                        remaining -= gn;
+                        gi = 0;
+                    }
+                    let zf = f64::from(grp[gi]);
+                    gi += 1;
+                    let meta = &self.parts[self.col_part[joff + cc] as usize];
+                    dst[d + cc] = T::from_f64(
+                        ((tcol[cc] * zf) * meta.gammas[pc0 + kk]) * meta.alphas[pc0 + kk],
+                    );
+                }
+                for cc in valid..CODED_NR {
+                    dst[d + cc] = T::ZERO;
+                }
+            }
+        }
+        debug_assert_eq!(remaining, 0, "coded sub-panel code count");
+        debug_assert_eq!(
+            rd.pos,
+            self.sub_offsets[sub + 1] - self.sub_offsets[sub],
+            "coded sub-panel stream length"
+        );
+    }
+}
+
+/// Blocked GEMM against a coded operand: identical to
+/// [`gemm_driver_prepacked`] with the offset lookup replaced by a
+/// per-(jc, pc) panel decode into a reused scratch buffer.
+///
+/// # Safety
+/// Same contract as [`gemm_driver`].
+unsafe fn gemm_driver_coded<T: Element>(
+    a: Panel,
+    cp: &CodedPanel,
+    c: *mut f64,
+    ldc: usize,
+    threads: usize,
+    backend: SimdBackend,
+) {
+    let (m, k) = (a.rows, a.cols);
+    let n = cp.n;
+    debug_assert_eq!(cp.k, k, "coded gemm inner-dim mismatch");
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        for i in 0..m {
+            std::slice::from_raw_parts_mut(c.add(i * ldc), n).fill(0.0);
+        }
+        return;
+    }
+    let cshared = AtomicPtr::new(c);
+    // one decode scratch reused across every (jc, pc) panel — the
+    // decode loops overwrite every slot they use (padding explicit)
+    let mut scratch =
+        vec![T::ZERO; (NC.min(n).div_ceil(CODED_NR) * CODED_NR) * KC.min(k)];
+    let mut sub_idx = 0usize;
+    for jc0 in (0..n).step_by(NC) {
+        let nc_eff = NC.min(n - jc0);
+        let ncr = nc_eff.div_ceil(CODED_NR) * CODED_NR;
+        for pc0 in (0..k).step_by(KC) {
+            let kc_eff = KC.min(k - pc0);
+            let store = pc0 == 0;
+            cp.decode_panel::<T>(
+                sub_idx,
+                jc0,
+                nc_eff,
+                pc0,
+                kc_eff,
+                &mut scratch[..ncr * kc_eff],
+                threads,
+            );
+            sub_idx += ncr / CODED_NR;
+            gemm_pass::<T>(
+                a,
+                &scratch[..ncr * kc_eff],
+                &cshared,
+                ldc,
+                jc0,
+                nc_eff,
+                pc0,
+                kc_eff,
+                store,
+                1.0,
+                threads,
+                backend,
+            );
+        }
+    }
+}
+
+/// C = A · Ŵᵀ against a [`CodedPanel`], decoding the quantized codes
+/// per KC block inside the pack stage — bit-identical to
+/// [`matmul_prepacked`] over the eagerly-dequantized weights.
+pub fn matmul_coded(a: &Mat, cp: &CodedPanel) -> Mat {
+    // decode work is k·n regardless of m, so the fan-out policy sees
+    // at least a decode-batch-sized m — a 1-row decode step must still
+    // parallelize the panel decode
+    matmul_coded_with(
+        a,
+        cp,
+        threads_for(a.rows.max(8) * cp.op_cols() * a.cols),
+        simd_backend(),
+    )
+}
+
+/// [`matmul_coded`] with an explicit thread count and kernel backend —
+/// exposed for the bit-identity tests and the benches.
+pub fn matmul_coded_with(
+    a: &Mat,
+    cp: &CodedPanel,
+    threads: usize,
+    backend: SimdBackend,
+) -> Mat {
+    assert_eq!(a.cols, cp.op_rows(), "coded gemm shape mismatch");
+    let mut c = Mat::zeros(a.rows, cp.op_cols());
+    let ldc = c.cols.max(1);
+    // SAFETY: c.data is exactly rows×cols and exclusively borrowed.
+    unsafe {
+        match cp.precision() {
+            Precision::F64 => gemm_driver_coded::<f64>(
+                Panel::normal(a),
+                cp,
+                c.data.as_mut_ptr(),
+                ldc,
+                threads,
+                backend,
+            ),
+            Precision::F32 => gemm_driver_coded::<f32>(
+                Panel::normal(a),
+                cp,
+                c.data.as_mut_ptr(),
+                ldc,
+                threads,
+                backend,
+            ),
+        }
+    }
+    debug_check_overflow(&c);
+    c
+}
+
 /// Work-size parallelism policy shared by every dense kernel layer
 /// (gemm wrappers here, the blocked Cholesky/TRSM in `chol`): fan out
 /// only past the point where pool handoff costs less than the flops.
@@ -1965,6 +2501,213 @@ mod tests {
         let pb = PrepackedB::pack(&b, Precision::F64);
         let c = matmul_prepacked(&Mat::zeros(0, 7), &pb);
         assert_eq!((c.rows, c.cols), (0, 5));
+    }
+
+    /// Owned storage behind a [`CodedPart`] view, plus the eager
+    /// dequant the coded path must reproduce bit for bit.
+    struct OwnedPart {
+        z: Vec<i32>,
+        t: Vec<f64>,
+        gammas: Vec<f64>,
+        alphas: Vec<f64>,
+        rows: usize,
+        cols: usize,
+    }
+
+    impl OwnedPart {
+        fn random(rows: usize, cols: usize, rng: &mut Rng) -> OwnedPart {
+            OwnedPart {
+                z: (0..rows * cols)
+                    .map(|_| (rng.gaussian() * 4.0).round() as i32)
+                    .collect(),
+                t: (0..rows).map(|_| rng.gaussian().abs() + 0.1).collect(),
+                gammas: (0..cols).map(|_| rng.gaussian().abs() + 0.1).collect(),
+                alphas: (0..cols).map(|_| rng.gaussian().abs() + 0.1).collect(),
+                rows,
+                cols,
+            }
+        }
+
+        fn view(&self) -> CodedPart<'_> {
+            CodedPart {
+                z: &self.z,
+                t: &self.t,
+                gammas: &self.gammas,
+                alphas: &self.alphas,
+                rows: self.rows,
+                cols: self.cols,
+            }
+        }
+
+        fn dequant(&self) -> Mat {
+            Mat::from_fn(self.rows, self.cols, |i, j| {
+                ((self.t[i] * f64::from(self.z[i * self.cols + j])) * self.gammas[j])
+                    * self.alphas[j]
+            })
+        }
+    }
+
+    /// Vertical stack of the parts' eager dequants — the fused
+    /// operand the coded panel represents transposed.
+    fn stack_dequant(parts: &[OwnedPart]) -> Mat {
+        let cols = parts[0].cols;
+        let rows = parts.iter().map(|p| p.rows).sum();
+        let mats: Vec<Mat> = parts.iter().map(|p| p.dequant()).collect();
+        Mat::from_fn(rows, cols, |i, j| {
+            let mut i = i;
+            for (p, m) in parts.iter().zip(&mats) {
+                if i < p.rows {
+                    return m[(i, j)];
+                }
+                i -= p.rows;
+            }
+            unreachable!()
+        })
+    }
+
+    #[test]
+    fn coded_matches_prepacked_over_dequant_bitwise() {
+        // the correctness pin of the coded path: decode-inside-pack
+        // computes the same f64 dequant expression at the same panel
+        // position as eager dequant + pack_nt, and runs the same tile
+        // sweep — so equality is bitwise, across tile-straddling
+        // shapes, thread counts, dispatch rungs, and both precisions
+        let mut rng = Rng::new(80);
+        for (m, k, n) in [
+            (5, 70, 9),
+            (63, 65, 67),
+            (129, 257, 33),
+            (66, 40, 1030),
+            (16, 512, 96),
+            (1, 512, 512),
+        ] {
+            let a = randm(m, k, &mut rng);
+            let part = OwnedPart::random(n, k, &mut rng);
+            let w = part.dequant();
+            let auto = simd_backend();
+            for prec in [Precision::F64, Precision::F32] {
+                let pb = PrepackedB::pack_nt(&w, prec);
+                let cp = CodedPanel::pack_nt_parts(&[part.view()], prec).unwrap();
+                assert_eq!((cp.op_rows(), cp.op_cols()), (k, n));
+                assert_eq!(cp.precision(), prec);
+                let c_ref = matmul_prepacked_with(&a, &pb, 3, auto);
+                let c1 = matmul_coded_with(&a, &cp, 1, auto);
+                let c8 = matmul_coded_with(&a, &cp, 8, auto);
+                let cs = matmul_coded_with(&a, &cp, 4, SimdBackend::Scalar);
+                assert_eq!(
+                    c_ref.data,
+                    c1.data,
+                    "{m}x{k}x{n} {} coded vs prepacked-dequant",
+                    prec.name()
+                );
+                assert_eq!(c1.data, c8.data, "{m}x{k}x{n} threads");
+                assert_eq!(c1.data, cs.data, "{m}x{k}x{n} scalar rung");
+            }
+        }
+    }
+
+    #[test]
+    fn coded_multipart_fused_matches_stacked_dequant() {
+        // fused projections stack parts whose row counts need not be
+        // NR-multiples, so part boundaries land mid-sub-panel and the
+        // decode must switch γ/α tables per column
+        let mut rng = Rng::new(81);
+        let k = 70;
+        let parts = [
+            OwnedPart::random(13, k, &mut rng),
+            OwnedPart::random(11, k, &mut rng),
+            OwnedPart::random(10, k, &mut rng),
+        ];
+        let w = stack_dequant(&parts);
+        let a = randm(9, k, &mut rng);
+        let views: Vec<CodedPart> = parts.iter().map(|p| p.view()).collect();
+        for prec in [Precision::F64, Precision::F32] {
+            let pb = PrepackedB::pack_nt(&w, prec);
+            let cp = CodedPanel::pack_nt_parts(&views, prec).unwrap();
+            assert_eq!((cp.op_rows(), cp.op_cols()), (k, 34));
+            assert_eq!(
+                matmul_prepacked(&a, &pb).data,
+                matmul_coded(&a, &cp).data,
+                "{} multi-part",
+                prec.name()
+            );
+        }
+    }
+
+    #[test]
+    fn coded_extreme_codes_roundtrip_bitwise() {
+        // i32 extremes force 32-bit groups through the zigzag packer;
+        // the panel must still reproduce eager dequant bit for bit
+        let mut rng = Rng::new(82);
+        let (k, n) = (40, 17);
+        let mut part = OwnedPart::random(n, k, &mut rng);
+        part.z[0] = i32::MAX;
+        part.z[1] = i32::MIN;
+        part.z[k] = -1;
+        let w = part.dequant();
+        let pb = PrepackedB::pack_nt(&w, Precision::F64);
+        let cp = CodedPanel::pack_nt_parts(&[part.view()], Precision::F64).unwrap();
+        let a = randm(3, k, &mut rng);
+        assert_eq!(matmul_prepacked(&a, &pb).data, matmul_coded(&a, &cp).data);
+    }
+
+    #[test]
+    fn coded_degenerate_shapes() {
+        let mut rng = Rng::new(83);
+        // empty inner dimension → exact zeros of the right shape
+        let part = OwnedPart::random(4, 0, &mut rng);
+        let cp = CodedPanel::pack_nt_parts(&[part.view()], Precision::F64).unwrap();
+        let c = matmul_coded(&Mat::zeros(3, 0), &cp);
+        assert_eq!((c.rows, c.cols), (3, 4));
+        assert!(c.data.iter().all(|&x| x == 0.0));
+        // empty output rows
+        let part = OwnedPart::random(5, 7, &mut rng);
+        let cp = CodedPanel::pack_nt_parts(&[part.view()], Precision::F64).unwrap();
+        let c = matmul_coded(&Mat::zeros(0, 7), &cp);
+        assert_eq!((c.rows, c.cols), (0, 5));
+    }
+
+    #[test]
+    fn coded_rejects_inconsistent_parts() {
+        let mut rng = Rng::new(84);
+        let good = OwnedPart::random(6, 10, &mut rng);
+        assert!(CodedPanel::pack_nt_parts(&[], Precision::F64).is_err());
+        // truncated code plane
+        let mut bad = good.view();
+        bad.z = &good.z[..good.z.len() - 1];
+        assert!(CodedPanel::pack_nt_parts(&[bad], Precision::F64).is_err());
+        // wrong row-rescaler count
+        let mut bad = good.view();
+        bad.t = &good.t[..good.t.len() - 1];
+        assert!(CodedPanel::pack_nt_parts(&[bad], Precision::F64).is_err());
+        // wrong column-rescaler counts
+        let mut bad = good.view();
+        bad.gammas = &good.gammas[..good.gammas.len() - 1];
+        assert!(CodedPanel::pack_nt_parts(&[bad], Precision::F64).is_err());
+        let mut bad = good.view();
+        bad.alphas = &good.alphas[..good.alphas.len() - 1];
+        assert!(CodedPanel::pack_nt_parts(&[bad], Precision::F64).is_err());
+        // parts with mismatched storage widths can't stack
+        let other = OwnedPart::random(6, 11, &mut rng);
+        assert!(
+            CodedPanel::pack_nt_parts(&[good.view(), other.view()], Precision::F64).is_err()
+        );
+    }
+
+    #[test]
+    fn coded_bytes_near_code_plane_size() {
+        // small-magnitude codes bit-pack far below the eager panels;
+        // the side information (f64 rescalers per row/col) is the floor
+        let mut rng = Rng::new(85);
+        let part = OwnedPart::random(256, 512, &mut rng);
+        let cp = CodedPanel::pack_nt_parts(&[part.view()], Precision::F64).unwrap();
+        let pb = PrepackedB::pack_nt(&part.dequant(), Precision::F64);
+        assert!(
+            cp.bytes() * 4 < pb.bytes(),
+            "coded {} vs eager {} bytes",
+            cp.bytes(),
+            pb.bytes()
+        );
     }
 
     #[test]

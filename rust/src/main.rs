@@ -87,6 +87,9 @@ ENGINE OPTIONS (env):
   WATERSIC_SERVE_MAX_CONNS=N       concurrent front-door connection cap (default 1024)
   WATERSIC_SERVE_IDLE_MS=N         per-connection idle timeout (default 60000)
   WATERSIC_SERVE_WRITE_MS=N        per-connection write-stall timeout (default 10000)
+  WATERSIC_SERVE_WEIGHTS={dequant,coded}  weight residency: eager panels or quantized
+                                   codes decoded inside the GEMM pack stage; responses
+                                   are byte-identical either way (default dequant)
   WATERSIC_FAULT=SPEC              deterministic fault plan (fault-inject builds only)
   WATERSIC_BENCH_DIR=DIR           where cargo bench writes BENCH_*.json (default .)
   WATERSIC_BENCH_ENFORCE=1         turn bench speedup targets into hard gates
@@ -343,8 +346,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     };
     println!(
-        "prepacked : {:.1} KiB of weight panels (packed once, never re-packed)",
-        server.packed_bytes() as f64 / 1024.0
+        "prepacked : {:.1} KiB resident weight bytes ({} projections serving \
+         straight from quantized codes)",
+        server.packed_bytes() as f64 / 1024.0,
+        server.coded_count()
     );
 
     let clients = args.usize_or("loadtest", 0)?;

@@ -198,7 +198,14 @@ pub struct ForwardOut {
 }
 
 /// Where the forward's projection GEMMs read their weights from: the
-/// plain per-call-packing path, or the serving path's prepacked panels.
+/// plain per-call-packing path, or the serving path's packed
+/// projections.  The packed arm is itself two resident forms behind
+/// one seam — eager dequantized panels or bit-packed quantized codes
+/// decoded inside the pack stage
+/// ([`crate::model::weights::PackedProjection`], selected by the
+/// `WATERSIC_SERVE_WEIGHTS` engine option at load) — which project
+/// bit-identically, so nothing above this enum can observe the
+/// residency mode.
 enum WeightSource<'a> {
     Plain(&'a Weights),
     Packed(&'a PackedWeights),

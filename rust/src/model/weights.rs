@@ -8,8 +8,11 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::container::Container;
-use crate::linalg::gemm::{matmul_prepacked, Precision, PrepackedB};
+use crate::linalg::gemm::{
+    matmul_coded, matmul_prepacked, CodedPanel, CodedPart, Precision, PrepackedB,
+};
 use crate::linalg::Mat;
+use crate::quant::LayerQuant;
 use crate::util::npy::{Npy, NpyData};
 
 use super::ModelConfig;
@@ -159,8 +162,42 @@ pub struct PackedWeights {
     /// embed + norm gains (+ anything never routed through a
     /// projection); packed matrices are removed from `mats`
     pub weights: Weights,
-    pub packed: BTreeMap<String, PrepackedB>,
+    pub packed: BTreeMap<String, PackedProjection>,
     pub precision: Precision,
+}
+
+/// One projection operand of the packed forward, in either resident
+/// form: eagerly dequantized panels ([`PrepackedB`]) or the quantized
+/// codes themselves ([`CodedPanel`], decoded per KC block inside the
+/// pack stage).  The two project **bit-identically** — `matmul_coded`
+/// reproduces `matmul_prepacked` over the eager dequant exactly — so
+/// the choice is purely a residency/bandwidth trade, switched at load
+/// time by the `WATERSIC_SERVE_WEIGHTS` engine option.
+pub enum PackedProjection {
+    Dense(PrepackedB),
+    Coded(CodedPanel),
+}
+
+impl PackedProjection {
+    /// x · Wᵀ through whichever resident form this projection holds.
+    pub fn project(&self, x: &Mat) -> Mat {
+        match self {
+            PackedProjection::Dense(pb) => matmul_prepacked(x, pb),
+            PackedProjection::Coded(cp) => matmul_coded(x, cp),
+        }
+    }
+
+    /// Resident bytes of this operand (panels or codes + side info).
+    pub fn bytes(&self) -> usize {
+        match self {
+            PackedProjection::Dense(pb) => pb.bytes(),
+            PackedProjection::Coded(cp) => cp.bytes(),
+        }
+    }
+
+    pub fn is_coded(&self) -> bool {
+        matches!(self, PackedProjection::Coded(_))
+    }
 }
 
 impl PackedWeights {
@@ -192,7 +229,7 @@ impl PackedWeights {
                 let stacked = Self::stack_rows(&weights, &names);
                 packed.insert(
                     format!("{p}{fused}"),
-                    PrepackedB::pack_nt(&stacked, prec),
+                    PackedProjection::Dense(PrepackedB::pack_nt(&stacked, prec)),
                 );
                 for n in &names {
                     weights.mats.remove(n);
@@ -202,12 +239,12 @@ impl PackedWeights {
                 let name = format!("{p}{s}");
                 let pb = PrepackedB::pack_nt(weights.get(&name), prec);
                 weights.mats.remove(&name);
-                packed.insert(name, pb);
+                packed.insert(name, PackedProjection::Dense(pb));
             }
         }
         let pb = PrepackedB::pack_nt(weights.get("head"), prec);
         weights.mats.remove("head");
-        packed.insert("head".to_string(), pb);
+        packed.insert("head".to_string(), PackedProjection::Dense(pb));
         PackedWeights {
             weights,
             packed,
@@ -218,13 +255,17 @@ impl PackedWeights {
     /// Stack same-width matrices on top of each other — the fused
     /// projection operand ([wq; wk; wv] etc.).
     fn stack_rows(w: &Weights, names: &[String]) -> Mat {
-        let cols = w.get(&names[0]).cols;
-        let rows: usize = names.iter().map(|n| w.get(n).rows).sum();
+        let mats: Vec<&Mat> = names.iter().map(|n| w.get(n)).collect();
+        Self::stack_mats(&mats)
+    }
+
+    fn stack_mats(mats: &[&Mat]) -> Mat {
+        let cols = mats[0].cols;
+        let rows: usize = mats.iter().map(|m| m.rows).sum();
         let mut out = Mat::zeros(rows, cols);
         let mut r0 = 0;
-        for n in names {
-            let m = w.get(n);
-            assert_eq!(m.cols, cols, "{n}: fused operands must share width");
+        for m in mats {
+            assert_eq!(m.cols, cols, "fused operands must share width");
             for r in 0..m.rows {
                 out.row_mut(r0 + r).copy_from_slice(m.row(r));
             }
@@ -265,20 +306,127 @@ impl PackedWeights {
         Ok(Self::new(cfg, student, prec))
     }
 
+    /// Build the serving representation straight from the container's
+    /// quantized codes: each fully-quantized projection becomes a
+    /// [`CodedPanel`] (codes stay bit-packed resident; dequant happens
+    /// per KC block inside the pack stage), so resident weight bytes
+    /// drop to roughly the artifact size.  A fused group with any
+    /// unquantized member — and any matrix absent from the container —
+    /// falls back to the eager [`PrepackedB`] form.  Either way every
+    /// projection is **bit-identical** to [`PackedWeights::from_container`]
+    /// at the same precision, so forwards match to the bit.
+    pub fn from_container_coded(
+        cfg: &ModelConfig,
+        base: &Weights,
+        container: &Container,
+        prec: Precision,
+    ) -> Result<PackedWeights> {
+        base.validate(cfg)?;
+        for (name, q) in &container.quants {
+            if !base.mats.contains_key(name) {
+                bail!("container matrix {name} unknown to the base weights");
+            }
+            let (a, n) = cfg.shape_of(name);
+            if (q.a, q.n) != (a, n) {
+                bail!("{name}: quantized shape {}x{} != expected {a}x{n}", q.a, q.n);
+            }
+        }
+        let mut weights = Weights {
+            mats: base.mats.clone(),
+            vecs: base.vecs.clone(),
+        };
+        let mut packed = BTreeMap::new();
+        for i in 0..cfg.n_layers {
+            let p = format!("layers.{i}.");
+            let fused_groups: [(&str, &[&str]); 2] = [
+                ("attn.qkv", &["attn.wq", "attn.wk", "attn.wv"]),
+                ("ffn.w13", &["ffn.w1", "ffn.w3"]),
+            ];
+            for (fused, parts) in fused_groups {
+                let names: Vec<String> =
+                    parts.iter().map(|s| format!("{p}{s}")).collect();
+                packed.insert(
+                    format!("{p}{fused}"),
+                    Self::coded_or_dense(&mut weights, container, &names, prec)?,
+                );
+            }
+            for s in ["attn.wo", "ffn.w2"] {
+                let name = format!("{p}{s}");
+                let proj =
+                    Self::coded_or_dense(&mut weights, container, std::slice::from_ref(&name), prec)?;
+                packed.insert(name, proj);
+            }
+        }
+        let head = "head".to_string();
+        let proj =
+            Self::coded_or_dense(&mut weights, container, std::slice::from_ref(&head), prec)?;
+        packed.insert(head, proj);
+        Ok(PackedWeights {
+            weights,
+            packed,
+            precision: prec,
+        })
+    }
+
+    /// One projection group of the coded load path: a [`CodedPanel`]
+    /// when every member is quantized, the eager dense pack otherwise.
+    /// The members' raw storage is dropped from `weights` either way.
+    fn coded_or_dense(
+        weights: &mut Weights,
+        container: &Container,
+        names: &[String],
+        prec: Precision,
+    ) -> Result<PackedProjection> {
+        let proj = if names.iter().all(|n| container.quants.contains_key(n)) {
+            let quants: Vec<&LayerQuant> =
+                names.iter().map(|n| &container.quants[n]).collect();
+            let parts: Vec<CodedPart> = quants
+                .iter()
+                .map(|q| CodedPart {
+                    z: &q.z,
+                    t: &q.t,
+                    gammas: &q.gammas,
+                    alphas: &q.alphas,
+                    rows: q.a,
+                    cols: q.n,
+                })
+                .collect();
+            PackedProjection::Coded(
+                CodedPanel::pack_nt_parts(&parts, prec)
+                    .map_err(|e| anyhow::anyhow!("{}: {e}", names.join("+")))?,
+            )
+        } else {
+            // mixed or unquantized group: eager dequant, bit-compatible
+            // dense pack (matmul_coded ≡ matmul_prepacked over dequant)
+            let mats: Vec<Mat> = names
+                .iter()
+                .map(|n| match container.quants.get(n) {
+                    Some(q) => q.dequant(),
+                    None => weights.get(n).clone(),
+                })
+                .collect();
+            let refs: Vec<&Mat> = mats.iter().collect();
+            PackedProjection::Dense(PrepackedB::pack_nt(&Self::stack_mats(&refs), prec))
+        };
+        for n in names {
+            weights.mats.remove(n);
+        }
+        Ok(proj)
+    }
+
     /// Projection through the prepacked panels: x · Wᵀ for the named
     /// matrix, bit-identical to the pack-per-call driver.  QKV and FFN
     /// input matrices live only in fused form — use
     /// [`PackedWeights::project_qkv`] / [`PackedWeights::project_ffn_in`].
     pub fn project(&self, x: &Mat, name: &str) -> Mat {
-        matmul_prepacked(x, &self.packed[name])
+        self.packed[name].project(x)
     }
 
     /// Fused QKV projection: one GEMM against the `attn.qkv` panels,
     /// split into (q, k, v).  Bit-identical to three separate
     /// projections — the driver's per-column independence.
     pub fn project_qkv(&self, x: &Mat, layer_prefix: &str) -> (Mat, Mat, Mat) {
-        let fused =
-            matmul_prepacked(x, &self.packed[&format!("{layer_prefix}attn.qkv")]);
+        let fused = self.packed[&format!("{layer_prefix}attn.qkv")].project(x);
         let d = fused.cols / 3;
         (
             Self::col_slice(&fused, 0, d),
@@ -290,8 +438,7 @@ impl PackedWeights {
     /// Fused FFN input projection: one GEMM against the `ffn.w13`
     /// panels, split into (w1·x, w3·x).
     pub fn project_ffn_in(&self, x: &Mat, layer_prefix: &str) -> (Mat, Mat) {
-        let fused =
-            matmul_prepacked(x, &self.packed[&format!("{layer_prefix}ffn.w13")]);
+        let fused = self.packed[&format!("{layer_prefix}ffn.w13")].project(x);
         let f = fused.cols / 2;
         (Self::col_slice(&fused, 0, f), Self::col_slice(&fused, f, f))
     }
@@ -304,9 +451,16 @@ impl PackedWeights {
         out
     }
 
-    /// Total bytes held by the packed panels (load-time telemetry).
+    /// Total bytes held by the packed projections (load-time telemetry):
+    /// eager panel bytes for dense entries, code-plane + side-info bytes
+    /// for coded ones.
     pub fn packed_bytes(&self) -> usize {
         self.packed.values().map(|p| p.bytes()).sum()
+    }
+
+    /// How many projections are serving straight from quantized codes.
+    pub fn coded_count(&self) -> usize {
+        self.packed.values().filter(|p| p.is_coded()).count()
     }
 }
 
@@ -393,6 +547,126 @@ mod tests {
                 assert_eq!(got.data, want.data, "{name} ({rows} rows)");
             }
         }
+    }
+
+    fn fake_quant(a: usize, n: usize, seed: u64) -> crate::quant::LayerQuant {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        crate::quant::LayerQuant {
+            a,
+            n,
+            z: (0..a * n)
+                .map(|_| (rng.gaussian() * 3.0).round() as i32)
+                .collect(),
+            alphas: (0..n).map(|_| 0.1 + rng.uniform()).collect(),
+            gammas: vec![1.0; n],
+            t: (0..a).map(|_| 0.9 + 0.2 * rng.uniform()).collect(),
+            entropy_bits: 2.0,
+            rate_bits: 2.1,
+            dead_cols: vec![],
+        }
+    }
+
+    /// A container quantizing every projection of the tiny config.
+    fn full_container(cfg: &ModelConfig) -> Container {
+        let mut quants = BTreeMap::new();
+        for (i, name) in cfg.quantizable.iter().enumerate() {
+            let (a, n) = cfg.shape_of(name);
+            quants.insert(name.clone(), fake_quant(a, n, 100 + i as u64));
+        }
+        Container::new(&cfg.name, quants)
+    }
+
+    #[test]
+    fn coded_load_projects_bit_identical_to_dequant_load() {
+        // the serving-mode pin: both container load paths must project
+        // bit-identically (coded decode ≡ eager dequant + pack), with
+        // the head (unquantized here) falling back to the dense form
+        let cfg = ModelConfig::tiny_test();
+        let base = Weights::random(&cfg, 31);
+        let container = full_container(&cfg);
+        let mut rng = crate::util::rng::Rng::new(7);
+        for prec in [Precision::F64, Precision::F32] {
+            let pw_deq =
+                PackedWeights::from_container(&cfg, &base, &container, prec).unwrap();
+            let pw_cod =
+                PackedWeights::from_container_coded(&cfg, &base, &container, prec)
+                    .unwrap();
+            assert_eq!(pw_cod.packed.len(), pw_deq.packed.len());
+            // qkv + w13 + wo + w2 coded per layer; head stays dense
+            assert_eq!(pw_cod.coded_count(), 4 * cfg.n_layers);
+            assert_eq!(pw_deq.coded_count(), 0);
+            assert!(
+                pw_cod.packed_bytes() < pw_deq.packed_bytes(),
+                "coded {} vs dequant {} resident bytes",
+                pw_cod.packed_bytes(),
+                pw_deq.packed_bytes()
+            );
+            for rows in [1usize, 9] {
+                let x = Mat::from_fn(rows, cfg.d_model, |_, _| rng.gaussian());
+                let (q1, k1, v1) = pw_deq.project_qkv(&x, "layers.0.");
+                let (q2, k2, v2) = pw_cod.project_qkv(&x, "layers.0.");
+                assert_eq!(q1.data, q2.data);
+                assert_eq!(k1.data, k2.data);
+                assert_eq!(v1.data, v2.data);
+                let (a1, b1) = pw_deq.project_ffn_in(&x, "layers.0.");
+                let (a2, b2) = pw_cod.project_ffn_in(&x, "layers.0.");
+                assert_eq!(a1.data, a2.data);
+                assert_eq!(b1.data, b2.data);
+                for name in ["layers.0.attn.wo", "layers.0.ffn.w2"] {
+                    assert_eq!(
+                        pw_deq.project(&x, name).data,
+                        pw_cod.project(&x, name).data,
+                        "{name}"
+                    );
+                }
+                let xh = Mat::from_fn(rows, cfg.d_model, |_, _| rng.gaussian());
+                assert_eq!(
+                    pw_deq.project(&xh, "head").data,
+                    pw_cod.project(&xh, "head").data
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn coded_load_mixed_group_falls_back_dense() {
+        // drop one QKV member from the container: the fused group can't
+        // serve coded, but the projection must still match the dequant
+        // path bit for bit through the dense fallback
+        let cfg = ModelConfig::tiny_test();
+        let base = Weights::random(&cfg, 33);
+        let mut container = full_container(&cfg);
+        container.quants.remove("layers.0.attn.wk");
+        let pw_deq =
+            PackedWeights::from_container(&cfg, &base, &container, Precision::F64)
+                .unwrap();
+        let pw_cod =
+            PackedWeights::from_container_coded(&cfg, &base, &container, Precision::F64)
+                .unwrap();
+        assert!(!pw_cod.packed["layers.0.attn.qkv"].is_coded());
+        assert!(pw_cod.packed["layers.0.ffn.w13"].is_coded());
+        let mut rng = crate::util::rng::Rng::new(9);
+        let x = Mat::from_fn(5, cfg.d_model, |_, _| rng.gaussian());
+        let (q1, k1, v1) = pw_deq.project_qkv(&x, "layers.0.");
+        let (q2, k2, v2) = pw_cod.project_qkv(&x, "layers.0.");
+        assert_eq!(q1.data, q2.data);
+        assert_eq!(k1.data, k2.data);
+        assert_eq!(v1.data, v2.data);
+    }
+
+    #[test]
+    fn coded_load_rejects_wrong_shapes() {
+        let cfg = ModelConfig::tiny_test();
+        let base = Weights::random(&cfg, 35);
+        let mut container = full_container(&cfg);
+        let q = container.quants.get_mut("layers.0.ffn.w2").unwrap();
+        q.a += 1;
+        q.z.extend(std::iter::repeat_n(0, q.n));
+        q.t.push(1.0);
+        assert!(
+            PackedWeights::from_container_coded(&cfg, &base, &container, Precision::F64)
+                .is_err()
+        );
     }
 
     #[test]

@@ -120,6 +120,36 @@ pub fn serve_deadline_from_env() -> Option<Duration> {
     }
 }
 
+/// The `WATERSIC_SERVE_WEIGHTS` engine option: which resident form the
+/// projection weights take at serving time.  `dequant` (the default)
+/// eagerly reconstructs full-precision packed panels at load;  `coded`
+/// keeps the container's quantized codes resident bit-packed and
+/// dequantizes per KC block inside the GEMM pack stage.  The two modes
+/// answer every request **byte-identically** — `matmul_coded` is
+/// bit-for-bit equal to `matmul_prepacked` over the eager dequant — so
+/// the knob only trades resident weight bytes against decode compute.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeWeights {
+    Dequant,
+    Coded,
+}
+
+impl ServeWeights {
+    pub fn from_env() -> ServeWeights {
+        match crate::util::env::string("WATERSIC_SERVE_WEIGHTS").as_deref() {
+            Some("coded") => ServeWeights::Coded,
+            Some("dequant") | None => ServeWeights::Dequant,
+            Some(other) => {
+                eprintln!(
+                    "[serve] unrecognized WATERSIC_SERVE_WEIGHTS={other:?} \
+                     (expected dequant or coded); using dequant"
+                );
+                ServeWeights::Dequant
+            }
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct ServeOpts {
     /// max prefill rows per batched forward, and max concurrently
@@ -477,8 +507,11 @@ impl Server {
         }
     }
 
-    /// Load path: dequantize a `.wsic` container over the base weights,
-    /// prepack at the given precision, start serving.
+    /// Load path: build the serving representation from a `.wsic`
+    /// container over the base weights and start serving.  The weight
+    /// residency mode comes from the `WATERSIC_SERVE_WEIGHTS` engine
+    /// option; both modes produce bit-identical responses (see
+    /// [`ServeWeights`]).
     pub fn from_container(
         cfg: &ModelConfig,
         base: &Weights,
@@ -486,7 +519,28 @@ impl Server {
         prec: Precision,
         opts: ServeOpts,
     ) -> Result<Server> {
-        let packed = PackedWeights::from_container(cfg, base, container, prec)?;
+        Self::from_container_mode(cfg, base, container, prec, ServeWeights::from_env(), opts)
+    }
+
+    /// [`Server::from_container`] with the weight residency mode pinned
+    /// explicitly — the parity suites and the coded-serve CI job run
+    /// both modes over one request log and diff every response byte.
+    pub fn from_container_mode(
+        cfg: &ModelConfig,
+        base: &Weights,
+        container: &Container,
+        prec: Precision,
+        mode: ServeWeights,
+        opts: ServeOpts,
+    ) -> Result<Server> {
+        let packed = match mode {
+            ServeWeights::Dequant => {
+                PackedWeights::from_container(cfg, base, container, prec)?
+            }
+            ServeWeights::Coded => {
+                PackedWeights::from_container_coded(cfg, base, container, prec)?
+            }
+        };
         Ok(Server::start(cfg.clone(), packed, opts))
     }
 
@@ -680,9 +734,16 @@ impl Server {
         &self.inner.opts
     }
 
-    /// Bytes held by the prepacked panels (load-time telemetry).
+    /// Bytes held by the resident projection weights (load-time
+    /// telemetry): eager panels and/or bit-packed coded planes.
     pub fn packed_bytes(&self) -> usize {
         self.inner.model.packed_bytes()
+    }
+
+    /// Projections serving straight from quantized codes (0 in
+    /// `dequant` mode).
+    pub fn coded_count(&self) -> usize {
+        self.inner.model.coded_count()
     }
 
     /// Drain the queue, stop the batcher, and return the final

@@ -101,6 +101,11 @@ pub static KNOBS: &[Knob] = &[
         doc: "per-connection write-stall timeout on unflushed response bytes",
     },
     Knob {
+        name: "WATERSIC_SERVE_WEIGHTS",
+        default: "dequant",
+        doc: "serving weight residency: dequant (eager panels) | coded (quantized codes)",
+    },
+    Knob {
         name: "WATERSIC_FAULT",
         default: "unset",
         doc: "fault-injection plan (fault-inject builds only; see util::fault)",

@@ -1,0 +1,244 @@
+//! Coded weight residency hardening: serving straight from quantized
+//! codes (`WATERSIC_SERVE_WEIGHTS=coded`) must answer **byte-identically**
+//! to the eager dequant load over any request mix, and a corrupted
+//! `.wsic` container must surface as a clean error — never a panic,
+//! never a silently wrong GEMM.  The corruption sweep mirrors the
+//! container-level truncation sweeps: every byte-level truncation and
+//! a bit flip at every byte position go through the *full* load
+//! pipeline (parse → coded panel pack → forward) in both residency
+//! modes; whenever both modes accept the bytes, their logits must
+//! still agree bit-for-bit.
+//!
+//! One test mutates `WATERSIC_SERVE_WEIGHTS`, so this binary lives
+//! outside the shared test harness and every test takes [`env_lock`]
+//! for its whole body (a concurrent `setenv`/`getenv` pair is UB on
+//! glibc — the same discipline as the serve parity binary).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::OnceLock;
+use std::time::Duration;
+
+use watersic::coordinator::container::Container;
+use watersic::coordinator::quantize_model;
+use watersic::experiments::{synthetic_tiny_opts, synthetic_tiny_setup};
+use watersic::linalg::gemm::Precision;
+use watersic::model::transformer::{forward_packed, ForwardOpts};
+use watersic::model::weights::{PackedWeights, Weights};
+use watersic::model::ModelConfig;
+use watersic::runtime::server::{Server, ServeWeights};
+use watersic::runtime::ServeOpts;
+use watersic::util::rng::Rng;
+use watersic::util::sync::{classes, TrackedMutex, TrackedMutexGuard};
+
+/// `ServeOpts` with deterministic scheduler limits (env-independent).
+fn opts(batch_max: usize, flush: Duration) -> ServeOpts {
+    ServeOpts {
+        batch_max,
+        flush,
+        kv_budget: 1 << 30,
+        max_steps: 256,
+        queue_max: 64,
+        deadline: None,
+    }
+}
+
+/// Serializes every test in this binary (see the module docs).
+fn env_lock() -> TrackedMutexGuard<'static, ()> {
+    static LOCK: TrackedMutex<()> = TrackedMutex::new(&classes::TEST_ENV, ());
+    LOCK.lock()
+}
+
+/// Quantize the synthetic tiny model once per process.
+fn setup() -> &'static (ModelConfig, Weights, Container) {
+    static SETUP: OnceLock<(ModelConfig, Weights, Container)> = OnceLock::new();
+    SETUP.get_or_init(|| {
+        let (cfg, teacher, corpus) = synthetic_tiny_setup();
+        let opts = synthetic_tiny_opts(3.0);
+        let qm = quantize_model(&cfg, &teacher, &corpus, &opts, None).unwrap();
+        let container = Container::new(&cfg.name, qm.quants.clone());
+        // round-trip through the wire format, as the CLI load path does
+        let container = Container::from_bytes(&container.to_bytes()).unwrap();
+        (cfg, teacher, container)
+    })
+}
+
+/// Deterministic request windows with a spread of lengths.
+fn requests(cfg: &ModelConfig, n: usize, seed: u64) -> Vec<Vec<i32>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let len = 4 + (i % (cfg.ctx - 3));
+            (0..len).map(|_| rng.below(cfg.vocab) as i32).collect()
+        })
+        .collect()
+}
+
+/// Serve one fixed request log — interleaved scores and greedy
+/// generations — through a server in the given residency mode, and
+/// return every response: score logits as raw bit patterns (NaN-safe
+/// equality), generation token sequences verbatim.
+fn serve_log(
+    cfg: &ModelConfig,
+    teacher: &Weights,
+    container: &Container,
+    prec: Precision,
+    mode: ServeWeights,
+) -> (Vec<Vec<u64>>, Vec<Vec<i32>>, usize, usize) {
+    let server = Server::from_container_mode(
+        cfg,
+        teacher,
+        container,
+        prec,
+        mode,
+        opts(4, Duration::from_millis(50)),
+    )
+    .unwrap();
+    let coded = server.coded_count();
+    let resident = server.packed_bytes();
+    let scores = requests(cfg, 8, 4242);
+    let gens: Vec<(Vec<i32>, usize)> = vec![
+        (vec![3, 1, 4, 1, 5, 9], 8), // crosses ctx = 12 mid-run
+        (vec![2, 7, 1], 4),
+        (vec![1; 12], 5), // saturated window from the first step
+    ];
+    // interleave submissions so scores and decode steps share batches
+    let mut score_handles = Vec::new();
+    let mut gen_handles = Vec::new();
+    for (i, toks) in scores.iter().enumerate() {
+        score_handles.push(server.submit(toks.clone()).unwrap());
+        if i < gens.len() {
+            gen_handles.push(
+                server
+                    .submit_generate(gens[i].0.clone(), gens[i].1)
+                    .unwrap(),
+            );
+        }
+    }
+    let score_out: Vec<Vec<u64>> = score_handles
+        .into_iter()
+        .map(|h| {
+            h.wait()
+                .unwrap()
+                .logits_last
+                .iter()
+                .map(|v| v.to_bits())
+                .collect()
+        })
+        .collect();
+    let gen_out: Vec<Vec<i32>> = gen_handles
+        .into_iter()
+        .map(|h| h.wait().unwrap().tokens)
+        .collect();
+    server.shutdown();
+    (score_out, gen_out, coded, resident)
+}
+
+#[test]
+fn coded_serve_byte_identical_to_dequant_over_mixed_log() {
+    let _serial = env_lock();
+    let (cfg, teacher, container) = setup();
+    let prec = Precision::from_env();
+    let (d_scores, d_gens, d_coded, d_resident) =
+        serve_log(cfg, teacher, container, prec, ServeWeights::Dequant);
+    let (c_scores, c_gens, c_coded, c_resident) =
+        serve_log(cfg, teacher, container, prec, ServeWeights::Coded);
+    assert_eq!(d_coded, 0, "dequant mode must hold no coded projections");
+    assert!(
+        c_coded > 0,
+        "coded mode never engaged — every projection fell back dense"
+    );
+    assert!(
+        c_resident < d_resident,
+        "coded residency must shrink resident weight bytes \
+         ({c_resident} vs {d_resident})"
+    );
+    // the whole point: same bits out, both precisions, any mix
+    assert_eq!(d_scores, c_scores, "score logits diverged across residency");
+    assert_eq!(d_gens, c_gens, "generated tokens diverged across residency");
+}
+
+#[test]
+fn serve_weights_env_knob_selects_residency() {
+    let _serial = env_lock();
+    let (cfg, teacher, container) = setup();
+    let prec = Precision::from_env();
+    let old = watersic::util::env::string("WATERSIC_SERVE_WEIGHTS");
+    std::env::set_var("WATERSIC_SERVE_WEIGHTS", "coded");
+    assert_eq!(ServeWeights::from_env(), ServeWeights::Coded);
+    let coded_server =
+        Server::from_container(cfg, teacher, container, prec, opts(4, Duration::ZERO))
+            .unwrap();
+    assert!(coded_server.coded_count() > 0, "env knob did not engage");
+    drop(coded_server);
+    std::env::set_var("WATERSIC_SERVE_WEIGHTS", "dequant");
+    assert_eq!(ServeWeights::from_env(), ServeWeights::Dequant);
+    // unrecognized values must fall back, not abort the server
+    std::env::set_var("WATERSIC_SERVE_WEIGHTS", "mmap");
+    assert_eq!(ServeWeights::from_env(), ServeWeights::Dequant);
+    match old {
+        Some(v) => std::env::set_var("WATERSIC_SERVE_WEIGHTS", v),
+        None => std::env::remove_var("WATERSIC_SERVE_WEIGHTS"),
+    }
+}
+
+/// Load corrupted container bytes through both residency modes and a
+/// short forward.  The contract: no panic anywhere in the pipeline;
+/// a mode either rejects the bytes with a clean error or serves them,
+/// and whenever *both* modes serve, their logits agree bit-for-bit
+/// (bits, not values: a corrupted f32 scale can poison the weights
+/// with NaN, which still must reconstruct identically on both paths).
+fn check_corrupted(cfg: &ModelConfig, teacher: &Weights, bytes: &[u8], what: &str) {
+    let outcome = catch_unwind(AssertUnwindSafe(|| -> Option<(Vec<u64>, Vec<u64>)> {
+        let container = Container::from_bytes(bytes).ok()?; // clean parse rejection
+        let prec = Precision::from_env();
+        let dequant = PackedWeights::from_container(cfg, teacher, &container, prec);
+        let coded = PackedWeights::from_container_coded(cfg, teacher, &container, prec);
+        let (dequant, coded) = match (dequant, coded) {
+            (Ok(d), Ok(c)) => (d, c),
+            _ => return None, // clean load rejection (either mode)
+        };
+        let toks = [3i32, 1, 4, 1, 5, 9, 2, 6];
+        let bits = |pw: &PackedWeights| -> Vec<u64> {
+            forward_packed(cfg, pw, &toks, 1, toks.len(), &ForwardOpts::default())
+                .logits
+                .data
+                .iter()
+                .map(|v| v.to_bits())
+                .collect()
+        };
+        Some((bits(&dequant), bits(&coded)))
+    }));
+    match outcome {
+        Err(_) => panic!("{what}: corruption caused a panic"),
+        Ok(Some((d, c))) => assert_eq!(
+            d, c,
+            "{what}: residency modes silently diverged on corrupted bytes"
+        ),
+        Ok(None) => {} // rejected cleanly somewhere in the pipeline
+    }
+}
+
+#[test]
+fn truncated_container_never_panics_either_residency() {
+    let _serial = env_lock();
+    let (cfg, teacher, container) = setup();
+    let bytes = container.to_bytes();
+    for cut in 0..bytes.len() {
+        check_corrupted(cfg, teacher, &bytes[..cut], &format!("truncate at {cut}"));
+    }
+}
+
+#[test]
+fn bit_flipped_container_errors_cleanly_or_serves_identically() {
+    let _serial = env_lock();
+    let (cfg, teacher, container) = setup();
+    let bytes = container.to_bytes();
+    // one flipped bit per byte position, rotating through the bit
+    // lanes so headers, varints, scales, and the rANS code plane all
+    // see low- and high-bit damage across the sweep
+    for pos in 0..bytes.len() {
+        let mut dam = bytes.clone();
+        dam[pos] ^= 1u8 << (pos % 8);
+        check_corrupted(cfg, teacher, &dam, &format!("flip bit {} of byte {pos}", pos % 8));
+    }
+}

@@ -209,6 +209,44 @@ fn miri_prepacked_gemm_small_matches_naive() {
 }
 
 #[test]
+fn miri_coded_gemm_small_matches_eager() {
+    // the coded decode-inside-pack path at a tiny shape: bit-identical
+    // to prepacking the eagerly dequantized operand, under 2 threads
+    // (one sub-panel decode per task) and the Miri-forced scalar rung
+    use watersic::linalg::gemm::{
+        matmul_coded_with, matmul_prepacked_with, simd_backend, CodedPanel, CodedPart,
+        Precision, PrepackedB,
+    };
+    let mut rng = Rng::new(13);
+    let (rows, cols) = (6, 9); // storage: operand is the 9×6 transpose
+    let z: Vec<i32> = (0..rows * cols)
+        .map(|_| (rng.gaussian() * 4.0).round() as i32)
+        .collect();
+    let t: Vec<f64> = (0..rows).map(|_| rng.gaussian().abs() + 0.1).collect();
+    let gammas: Vec<f64> = (0..cols).map(|_| rng.gaussian().abs() + 0.1).collect();
+    let alphas: Vec<f64> = (0..cols).map(|_| rng.gaussian().abs() + 0.1).collect();
+    let w = Mat::from_fn(rows, cols, |i, j| {
+        ((t[i] * f64::from(z[i * cols + j])) * gammas[j]) * alphas[j]
+    });
+    let part = CodedPart {
+        z: &z,
+        t: &t,
+        gammas: &gammas,
+        alphas: &alphas,
+        rows,
+        cols,
+    };
+    let a = Mat::from_fn(4, cols, |_, _| rng.gaussian());
+    for prec in [Precision::F64, Precision::F32] {
+        let cp = CodedPanel::pack_nt_parts(&[part], prec).unwrap();
+        let pb = PrepackedB::pack_nt(&w, prec);
+        let c = matmul_coded_with(&a, &cp, 2, simd_backend());
+        let r = matmul_prepacked_with(&a, &pb, 2, simd_backend());
+        assert_eq!(c.data, r.data, "{prec:?}");
+    }
+}
+
+#[test]
 fn miri_cholesky_small_roundtrips() {
     use watersic::linalg::chol::{cholesky_with_threads, solve_lower};
     let n = 6;

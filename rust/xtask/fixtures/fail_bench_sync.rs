@@ -1,0 +1,20 @@
+//! bench-json-sync fail fixture: one gated entry is never emitted,
+//! and the two that are emitted are never grepped by the paired
+//! `fail_bench_sync.yml` (which also greps a ghost entry and a JSON
+//! nobody writes).
+
+const GATED_ENTRIES: &[&str] = &[
+    "present",
+    "ungated missing",
+    "real 64",
+];
+
+fn main() {
+    let mut log = BenchLog::new("BENCH_fake.json");
+    let n = 64;
+    log.note("present", 1.0);
+    log.note(&format!("real {n}"), 2.0);
+    if watersic::util::env::flag("WATERSIC_BENCH_ENFORCE") {
+        println!("enforcing entries: {}", GATED_ENTRIES.join(", "));
+    }
+}

@@ -1,0 +1,10 @@
+//! bench-json-sync fail fixture: gates under WATERSIC_BENCH_ENFORCE
+//! without declaring GATED_ENTRIES.
+
+fn main() {
+    let mut log = BenchLog::new("BENCH_other.json");
+    log.note("something", 1.0);
+    if watersic::util::env::flag("WATERSIC_BENCH_ENFORCE") {
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,21 @@
+//! bench-json-sync pass fixture: every gated entry is emitted into
+//! the bench's JSON and (with the paired `pass_bench_sync.yml`)
+//! pinned by a CI grep.
+
+const GATED_ENTRIES: &[&str] = &[
+    "alpha",
+    "beta 128",
+];
+
+fn main() {
+    let mut log = BenchLog::new("BENCH_ok.json");
+    log.meta("bench", Json::Str("ok".to_string()));
+    let n = 128;
+    let s = Bench::new(&format!("matvec {n}")).run(|| {});
+    log.record(&s, None, "packed");
+    log.note("alpha", 1.0);
+    log.note(&format!("beta {n}"), 2.0);
+    if watersic::util::env::flag("WATERSIC_BENCH_ENFORCE") {
+        println!("enforcing entries: {}", GATED_ENTRIES.join(", "));
+    }
+}

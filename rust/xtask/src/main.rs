@@ -1,7 +1,7 @@
 //! watersic-lint: the repo's own static checks, run as
 //! `cargo run -p xtask -- lint` (CI blocks on it).
 //!
-//! Nine rule families, tuned to this codebase's pinned invariants (see
+//! Ten rule families, tuned to this codebase's pinned invariants (see
 //! `rust/xtask/README.md` for the full contract and the suppression
 //! syntax):
 //!
@@ -38,6 +38,14 @@
 //!   `write_all`, blocking-mode flips, a lock guard live across the
 //!   poll wait) are banned in `runtime/reactor.rs`: one stalled call
 //!   there stalls every connection.
+//! - `bench-json-sync` — CI's `grep`s over `BENCH_*.json` and the
+//!   benches that write those files must agree: every grepped entry
+//!   name matches an entry template the writing bench emits (a
+//!   `{...}` format placeholder is a wildcard), every bench gating
+//!   under `WATERSIC_BENCH_ENFORCE` declares its gated entries in a
+//!   `GATED_ENTRIES` const, and every gated entry is both emitted and
+//!   grepped — so a gate's telemetry can neither drop out of the JSON
+//!   nor out of CI silently.
 //!
 //! The analysis is a line-oriented scan over a "code view" of each
 //! file (string and comment interiors blanked, positions preserved) —
@@ -60,6 +68,7 @@ const KNOWN_RULES: &[&str] = &[
     "no-raw-sync",
     "lock-order",
     "reactor-blocking",
+    "bench-json-sync",
 ];
 
 /// Files whose inputs arrive from outside the process (wire bytes,
@@ -101,6 +110,10 @@ const RAW_SYNC_IDENTS: &[&[u8]] = &[
 const ENV_REGISTRY_FILE: &str = "rust/src/util/env.rs";
 const USAGE_FILE: &str = "rust/src/main.rs";
 const README_FILE: &str = "README.md";
+
+/// The workflow whose `BENCH_*.json` greps the `bench-json-sync` rule
+/// reconciles against the benches' emitted entries.
+const CI_WORKFLOW_FILE: &str = ".github/workflows/ci.yml";
 
 #[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
 struct Finding {
@@ -266,6 +279,14 @@ fn run_lint(root: &Path) -> Result<(Vec<Finding>, usize), String> {
         findings.extend(lint_source(rel, src, &knobs));
     }
     findings.extend(lock_order_findings(&sources));
+    // CI's bench-telemetry greps and the benches that emit the
+    // entries must agree (absence of the workflow file — e.g. linting
+    // an export — skips only the grep directions)
+    let ci_src = fs::read_to_string(root.join(CI_WORKFLOW_FILE)).ok();
+    findings.extend(bench_json_sync_findings(
+        ci_src.as_deref().map(|s| (CI_WORKFLOW_FILE, s)),
+        &sources,
+    ));
     for name in &knobs {
         if !main_src.contains(name.as_str()) {
             findings.push(Finding {
@@ -1066,6 +1087,256 @@ fn watersic_literals(src: &str) -> Vec<(usize, String)> {
     out
 }
 
+// ---- bench-json-sync ----------------------------------------------
+
+/// One bench binary's JSON telemetry surface: which `BENCH_*.json` it
+/// writes, the entry-name templates it emits, and the entries its
+/// `WATERSIC_BENCH_ENFORCE` gates declare via a `GATED_ENTRIES`
+/// const.
+struct BenchSurface {
+    file: String,
+    json: String,
+    templates: Vec<String>,
+    /// `(line, entry)` per declared gated entry.
+    gated: Vec<(usize, String)>,
+    /// Line of the first `WATERSIC_BENCH_ENFORCE` mention, if any.
+    enforce_line: Option<usize>,
+    has_gated_const: bool,
+}
+
+/// First plain `"..."` literal within `window` bytes after `from` in
+/// the raw source (raw-string and escape-heavy literals don't occur in
+/// the bench-entry surface this serves).
+fn literal_after(src: &str, from: usize, window: usize) -> Option<String> {
+    let b = src.as_bytes();
+    let end = (from + window).min(b.len());
+    let mut i = from;
+    while i < end && b[i] != b'"' {
+        i += 1;
+    }
+    if i >= end {
+        return None;
+    }
+    let start = i + 1;
+    let mut j = start;
+    while j < b.len() && b[j] != b'"' {
+        if b[j] == b'\\' {
+            j += 1;
+        }
+        j += 1;
+    }
+    if j >= b.len() {
+        return None;
+    }
+    Some(src[start..j].to_string())
+}
+
+/// Parse one bench source's surface (`None` when the file never
+/// constructs a `BenchLog`).  Entry templates come from the literal
+/// (or `format!` template) heading every `.note(` / `.meta(` /
+/// `Bench::new(` call — `Bench::new` names flow into the JSON via
+/// `log.record`.
+fn bench_surface(rel: &str, src: &str) -> Option<BenchSurface> {
+    let b = src.as_bytes();
+    let starts = line_starts(b);
+    let new_pos = find_all(b, b"BenchLog::new(").first().copied()?;
+    let json = literal_after(src, new_pos, 200)?;
+    let mut templates = Vec::new();
+    for marker in [
+        b".note(".as_slice(),
+        b".meta(".as_slice(),
+        b"Bench::new(".as_slice(),
+    ] {
+        for pos in find_all(b, marker) {
+            if let Some(lit) = literal_after(src, pos + marker.len(), 200) {
+                templates.push(lit);
+            }
+        }
+    }
+    let mut gated = Vec::new();
+    let mut has_gated_const = false;
+    if let Some(pos) = find_all(b, b"const GATED_ENTRIES").first().copied() {
+        has_gated_const = true;
+        // entries are the string literals between the initializer's
+        // `[` (found after `=`, past the `&[&str]` type) and its `]`
+        let open = skip_to(b, skip_to(b, pos, b'='), b'[');
+        let mut i = open + 1;
+        while i < b.len() && b[i] != b']' {
+            if b[i] == b'"' {
+                if let Some(lit) = literal_after(src, i, 200) {
+                    gated.push((line_at(&starts, i), lit.clone()));
+                    i += lit.len() + 2;
+                    continue;
+                }
+            }
+            i += 1;
+        }
+    }
+    let enforce_line = find_all(b, b"WATERSIC_BENCH_ENFORCE")
+        .first()
+        .map(|&p| line_at(&starts, p));
+    Some(BenchSurface {
+        file: rel.to_string(),
+        json,
+        templates,
+        gated,
+        enforce_line,
+        has_gated_const,
+    })
+}
+
+/// `(line, entry, json)` for every `grep … '"ENTRY"' … BENCH_*.json`
+/// line in a workflow file.  Greps against other files (logs, stdout
+/// captures) carry no `BENCH_*.json` token and are ignored.
+fn ci_bench_greps(ci: &str) -> Vec<(usize, String, String)> {
+    let mut out = Vec::new();
+    for (i, line) in ci.lines().enumerate() {
+        if !line.contains("grep") {
+            continue;
+        }
+        let Some(j) = line.find("BENCH_") else { continue };
+        let Some(k) = line[j..].find(".json") else { continue };
+        let json = line[j..j + k + ".json".len()].to_string();
+        let Some(a) = line.find("'\"") else { continue };
+        let rest = &line[a + 2..];
+        let Some(close) = rest.find("\"'") else { continue };
+        out.push((i + 1, rest[..close].to_string(), json));
+    }
+    out
+}
+
+/// Does an emitted entry-name template match a concrete entry name?
+/// `{...}` spans (`format!` placeholders) are wildcards; the literal
+/// segments must match in order, anchored at both ends.
+fn template_matches(template: &str, name: &str) -> bool {
+    let mut segs: Vec<&str> = Vec::new();
+    let mut rest = template;
+    loop {
+        let Some(i) = rest.find('{') else {
+            segs.push(rest);
+            break;
+        };
+        let Some(j) = rest[i..].find('}') else {
+            return false; // unbalanced `{` — not a format template
+        };
+        segs.push(&rest[..i]);
+        rest = &rest[i + j + 1..];
+    }
+    if segs.len() == 1 {
+        return template == name;
+    }
+    let first = segs[0];
+    let last = segs[segs.len() - 1];
+    if !name.starts_with(first)
+        || !name.ends_with(last)
+        || name.len() < first.len() + last.len()
+    {
+        return false;
+    }
+    let mut pos = first.len();
+    let cap = name.len() - last.len();
+    for seg in &segs[1..segs.len() - 1] {
+        if seg.is_empty() {
+            continue;
+        }
+        match name[pos..cap].find(seg) {
+            Some(k) => pos += k + seg.len(),
+            None => return false,
+        }
+    }
+    true
+}
+
+/// The `bench-json-sync` cross-file pass: every `BENCH_*.json` entry
+/// CI greps must be emitted by the bench that writes that file, every
+/// gating bench declares `GATED_ENTRIES`, and every gated entry is
+/// both emitted and grepped.  `ci` is the workflow file as
+/// `(path, text)`; `None` skips the grep directions only.
+fn bench_json_sync_findings(
+    ci: Option<(&str, &str)>,
+    sources: &[(String, String)],
+) -> Vec<Finding> {
+    const RULE: &str = "bench-json-sync";
+    let surfaces: Vec<BenchSurface> = sources
+        .iter()
+        .filter(|(rel, _)| rel.starts_with("benches/"))
+        .filter_map(|(rel, src)| bench_surface(rel, src))
+        .collect();
+    let ci_greps: Option<(&str, Vec<(usize, String, String)>)> =
+        ci.map(|(path, text)| (path, ci_bench_greps(text)));
+    let mut findings = Vec::new();
+    for s in &surfaces {
+        if let Some(line) = s.enforce_line {
+            if !s.has_gated_const {
+                findings.push(Finding {
+                    file: s.file.clone(),
+                    line,
+                    rule: RULE,
+                    msg: "gates under WATERSIC_BENCH_ENFORCE without declaring \
+                          GATED_ENTRIES — the gated telemetry cannot be pinned"
+                        .to_string(),
+                });
+            }
+        }
+        for (line, entry) in &s.gated {
+            if !s.templates.iter().any(|t| template_matches(t, entry)) {
+                findings.push(Finding {
+                    file: s.file.clone(),
+                    line: *line,
+                    rule: RULE,
+                    msg: format!(
+                        "gated entry \"{entry}\" is never emitted into {} by this bench",
+                        s.json
+                    ),
+                });
+                continue;
+            }
+            if let Some((ci_path, greps)) = &ci_greps {
+                if !greps
+                    .iter()
+                    .any(|(_, name, json)| json == &s.json && name == entry)
+                {
+                    findings.push(Finding {
+                        file: s.file.clone(),
+                        line: *line,
+                        rule: RULE,
+                        msg: format!(
+                            "gated entry \"{entry}\" is not pinned by a grep of {} in {ci_path}",
+                            s.json
+                        ),
+                    });
+                }
+            }
+        }
+    }
+    if let Some((ci_path, greps)) = &ci_greps {
+        for (line, name, json) in greps {
+            match surfaces.iter().find(|s| &s.json == json) {
+                None => findings.push(Finding {
+                    file: ci_path.to_string(),
+                    line: *line,
+                    rule: RULE,
+                    msg: format!("greps {json}, which no bench under benches/ writes"),
+                }),
+                Some(s) => {
+                    if !s.templates.iter().any(|t| template_matches(t, name)) {
+                        findings.push(Finding {
+                            file: ci_path.to_string(),
+                            line: *line,
+                            rule: RULE,
+                            msg: format!(
+                                "grepped entry \"{name}\" is never emitted into {json} by {}",
+                                s.file
+                            ),
+                        });
+                    }
+                }
+            }
+        }
+    }
+    findings
+}
+
 // ---- lock-order extraction ----------------------------------------
 
 /// One `fn` item in the code view: its name, declaration line, and the
@@ -1673,6 +1944,90 @@ mod tests {
             include_str!("../fixtures/pass_reactor_blocking.rs"),
         );
         assert!(f.is_empty(), "{f:?}");
+    }
+
+    fn bench_sources(files: &[(&str, &str)]) -> Vec<(String, String)> {
+        files
+            .iter()
+            .map(|(rel, src)| (rel.to_string(), src.to_string()))
+            .collect()
+    }
+
+    #[test]
+    fn bench_json_sync_fires_and_passes() {
+        let ok = bench_sources(&[(
+            "benches/bench_ok.rs",
+            include_str!("../fixtures/pass_bench_sync.rs"),
+        )]);
+        let ci = include_str!("../fixtures/pass_bench_sync.yml");
+        let f = bench_json_sync_findings(Some(("ci.yml", ci)), &ok);
+        assert!(f.is_empty(), "{f:?}");
+
+        let bad = bench_sources(&[
+            (
+                "benches/bench_fake.rs",
+                include_str!("../fixtures/fail_bench_sync.rs"),
+            ),
+            (
+                "benches/bench_other.rs",
+                include_str!("../fixtures/fail_bench_sync_noconst.rs"),
+            ),
+        ]);
+        let ci = include_str!("../fixtures/fail_bench_sync.yml");
+        let f = bench_json_sync_findings(Some(("ci.yml", ci)), &bad);
+        let n = rules(&f).iter().filter(|r| **r == "bench-json-sync").count();
+        assert_eq!(
+            n, 6,
+            "unemitted gate + 2 ungrepped gates + missing const + ghost grep \
+             + orphan json: {f:?}"
+        );
+        assert_eq!(f.len(), 6, "only bench-json-sync fires: {f:?}");
+    }
+
+    #[test]
+    fn bench_json_sync_without_ci_checks_gates_only() {
+        let bad = bench_sources(&[
+            (
+                "benches/bench_fake.rs",
+                include_str!("../fixtures/fail_bench_sync.rs"),
+            ),
+            (
+                "benches/bench_other.rs",
+                include_str!("../fixtures/fail_bench_sync_noconst.rs"),
+            ),
+        ]);
+        let f = bench_json_sync_findings(None, &bad);
+        let n = rules(&f).iter().filter(|r| **r == "bench-json-sync").count();
+        assert_eq!(n, 2, "unemitted gate + missing const only: {f:?}");
+        // a file outside benches/ is never a surface, whatever it contains
+        let stray = bench_sources(&[(
+            "rust/src/x.rs",
+            include_str!("../fixtures/fail_bench_sync_noconst.rs"),
+        )]);
+        assert!(bench_json_sync_findings(None, &stray).is_empty());
+    }
+
+    #[test]
+    fn bench_entry_templates_match_anchored_wildcards() {
+        assert!(template_matches("speedup decode {window}", "speedup decode 256"));
+        assert!(!template_matches("speedup decode {window}", "speedup coded decode 256"));
+        assert!(template_matches("trsm {a}x{n}", "trsm 256x512"));
+        assert!(template_matches("matmul {n}³", "matmul 512³"));
+        assert!(template_matches("alpha", "alpha"));
+        assert!(!template_matches("alpha", "alphabet"));
+        assert!(!template_matches("{n} tail", "head 256"));
+    }
+
+    #[test]
+    fn ci_bench_greps_extract_entry_and_json() {
+        let ci = "  grep -q '\"chol 1024\"' BENCH_linalg.json\n\
+                  grep -q 'gate ok: overload' bench.log\n\
+                  ! grep -q ' 0 shed ' open.log\n";
+        let got = ci_bench_greps(ci);
+        assert_eq!(
+            got,
+            vec![(1, "chol 1024".to_string(), "BENCH_linalg.json".to_string())]
+        );
     }
 
     #[test]
